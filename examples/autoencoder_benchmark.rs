@@ -1,0 +1,86 @@
+//! Autoencoder benchmark driver (Tables 2/3/4/5/7/8, Figures 2/4/7).
+//!
+//!     cargo run --release --example autoencoder_benchmark -- [flags]
+//!
+//! Flags:
+//!   --steps N           training steps per optimizer (default 60)
+//!   --batch B           minibatch size (default 256; T4 sweeps this)
+//!   --precision f32|bf16
+//!   --gamma G           Algorithm-3 tolerance (Table 5's stable variant)
+//!   --ablation band     run the Table 3 band-size ablation (0/1/4/10)
+//!   --ablation batch    run the Table 4 batch-size ablation
+//!   --ablation stable   run Table 5 (bf16 with vs without Algorithm 3)
+//!   --extended          Figure 7 baselines (KFAC/Eva/FishLeg proxies)
+//!   --native            force the native gradient engine
+//!   --small             use the scaled-down AE
+use sonew::cli::Args;
+use sonew::optim::OptKind;
+use sonew::tables::autoencoder::{run, AeBenchConfig};
+use sonew::util::Precision;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let mut cfg = AeBenchConfig {
+        steps: args.u64_or("steps", 60),
+        batch: args.usize_or("batch", 256),
+        gamma: args.f32_or("gamma", 0.0),
+        full: !args.has("small"),
+        force_native: args.has("native"),
+        verbose: args.has("verbose"),
+        seed: args.u64_or("seed", 0),
+        ..Default::default()
+    };
+    if let Some(p) = args.get("precision").and_then(Precision::parse) {
+        cfg.precision = p;
+    }
+    match args.get("ablation") {
+        Some("band") => {
+            // Table 3
+            cfg.optimizers = vec![];
+            cfg.band_sizes = vec![0, 1, 4, 10];
+            run(&cfg, "t3_band")?;
+        }
+        Some("batch") => {
+            // Table 4: batch sizes (paper: 100/1000/5000/10000; default
+            // here keeps CPU wall time sane — pass --batches to widen)
+            cfg.optimizers = vec![
+                OptKind::RmsProp,
+                OptKind::Adam,
+                OptKind::Shampoo,
+                OptKind::TridiagSonew,
+                OptKind::BandSonew,
+            ];
+            for b in args.list_or("batches", "100,1000") {
+                cfg.batch = b.parse().unwrap_or(256);
+                run(&cfg, &format!("t4_batch{b}"))?;
+            }
+        }
+        Some("stable") => {
+            // Table 5: bf16 with and without Algorithm 3
+            cfg.precision = Precision::Bf16;
+            cfg.optimizers = vec![OptKind::TridiagSonew, OptKind::BandSonew];
+            cfg.gamma = 0.0;
+            run(&cfg, "t5_bf16_plain")?;
+            cfg.gamma = args.f32_or("gamma", 1e-5).max(1e-8);
+            run(&cfg, "t5_bf16_stable")?;
+        }
+        _ => {
+            if args.has("extended") {
+                cfg.optimizers = vec![
+                    OptKind::KfacProxy,
+                    OptKind::Eva,
+                    OptKind::FishLegDiag,
+                    OptKind::TridiagSonew,
+                ];
+                run(&cfg, "f7_extended")?;
+            } else {
+                let tag = match cfg.precision {
+                    Precision::F32 => "t2_f32",
+                    Precision::Bf16 => "t8_bf16",
+                };
+                run(&cfg, tag)?;
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,14 @@
+//! Table 9/10/11 driver: convex least-squares experiments — rfdSON(2/5)
+//! vs tridiag-SONew test accuracy on the three synthesized datasets.
+//!
+//!     cargo run --release --example convex_suite -- [--scale 1.0] [--epochs 20]
+use sonew::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    sonew::tables::convex::run(
+        args.f32_or("scale", 1.0),
+        args.usize_or("epochs", 20),
+    )?;
+    Ok(())
+}

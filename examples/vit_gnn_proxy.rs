@@ -1,0 +1,26 @@
+//! Figure 1/5/6 driver: ViT-proxy and GNN-proxy benchmarks — validation
+//! quality vs steps for tridiag-SONew against Momentum / RMSProp / Adam /
+//! rfdSON / Shampoo (DESIGN.md §5 documents the dataset substitutions).
+//!
+//!     cargo run --release --example vit_gnn_proxy -- [--steps 600] [--which vit|gnn|both]
+use sonew::cli::Args;
+use sonew::tables::vit_gnn::{run, Proxy};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse();
+    let steps = args.u64_or("steps", 600);
+    let batch = args.usize_or("batch", 64);
+    match args.get_or("which", "both") {
+        "vit" => {
+            run(Proxy::Vit, steps, batch)?;
+        }
+        "gnn" => {
+            run(Proxy::Gnn, steps, batch)?;
+        }
+        _ => {
+            run(Proxy::Gnn, steps, batch)?;
+            run(Proxy::Vit, steps, batch)?;
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,207 @@
+"""AOT compiler: lower the L2 graphs (and L1 Pallas kernels) to HLO text.
+
+Run once at build time (``make artifacts``); the Rust coordinator loads the
+emitted ``artifacts/*.hlo.txt`` via PJRT and never touches Python again.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids that the pinned
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emitted artifact set (see also the generated ``manifest.txt``):
+
+  ae_grads_b{B}        (params, x)            -> (loss, grads)
+  ae_small_grads_b64   scaled-down AE for fast tests / CI
+  lm_grads             (params, tokens, tgts) -> (loss, grads)
+  lm_small_grads       tiny LM for tests
+  sonew_tridiag_{m}    (hd, ho, g, tids)      -> (hd', ho', u)   [Pallas L1]
+  sonew_band4_ae_small (diags, g, tids)       -> (diags', u)     [Pallas L1]
+
+SONew hyperparameters (beta2, eps, gamma) are baked into the update
+artifacts at build time (they are compile-time constants of the kernel);
+the Rust side owns learning rate, momentum, grafting and weight decay,
+which are cheap elementwise ops applied to the returned direction.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import banded as Kb
+from .kernels import tridiag as Kt
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+class Manifest:
+    """Line-based artifact/layout index parsed by rust/src/runtime/manifest.rs."""
+
+    def __init__(self):
+        self.lines: List[str] = []
+
+    def artifact(self, name, fname, ins, outs, meta=None):
+        self.lines.append(f"artifact {name}")
+        self.lines.append(f"  file {fname}")
+        for nm, dt, dims in ins:
+            self.lines.append(
+                f"  in {nm} {dt} {' '.join(str(d) for d in dims)}".rstrip())
+        for nm, dt, dims in outs:
+            self.lines.append(
+                f"  out {nm} {dt} {' '.join(str(d) for d in dims)}".rstrip())
+        for k, v in (meta or {}).items():
+            self.lines.append(f"  meta {k} {v}")
+        self.lines.append("end")
+
+    def layout(self, name, layout: M.Layout):
+        self.lines.append(f"layout {name}")
+        for s in layout.specs:
+            self.lines.append(
+                f"  tensor {s.name} {s.offset} "
+                f"{' '.join(str(d) for d in s.shape)}")
+        self.lines.append("end")
+
+    def write(self, path):
+        with open(path, "w") as f:
+            f.write("\n".join(self.lines) + "\n")
+
+
+def emit(out_dir, name, lowered, man: Manifest, ins, outs, meta=None):
+    fname = f"{name}.hlo.txt"
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    man.artifact(name, fname, ins, outs, meta)
+    print(f"  wrote {fname} ({len(text)} chars)")
+
+
+def f32(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.float32)
+
+
+def i32(*dims):
+    return jax.ShapeDtypeStruct(tuple(dims), jnp.int32)
+
+
+def export_ae(out_dir, man, name, dims, batches):
+    ae = M.Autoencoder(dims)
+    n = ae.layout.total
+    man.layout(name, ae.layout)
+    for B in batches:
+        low = jax.jit(ae.loss_and_grad).lower(f32(n), f32(B, dims[0]))
+        emit(out_dir, f"{name}_grads_b{B}", low, man,
+             ins=[("params", "f32", [n]), ("x", "f32", [B, dims[0]])],
+             outs=[("loss", "f32", []), ("grads", "f32", [n])],
+             meta={"model": name, "batch": B, "pixels": dims[0]})
+    return ae
+
+
+def export_lm(out_dir, man, name, cfg, batch):
+    lm = M.TransformerLM(cfg)
+    n = lm.layout.total
+    man.layout(name, lm.layout)
+    low = jax.jit(lm.loss_and_grad).lower(
+        f32(n), i32(batch, cfg.seq), i32(batch, cfg.seq))
+    emit(out_dir, f"{name}_grads", low, man,
+         ins=[("params", "f32", [n]),
+              ("tokens", "i32", [batch, cfg.seq]),
+              ("targets", "i32", [batch, cfg.seq])],
+         outs=[("loss", "f32", []), ("grads", "f32", [n])],
+         meta={"model": name, "batch": batch, "vocab": cfg.vocab,
+               "d_model": cfg.d_model, "n_layer": cfg.n_layer,
+               "seq": cfg.seq, "params": n})
+    return lm
+
+
+def export_sonew_tridiag(out_dir, man, name, n, beta2, eps, gamma, block):
+    def step(hd, ho, g, tids):
+        return Kt.tridiag_update(hd, ho, g, tids, beta2=beta2, eps=eps,
+                                 gamma=gamma, block=block)
+    low = jax.jit(step).lower(f32(n), f32(n), f32(n), f32(n))
+    emit(out_dir, name, low, man,
+         ins=[("hd", "f32", [n]), ("ho", "f32", [n]), ("g", "f32", [n]),
+              ("tensor_ids", "f32", [n])],
+         outs=[("hd_new", "f32", [n]), ("ho_new", "f32", [n]),
+               ("u", "f32", [n])],
+         meta={"kind": "sonew_tridiag", "n": n, "beta2": beta2, "eps": eps,
+               "gamma": gamma, "block": block})
+
+
+def export_sonew_banded(out_dir, man, name, n, b, beta2, eps, gamma, block):
+    def step(diags, g, tids):
+        return Kb.banded_update(diags, g, tids, b=b, beta2=beta2, eps=eps,
+                                gamma=gamma, block=block)
+    low = jax.jit(step).lower(f32(b + 1, n), f32(n), f32(n))
+    emit(out_dir, name, low, man,
+         ins=[("diags", "f32", [b + 1, n]), ("g", "f32", [n]),
+              ("tensor_ids", "f32", [n])],
+         outs=[("diags_new", "f32", [b + 1, n]), ("u", "f32", [n])],
+         meta={"kind": "sonew_banded", "n": n, "b": b, "beta2": beta2,
+               "eps": eps, "gamma": gamma, "block": block})
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--ae-batches", default="256",
+                    help="comma-separated batch sizes for the full AE")
+    ap.add_argument("--beta2", type=float, default=0.95)
+    ap.add_argument("--eps", type=float, default=1e-6)
+    ap.add_argument("--gamma", type=float, default=0.0)
+    ap.add_argument("--lm-vocab", type=int, default=512)
+    ap.add_argument("--lm-d", type=int, default=256)
+    ap.add_argument("--lm-layers", type=int, default=4)
+    ap.add_argument("--lm-heads", type=int, default=4)
+    ap.add_argument("--lm-seq", type=int, default=128)
+    ap.add_argument("--lm-batch", type=int, default=8)
+    ap.add_argument("--skip-lm", action="store_true")
+    args = ap.parse_args()
+
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    man = Manifest()
+    batches = [int(b) for b in args.ae_batches.split(",") if b]
+
+    print("exporting autoencoder artifacts...")
+    ae = export_ae(out, man, "ae", M.AE_DIMS, batches)
+    ae_small = export_ae(out, man, "ae_small", M.AE_SMALL_DIMS, [64])
+
+    print("exporting SONew update artifacts (Pallas L1)...")
+    export_sonew_tridiag(out, man, "sonew_tridiag_ae", ae.layout.total,
+                         args.beta2, args.eps, args.gamma, block=65536)
+    export_sonew_tridiag(out, man, "sonew_tridiag_ae_small",
+                         ae_small.layout.total,
+                         args.beta2, args.eps, args.gamma, block=16384)
+    export_sonew_banded(out, man, "sonew_band4_ae_small",
+                        ae_small.layout.total, 4,
+                        args.beta2, args.eps, args.gamma, block=8192)
+
+    if not args.skip_lm:
+        print("exporting LM artifacts...")
+        cfg = M.LMConfig(vocab=args.lm_vocab, d_model=args.lm_d,
+                         n_layer=args.lm_layers, n_head=args.lm_heads,
+                         seq=args.lm_seq)
+        lm = export_lm(out, man, "lm", cfg, args.lm_batch)
+        small = M.LMConfig(vocab=64, d_model=32, n_layer=2, n_head=2, seq=16)
+        export_lm(out, man, "lm_small", small, 4)
+        export_sonew_tridiag(out, man, "sonew_tridiag_lm", lm.layout.total,
+                             args.beta2, args.eps, args.gamma, block=65536)
+
+    man.write(os.path.join(out, "manifest.txt"))
+    print(f"manifest: {os.path.join(out, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,194 @@
+"""Layer-1 Pallas kernel: banded-b SONew sparsified inverse.
+
+Implements Theorem 3.2 / Algorithm 2: for every row j solve the b x b SPD
+system ``H_{I_j I_j} x = -H_{I_j j}`` and form ``d_j = 1/(H_jj + H_{I_j j}^T
+x)``. This is the O(n b^3) hot spot; n independent tiny solves map to one
+Pallas grid over n with a fully *unrolled* Cholesky in registers per lane
+(the TPU adaptation of the paper's "embarrassingly parallel" claim --
+DESIGN.md SS3: no MXU, pure VPU, everything resident in VMEM).
+
+The O(n b) statistics update and direction ``u = L D L^T g`` are expressed
+as shift/FMA chains on the host side of the same jit so XLA fuses them; the
+Pallas kernel owns the cubic-in-b part.
+
+Storage: ``diags[k, j] = H[j+k, j]``, k = 0..b (see ref.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Smaller than the tridiag BLOCK: the solve holds b*b + 2b live registers
+# per lane. 8Ki lanes x (b=4 -> 24 streams) x 4 B ~= 0.75 MiB VMEM.
+BLOCK = 8192
+
+
+def _solve_kernel(hii_ref, hij_ref, hjj_ref, x_out, d_out, *, b, gamma):
+    """Unrolled Cholesky solve of n_block independent b x b SPD systems.
+
+    hii: (block, b, b) damped principal submatrices H_{I_j I_j}
+    hij: (block, b)    H_{I_j j}
+    hjj: (block,)      damped H_jj
+    Outputs: x (block, b) = L_{I_j j} entries, d (block,) = D_jj.
+    Algorithm 3: rows whose Schur complement <= gamma (or with a failed
+    pivot) drop all forward edges -> x = 0, d = 1/H_jj.
+    """
+    A = hii_ref[...]
+    r = hij_ref[...]
+    hjj = hjj_ref[...]
+    tiny = 1e-30
+
+    # Cholesky A = C C^T, unrolled over static b; C stored as list cols.
+    C = [[None] * b for _ in range(b)]
+    bad = jnp.zeros(hjj.shape, jnp.bool_)
+    for p in range(b):
+        acc = A[:, p, p]
+        for k in range(p):
+            acc = acc - C[p][k] * C[p][k]
+        bad = bad | (acc <= 0.0)
+        cpp = jnp.sqrt(jnp.maximum(acc, tiny))
+        C[p][p] = cpp
+        for q in range(p + 1, b):
+            acc = A[:, q, p]
+            for k in range(p):
+                acc = acc - C[q][k] * C[p][k]
+            C[q][p] = acc / cpp
+
+    # forward solve C y = -r
+    y = [None] * b
+    for p in range(b):
+        acc = -r[:, p]
+        for k in range(p):
+            acc = acc - C[p][k] * y[k]
+        y[p] = acc / C[p][p]
+    # back solve C^T x = y
+    x = [None] * b
+    for p in reversed(range(b)):
+        acc = y[p]
+        for k in range(p + 1, b):
+            acc = acc - C[k][p] * x[k]
+        x[p] = acc / C[p][p]
+
+    s = hjj
+    for p in range(b):
+        s = s + r[:, p] * x[p]
+    drop = bad | (s <= gamma)
+
+    X = jnp.stack([jnp.where(drop, 0.0, x[p]) for p in range(b)], axis=-1)
+    d = 1.0 / jnp.where(drop, hjj, s)
+    x_out[...] = X
+    d_out[...] = d
+
+
+def _shift_up(v, k):
+    """v shifted so out[j] = v[j+k] (zeros past the end)."""
+    if k == 0:
+        return v
+    if k >= v.shape[0]:
+        return jnp.zeros_like(v)
+    return jnp.concatenate([v[k:], jnp.zeros((k,), v.dtype)])
+
+
+def _shift_down(v, k):
+    """v shifted so out[j] = v[j-k] (zeros before the start)."""
+    if k == 0:
+        return v
+    if k >= v.shape[0]:
+        return jnp.zeros_like(v)
+    return jnp.concatenate([jnp.zeros((k,), v.dtype), v[:-k]])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("b", "beta2", "eps", "gamma", "block",
+                                    "interpret"))
+def banded_update(diags, g, boundary, *, b, beta2, eps, gamma=0.0,
+                  block=BLOCK, interpret=True):
+    """Fused banded-b SONew step: returns (diags', u).
+
+    diags: (b+1, n) banded statistics (see ref.py storage convention).
+    boundary: (n,) tensor-id vector; edge (i, j) is kept only when
+    boundary[i] == boundary[j], which makes a single flat parameter vector
+    behave as independent per-tensor banded preconditioners.
+    """
+    n = g.shape[0]
+    idx = jnp.arange(n)
+    one_m = 1.0 - beta2
+
+    # --- O(nb) statistics update: diags'[k] = b2*diags[k]+(1-b2) g .* g(+k)
+    rows = []
+    masks = []
+    for k in range(b + 1):
+        valid = (idx + k < n).astype(g.dtype)
+        same = (boundary == _shift_up(boundary, k)).astype(g.dtype)
+        m = valid * same if k > 0 else valid
+        row = (beta2 * diags[k] + one_m * g * _shift_up(g, k)) * m
+        rows.append(row)
+        masks.append(m)
+    diags2 = jnp.stack(rows)
+
+    # --- assemble per-row damped systems ---
+    # HII[j, p, q] = H[j+1+max(p,q), j+1+min(p,q)] = diags2[|p-q|][j+1+min(p,q)]
+    # out-of-range rows get identity lanes (=> x component 0).
+    nb = -(-n // block)
+    n_pad = nb * block
+    pad = n_pad - n
+
+    hjj = jnp.pad(diags2[0] + eps, (0, pad), constant_values=1.0)
+    hij = jnp.stack([jnp.pad(_shift_down(diags2[p + 1], 0)[...], (0, 0))
+                     for p in range(b)], axis=-1)        # (n, b): H[j+1+p, j]
+    hij = jnp.pad(hij, ((0, pad), (0, 0)))
+    hii_rows = []
+    for p in range(b):
+        cols = []
+        for q in range(b):
+            k = abs(p - q)
+            base = _shift_up(diags2[k], 1 + min(p, q))   # value at j
+            if p == q:
+                inr = (idx + 1 + p < n)
+                base = jnp.where(inr, base + eps, 1.0)
+            cols.append(base)
+        hii_rows.append(jnp.stack(cols, axis=-1))
+    hii = jnp.stack(hii_rows, axis=-2)                   # (n, b, b)
+    hii = jnp.pad(hii, ((0, pad), (0, 0), (0, 0)))
+    # padded tail: make it identity so the solve is well-posed
+    if pad > 0:
+        eye = jnp.broadcast_to(jnp.eye(b, dtype=g.dtype), (pad, b, b))
+        hii = hii.at[n:].set(eye)
+
+    kern = functools.partial(_solve_kernel, b=b, gamma=float(gamma))
+    X, d = pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block, b, b), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block, b), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, b), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, b), g.dtype),
+            jax.ShapeDtypeStruct((n_pad,), g.dtype),
+        ],
+        interpret=interpret,
+    )(hii, hij, hjj)
+    X = X[:n]
+    d = d[:n]
+
+    # --- O(nb) direction: u = L D L^T g ---
+    # t[j] = g[j] + sum_p X[j,p] g[j+1+p]
+    t = g
+    for p in range(b):
+        t = t + X[:, p] * _shift_up(g, 1 + p)
+    s = d * t
+    # u[j] = s[j] + sum_m X[j-m, m-1] s[j-m]
+    u = s
+    for m in range(1, b + 1):
+        u = u + _shift_down(X[:, m - 1] * s, m)
+    return diags2, u

@@ -1,0 +1,210 @@
+"""Pure-jnp reference oracles for the SONew kernels.
+
+Everything here is deliberately written the *slow, obviously-correct* way --
+dense matrices, explicit formulas transcribed from the paper -- and serves as
+the ground truth that the Pallas kernels (tridiag.py / banded.py) are tested
+against in python/tests/test_kernels.py.
+
+Conventions
+-----------
+A tridiagonal statistics matrix ``H`` is stored as two vectors:
+  * ``hd[j] = H[j, j]``                          (length n)
+  * ``ho[j] = H[j+1, j]``, with ``ho[n-1] = 0``  (length n)
+A banded matrix of band size ``b`` is stored as ``(b+1, n)`` diagonals:
+``diags[k, j] = H[j+k, j]`` with ``diags[k, j] = 0`` for ``j + k >= n``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# dense <-> diagonal-storage helpers
+# ---------------------------------------------------------------------------
+
+def tridiag_to_dense(hd, ho):
+    """Build the dense symmetric tridiagonal matrix from (hd, ho)."""
+    n = hd.shape[0]
+    H = jnp.diag(hd)
+    if n > 1:
+        H = H + jnp.diag(ho[:-1], -1) + jnp.diag(ho[:-1], 1)
+    return H
+
+
+def banded_to_dense(diags):
+    """Build the dense symmetric banded matrix from (b+1, n) diagonals."""
+    b1, n = diags.shape
+    H = jnp.diag(diags[0])
+    for k in range(1, b1):
+        if n - k <= 0:
+            continue
+        off = diags[k, : n - k]
+        H = H + jnp.diag(off, -k) + jnp.diag(off, k)
+    return H
+
+
+def dense_to_banded(H, b):
+    """Project a dense matrix onto banded-diagonal storage (P_G, eq. 8)."""
+    n = H.shape[0]
+    rows = []
+    for k in range(b + 1):
+        d = jnp.diagonal(H, -k)
+        rows.append(jnp.pad(d, (0, n - d.shape[0])))
+    return jnp.stack(rows)
+
+
+def project_tridiag(M):
+    """P_G(M) for the chain graph: returns (hd, ho)."""
+    n = M.shape[0]
+    hd = jnp.diagonal(M)
+    ho = jnp.pad(jnp.diagonal(M, -1), (0, 1))
+    return hd, ho
+
+
+# ---------------------------------------------------------------------------
+# Theorem 3.1 -- explicit tridiagonal solution (reference, vectorized jnp)
+# ---------------------------------------------------------------------------
+
+def tridiag_ldl(hd, ho, gamma=0.0):
+    """Explicit solution of the LogDet subproblem (11) for the chain graph.
+
+    Returns ``(l, d)`` with ``L = I + subdiag(l)`` and ``D = diag(d)`` such
+    that ``X = L D L^T`` solves (11) -- eq. (12) of the paper.
+
+    ``gamma`` enables Algorithm 3: edges whose Schur complement
+    ``S_jj = hd[j] - ho[j]^2 / hd[j+1]`` falls at or below ``gamma`` are
+    dropped (l[j] = 0, D_jj reverts to 1/hd[j]), which provably reduces the
+    componentwise condition-number bound (Theorem A.11).
+    """
+    n = hd.shape[0]
+    hd_next = jnp.concatenate([hd[1:], jnp.ones((1,), hd.dtype)])
+    schur = hd - ho * ho / hd_next
+    keep = schur > gamma
+    l = jnp.where(keep, -ho / hd_next, 0.0)
+    l = l.at[n - 1].set(0.0)
+    d_inv = jnp.where(keep, schur, hd)
+    d_inv = d_inv.at[n - 1].set(hd[n - 1])
+    return l, 1.0 / d_inv
+
+
+def tridiag_direction(l, d, g):
+    """u = L D L^T g for unit-lower-bidiagonal L (subdiag l) and D=diag(d)."""
+    g_next = jnp.concatenate([g[1:], jnp.zeros((1,), g.dtype)])
+    t = g + l * g_next                       # t = L^T g
+    s = d * t                                # s = D t
+    s_prev = jnp.concatenate([jnp.zeros((1,), g.dtype), s[:-1]])
+    l_prev = jnp.concatenate([jnp.zeros((1,), g.dtype), l[:-1]])
+    return s + l_prev * s_prev               # u = L s
+
+
+def tridiag_update_ref(hd, ho, g, beta2, eps, gamma=0.0, boundary=None):
+    """One full SONew statistics+direction step (EMA variant), reference.
+
+    H <- beta2 * H + (1 - beta2) * P_G(g g^T);  u = X g with X from (12)
+    computed on the eps-damped diagonal.
+
+    ``boundary`` (optional 0/1 vector): boundary[j] = 0 forces edge (j, j+1)
+    to zero -- used to make one flat vector behave as independent per-tensor
+    chains (see aot.py).
+    """
+    g_next = jnp.concatenate([g[1:], jnp.zeros((1,), g.dtype)])
+    hd2 = beta2 * hd + (1.0 - beta2) * g * g
+    ho2 = beta2 * ho + (1.0 - beta2) * g * g_next
+    ho2 = ho2.at[-1].set(0.0)
+    if boundary is not None:
+        ho2 = ho2 * boundary
+    l, d = tridiag_ldl(hd2 + eps, ho2, gamma)
+    return hd2, ho2, tridiag_direction(l, d, g)
+
+
+def tridiag_update_sqrt_t_ref(hd, ho, g, lam, eps, gamma=0.0):
+    """Theory variant (Thm 3.3): H_t = H_{t-1} + P_G(g g^T) / lambda_t."""
+    g_next = jnp.concatenate([g[1:], jnp.zeros((1,), g.dtype)])
+    hd2 = hd + g * g / lam
+    ho2 = ho + g * g_next / lam
+    ho2 = ho2.at[-1].set(0.0)
+    l, d = tridiag_ldl(hd2 + eps, ho2, gamma)
+    return hd2, ho2, tridiag_direction(l, d, g)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 3.2 -- explicit banded solution (reference, loopy numpy)
+# ---------------------------------------------------------------------------
+
+def banded_ldl_dense(H, b, gamma=0.0):
+    """Explicit banded solution of (11), eq. (14), via dense per-row solves.
+
+    Returns dense ``(L, d)``. Deliberately O(n b^3) loopy numpy -- oracle
+    only. Rows in the Algorithm-3 drop set ``K`` (undefined or <= gamma
+    Schur complement) fall back to the diagonal.
+    """
+    H = np.asarray(H, dtype=np.float64)
+    n = H.shape[0]
+    L = np.eye(n)
+    d = np.zeros(n)
+    for j in range(n):
+        I = list(range(j + 1, min(j + b, n - 1) + 1))
+        if not I:
+            d[j] = 1.0 / H[j, j]
+            continue
+        HII = H[np.ix_(I, I)]
+        HIj = H[I, j]
+        try:
+            x = np.linalg.solve(HII, -HIj)
+            s = H[j, j] + HIj @ x
+        except np.linalg.LinAlgError:
+            x, s = None, -1.0
+        if x is None or s <= gamma:
+            # Algorithm 3: drop this vertex's forward edges.
+            d[j] = 1.0 / H[j, j]
+            continue
+        L[I, j] = x
+        d[j] = 1.0 / s
+    return L, d
+
+
+def banded_direction_dense(L, d, g):
+    g = np.asarray(g, dtype=np.float64)
+    return L @ (d * (L.T @ g))
+
+
+def banded_update_ref(diags, g, beta2, eps, gamma=0.0):
+    """Full banded SONew step (EMA variant) via the dense oracle."""
+    b = diags.shape[0] - 1
+    n = diags.shape[1]
+    g = jnp.asarray(g)
+    new = []
+    for k in range(b + 1):
+        gk = (jnp.zeros_like(g) if k >= n
+              else jnp.concatenate([g[k:], jnp.zeros((k,), g.dtype)]))
+        row = beta2 * diags[k] + (1.0 - beta2) * g * gk
+        row = jnp.where(jnp.arange(n) + k < n, row, 0.0)
+        new.append(row)
+    diags2 = jnp.stack(new)
+    Hd = banded_to_dense(diags2) + eps * jnp.eye(n)
+    L, d = banded_ldl_dense(np.asarray(Hd), b, gamma)
+    u = banded_direction_dense(L, d, np.asarray(g))
+    return diags2, jnp.asarray(u, dtype=g.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense LogDet-subproblem oracle -- validates the explicit formulas
+# ---------------------------------------------------------------------------
+
+def logdet_optimality_residual(X, H_dense, mask):
+    """|| P_G(X^{-1}) - P_G(H) ||_inf -- the optimality condition of (11).
+
+    For the true minimizer this is 0 (eq. 10): the sparse projection of the
+    preconditioner's inverse must reproduce the maintained statistics.
+    ``mask`` is the 0/1 adjacency (incl. diagonal) of G.
+    """
+    Xinv = jnp.linalg.inv(X)
+    R = (Xinv - H_dense) * mask
+    return float(jnp.max(jnp.abs(R)))
+
+
+def banded_mask(n, b):
+    idx = jnp.arange(n)
+    return (jnp.abs(idx[:, None] - idx[None, :]) <= b).astype(jnp.float32)

@@ -1,0 +1,162 @@
+"""Layer-1 Pallas kernel: fused tridiagonal SONew update.
+
+One kernel invocation performs the full per-step SONew hot path for the
+chain-graph preconditioner (paper eq. 10 + Theorem 3.1 + Algorithm 3):
+
+    hd' = b2*hd + (1-b2) * g*g                 # H_t diagonal    (eq. 10)
+    ho' = (b2*ho + (1-b2) * g*g_next) * mask   # H_t off-diag, tensor-boundary
+                                               #   edges masked to 0
+    S_j = (hd'+eps)_j - ho'_j^2 / (hd'+eps)_{j+1}   # Schur complement
+    keep_j = S_j > gamma                       # Algorithm 3 edge drop
+    l_j = keep ? -ho'_j / (hd'+eps)_{j+1} : 0  # L subdiagonal   (eq. 12)
+    d_j = 1 / (keep ? S_j : (hd'+eps)_j)       # D diagonal      (eq. 12)
+    u   = L D L^T g                            # descent direction
+
+The crucial observation making this a single *elementwise* kernel: for the
+chain graph, u_j depends only on indices {j-1, j, j+1}, so by feeding the
+kernel pre-shifted copies of (hd, ho, g) every output element is a pure
+function of its own lane -- embarrassingly parallel, exactly the property
+the paper exploits ("as efficient and parallelizable as first-order
+methods"). The kernel is blocked over n with BlockSpec; VMEM holds ~10
+streams x 4 B x BLOCK.
+
+TPU adaptation note (DESIGN.md SS3): this is a VPU-only, bandwidth-bound
+kernel (0 MXU flops). interpret=True is mandatory here -- the CPU PJRT
+client cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block size: 64Ki f32 lanes => 9 live streams * 256 KiB ~= 2.3 MiB VMEM,
+# comfortably under the ~16 MiB budget while amortizing grid overhead.
+BLOCK = 65536
+
+
+def _kernel9(hd_ref, ho_ref, g_ref, aux_ref, hd_out, ho_out, u_out,
+             *, beta2, eps, gamma):
+    """Fused tridiag SONew step over one block.
+
+    ``aux_ref`` is a (6, BLOCK) stacked tile prepared on the host:
+      aux[0] = g shifted -1 (g_prev),   aux[1] = g shifted +1 (g_next)
+      aux[2] = hd shifted -1 (hd_prev), aux[3] = hd shifted +1 (hd_next)
+      aux[4] = ho shifted -1 (ho_prev)
+      aux[5] = boundary mask (1 keeps edge (j, j+1), 0 cuts it)
+      aux[6] = that mask shifted -1 (mask_prev, for edge (j-1, j))
+    Shifts are global (across block boundaries), computed once per step on
+    the host side of the jitted graph with jnp.roll-style concatenations.
+    """
+    hd = hd_ref[...]
+    ho = ho_ref[...]
+    g = g_ref[...]
+    g_prev = aux_ref[0, :]
+    g_next = aux_ref[1, :]
+    hd_prev = aux_ref[2, :]
+    hd_next = aux_ref[3, :]
+    ho_prev = aux_ref[4, :]
+    mask = aux_ref[5, :]
+    mask_prev = aux_ref[6, :]
+
+    one_m = 1.0 - beta2
+    # statistics update (eq. 10, EMA form) -- for lanes j-1, j, j+1
+    hd2 = beta2 * hd + one_m * g * g
+    hd2_prev = beta2 * hd_prev + one_m * g_prev * g_prev
+    hd2_next = beta2 * hd_next + one_m * g_next * g_next
+    ho2 = (beta2 * ho + one_m * g * g_next) * mask
+    ho2_prev = (beta2 * ho_prev + one_m * g_prev * g) * mask_prev
+
+    a_prev = hd2_prev + eps
+    a = hd2 + eps
+    a_next = hd2_next + eps
+
+    # LDL at lane j (edge j -> j+1) and at lane j-1 (edge j-1 -> j)
+    schur = a - ho2 * ho2 / a_next
+    keep = schur > gamma
+    l = jnp.where(keep, -ho2 / a_next, 0.0)
+    d = 1.0 / jnp.where(keep, schur, a)
+
+    schur_prev = a_prev - ho2_prev * ho2_prev / a
+    keep_prev = schur_prev > gamma
+    l_prev = jnp.where(keep_prev, -ho2_prev / a, 0.0)
+    d_prev = 1.0 / jnp.where(keep_prev, schur_prev, a_prev)
+
+    # u = L D L^T g, all local: t_j = g_j + l_j g_{j+1}; s = d * t;
+    # u_j = s_j + l_{j-1} s_{j-1}
+    s = d * (g + l * g_next)
+    s_prev = d_prev * (g_prev + l_prev * g)
+    u = s + l_prev * s_prev
+
+    hd_out[...] = hd2
+    ho_out[...] = ho2
+    u_out[...] = u
+
+
+def _pad_to_block(x, n_pad):
+    return jnp.pad(x, (0, n_pad - x.shape[0]))
+
+
+@functools.partial(jax.jit, static_argnames=("beta2", "eps", "gamma",
+                                             "block", "interpret"))
+def tridiag_update(hd, ho, g, boundary, *, beta2, eps, gamma=0.0,
+                   block=BLOCK, interpret=True):
+    """Fused SONew tridiagonal step: returns (hd', ho', u).
+
+    ``boundary`` is a per-lane tensor-id vector: edge (j, j+1) is kept only
+    when boundary[j] == boundary[j+1], which makes one flat parameter vector
+    precondition per-tensor (DESIGN.md SS6). Padding lanes carry hd = 1,
+    g = 0 so they are inert.
+    """
+    n = g.shape[0]
+    edge_keep = jnp.concatenate([
+        (boundary[:-1] == boundary[1:]).astype(g.dtype),
+        jnp.zeros((1,), g.dtype),
+    ])
+    nb = -(-n // block)          # ceil
+    n_pad = nb * block
+    zero = jnp.zeros((1,), g.dtype)
+    one = jnp.ones((1,), g.dtype)
+
+    hd_p = jnp.concatenate([hd, jnp.ones((n_pad - n,), g.dtype)])
+    ho_p = _pad_to_block(ho, n_pad)
+    g_p = _pad_to_block(g, n_pad)
+    # the last real lane never has a forward edge (already 0 in edge_keep)
+    mask = _pad_to_block(edge_keep, n_pad)
+
+    g_prev = jnp.concatenate([zero, g_p[:-1]])
+    g_next = jnp.concatenate([g_p[1:], zero])
+    hd_prev = jnp.concatenate([one, hd_p[:-1]])
+    hd_next = jnp.concatenate([hd_p[1:], one])
+    ho_prev = jnp.concatenate([zero, ho_p[:-1]])
+    mask_prev = jnp.concatenate([zero, mask[:-1]])
+    aux = jnp.stack([g_prev, g_next, hd_prev, hd_next, ho_prev, mask,
+                     mask_prev])
+
+    kern = functools.partial(_kernel9, beta2=float(beta2), eps=float(eps),
+                             gamma=float(gamma))
+    hd2, ho2, u = pl.pallas_call(
+        kern,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((7, block), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), g.dtype),
+            jax.ShapeDtypeStruct((n_pad,), g.dtype),
+            jax.ShapeDtypeStruct((n_pad,), g.dtype),
+        ],
+        interpret=interpret,
+    )(hd_p, ho_p, g_p, aux)
+    return hd2[:n], ho2[:n] * edge_keep, u[:n]

@@ -1,0 +1,212 @@
+"""Layer-2 JAX compute graphs: the paper's benchmark models.
+
+Two models, both expressed over a *flat* f32 parameter vector so the Rust
+coordinator can own parameters/optimizer state as plain buffers:
+
+* ``Autoencoder`` -- the standard MLP autoencoder benchmark [41] used for
+  Tables 2-5/7-8 and Figures 2/4/7: dims 784-1000-500-250-30-250-500-1000-784,
+  tanh activations, sigmoid cross-entropy reconstruction loss summed over
+  pixels (the paper's "Train CE loss" scale of ~50).
+* ``TransformerLM`` -- a decoder-only LM standing in for the paper's 1B
+  Primer benchmark (Figure 3), config-scalable.
+
+Each model provides ``loss_and_grad(params_flat, *batch) -> (loss,
+grads_flat)``; ``aot.py`` lowers these once to HLO text. Python is never on
+the training path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# flat parameter layout
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    """One named tensor inside the flat parameter vector."""
+    name: str
+    shape: Tuple[int, ...]
+    offset: int
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+
+class Layout:
+    """Maps between a flat vector and named tensors (DESIGN.md SS6)."""
+
+    def __init__(self, specs: List[TensorSpec]):
+        self.specs = specs
+        self.total = (specs[-1].offset + specs[-1].size) if specs else 0
+
+    @staticmethod
+    def build(shapes: List[Tuple[str, Tuple[int, ...]]]) -> "Layout":
+        specs, off = [], 0
+        for name, shape in shapes:
+            specs.append(TensorSpec(name, tuple(shape), off))
+            off += int(np.prod(shape))
+        return Layout(specs)
+
+    def unflatten(self, flat):
+        return {s.name: flat[s.offset:s.offset + s.size].reshape(s.shape)
+                for s in self.specs}
+
+    def flatten(self, tensors) -> jnp.ndarray:
+        return jnp.concatenate(
+            [tensors[s.name].reshape(-1) for s in self.specs])
+
+    def boundary_ids(self) -> np.ndarray:
+        """Per-element tensor-id vector consumed by the SONew kernels."""
+        ids = np.zeros(self.total, dtype=np.float32)
+        for i, s in enumerate(self.specs):
+            ids[s.offset:s.offset + s.size] = float(i)
+        return ids
+
+
+# ---------------------------------------------------------------------------
+# MLP autoencoder (paper SS5.1)
+# ---------------------------------------------------------------------------
+
+AE_DIMS = [784, 1000, 500, 250, 30, 250, 500, 1000, 784]
+AE_SMALL_DIMS = [196, 256, 128, 64, 16, 64, 128, 256, 196]
+
+
+class Autoencoder:
+    def __init__(self, dims=None):
+        self.dims = list(dims or AE_DIMS)
+        shapes = []
+        for i in range(len(self.dims) - 1):
+            shapes.append((f"layer{i}.w", (self.dims[i], self.dims[i + 1])))
+            shapes.append((f"layer{i}.b", (self.dims[i + 1],)))
+        self.layout = Layout.build(shapes)
+
+    def init(self, seed: int = 0) -> np.ndarray:
+        """Glorot-uniform init, flattened (matches models/mlp.rs)."""
+        rng = np.random.default_rng(seed)
+        flat = np.zeros(self.layout.total, dtype=np.float32)
+        for s in self.layout.specs:
+            if s.name.endswith(".w"):
+                fan_in, fan_out = s.shape
+                lim = np.sqrt(6.0 / (fan_in + fan_out))
+                flat[s.offset:s.offset + s.size] = rng.uniform(
+                    -lim, lim, s.size).astype(np.float32)
+        return flat
+
+    def forward(self, params_flat, x):
+        """Logits of the reconstruction."""
+        p = self.layout.unflatten(params_flat)
+        h = x
+        n_layers = len(self.dims) - 1
+        for i in range(n_layers):
+            h = h @ p[f"layer{i}.w"] + p[f"layer{i}.b"]
+            if i < n_layers - 1:
+                h = jnp.tanh(h)
+        return h
+
+    def loss(self, params_flat, x):
+        """Sigmoid cross-entropy summed over pixels, mean over batch."""
+        z = self.forward(params_flat, x)
+        # stable BCE-with-logits: max(z,0) - z*x + log1p(exp(-|z|))
+        ce = jnp.maximum(z, 0.0) - z * x + jnp.log1p(jnp.exp(-jnp.abs(z)))
+        return jnp.sum(ce) / x.shape[0]
+
+    def loss_and_grad(self, params_flat, x):
+        return jax.value_and_grad(self.loss)(params_flat, x)
+
+
+# ---------------------------------------------------------------------------
+# decoder-only transformer LM (paper SS5.3 proxy)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    vocab: int = 512
+    d_model: int = 256
+    n_layer: int = 4
+    n_head: int = 4
+    seq: int = 128
+    ff_mult: int = 4
+
+
+class TransformerLM:
+    def __init__(self, cfg: LMConfig = LMConfig()):
+        self.cfg = cfg
+        d, f = cfg.d_model, cfg.ff_mult * cfg.d_model
+        shapes = [("embed", (cfg.vocab, d)), ("pos", (cfg.seq, d))]
+        for i in range(cfg.n_layer):
+            shapes += [
+                (f"blk{i}.ln1.g", (d,)), (f"blk{i}.ln1.b", (d,)),
+                (f"blk{i}.attn.qkv", (d, 3 * d)),
+                (f"blk{i}.attn.out", (d, d)),
+                (f"blk{i}.ln2.g", (d,)), (f"blk{i}.ln2.b", (d,)),
+                (f"blk{i}.mlp.up", (d, f)), (f"blk{i}.mlp.down", (f, d)),
+            ]
+        shapes += [("lnf.g", (d,)), ("lnf.b", (d,))]
+        self.layout = Layout.build(shapes)
+
+    def init(self, seed: int = 0) -> np.ndarray:
+        rng = np.random.default_rng(seed)
+        flat = np.zeros(self.layout.total, dtype=np.float32)
+        for s in self.layout.specs:
+            if s.name.endswith(".g"):
+                flat[s.offset:s.offset + s.size] = 1.0
+            elif s.name.endswith(".b"):
+                pass
+            else:
+                std = 0.02
+                if s.name.endswith("attn.out") or s.name.endswith("mlp.down"):
+                    std = 0.02 / np.sqrt(2.0 * self.cfg.n_layer)
+                flat[s.offset:s.offset + s.size] = (
+                    rng.standard_normal(s.size) * std).astype(np.float32)
+        return flat
+
+    @staticmethod
+    def _ln(x, g, b):
+        mu = jnp.mean(x, -1, keepdims=True)
+        var = jnp.var(x, -1, keepdims=True)
+        return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+    def forward(self, params_flat, tokens):
+        """tokens: (B, seq) int32 -> logits (B, seq, vocab)."""
+        cfg = self.cfg
+        p = self.layout.unflatten(params_flat)
+        B, S = tokens.shape
+        h = p["embed"][tokens] + p["pos"][None, :S, :]
+        nh, hd = cfg.n_head, cfg.d_model // cfg.n_head
+        causal = jnp.tril(jnp.ones((S, S), jnp.float32))
+        neg = jnp.asarray(-1e9, jnp.float32)
+        for i in range(cfg.n_layer):
+            x = self._ln(h, p[f"blk{i}.ln1.g"], p[f"blk{i}.ln1.b"])
+            qkv = x @ p[f"blk{i}.attn.qkv"]
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+            q = q.reshape(B, S, nh, hd).transpose(0, 2, 1, 3)
+            k = k.reshape(B, S, nh, hd).transpose(0, 2, 1, 3)
+            v = v.reshape(B, S, nh, hd).transpose(0, 2, 1, 3)
+            att = (q @ k.transpose(0, 1, 3, 2)) / np.sqrt(hd)
+            att = jnp.where(causal[None, None] > 0, att, neg)
+            att = jax.nn.softmax(att, axis=-1)
+            o = (att @ v).transpose(0, 2, 1, 3).reshape(B, S, cfg.d_model)
+            h = h + o @ p[f"blk{i}.attn.out"]
+            x = self._ln(h, p[f"blk{i}.ln2.g"], p[f"blk{i}.ln2.b"])
+            h = h + jax.nn.gelu(x @ p[f"blk{i}.mlp.up"]) @ p[f"blk{i}.mlp.down"]
+        h = self._ln(h, p["lnf.g"], p["lnf.b"])
+        return h @ p["embed"].T        # tied output head
+
+    def loss(self, params_flat, tokens, targets):
+        """Mean next-token cross-entropy (= log-perplexity, Figure 3)."""
+        logits = self.forward(params_flat, tokens)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None], -1)[..., 0]
+        return jnp.mean(logz - gold)
+
+    def loss_and_grad(self, params_flat, tokens, targets):
+        return jax.value_and_grad(self.loss)(params_flat, tokens, targets)

@@ -1,0 +1,223 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp/numpy oracles in ref.py.
+
+Hypothesis sweeps shapes, band sizes, EMA coefficients, damping, boundary
+splits and Algorithm-3 tolerances; every property the paper states about the
+explicit solutions (Theorems 3.1/3.2, eq. 10 optimality, positive
+definiteness, Algorithm 3 fallback) is asserted here.
+"""
+
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import banded as Kb
+from compile.kernels import ref
+from compile.kernels import tridiag as Kt
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def rand_tridiag(rng, n):
+    """A valid H: gram-matrix projection => 2x2 principal minors positive."""
+    G = rng.standard_normal((n, max(2 * n, 8))).astype(np.float32)
+    H = G @ G.T / G.shape[1]
+    hd = jnp.asarray(np.diag(H).copy())
+    ho = jnp.asarray(np.pad(np.diag(H, -1), (0, 1)).astype(np.float32))
+    return hd, ho
+
+
+def rel_err(a, b):
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    return float(np.max(np.abs(a - b)) / (1e-6 + np.max(np.abs(b))))
+
+
+# ---------------------------------------------------------------------------
+# tridiagonal kernel
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(1, 400), seed=st.integers(0, 10_000),
+       beta2=st.floats(0.5, 0.999), eps=st.floats(1e-8, 1e-2),
+       block=st.sampled_from([32, 64, 128]))
+def test_tridiag_matches_ref(n, seed, beta2, eps, block):
+    rng = np.random.default_rng(seed)
+    hd, ho = rand_tridiag(rng, n)
+    ho = ho.at[-1].set(0.0)
+    g = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    tids = jnp.zeros(n, jnp.float32)
+    edge = jnp.ones(n, jnp.float32).at[n - 1].set(0.0)
+    hd_r, ho_r, u_r = ref.tridiag_update_ref(hd, ho, g, beta2, eps,
+                                             boundary=edge)
+    hd_k, ho_k, u_k = Kt.tridiag_update(hd, ho, g, tids, beta2=beta2,
+                                        eps=eps, block=block)
+    assert rel_err(hd_k, hd_r) < 1e-5
+    assert rel_err(ho_k, ho_r) < 1e-5
+    assert rel_err(u_k, u_r) < 1e-4
+
+
+@given(n=st.integers(4, 200), seed=st.integers(0, 10_000),
+       cut=st.integers(1, 3))
+def test_tridiag_boundary_equals_independent_chains(n, seed, cut):
+    """Per-tensor masking == running each tensor's chain independently."""
+    rng = np.random.default_rng(seed)
+    cutpoint = max(1, min(n - 1, n // (cut + 1)))
+    hd, ho = rand_tridiag(rng, n)
+    g = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    tids = jnp.asarray((np.arange(n) >= cutpoint).astype(np.float32))
+    edge = jnp.concatenate([(tids[:-1] == tids[1:]).astype(jnp.float32),
+                            jnp.zeros(1, jnp.float32)])
+    ho = ho * edge
+    hd_k, ho_k, u_k = Kt.tridiag_update(hd, ho, g, tids, beta2=0.9,
+                                        eps=1e-6, block=64)
+    # run the two chains separately with the reference
+    u_parts = []
+    for lo, hi in [(0, cutpoint), (cutpoint, n)]:
+        m = hi - lo
+        e = jnp.ones(m, jnp.float32).at[m - 1].set(0.0)
+        _, _, u_p = ref.tridiag_update_ref(hd[lo:hi], (ho * edge)[lo:hi],
+                                           g[lo:hi], 0.9, 1e-6, boundary=e)
+        u_parts.append(u_p)
+    assert rel_err(u_k, jnp.concatenate(u_parts)) < 1e-4
+
+
+@given(n=st.integers(2, 100), seed=st.integers(0, 1000),
+       gamma=st.floats(1e-4, 1e-1))
+def test_tridiag_algorithm3_drop(n, seed, gamma):
+    """Algorithm 3: gamma-dropped edges match the reference implementation,
+    and identical adjacent gradient rows (Lemma A.13 case 1) never produce
+    non-finite directions."""
+    rng = np.random.default_rng(seed)
+    # deliberately near-degenerate: g has duplicated adjacent entries
+    g_np = rng.standard_normal(n).astype(np.float32)
+    g_np[1:] = np.where(rng.uniform(size=n - 1) < 0.5, g_np[:-1], g_np[1:])
+    g = jnp.asarray(g_np)
+    hd = jnp.asarray(np.abs(g_np) ** 2 + 1e-4)
+    ho = jnp.concatenate([g[:-1] * g[1:], jnp.zeros(1)])
+    edge = jnp.ones(n, jnp.float32).at[n - 1].set(0.0)
+    ho = ho * edge
+    hd_r, ho_r, u_r = ref.tridiag_update_ref(hd, ho, g, 0.9, 1e-7,
+                                             gamma=gamma, boundary=edge)
+    hd_k, ho_k, u_k = Kt.tridiag_update(hd, ho, g, jnp.zeros(n), beta2=0.9,
+                                        eps=1e-7, gamma=gamma, block=32)
+    assert np.all(np.isfinite(np.asarray(u_k)))
+    # Edges whose Schur complement lands within fp32 noise of gamma may be
+    # kept by one implementation and dropped by the other — both outcomes
+    # are valid Algorithm-3 decisions, so allow a small residual.
+    assert rel_err(u_k, u_r) < 5e-2
+
+
+def test_tridiag_optimality_condition():
+    """P_G(X^{-1}) == H (eq. 10): the kernel's implied X solves (11)."""
+    rng = np.random.default_rng(7)
+    n = 50
+    hd, ho = rand_tridiag(rng, n)
+    ho = ho.at[-1].set(0.0)
+    l, d = ref.tridiag_ldl(hd, ho)
+    L = jnp.eye(n) + jnp.diag(l[:-1], -1)
+    X = L @ jnp.diag(d) @ L.T
+    resid = ref.logdet_optimality_residual(
+        X, ref.tridiag_to_dense(hd, ho), ref.banded_mask(n, 1))
+    assert resid < 1e-4
+
+
+def test_tridiag_posdef():
+    """X = L D L^T is positive definite: all D entries positive."""
+    rng = np.random.default_rng(8)
+    for n in [2, 17, 128]:
+        hd, ho = rand_tridiag(rng, n)
+        l, d = ref.tridiag_ldl(hd, ho.at[-1].set(0.0))
+        assert np.all(np.asarray(d) > 0)
+
+
+# ---------------------------------------------------------------------------
+# banded kernel
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(2, 120), b=st.integers(1, 5), seed=st.integers(0, 1000),
+       beta2=st.floats(0.5, 0.999))
+def test_banded_matches_dense_oracle(n, b, seed, beta2):
+    rng = np.random.default_rng(seed)
+    G = rng.standard_normal((n, 3 * n + 8)).astype(np.float32)
+    Hd = jnp.asarray(G @ G.T / G.shape[1])
+    diags = ref.dense_to_banded(Hd, b)
+    g = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    d_r, u_r = ref.banded_update_ref(diags, g, beta2, 1e-6)
+    d_k, u_k = Kb.banded_update(diags, g, jnp.zeros(n), b=b, beta2=beta2,
+                                eps=1e-6, block=32)
+    assert rel_err(d_k, d_r) < 1e-5
+    assert rel_err(u_k, u_r) < 1e-4
+
+
+@given(n=st.integers(4, 80), seed=st.integers(0, 500))
+def test_banded_b1_equals_tridiag(n, seed):
+    """Theorem 3.1 is Theorem 3.2 at b=1: both kernels must agree."""
+    rng = np.random.default_rng(seed)
+    hd, ho = rand_tridiag(rng, n)
+    ho = ho.at[-1].set(0.0)
+    g = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    diags = jnp.stack([hd, ho])
+    d_k, u_b = Kb.banded_update(diags, g, jnp.zeros(n), b=1, beta2=0.9,
+                                eps=1e-6, block=32)
+    _, _, u_t = Kt.tridiag_update(hd, ho, g, jnp.zeros(n), beta2=0.9,
+                                  eps=1e-6, block=32)
+    assert rel_err(u_b, u_t) < 1e-4
+
+
+def test_banded_optimality_condition():
+    """eq. 10 holds for the banded explicit solution at several b."""
+    rng = np.random.default_rng(9)
+    n = 40
+    for b in [1, 2, 4, 8]:
+        G = rng.standard_normal((n, 4 * n)).astype(np.float32)
+        Hd = jnp.asarray(G @ G.T / (4 * n))
+        diags = ref.dense_to_banded(Hd, b)
+        Hb = ref.banded_to_dense(diags)
+        L, d = ref.banded_ldl_dense(np.asarray(Hb), b)
+        X = jnp.asarray(L @ np.diag(d) @ L.T, jnp.float32)
+        resid = ref.logdet_optimality_residual(X, Hb, ref.banded_mask(n, b))
+        assert resid < 1e-4, (b, resid)
+
+
+def test_banded_boundary_blocks():
+    """Edges crossing a tensor boundary are cut for every band diagonal."""
+    rng = np.random.default_rng(10)
+    n, b, cut = 30, 3, 13
+    G = rng.standard_normal((n, 4 * n)).astype(np.float32)
+    diags = ref.dense_to_banded(jnp.asarray(G @ G.T / (4 * n)), b)
+    g = jnp.asarray(rng.standard_normal(n).astype(np.float32))
+    tids = jnp.asarray((np.arange(n) >= cut).astype(np.float32))
+    d_k, u_k = Kb.banded_update(diags, g, tids, b=b, beta2=0.9, eps=1e-6,
+                                block=16)
+    d_np = np.asarray(d_k)
+    for k in range(1, b + 1):
+        for j in range(max(0, cut - k), cut):
+            assert d_np[k, j] == 0.0, (k, j)
+    # and the direction equals running the two blocks independently
+    u_parts = []
+    for lo, hi in [(0, cut), (cut, n)]:
+        sub = jnp.stack([
+            jnp.where(jnp.arange(hi - lo) + k < hi - lo,
+                      diags[k, lo:hi], 0.0)
+            for k in range(b + 1)])
+        _, u_p = Kb.banded_update(sub, g[lo:hi],
+                                  jnp.zeros(hi - lo), b=b, beta2=0.9,
+                                  eps=1e-6, block=16)
+        u_parts.append(u_p)
+    assert rel_err(u_k, jnp.concatenate(u_parts)) < 1e-4
+
+
+def test_banded_algorithm3_degenerate():
+    """Rank-deficient H (Lemma A.13 case 2) stays finite via Algorithm 3."""
+    n, b = 20, 3
+    g_np = np.ones(n, dtype=np.float32)         # rank-1 statistics
+    g = jnp.asarray(g_np)
+    diags = jnp.stack([jnp.ones(n)] + [
+        jnp.asarray((np.arange(n) + k < n).astype(np.float32))
+        for k in range(1, b + 1)])
+    d_k, u_k = Kb.banded_update(diags, g, jnp.zeros(n), b=b, beta2=0.5,
+                                eps=0.0, gamma=1e-6, block=16)
+    assert np.all(np.isfinite(np.asarray(u_k)))

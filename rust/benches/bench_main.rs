@@ -1,0 +1,123 @@
+//! Benchmark harness (criterion is unavailable offline — custom
+//! median-of-k timing via util::timer::bench).
+//!
+//! Sections map to the paper's evaluation:
+//!   [t1]    per-step optimizer cost vs layer size (Table 1)
+//!   [step]  full-AE per-step wall time share, tridiag vs Adam (the
+//!           "~3% slower per step" claim, §1)
+//!   [kernel] native SONew kernel throughput (GB/s of parameter state)
+//!   [hlo]   PJRT execution overhead of the AOT artifacts (if present)
+//!
+//!     cargo bench            # all sections
+//!     cargo bench -- t1      # one section
+
+use sonew::optim::{build, HyperParams, OptKind};
+use sonew::sonew::{BandedState, LambdaMode, TridiagState};
+use sonew::util::timer::bench;
+use sonew::util::{Precision, Rng};
+
+fn main() {
+    let filter = std::env::args().nth(1).unwrap_or_default();
+    let run = |name: &str| filter.is_empty() || name.contains(&filter) || filter == "--bench";
+
+    if run("t1") {
+        println!("== [t1] per-step optimizer cost vs layer size (Table 1) ==");
+        sonew::tables::t1_complexity::run(&[32, 64, 128, 256], 20).unwrap();
+    }
+
+    if run("kernel") {
+        println!("== [kernel] native SONew kernel throughput ==");
+        for n in [1 << 16, 1 << 20, 1 << 22] {
+            let mut rng = Rng::new(1);
+            let g = rng.normal_vec(n);
+            let mut u = vec![0.0f32; n];
+            let mut st = TridiagState::new(n, None);
+            let r = bench(&format!("tridiag step n={n}"), 10, 5, |k| {
+                for _ in 0..k {
+                    st.step(&g, &mut u, LambdaMode::Ema(0.95), 1e-6, 0.0, Precision::F32);
+                }
+            });
+            // streams: read hd,ho,g + write hd,ho,u = 6 x 4B x n
+            let gbs = 24.0 * n as f64 / r.per_iter_ns();
+            println!("{}   {:.2} GB/s", r.report(), gbs);
+
+            let mut bs = BandedState::new(n, 4, None);
+            let r = bench(&format!("band-4  step n={n}"), 4, 3, |k| {
+                for _ in 0..k {
+                    bs.step(&g, &mut u, LambdaMode::Ema(0.95), 1e-6, 0.0, Precision::F32);
+                }
+            });
+            println!("{}", r.report());
+            if n >= 1 << 22 {
+                break; // band-4 at 4M is ~seconds; one size is enough
+            }
+        }
+    }
+
+    if run("step") {
+        println!("== [step] full-AE optimizer step: tridiag-SONew vs Adam ==");
+        let mlp = sonew::models::Mlp::autoencoder();
+        let n = mlp.total;
+        let mut rng = Rng::new(2);
+        let g = rng.normal_vec(n);
+        for kind in [OptKind::Adam, OptKind::DiagSonew, OptKind::TridiagSonew, OptKind::BandSonew] {
+            let hp = HyperParams { grafting: false, beta1: 0.0, ..Default::default() };
+            let mut opt = build(kind, n, &mlp.blocks(), &mlp.mat_blocks(), &hp);
+            let mut params = vec![0.01f32; n];
+            let r = bench(&format!("{} step n={n}", opt.name()), 5, 5, |k| {
+                for _ in 0..k {
+                    opt.step(&mut params, &g, 1e-3);
+                }
+            });
+            println!("{}", r.report());
+        }
+    }
+
+    if run("hlo") {
+        let dir = sonew::runtime::Engine::default_dir();
+        if sonew::runtime::Engine::available(&dir) {
+            println!("== [hlo] PJRT artifact execution ==");
+            let engine = sonew::runtime::Engine::open(&dir).unwrap();
+            if let Ok(spec) = engine.spec("sonew_tridiag_ae_small") {
+                let n = spec.inputs[0].elements();
+                let hd = vec![1.0f32; n];
+                let ho = vec![0.0f32; n];
+                let mut rng = Rng::new(3);
+                let g = rng.normal_vec(n);
+                let tids = engine.manifest.layout("ae_small").unwrap().tensor_ids();
+                use sonew::runtime::HostTensor as HT;
+                let r = bench(&format!("hlo sonew_tridiag n={n}"), 5, 5, |k| {
+                    for _ in 0..k {
+                        engine
+                            .exec("sonew_tridiag_ae_small", &[
+                                HT::F32(hd.clone()),
+                                HT::F32(ho.clone()),
+                                HT::F32(g.clone()),
+                                HT::F32(tids.clone()),
+                            ])
+                            .unwrap();
+                    }
+                });
+                println!("{}", r.report());
+            }
+            if let Ok(spec) = engine.spec("ae_small_grads_b64") {
+                let np = spec.inputs[0].elements();
+                let bx = spec.inputs[1].elements();
+                let params = vec![0.01f32; np];
+                let x = vec![0.5f32; bx];
+                use sonew::runtime::HostTensor as HT;
+                let r = bench("hlo ae_small grads b64", 5, 5, |k| {
+                    for _ in 0..k {
+                        engine
+                            .loss_and_grad("ae_small_grads_b64", &params, vec![HT::F32(x.clone())])
+                            .unwrap();
+                    }
+                });
+                println!("{}", r.report());
+            }
+        } else {
+            println!("[hlo] skipped (no artifacts; run `make artifacts`)");
+        }
+    }
+    println!("bench done");
+}

@@ -1,0 +1,103 @@
+//! Minimal CLI argument parser (clap is not in the offline dependency
+//! closure): `--flag value`, `--switch`, and positional arguments.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without the program name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Self {
+        let mut out = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn parse() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, name: &str, default: f32) -> f32 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated list flag.
+    pub fn list_or(&self, name: &str, default: &str) -> Vec<String> {
+        self.get(name)
+            .unwrap_or(default)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().to_string())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn flags_and_switches() {
+        let a = parse("train --steps 50 --verbose --lr=0.01 pos1");
+        assert_eq!(a.positional, vec!["train", "pos1"]);
+        assert_eq!(a.usize_or("steps", 0), 50);
+        assert!(a.has("verbose"));
+        assert!((a.f32_or("lr", 0.0) - 0.01).abs() < 1e-9);
+        assert!(!a.has("missing"));
+        assert_eq!(a.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--opts adam,sgd , --x 1");
+        assert_eq!(a.list_or("opts", ""), vec!["adam", "sgd"]);
+        assert_eq!(a.list_or("other", "a,b"), vec!["a", "b"]);
+    }
+}

@@ -1,0 +1,78 @@
+//! Minimal binary checkpointing: flat f32 parameter vectors with a magic
+//! header and length check (no serde in the offline closure).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8; 8] = b"SONEWCK1";
+
+/// Write a flat parameter vector.
+pub fn save(path: impl AsRef<Path>, step: u64, params: &[f32]) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).ok();
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&step.to_le_bytes())?;
+    f.write_all(&(params.len() as u64).to_le_bytes())?;
+    let bytes: &[u8] = unsafe {
+        std::slice::from_raw_parts(params.as_ptr().cast(), params.len() * 4)
+    };
+    f.write_all(bytes)?;
+    Ok(())
+}
+
+/// Read a checkpoint back; returns (step, params).
+pub fn load(path: impl AsRef<Path>) -> Result<(u64, Vec<f32>)> {
+    let path = path.as_ref();
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not a SONew checkpoint", path.display());
+    }
+    let mut buf8 = [0u8; 8];
+    f.read_exact(&mut buf8)?;
+    let step = u64::from_le_bytes(buf8);
+    f.read_exact(&mut buf8)?;
+    let n = u64::from_le_bytes(buf8) as usize;
+    let mut bytes = vec![0u8; n * 4];
+    f.read_exact(&mut bytes)?;
+    let mut params = vec![0f32; n];
+    for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+        params[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+    }
+    Ok((step, params))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("sonew_ckpt_test");
+        let path = dir.join("p.ck");
+        let params: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5 - 3.0).collect();
+        save(&path, 42, &params).unwrap();
+        let (step, back) = load(&path).unwrap();
+        assert_eq!(step, 42);
+        assert_eq!(back, params);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("sonew_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ck");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

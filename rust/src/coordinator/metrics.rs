@@ -1,0 +1,129 @@
+//! Training metrics: loss curves, phase timers, CSV emission — the data
+//! behind every figure the harnesses regenerate.
+
+use std::time::{Duration, Instant};
+
+use crate::util::io::Csv;
+
+/// One recorded point on a training curve.
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub step: u64,
+    pub loss: f32,
+    pub lr: f32,
+    pub wall_s: f64,
+}
+
+/// Loss-curve recorder with phase attribution.
+#[derive(Debug)]
+pub struct Metrics {
+    pub points: Vec<Point>,
+    start: Instant,
+    pub grad_time: Duration,
+    pub opt_time: Duration,
+    pub allreduce_time: Duration,
+    /// extra named scalars recorded at the end (val accuracy etc.)
+    pub finals: Vec<(String, f64)>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self {
+            points: vec![],
+            start: Instant::now(),
+            grad_time: Duration::ZERO,
+            opt_time: Duration::ZERO,
+            allreduce_time: Duration::ZERO,
+            finals: vec![],
+        }
+    }
+}
+
+impl Metrics {
+    pub fn record(&mut self, step: u64, loss: f32, lr: f32) {
+        self.points.push(Point {
+            step,
+            loss,
+            lr,
+            wall_s: self.start.elapsed().as_secs_f64(),
+        });
+    }
+
+    pub fn final_scalar(&mut self, name: &str, v: f64) {
+        self.finals.push((name.to_string(), v));
+    }
+
+    pub fn last_loss(&self) -> Option<f32> {
+        self.points.last().map(|p| p.loss)
+    }
+
+    pub fn best_loss(&self) -> Option<f32> {
+        self.points
+            .iter()
+            .map(|p| p.loss)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Mean loss of the final `k` recorded points (robust to minibatch
+    /// noise when reporting "final train loss").
+    pub fn tail_mean_loss(&self, k: usize) -> Option<f32> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let tail = &self.points[self.points.len().saturating_sub(k)..];
+        Some(tail.iter().map(|p| p.loss).sum::<f32>() / tail.len() as f32)
+    }
+
+    pub fn total_wall(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// First step at which the loss drops to `target` or below (the
+    /// "steps-to-quality" number behind Figures 1 and 3).
+    pub fn steps_to_reach(&self, target: f32) -> Option<u64> {
+        self.points.iter().find(|p| p.loss <= target).map(|p| p.step)
+    }
+
+    /// Loss-curve CSV with the label as a column (figures overlay these).
+    pub fn to_csv(&self, label: &str) -> Csv {
+        let mut csv = Csv::new(&["label", "step", "loss", "lr", "wall_s"]);
+        for p in &self.points {
+            csv.row([
+                label.to_string(),
+                p.step.to_string(),
+                format!("{}", p.loss),
+                format!("{}", p.lr),
+                format!("{:.3}", p.wall_s),
+            ]);
+        }
+        csv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_queries() {
+        let mut m = Metrics::default();
+        m.record(0, 10.0, 0.1);
+        m.record(10, 5.0, 0.1);
+        m.record(20, 6.0, 0.05);
+        assert_eq!(m.last_loss(), Some(6.0));
+        assert_eq!(m.best_loss(), Some(5.0));
+        assert_eq!(m.steps_to_reach(5.5), Some(10));
+        assert_eq!(m.steps_to_reach(1.0), None);
+        assert!((m.tail_mean_loss(2).unwrap() - 5.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn csv_has_all_rows() {
+        let mut m = Metrics::default();
+        m.record(0, 1.0, 0.1);
+        m.record(1, 0.5, 0.1);
+        let s = m.to_csv("adam").to_string();
+        assert_eq!(s.lines().count(), 3);
+        assert!(s.contains("adam,1,0.5"));
+    }
+}

@@ -1,0 +1,15 @@
+//! L3 coordinator: the training framework — data-parallel worker pool
+//! with tree all-reduce, the training loop, LR schedules, checkpointing,
+//! metrics and the hyperparameter sweep harness.
+
+pub mod checkpoint;
+pub mod metrics;
+pub mod parallel;
+pub mod schedule;
+pub mod sweep;
+pub mod trainer;
+
+pub use metrics::Metrics;
+pub use parallel::{GradProvider, WorkerPool};
+pub use schedule::Schedule;
+pub use trainer::{train, train_single, TrainConfig};

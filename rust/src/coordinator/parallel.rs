@@ -1,0 +1,205 @@
+//! Data-parallel gradient workers with a binary-tree all-reduce — the
+//! same communication shape as the paper's 16-TPU sharded tridiag-SONew
+//! run (§5.3), realized over std threads and channels (no physical
+//! interconnect in this testbed; DESIGN.md §5/§6).
+//!
+//! Topology per step:
+//!   leader broadcasts params -> each worker computes (loss_w, grad_w) on
+//!   its own data shard -> gradients are pairwise tree-reduced
+//!   (lg W rounds) -> leader averages and takes the optimizer step.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+/// A per-worker gradient source: owns its data shard and (for the HLO
+/// path) its PJRT engine handle. Not required to be `Send`: providers are
+/// constructed *inside* their worker thread (PJRT clients are
+/// thread-affine), so only the factory crosses threads.
+pub trait GradProvider {
+    /// Compute (loss, grads) for the next minibatch at `params`.
+    fn next_loss_and_grad(&mut self, params: &[f32]) -> Result<(f32, Vec<f32>)>;
+}
+
+enum Cmd {
+    Step(Arc<Vec<f32>>),
+    Stop,
+}
+
+struct Worker {
+    cmd: mpsc::Sender<Cmd>,
+    out: mpsc::Receiver<Result<(f32, Vec<f32>)>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Pool of data-parallel gradient workers.
+pub struct WorkerPool {
+    workers: Vec<Worker>,
+}
+
+impl WorkerPool {
+    /// Spawn `n` workers; `factory(i)` runs *inside* worker i's thread to
+    /// build its provider (each worker gets an independent data shard /
+    /// RNG stream / PJRT client).
+    pub fn spawn(
+        n: usize,
+        factory: impl Fn(usize) -> Box<dyn GradProvider> + Send + Sync + 'static,
+    ) -> Self {
+        let factory = Arc::new(factory);
+        let workers = (0..n.max(1))
+            .map(|i| {
+                let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
+                let (out_tx, out_rx) = mpsc::channel();
+                let factory = Arc::clone(&factory);
+                let handle = std::thread::Builder::new()
+                    .name(format!("grad-worker-{i}"))
+                    .spawn(move || {
+                        let mut provider = factory(i);
+                        while let Ok(Cmd::Step(params)) = cmd_rx.recv() {
+                            let r = provider.next_loss_and_grad(&params);
+                            if out_tx.send(r).is_err() {
+                                break;
+                            }
+                        }
+                    })
+                    .expect("spawn worker");
+                Worker { cmd: cmd_tx, out: out_rx, handle: Some(handle) }
+            })
+            .collect();
+        Self { workers }
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+
+    /// One synchronous data-parallel gradient step: broadcast, compute,
+    /// tree-reduce. Returns (mean loss, mean grads).
+    pub fn step(&mut self, params: Arc<Vec<f32>>) -> Result<(f32, Vec<f32>)> {
+        for w in &self.workers {
+            w.cmd
+                .send(Cmd::Step(Arc::clone(&params)))
+                .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
+        }
+        let mut results: Vec<(f32, Vec<f32>)> = Vec::with_capacity(self.workers.len());
+        for w in &self.workers {
+            results.push(w.out.recv().map_err(|_| anyhow::anyhow!("worker died"))??);
+        }
+        Ok(tree_reduce_mean(results))
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.cmd.send(Cmd::Stop);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Binary-tree pairwise reduction of (loss, grad) contributions followed
+/// by averaging — lg(W) reduction rounds, the collective shape a
+/// ring/tree all-reduce realizes on hardware.
+pub fn tree_reduce_mean(mut contribs: Vec<(f32, Vec<f32>)>) -> (f32, Vec<f32>) {
+    assert!(!contribs.is_empty());
+    let w = contribs.len();
+    let mut stride = 1;
+    while stride < w {
+        let mut i = 0;
+        while i + stride < w {
+            // reduce pair (i, i+stride) into i
+            let (right_loss, right_grad) = std::mem::take(&mut contribs[i + stride]);
+            contribs[i].0 += right_loss;
+            let left = &mut contribs[i].1;
+            for (a, b) in left.iter_mut().zip(&right_grad) {
+                *a += *b;
+            }
+            i += stride * 2;
+        }
+        stride *= 2;
+    }
+    let (mut loss, mut grad) = std::mem::take(&mut contribs[0]);
+    let inv = 1.0 / w as f32;
+    loss *= inv;
+    for g in &mut grad {
+        *g *= inv;
+    }
+    (loss, grad)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct ConstProvider {
+        loss: f32,
+        grad: Vec<f32>,
+    }
+
+    impl GradProvider for ConstProvider {
+        fn next_loss_and_grad(&mut self, _p: &[f32]) -> Result<(f32, Vec<f32>)> {
+            Ok((self.loss, self.grad.clone()))
+        }
+    }
+
+    #[test]
+    fn tree_reduce_matches_mean() {
+        for w in [1usize, 2, 3, 4, 5, 8] {
+            let contribs: Vec<(f32, Vec<f32>)> = (0..w)
+                .map(|i| (i as f32, vec![i as f32, 2.0 * i as f32]))
+                .collect();
+            let (loss, grad) = tree_reduce_mean(contribs);
+            let want = (0..w).map(|i| i as f32).sum::<f32>() / w as f32;
+            assert!((loss - want).abs() < 1e-5, "w={w}");
+            assert!((grad[0] - want).abs() < 1e-5, "w={w}");
+            assert!((grad[1] - 2.0 * want).abs() < 1e-5, "w={w}");
+        }
+    }
+
+    #[test]
+    fn pool_averages_across_workers() {
+        let mut pool = WorkerPool::spawn(4, |i| {
+            Box::new(ConstProvider { loss: i as f32, grad: vec![i as f32; 3] })
+        });
+        let (loss, grad) = pool.step(Arc::new(vec![0.0; 3])).unwrap();
+        assert!((loss - 1.5).abs() < 1e-6);
+        assert!(grad.iter().all(|&g| (g - 1.5).abs() < 1e-6));
+    }
+
+    #[test]
+    fn pool_sees_current_params() {
+        struct Echo;
+        impl GradProvider for Echo {
+            fn next_loss_and_grad(&mut self, p: &[f32]) -> Result<(f32, Vec<f32>)> {
+                Ok((p[0], p.to_vec()))
+            }
+        }
+        let mut pool = WorkerPool::spawn(2, |_| Box::new(Echo));
+        let (loss, grad) = pool.step(Arc::new(vec![7.0, 8.0])).unwrap();
+        assert_eq!(loss, 7.0);
+        assert_eq!(grad, vec![7.0, 8.0]);
+    }
+
+    #[test]
+    fn worker_error_propagates() {
+        struct Fail;
+        impl GradProvider for Fail {
+            fn next_loss_and_grad(&mut self, _p: &[f32]) -> Result<(f32, Vec<f32>)> {
+                anyhow::bail!("shard corrupted")
+            }
+        }
+        let mut pool = WorkerPool::spawn(2, |_| Box::new(Fail));
+        assert!(pool.step(Arc::new(vec![0.0])).is_err());
+    }
+}

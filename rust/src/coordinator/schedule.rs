@@ -1,0 +1,70 @@
+//! Learning-rate schedules (the paper's sweeps use cosine decay with a
+//! 2-10% linear warmup).
+
+/// A learning-rate schedule over `total` steps.
+#[derive(Debug, Clone, Copy)]
+pub enum Schedule {
+    Constant { lr: f32 },
+    /// linear warmup for `warmup` steps then cosine decay to `final_frac*lr`
+    CosineWarmup { lr: f32, warmup: u64, total: u64, final_frac: f32 },
+}
+
+impl Schedule {
+    pub fn at(&self, step: u64) -> f32 {
+        match *self {
+            Schedule::Constant { lr } => lr,
+            Schedule::CosineWarmup { lr, warmup, total, final_frac } => {
+                if warmup > 0 && step < warmup {
+                    lr * (step + 1) as f32 / warmup as f32
+                } else {
+                    let t = (step - warmup) as f32
+                        / (total.saturating_sub(warmup)).max(1) as f32;
+                    let t = t.clamp(0.0, 1.0);
+                    let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+                    lr * (final_frac + (1.0 - final_frac) * cos)
+                }
+            }
+        }
+    }
+
+    pub fn peak(&self) -> f32 {
+        match *self {
+            Schedule::Constant { lr } => lr,
+            Schedule::CosineWarmup { lr, .. } => lr,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_constant() {
+        let s = Schedule::Constant { lr: 0.1 };
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(1_000_000), 0.1);
+    }
+
+    #[test]
+    fn warmup_ramps_then_decays() {
+        let s = Schedule::CosineWarmup { lr: 1.0, warmup: 10, total: 110, final_frac: 0.0 };
+        assert!(s.at(0) < 0.2);
+        assert!((s.at(9) - 1.0).abs() < 1e-6);
+        assert!(s.at(60) < 1.0);
+        assert!(s.at(109) < 0.01);
+        // monotone decay after warmup
+        let mut prev = s.at(10);
+        for t in 11..110 {
+            let v = s.at(t);
+            assert!(v <= prev + 1e-6);
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn past_total_clamps() {
+        let s = Schedule::CosineWarmup { lr: 1.0, warmup: 0, total: 10, final_frac: 0.1 };
+        assert!((s.at(10_000) - 0.1).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,131 @@
+//! Random-search hyperparameter sweeps over the paper's search space
+//! (§A.4.3): log-uniform learning rate and eps, uniform betas — the
+//! machinery behind Table 12 and the "200 hyperparameters per optimizer"
+//! protocol (scaled by `trials`).
+
+use crate::optim::HyperParams;
+use crate::util::Rng;
+
+/// The §A.4.3 search box.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    pub lr: (f64, f64),
+    pub beta1: (f64, f64),
+    pub beta2: (f64, f64),
+    pub eps: (f64, f64),
+}
+
+impl Default for SearchSpace {
+    fn default() -> Self {
+        Self {
+            lr: (1e-7, 1e-1),
+            beta1: (0.1, 0.999),
+            beta2: (0.1, 0.999),
+            eps: (1e-10, 1e-1),
+        }
+    }
+}
+
+/// One sampled trial.
+#[derive(Debug, Clone)]
+pub struct Trial {
+    pub lr: f32,
+    pub hp: HyperParams,
+}
+
+impl SearchSpace {
+    pub fn sample(&self, rng: &mut Rng, base: &HyperParams) -> Trial {
+        let lr = rng.log_uniform(self.lr.0, self.lr.1) as f32;
+        let hp = HyperParams {
+            lr,
+            beta1: rng.range(self.beta1.0, self.beta1.1) as f32,
+            beta2: rng.range(self.beta2.0, self.beta2.1) as f32,
+            eps: rng.log_uniform(self.eps.0, self.eps.1) as f32,
+            ..base.clone()
+        };
+        Trial { lr, hp }
+    }
+}
+
+/// Result of a sweep: best trial by objective (lower is better).
+pub struct SweepResult {
+    pub best: Trial,
+    pub best_objective: f32,
+    pub evaluated: usize,
+}
+
+/// Run `trials` random-search evaluations of `objective`. Non-finite
+/// objectives (diverged runs) are discarded, exactly as a practical
+/// tuner does.
+pub fn random_search(
+    space: &SearchSpace,
+    base: &HyperParams,
+    trials: usize,
+    seed: u64,
+    mut objective: impl FnMut(&Trial) -> f32,
+) -> Option<SweepResult> {
+    let mut rng = Rng::new(seed);
+    let mut best: Option<(Trial, f32)> = None;
+    for _ in 0..trials {
+        let trial = space.sample(&mut rng, base);
+        let obj = objective(&trial);
+        if !obj.is_finite() {
+            continue;
+        }
+        if best.as_ref().map_or(true, |(_, b)| obj < *b) {
+            best = Some((trial, obj));
+        }
+    }
+    best.map(|(best, best_objective)| SweepResult {
+        best,
+        best_objective,
+        evaluated: trials,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_stay_in_box() {
+        let space = SearchSpace::default();
+        let base = HyperParams::default();
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let t = space.sample(&mut rng, &base);
+            assert!(t.lr >= 1e-7 && t.lr <= 1e-1);
+            assert!(t.hp.beta1 >= 0.1 && t.hp.beta1 <= 0.999);
+            assert!(t.hp.eps >= 1e-10 && t.hp.eps <= 1e-1);
+        }
+    }
+
+    #[test]
+    fn finds_known_optimum() {
+        // objective minimized at lr = 1e-3
+        let space = SearchSpace::default();
+        let base = HyperParams::default();
+        let r = random_search(&space, &base, 300, 2, |t| {
+            ((t.lr.ln() - (1e-3f32).ln()).abs()) as f32
+        })
+        .unwrap();
+        assert!(r.best.lr > 2e-4 && r.best.lr < 5e-3, "{}", r.best.lr);
+    }
+
+    #[test]
+    fn discards_nan_trials() {
+        let space = SearchSpace::default();
+        let base = HyperParams::default();
+        let mut flip = false;
+        let r = random_search(&space, &base, 50, 3, |_| {
+            flip = !flip;
+            if flip {
+                f32::NAN
+            } else {
+                1.0
+            }
+        })
+        .unwrap();
+        assert_eq!(r.best_objective, 1.0);
+    }
+}

@@ -1,0 +1,263 @@
+//! Synthetic image / graph workloads.
+//!
+//! * `SynthImages` — MNIST stand-in: 28x28 "digit-like" images built from
+//!   class-dependent smooth strokes plus noise. Neighbouring pixels are
+//!   strongly correlated (smooth strokes), reproducing the degenerate-H
+//!   mechanism of Lemma A.13 case 1 that the paper attributes to real
+//!   image inputs. Used by the autoencoder benchmark (Tables 2-5/7-8) and
+//!   the ViT-proxy (Figure 1a).
+//! * `SynthGraphs` — OGBG-molpcba stand-in for the GNN-proxy (Figure 1b):
+//!   random molecule-like graphs whose label depends on aggregate motif
+//!   statistics; featurized as permutation-invariant pooled descriptors
+//!   for the DeepSets-style classifier.
+
+use crate::linalg::Mat;
+use crate::util::Rng;
+
+/// Deterministic synthetic digit-like image source.
+pub struct SynthImages {
+    pub side: usize,
+    pub classes: usize,
+    rng: Rng,
+}
+
+impl SynthImages {
+    pub fn new(seed: u64) -> Self {
+        Self { side: 28, classes: 10, rng: Rng::new(seed) }
+    }
+
+    pub fn pixels(&self) -> usize {
+        self.side * self.side
+    }
+
+    /// One image of the given class: a class-specific arc + bar pattern,
+    /// smoothly rendered (gaussian-profile strokes) with mild noise.
+    fn render(&mut self, class: usize) -> Vec<f32> {
+        let s = self.side as f32;
+        let mut img = vec![0.0f32; self.side * self.side];
+        // class-dependent stroke parameters (+ small per-sample jitter)
+        let phase = class as f32 * 0.628;
+        let cx = 0.5 * s + 0.06 * s * self.rng.normal_f32();
+        let cy = 0.5 * s + 0.06 * s * self.rng.normal_f32();
+        let r0 = (0.18 + 0.02 * (class % 5) as f32) * s
+            + 0.02 * s * self.rng.normal_f32();
+        let tilt = phase + 0.1 * self.rng.normal_f32();
+        let bar = class % 3;
+        for y in 0..self.side {
+            for x in 0..self.side {
+                let (fx, fy) = (x as f32, y as f32);
+                // arc stroke: distance from circle of radius r0
+                let dx = fx - cx;
+                let dy = fy - cy;
+                let rad = (dx * dx + dy * dy).sqrt();
+                let ang = dy.atan2(dx);
+                let arc_open = ((ang - tilt).rem_euclid(std::f32::consts::TAU))
+                    < (2.0 + 0.35 * (class as f32));
+                let mut v = 0.0f32;
+                if arc_open {
+                    let d = (rad - r0).abs();
+                    v += (-d * d / 3.0).exp();
+                }
+                // bar stroke
+                let bd = match bar {
+                    0 => (fx - cx).abs(),
+                    1 => (fy - cy).abs(),
+                    _ => ((fx - cx) - (fy - cy)).abs() / 1.414,
+                };
+                v += 0.8 * (-bd * bd / 2.0).exp();
+                img[y * self.side + x] = v;
+            }
+        }
+        // mild pixel noise, clamp to [0, 1]
+        for v in &mut img {
+            *v = (*v + 0.05 * self.rng.normal_f32()).clamp(0.0, 1.0);
+        }
+        img
+    }
+
+    /// Batch of images (rows) with class labels.
+    pub fn batch(&mut self, batch: usize) -> (Mat, Vec<usize>) {
+        let mut data = Vec::with_capacity(batch * self.pixels());
+        let mut labels = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let class = self.rng.below(self.classes);
+            data.extend(self.render(class));
+            labels.push(class);
+        }
+        (Mat::from_rows(batch, self.pixels(), data), labels)
+    }
+
+    /// Flat batch for the HLO AE artifact (B * 784 f32s).
+    pub fn flat_batch(&mut self, batch: usize) -> Vec<f32> {
+        self.batch(batch).0.data
+    }
+}
+
+/// Synthetic molecular-graph classification source (GNN-proxy features).
+pub struct SynthGraphs {
+    pub feat_dim: usize,
+    pub classes: usize,
+    rng: Rng,
+}
+
+impl SynthGraphs {
+    pub fn new(seed: u64) -> Self {
+        Self { feat_dim: 32, classes: 2, rng: Rng::new(seed) }
+    }
+
+    /// Generate one graph and return pooled permutation-invariant
+    /// features + a label tied to motif statistics (ring count parity +
+    /// mean degree threshold — a molpcba-like "property prediction").
+    fn sample(&mut self) -> (Vec<f32>, usize) {
+        let n = 8 + self.rng.below(16); // atoms
+        // random sparse adjacency with ring bias
+        let mut adj = vec![false; n * n];
+        let mut degree = vec![0usize; n];
+        // backbone chain (molecules are mostly connected chains)
+        for i in 0..n - 1 {
+            adj[i * n + i + 1] = true;
+            adj[(i + 1) * n + i] = true;
+            degree[i] += 1;
+            degree[i + 1] += 1;
+        }
+        // extra edges forming rings
+        let extra = self.rng.below(n / 2 + 1);
+        let mut rings = 0;
+        for _ in 0..extra {
+            let a = self.rng.below(n);
+            let b = self.rng.below(n);
+            if a != b && !adj[a * n + b] {
+                adj[a * n + b] = true;
+                adj[b * n + a] = true;
+                degree[a] += 1;
+                degree[b] += 1;
+                rings += 1; // each extra edge on a connected graph closes a cycle
+            }
+        }
+        // node "element types"
+        let types: Vec<usize> = (0..n).map(|_| self.rng.below(4)).collect();
+        // pooled descriptor: degree histogram, type histogram, triangle
+        // count, ring count, size — plus noise
+        let mut f = vec![0.0f32; self.feat_dim];
+        for &d in &degree {
+            f[d.min(7)] += 1.0 / n as f32;
+        }
+        for &t in &types {
+            f[8 + t] += 1.0 / n as f32;
+        }
+        let mut tris = 0;
+        for a in 0..n {
+            for b in a + 1..n {
+                if !adj[a * n + b] {
+                    continue;
+                }
+                for c in b + 1..n {
+                    if adj[b * n + c] && adj[a * n + c] {
+                        tris += 1;
+                    }
+                }
+            }
+        }
+        f[12] = tris as f32 / n as f32;
+        f[13] = rings as f32 / n as f32;
+        f[14] = n as f32 / 24.0;
+        let mean_deg = degree.iter().sum::<usize>() as f32 / n as f32;
+        f[15] = mean_deg / 4.0;
+        for v in f.iter_mut().skip(16) {
+            *v = 0.1 * self.rng.normal_f32();
+        }
+        let label = usize::from(rings % 2 == 0 && mean_deg > 2.1);
+        (f, label)
+    }
+
+    pub fn batch(&mut self, batch: usize) -> (Mat, Vec<usize>) {
+        let mut data = Vec::with_capacity(batch * self.feat_dim);
+        let mut labels = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let (f, l) = self.sample();
+            data.extend(f);
+            labels.push(l);
+        }
+        (Mat::from_rows(batch, self.feat_dim, data), labels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn images_in_unit_range() {
+        let mut s = SynthImages::new(1);
+        let (x, labels) = s.batch(16);
+        assert_eq!(x.rows, 16);
+        assert_eq!(x.cols, 784);
+        assert!(x.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(labels.iter().all(|&l| l < 10));
+    }
+
+    #[test]
+    fn images_are_class_dependent() {
+        // mean image of class 0 differs from class 5
+        let mut s = SynthImages::new(2);
+        let mut mean = vec![vec![0.0f32; 784]; 2];
+        let mut count = [0usize; 2];
+        for _ in 0..400 {
+            let (x, labels) = s.batch(1);
+            let idx = match labels[0] {
+                0 => 0,
+                5 => 1,
+                _ => continue,
+            };
+            for (m, &v) in mean[idx].iter_mut().zip(&x.data) {
+                *m += v;
+            }
+            count[idx] += 1;
+        }
+        assert!(count[0] > 5 && count[1] > 5);
+        let d: f32 = mean[0]
+            .iter()
+            .zip(&mean[1])
+            .map(|(a, b)| (a / count[0] as f32 - b / count[1] as f32).abs())
+            .sum();
+        assert!(d > 1.0, "class means too similar: {d}");
+    }
+
+    #[test]
+    fn adjacent_pixels_correlated() {
+        // the Lemma A.13 mechanism: neighbouring pixels correlate strongly
+        let mut s = SynthImages::new(3);
+        let (x, _) = s.batch(64);
+        let mut num = 0.0f64;
+        let mut da = 0.0f64;
+        let mut db = 0.0f64;
+        let col = 300; // a middle pixel and its right neighbour
+        let ma: f32 = (0..64).map(|r| x.at(r, col)).sum::<f32>() / 64.0;
+        let mb: f32 = (0..64).map(|r| x.at(r, col + 1)).sum::<f32>() / 64.0;
+        for r in 0..64 {
+            let a = x.at(r, col) - ma;
+            let b = x.at(r, col + 1) - mb;
+            num += (a * b) as f64;
+            da += (a * a) as f64;
+            db += (b * b) as f64;
+        }
+        let corr = num / (da.sqrt() * db.sqrt()).max(1e-9);
+        assert!(corr > 0.5, "adjacent-pixel corr {corr}");
+    }
+
+    #[test]
+    fn graphs_balanced_enough() {
+        let mut s = SynthGraphs::new(4);
+        let (_, labels) = s.batch(400);
+        let pos = labels.iter().filter(|&&l| l == 1).count();
+        assert!(pos > 60 && pos < 340, "label balance {pos}/400");
+    }
+
+    #[test]
+    fn graph_features_deterministic_given_seed() {
+        let (a, la) = SynthGraphs::new(7).batch(8);
+        let (b, lb) = SynthGraphs::new(7).batch(8);
+        assert_eq!(a.data, b.data);
+        assert_eq!(la, lb);
+    }
+}

@@ -1,0 +1,10 @@
+//! Synthetic workload generators (DESIGN.md §5 documents each
+//! substitution for the paper's datasets).
+
+pub mod convex;
+pub mod images;
+pub mod lm_corpus;
+
+pub use convex::convex_suite;
+pub use images::{SynthImages, SynthGraphs};
+pub use lm_corpus::LmCorpus;

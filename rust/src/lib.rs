@@ -1,0 +1,19 @@
+//! SONew: a computationally efficient sparsified online Newton method —
+//! full-system reproduction (NeurIPS 2023).
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! * L1/L2 live in `python/compile/` and are AOT-lowered to `artifacts/`;
+//! * this crate is L3: the training coordinator, the native SONew core,
+//!   every baseline optimizer from the paper's evaluation, the synthetic
+//!   workloads, and the per-table/figure benchmark harnesses.
+
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod models;
+pub mod optim;
+pub mod sonew;
+pub mod runtime;
+pub mod tables;
+pub mod util;

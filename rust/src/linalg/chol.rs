@@ -1,0 +1,123 @@
+//! Small dense Cholesky factorization and SPD solves — the b x b inner
+//! solve of Algorithm 2 (banded SONew) and the m x m Woodbury solve inside
+//! rfdSON.
+
+use super::dense::Mat;
+
+/// In-place lower Cholesky of a dense SPD matrix stored row-major in `a`
+/// (n x n). Returns false if a pivot is non-positive (matrix not PD) —
+/// the caller decides the Algorithm-3 fallback.
+pub fn cholesky_in_place(a: &mut [f32], n: usize) -> bool {
+    for p in 0..n {
+        let mut acc = a[p * n + p];
+        for k in 0..p {
+            acc -= a[p * n + k] * a[p * n + k];
+        }
+        if acc <= 0.0 || !acc.is_finite() {
+            return false;
+        }
+        let cpp = acc.sqrt();
+        a[p * n + p] = cpp;
+        for q in p + 1..n {
+            let mut acc = a[q * n + p];
+            for k in 0..p {
+                acc -= a[q * n + k] * a[p * n + k];
+            }
+            a[q * n + p] = acc / cpp;
+        }
+    }
+    // zero the strict upper triangle so `a` is exactly L
+    for i in 0..n {
+        for j in i + 1..n {
+            a[i * n + j] = 0.0;
+        }
+    }
+    true
+}
+
+/// Solve L y = b (forward) then L^T x = y (backward); `l` is lower
+/// triangular row-major from `cholesky_in_place`. Overwrites `b` with x.
+pub fn cholesky_solve_in_place(l: &[f32], n: usize, b: &mut [f32]) {
+    for i in 0..n {
+        let mut acc = b[i];
+        for k in 0..i {
+            acc -= l[i * n + k] * b[k];
+        }
+        b[i] = acc / l[i * n + i];
+    }
+    for i in (0..n).rev() {
+        let mut acc = b[i];
+        for k in i + 1..n {
+            acc -= l[k * n + i] * b[k];
+        }
+        b[i] = acc / l[i * n + i];
+    }
+}
+
+/// Convenience: solve A x = b for SPD A. Returns None when A is not PD.
+pub fn spd_solve(a: &Mat, b: &[f32]) -> Option<Vec<f32>> {
+    assert_eq!(a.rows, a.cols);
+    assert_eq!(a.rows, b.len());
+    let n = a.rows;
+    let mut l = a.data.clone();
+    if !cholesky_in_place(&mut l, n) {
+        return None;
+    }
+    let mut x = b.to_vec();
+    cholesky_solve_in_place(&l, n, &mut x);
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::{matmul, matmul_nt, matvec, Mat};
+    use crate::util::prop::{assert_close, check};
+
+    fn random_spd(rng: &mut crate::util::Rng, n: usize) -> Mat {
+        let g = Mat::from_rows(n, 2 * n + 4, rng.normal_vec(n * (2 * n + 4)));
+        let mut a = matmul_nt(&g, &g);
+        a.scale(1.0 / (2 * n + 4) as f32);
+        for i in 0..n {
+            *a.at_mut(i, i) += 0.1;
+        }
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        check("chol L L^T == A", 24, |rng| {
+            let n = 1 + rng.below(10);
+            let a = random_spd(rng, n);
+            let mut l = a.data.clone();
+            assert!(cholesky_in_place(&mut l, n));
+            let lm = Mat::from_rows(n, n, l);
+            let back = matmul(&lm, &lm.transpose());
+            assert_close(&back.data, &a.data, 1e-3, 1e-4, "llt");
+        });
+    }
+
+    #[test]
+    fn solve_inverts() {
+        check("spd_solve residual", 24, |rng| {
+            let n = 1 + rng.below(10);
+            let a = random_spd(rng, n);
+            let x_true = rng.normal_vec(n);
+            let b = matvec(&a, &x_true);
+            let x = spd_solve(&a, &b).unwrap();
+            assert_close(&x, &x_true, 1e-2, 1e-3, "x");
+        });
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_rows(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(spd_solve(&a, &[1.0, 1.0]).is_none());
+    }
+
+    #[test]
+    fn one_by_one() {
+        let a = Mat::from_rows(1, 1, vec![4.0]);
+        assert_eq!(spd_solve(&a, &[8.0]).unwrap(), vec![2.0]);
+    }
+}

@@ -1,0 +1,283 @@
+//! Dense row-major matrices and the matmul kernels used by the native
+//! gradient engine (`models/`) and the Kronecker-factored optimizers.
+//!
+//! The hot kernel is `matmul_into`: i-k-j loop order with a contiguous
+//! inner j-loop so rustc autovectorizes, plus std::thread row-parallelism
+//! for large shapes (no rayon in the offline closure).
+
+/// Row-major dense matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+}
+
+/// Number of worker threads for the parallel kernels (cached).
+pub fn hw_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// C = A @ B  (m x k) @ (k x n), single-threaded core over a row range.
+fn matmul_rows(a: &[f32], b: &[f32], c: &mut [f32], rows: std::ops::Range<usize>, k: usize, n: usize) {
+    for i in rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        crow.iter_mut().for_each(|v| *v = 0.0);
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+}
+
+/// C = A @ B with optional thread-parallelism over row blocks.
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.rows, "matmul dims");
+    assert_eq!(c.rows, a.rows);
+    assert_eq!(c.cols, b.cols);
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    let threads = hw_threads().min(m.max(1));
+    if flops < 2e6 || threads <= 1 {
+        matmul_rows(&a.data, &b.data, &mut c.data, 0..m, k, n);
+        return;
+    }
+    let chunk = m.div_ceil(threads);
+    let a_data = &a.data;
+    let b_data = &b.data;
+    std::thread::scope(|s| {
+        for (t, c_chunk) in c.data.chunks_mut(chunk * n).enumerate() {
+            let lo = t * chunk;
+            let rows = c_chunk.len() / n;
+            s.spawn(move || {
+                // re-base: rows lo..lo+rows of C live at offset 0 of c_chunk
+                for r in 0..rows {
+                    let i = lo + r;
+                    let arow = &a_data[i * k..(i + 1) * k];
+                    let crow = &mut c_chunk[r * n..(r + 1) * n];
+                    crow.iter_mut().for_each(|v| *v = 0.0);
+                    for (kk, &aik) in arow.iter().enumerate() {
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &b_data[kk * n..(kk + 1) * n];
+                        for j in 0..n {
+                            crow[j] += aik * brow[j];
+                        }
+                    }
+                }
+            });
+        }
+    });
+}
+
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    let mut c = Mat::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C = A^T @ B  ((k x m)^T @ (k x n)) without materializing A^T.
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows, "matmul_tn dims");
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    for kk in 0..k {
+        let arow = &a.data[kk * m..(kk + 1) * m];
+        let brow = &b.data[kk * n..(kk + 1) * n];
+        for (i, &aki) in arow.iter().enumerate() {
+            if aki == 0.0 {
+                continue;
+            }
+            let crow = &mut c.data[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += aki * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// C = A @ B^T  ((m x k) @ (n x k)^T) without materializing B^T.
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_nt dims");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Mat::zeros(m, n);
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b.data[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            crow[j] = acc;
+        }
+    }
+    c
+}
+
+/// y = A @ x.
+pub fn matvec(a: &Mat, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols, x.len());
+    (0..a.rows)
+        .map(|i| {
+            a.row(i)
+                .iter()
+                .zip(x)
+                .map(|(&aij, &xj)| aij * xj)
+                .sum()
+        })
+        .collect()
+}
+
+// --- flat-vector helpers used all over the optimizers ---
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+pub fn norm2(a: &[f32]) -> f32 {
+    dot(a, a).sqrt()
+}
+
+/// y += alpha * x
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, check};
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut acc = 0.0;
+                for k in 0..a.cols {
+                    acc += a.at(i, k) * b.at(k, j);
+                }
+                *c.at_mut(i, j) = acc;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        check("matmul == naive", 24, |rng| {
+            let (m, k, n) = (1 + rng.below(20), 1 + rng.below(20), 1 + rng.below(20));
+            let a = Mat::from_rows(m, k, rng.normal_vec(m * k));
+            let b = Mat::from_rows(k, n, rng.normal_vec(k * n));
+            assert_close(&matmul(&a, &b).data, &naive(&a, &b).data, 1e-4, 1e-5, "mm");
+        });
+    }
+
+    #[test]
+    fn matmul_parallel_path() {
+        let mut rng = crate::util::Rng::new(3);
+        let a = Mat::from_rows(200, 120, rng.normal_vec(200 * 120));
+        let b = Mat::from_rows(120, 90, rng.normal_vec(120 * 90));
+        assert_close(&matmul(&a, &b).data, &naive(&a, &b).data, 1e-3, 1e-4, "mmp");
+    }
+
+    #[test]
+    fn tn_and_nt_match() {
+        check("tn/nt variants", 16, |rng| {
+            let (m, k, n) = (1 + rng.below(12), 1 + rng.below(12), 1 + rng.below(12));
+            let a = Mat::from_rows(k, m, rng.normal_vec(k * m));
+            let b = Mat::from_rows(k, n, rng.normal_vec(k * n));
+            let want = naive(&a.transpose(), &b);
+            assert_close(&matmul_tn(&a, &b).data, &want.data, 1e-4, 1e-5, "tn");
+            let a2 = Mat::from_rows(m, k, rng.normal_vec(m * k));
+            let b2 = Mat::from_rows(n, k, rng.normal_vec(n * k));
+            let want2 = naive(&a2, &b2.transpose());
+            assert_close(&matmul_nt(&a2, &b2).data, &want2.data, 1e-4, 1e-5, "nt");
+        });
+    }
+
+    #[test]
+    fn matvec_matches() {
+        let a = Mat::from_rows(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(matvec(&a, &[1., 0., 1.]), vec![4., 10.]);
+    }
+
+    #[test]
+    fn transpose_involutive() {
+        let mut rng = crate::util::Rng::new(4);
+        let a = Mat::from_rows(5, 7, rng.normal_vec(35));
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn eye_is_identity() {
+        let mut rng = crate::util::Rng::new(5);
+        let a = Mat::from_rows(6, 6, rng.normal_vec(36));
+        assert_close(&matmul(&Mat::eye(6), &a).data, &a.data, 1e-6, 1e-7, "ia");
+        assert_close(&matmul(&a, &Mat::eye(6)).data, &a.data, 1e-6, 1e-7, "ai");
+    }
+}

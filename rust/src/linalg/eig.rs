@@ -1,0 +1,164 @@
+//! Cyclic Jacobi eigensolver for symmetric matrices.
+//!
+//! Used by Shampoo (inverse p-th roots of the Kronecker factors) and
+//! rfdSON (eigendecomposition of the small sketch Gram matrix). Sizes are
+//! O(layer dim) at most, where Jacobi's O(n^3) with great constants and
+//! unconditional stability is the right trade.
+
+use super::dense::Mat;
+
+/// Eigendecomposition A = V diag(w) V^T of a symmetric matrix.
+/// Returns (eigenvalues ascending, V with eigenvectors in columns).
+pub fn sym_eig(a: &Mat, max_sweeps: usize) -> (Vec<f32>, Mat) {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut m: Vec<f64> = a.data.iter().map(|&v| v as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += m[i * n + j] * m[i * n + j];
+            }
+        }
+        let scale: f64 = (0..n).map(|i| m[i * n + i].abs()).fold(1e-300, f64::max);
+        if off.sqrt() <= 1e-12 * scale * n as f64 {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[p * n + q];
+                if apq.abs() <= 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q of m
+                for k in 0..n {
+                    let mkp = m[k * n + p];
+                    let mkq = m[k * n + q];
+                    m[k * n + p] = c * mkp - s * mkq;
+                    m[k * n + q] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[p * n + k];
+                    let mqk = m[q * n + k];
+                    m[p * n + k] = c * mpk - s * mqk;
+                    m[q * n + k] = s * mpk + c * mqk;
+                }
+                // accumulate eigenvectors
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // extract and sort ascending
+    let mut idx: Vec<usize> = (0..n).collect();
+    let w: Vec<f64> = (0..n).map(|i| m[i * n + i]).collect();
+    idx.sort_by(|&a, &b| w[a].partial_cmp(&w[b]).unwrap());
+    let wout: Vec<f32> = idx.iter().map(|&i| w[i] as f32).collect();
+    let mut vout = Mat::zeros(n, n);
+    for (new_col, &old_col) in idx.iter().enumerate() {
+        for r in 0..n {
+            vout.data[r * n + new_col] = v[r * n + old_col] as f32;
+        }
+    }
+    (wout, vout)
+}
+
+/// A^p for symmetric PSD A via eigendecomposition, with eigenvalue floor
+/// `floor` (Shampoo's damped inverse root: p = -1/4 etc).
+pub fn sym_pow(a: &Mat, p: f32, floor: f32) -> Mat {
+    let n = a.rows;
+    let (w, v) = sym_eig(a, 30);
+    // B = V diag(max(w, floor)^p) V^T
+    let mut scaled = Mat::zeros(n, n); // V * diag
+    for i in 0..n {
+        for j in 0..n {
+            scaled.data[i * n + j] =
+                v.data[i * n + j] * w[j].max(floor).powf(p);
+        }
+    }
+    super::dense::matmul_nt(&scaled, &v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::{matmul, matmul_nt, Mat};
+    use crate::util::prop::{assert_close, check};
+
+    fn random_sym(rng: &mut crate::util::Rng, n: usize) -> Mat {
+        let g = Mat::from_rows(n, n, rng.normal_vec(n * n));
+        let mut a = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a.data[i * n + j] = 0.5 * (g.at(i, j) + g.at(j, i));
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn reconstructs() {
+        check("V diag(w) V^T == A", 16, |rng| {
+            let n = 1 + rng.below(12);
+            let a = random_sym(rng, n);
+            let (w, v) = sym_eig(&a, 40);
+            let mut vd = v.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    vd.data[i * n + j] *= w[j];
+                }
+            }
+            let back = matmul_nt(&vd, &v);
+            assert_close(&back.data, &a.data, 1e-3, 1e-4, "eig");
+        });
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let mut rng = crate::util::Rng::new(1);
+        let a = random_sym(&mut rng, 9);
+        let (_, v) = sym_eig(&a, 40);
+        let vtv = matmul(&v.transpose(), &v);
+        assert_close(&vtv.data, &Mat::eye(9).data, 1e-4, 1e-4, "vtv");
+    }
+
+    #[test]
+    fn known_eigenvalues() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3
+        let a = Mat::from_rows(2, 2, vec![2., 1., 1., 2.]);
+        let (w, _) = sym_eig(&a, 30);
+        assert!((w[0] - 1.0).abs() < 1e-5 && (w[1] - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn inverse_fourth_root() {
+        check("A^{-1/4} ^4 == A^{-1}", 8, |rng| {
+            let n = 1 + rng.below(8);
+            let g = Mat::from_rows(n, 2 * n + 2, rng.normal_vec(n * (2 * n + 2)));
+            let mut a = matmul_nt(&g, &g);
+            for i in 0..n {
+                *a.at_mut(i, i) += 0.5;
+            }
+            let r = sym_pow(&a, -0.25, 1e-6);
+            let r4 = matmul(&matmul(&r, &r), &matmul(&r, &r));
+            let prod = matmul(&r4, &a); // should be I
+            assert_close(&prod.data, &Mat::eye(n).data, 5e-2, 5e-2, "r4a");
+        });
+    }
+}

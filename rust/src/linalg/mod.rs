@@ -1,0 +1,12 @@
+//! Dense linear algebra substrate built from scratch (the offline
+//! dependency closure contains no BLAS/LAPACK bindings): blocked matmul,
+//! small Cholesky, and a Jacobi symmetric eigensolver — everything the
+//! Kronecker-factored baselines (Shampoo/KFAC/Eva) and rfdSON need.
+
+pub mod chol;
+pub mod dense;
+pub mod eig;
+
+pub use chol::{cholesky_in_place, cholesky_solve_in_place, spd_solve};
+pub use dense::{axpy, dot, matmul, matmul_into, matmul_nt, matmul_tn, matvec, norm2, Mat};
+pub use eig::{sym_eig, sym_pow};

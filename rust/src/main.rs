@@ -1,0 +1,242 @@
+//! `sonew` CLI — the launcher for training runs, table/figure harnesses
+//! and hyperparameter sweeps.
+//!
+//! ```text
+//! sonew table t1|t6|t9|ae|f1-vit|f1-gnn|f3   # regenerate a paper artifact
+//! sonew train --model ae --opt tridiag-sonew --steps 100
+//! sonew sweep --opt adam --trials 20         # Table 12 protocol
+//! sonew list                                 # artifact inventory
+//! ```
+
+use anyhow::Result;
+use sonew::cli::Args;
+use sonew::coordinator::sweep::{random_search, SearchSpace};
+use sonew::optim::{HyperParams, OptKind};
+use sonew::tables;
+use sonew::util::Precision;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("table") => table(&args),
+        Some("train") => train(&args),
+        Some("sweep") => sweep(&args),
+        Some("list") => list(),
+        _ => {
+            println!(
+                "usage: sonew <table|train|sweep|list> [flags]\n\
+                 tables: t1 t6 t9 ae ae-band ae-batch ae-bf16 f1-vit f1-gnn f3\n\
+                 see README.md for the full flag reference"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn table(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("t6");
+    let steps = args.u64_or("steps", 60);
+    match which {
+        "t1" => {
+            let dims: Vec<usize> = args
+                .list_or("dims", "32,64,128,256")
+                .iter()
+                .filter_map(|d| d.parse().ok())
+                .collect();
+            tables::t1_complexity::run(&dims, args.u64_or("iters", 20))?;
+        }
+        "t6" => {
+            tables::t6_memory::run()?;
+        }
+        "t9" => {
+            tables::convex::run(args.f32_or("scale", 1.0), args.usize_or("epochs", 20))?;
+        }
+        "ae" | "ae-band" | "ae-batch" | "ae-bf16" => {
+            let mut cfg = tables::autoencoder::AeBenchConfig {
+                steps,
+                batch: args.usize_or("batch", 256),
+                full: !args.has("small"),
+                force_native: args.has("native"),
+                verbose: args.has("verbose"),
+                seed: args.u64_or("seed", 0),
+                ..Default::default()
+            };
+            if let Some(p) = args.get("precision").and_then(Precision::parse) {
+                cfg.precision = p;
+            }
+            let mut tag = which.replace('-', "_");
+            match which {
+                "ae-band" => {
+                    cfg.optimizers = vec![];
+                    cfg.band_sizes = vec![0, 1, 4, 10];
+                }
+                "ae-bf16" => {
+                    cfg.precision = Precision::Bf16;
+                    cfg.optimizers = vec![
+                        OptKind::TridiagSonew,
+                        OptKind::BandSonew,
+                        OptKind::Adam,
+                        OptKind::RmsProp,
+                    ];
+                    cfg.gamma = args.f32_or("gamma", 0.0);
+                    if cfg.gamma > 0.0 {
+                        tag = format!("{tag}_stable");
+                    }
+                }
+                "ae-batch" => {
+                    cfg.optimizers = vec![
+                        OptKind::RmsProp,
+                        OptKind::Adam,
+                        OptKind::Shampoo,
+                        OptKind::TridiagSonew,
+                        OptKind::BandSonew,
+                    ];
+                    tag = format!("{tag}_b{}", cfg.batch);
+                }
+                _ => {
+                    if let Some(opts) = args.get("opts") {
+                        cfg.optimizers = opts
+                            .split(',')
+                            .filter_map(OptKind::parse)
+                            .collect();
+                    }
+                    if args.has("extended") {
+                        cfg.optimizers = vec![
+                            OptKind::KfacProxy,
+                            OptKind::Eva,
+                            OptKind::FishLegDiag,
+                            OptKind::TridiagSonew,
+                        ];
+                        tag = "ae_extended".into();
+                    }
+                }
+            }
+            tables::autoencoder::run(&cfg, &tag)?;
+        }
+        "f1-vit" => {
+            tables::vit_gnn::run(tables::vit_gnn::Proxy::Vit, steps.max(120), 64)?;
+        }
+        "f1-gnn" => {
+            tables::vit_gnn::run(tables::vit_gnn::Proxy::Gnn, steps.max(120), 64)?;
+        }
+        "f3" => {
+            let cfg = tables::lm::LmRunConfig {
+                steps,
+                lr: args.f32_or("lr", 3e-3),
+                verbose: args.has("verbose"),
+                sonew_via_hlo: !args.has("native-sonew"),
+                ..Default::default()
+            };
+            tables::lm::run(&cfg)?;
+        }
+        other => anyhow::bail!("unknown table {other:?}"),
+    }
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    // thin driver over the AE benchmark path (the full experiment
+    // harnesses live behind `sonew table`)
+    let kind = OptKind::parse(args.get_or("opt", "tridiag-sonew"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --opt"))?;
+    let cfg = tables::autoencoder::AeBenchConfig {
+        steps: args.u64_or("steps", 100),
+        batch: args.usize_or("batch", 256),
+        full: !args.has("small"),
+        force_native: args.has("native"),
+        verbose: true,
+        ..Default::default()
+    };
+    let row = tables::autoencoder::run_one(kind, &cfg, None)?;
+    println!(
+        "trained {}: final loss {:.4} in {:.1}s (grad {:.1}s, opt {:.1}s)",
+        row.name, row.final_loss, row.wall_s, row.grad_s, row.opt_s
+    );
+    Ok(())
+}
+
+fn sweep(args: &Args) -> Result<()> {
+    let kind = OptKind::parse(args.get_or("opt", "tridiag-sonew"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --opt"))?;
+    let trials = args.usize_or("trials", 20);
+    let steps = args.u64_or("steps", 20);
+    let space = SearchSpace::default();
+    let base = HyperParams::default();
+    println!("[sweep] {kind:?}: {trials} trials x {steps} steps (small AE, native)");
+    let result = random_search(&space, &base, trials, args.u64_or("seed", 0), |trial| {
+        let mlp = sonew::models::Mlp::autoencoder_small();
+        let mut rng = sonew::util::Rng::new(0);
+        let mut params = mlp.init(&mut rng);
+        let mats = tables::autoencoder::cap_mat_blocks(&mlp.mat_blocks(), 128);
+        let mut opt = sonew::optim::build(kind, mlp.total, &mlp.blocks(), &mats, &trial.hp);
+        let tc = sonew::coordinator::TrainConfig {
+            steps,
+            schedule: sonew::coordinator::Schedule::Constant { lr: trial.lr },
+            ..Default::default()
+        };
+        let provider = sonew::coordinator::trainer::NativeAeProvider {
+            mlp: mlp.clone(),
+            images: sonew::data::SynthImages::new(1),
+            batch: 64,
+        };
+        match sonew::coordinator::train_single(&mut params, &mut opt, provider, &tc) {
+            Ok(m) => m.tail_mean_loss(3).unwrap_or(f32::NAN),
+            Err(_) => f32::NAN,
+        }
+    });
+    match result {
+        Some(r) => {
+            println!(
+                "[sweep] best {kind:?}: loss {:.4} @ lr={:.3e} beta1={:.3} beta2={:.3} eps={:.2e}",
+                r.best_objective, r.best.lr, r.best.hp.beta1, r.best.hp.beta2, r.best.hp.eps
+            );
+            let mut t = sonew::util::io::MdTable::new(&[
+                "optimizer", "lr", "beta1", "beta2", "eps", "loss",
+            ]);
+            t.row([
+                format!("{kind:?}"),
+                format!("{:.3e}", r.best.lr),
+                format!("{:.3}", r.best.hp.beta1),
+                format!("{:.3}", r.best.hp.beta2),
+                format!("{:.2e}", r.best.hp.eps),
+                format!("{:.4}", r.best_objective),
+            ]);
+            t.write(format!("t12_sweep_{kind:?}.md"))?;
+        }
+        None => println!("[sweep] all trials diverged"),
+    }
+    Ok(())
+}
+
+fn list() -> Result<()> {
+    let dir = sonew::runtime::Engine::default_dir();
+    if !sonew::runtime::Engine::available(&dir) {
+        println!("no artifacts at {} — run `make artifacts`", dir.display());
+        return Ok(());
+    }
+    let man = sonew::runtime::Manifest::load(&dir)?;
+    println!("artifacts in {}:", dir.display());
+    for a in &man.artifacts {
+        let ins: Vec<String> = a
+            .inputs
+            .iter()
+            .map(|p| format!("{}{:?}", p.name, p.dims))
+            .collect();
+        println!("  {:<28} {}", a.name, ins.join(" "));
+    }
+    for l in &man.layouts {
+        println!("  layout {:<21} {} params, {} tensors", l.name, l.total(), l.tensors.len());
+    }
+    Ok(())
+}

@@ -1,0 +1,384 @@
+//! Native Rust MLP autoencoder: forward/backward matching
+//! `python/compile/model.py::Autoencoder` exactly (same layout, same tanh
+//! hidden activations, same summed sigmoid-cross-entropy loss), used as
+//! the no-artifact gradient engine for tests, benches and the ViT/GNN
+//! proxy experiments.
+
+use crate::linalg::{matmul, matmul_nt, matmul_tn, Mat};
+use crate::util::Rng;
+
+/// Flat-layout MLP: dims[0] inputs, tanh hiddens, linear output.
+#[derive(Debug, Clone)]
+pub struct Mlp {
+    pub dims: Vec<usize>,
+    /// (offset_w, offset_b) per layer into the flat vector
+    offsets: Vec<(usize, usize)>,
+    pub total: usize,
+}
+
+impl Mlp {
+    pub fn new(dims: &[usize]) -> Self {
+        assert!(dims.len() >= 2);
+        let mut offsets = Vec::new();
+        let mut off = 0;
+        for i in 0..dims.len() - 1 {
+            let w = off;
+            off += dims[i] * dims[i + 1];
+            let b = off;
+            off += dims[i + 1];
+            offsets.push((w, b));
+        }
+        Self { dims: dims.to_vec(), offsets, total: off }
+    }
+
+    /// The paper's autoencoder (784-1000-500-250-30-…-784).
+    pub fn autoencoder() -> Self {
+        Self::new(&[784, 1000, 500, 250, 30, 250, 500, 1000, 784])
+    }
+
+    /// Scaled-down autoencoder used by fast tests (matches AE_SMALL_DIMS).
+    pub fn autoencoder_small() -> Self {
+        Self::new(&[196, 256, 128, 64, 16, 64, 128, 256, 196])
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    /// (offset, len) tensor blocks in python Layout order (w, b per layer).
+    pub fn blocks(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for (i, &(w, b)) in self.offsets.iter().enumerate() {
+            out.push((w, self.dims[i] * self.dims[i + 1]));
+            out.push((b, self.dims[i + 1]));
+        }
+        out
+    }
+
+    /// (offset, len, d1, d2) matrix blocks for Kronecker optimizers.
+    pub fn mat_blocks(&self) -> Vec<(usize, usize, usize, usize)> {
+        let mut out = Vec::new();
+        for (i, &(w, b)) in self.offsets.iter().enumerate() {
+            let len = self.dims[i] * self.dims[i + 1];
+            out.push((w, len, self.dims[i], self.dims[i + 1]));
+            out.push((b, self.dims[i + 1], self.dims[i + 1], 1));
+        }
+        out
+    }
+
+    /// Glorot-uniform init (biases zero), identical convention to
+    /// `Autoencoder.init` in model.py (different RNG, same distribution).
+    pub fn init(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut p = vec![0.0f32; self.total];
+        for (i, &(w, _)) in self.offsets.iter().enumerate() {
+            let (fan_in, fan_out) = (self.dims[i], self.dims[i + 1]);
+            let lim = (6.0 / (fan_in + fan_out) as f64).sqrt();
+            for v in &mut p[w..w + fan_in * fan_out] {
+                *v = rng.range(-lim, lim) as f32;
+            }
+        }
+        p
+    }
+
+    fn weight<'a>(&self, p: &'a [f32], layer: usize) -> Mat {
+        let (w, _) = self.offsets[layer];
+        Mat::from_rows(
+            self.dims[layer],
+            self.dims[layer + 1],
+            p[w..w + self.dims[layer] * self.dims[layer + 1]].to_vec(),
+        )
+    }
+
+    /// Forward pass returning logits (B x dims.last()) and cached
+    /// activations for backward.
+    fn forward_cached(&self, p: &[f32], x: &Mat) -> (Vec<Mat>, Mat) {
+        let mut acts = vec![x.clone()];
+        let mut h = x.clone();
+        let n_layers = self.n_layers();
+        for l in 0..n_layers {
+            let w = self.weight(p, l);
+            let (_, boff) = self.offsets[l];
+            let mut z = matmul(&h, &w);
+            let bias = &p[boff..boff + self.dims[l + 1]];
+            for r in 0..z.rows {
+                for (zc, &bc) in z.data[r * z.cols..(r + 1) * z.cols]
+                    .iter_mut()
+                    .zip(bias)
+                {
+                    *zc += bc;
+                }
+            }
+            if l < n_layers - 1 {
+                for v in &mut z.data {
+                    *v = v.tanh();
+                }
+            }
+            h = z.clone();
+            acts.push(z);
+        }
+        let logits = acts.pop().unwrap();
+        (acts, logits)
+    }
+
+    /// Reconstruction loss and gradient for an autoencoder batch
+    /// (targets == inputs): sigmoid CE summed over pixels, mean over batch.
+    pub fn loss_and_grad(&self, p: &[f32], x: &Mat) -> (f32, Vec<f32>) {
+        self.loss_and_grad_targets(p, x, x)
+    }
+
+    /// General supervised form with explicit targets in [0, 1].
+    pub fn loss_and_grad_targets(&self, p: &[f32], x: &Mat, y: &Mat) -> (f32, Vec<f32>) {
+        let batch = x.rows as f32;
+        let (acts, logits) = self.forward_cached(p, x);
+        // BCE-with-logits: max(z,0) - z*y + log1p(exp(-|z|)); dL/dz = σ(z) - y
+        let mut loss = 0.0f64;
+        let mut delta = Mat::zeros(logits.rows, logits.cols);
+        for (i, (&z, &t)) in logits.data.iter().zip(&y.data).enumerate() {
+            loss += (z.max(0.0) - z * t + (-z.abs()).exp().ln_1p()) as f64;
+            let sig = 1.0 / (1.0 + (-z).exp());
+            delta.data[i] = (sig - t) / batch;
+        }
+        let loss = (loss / batch as f64) as f32;
+
+        let mut grads = vec![0.0f32; self.total];
+        let mut d = delta;
+        for l in (0..self.n_layers()).rev() {
+            let (woff, boff) = self.offsets[l];
+            let a_prev = &acts[l];
+            // dW = a_prev^T d ; db = column sums of d
+            let dw = matmul_tn(a_prev, &d);
+            grads[woff..woff + dw.data.len()].copy_from_slice(&dw.data);
+            for r in 0..d.rows {
+                for (gb, &dc) in grads[boff..boff + d.cols]
+                    .iter_mut()
+                    .zip(&d.data[r * d.cols..(r + 1) * d.cols])
+                {
+                    *gb += dc;
+                }
+            }
+            if l > 0 {
+                let w = self.weight(p, l);
+                let mut d_prev = matmul_nt(&d, &w);
+                // through tanh: (1 - a^2)
+                for (dp, &a) in d_prev.data.iter_mut().zip(&a_prev.data) {
+                    *dp *= 1.0 - a * a;
+                }
+                d = d_prev;
+            }
+        }
+        (loss, grads)
+    }
+
+    /// Loss only (validation).
+    pub fn loss(&self, p: &[f32], x: &Mat, y: &Mat) -> f32 {
+        let (_, logits) = self.forward_cached(p, x);
+        let mut loss = 0.0f64;
+        for (&z, &t) in logits.data.iter().zip(&y.data) {
+            loss += (z.max(0.0) - z * t + (-z.abs()).exp().ln_1p()) as f64;
+        }
+        (loss / x.rows as f64) as f32
+    }
+
+    /// Softmax cross-entropy classification head (ViT/GNN proxies):
+    /// targets are class indices; loss is mean CE; logits from forward.
+    pub fn loss_and_grad_softmax(&self, p: &[f32], x: &Mat, labels: &[usize]) -> (f32, Vec<f32>) {
+        let batch = x.rows as f32;
+        let (acts, logits) = self.forward_cached(p, x);
+        let classes = logits.cols;
+        let mut loss = 0.0f64;
+        let mut delta = Mat::zeros(logits.rows, logits.cols);
+        for r in 0..logits.rows {
+            let row = &logits.data[r * classes..(r + 1) * classes];
+            let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let sum: f32 = row.iter().map(|&z| (z - maxv).exp()).sum();
+            let logz = maxv + sum.ln();
+            loss += (logz - row[labels[r]]) as f64;
+            for c in 0..classes {
+                let pmc = (row[c] - logz).exp();
+                delta.data[r * classes + c] =
+                    (pmc - if c == labels[r] { 1.0 } else { 0.0 }) / batch;
+            }
+        }
+        let loss = (loss / batch as f64) as f32;
+
+        let mut grads = vec![0.0f32; self.total];
+        let mut d = delta;
+        for l in (0..self.n_layers()).rev() {
+            let (woff, boff) = self.offsets[l];
+            let a_prev = &acts[l];
+            let dw = matmul_tn(a_prev, &d);
+            grads[woff..woff + dw.data.len()].copy_from_slice(&dw.data);
+            for r in 0..d.rows {
+                for (gb, &dc) in grads[boff..boff + d.cols]
+                    .iter_mut()
+                    .zip(&d.data[r * d.cols..(r + 1) * d.cols])
+                {
+                    *gb += dc;
+                }
+            }
+            if l > 0 {
+                let w = self.weight(p, l);
+                let mut d_prev = matmul_nt(&d, &w);
+                for (dp, &a) in d_prev.data.iter_mut().zip(&a_prev.data) {
+                    *dp *= 1.0 - a * a;
+                }
+                d = d_prev;
+            }
+        }
+        (loss, grads)
+    }
+
+    /// Classification accuracy (argmax of logits).
+    pub fn accuracy(&self, p: &[f32], x: &Mat, labels: &[usize]) -> f32 {
+        let (_, logits) = self.forward_cached(p, x);
+        let classes = logits.cols;
+        let mut correct = 0;
+        for r in 0..logits.rows {
+            let row = &logits.data[r * classes..(r + 1) * classes];
+            let arg = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if arg == labels[r] {
+                correct += 1;
+            }
+        }
+        correct as f32 / logits.rows as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn grads_match_finite_differences() {
+        check("mlp grads == finite diff", 8, |rng| {
+            let mlp = Mlp::new(&[5, 4, 3, 5]);
+            let mut p = mlp.init(rng);
+            for v in &mut p {
+                *v += 0.01 * rng.normal_f32();
+            }
+            let x = Mat::from_rows(3, 5, rng.uniform_vec(15, 0.0, 1.0));
+            let (_, g) = mlp.loss_and_grad(&p, &x);
+            let h = 1e-3f32;
+            for _ in 0..6 {
+                let i = rng.below(mlp.total);
+                let mut pp = p.clone();
+                pp[i] += h;
+                let lp = mlp.loss(&pp, &x, &x);
+                pp[i] -= 2.0 * h;
+                let lm = mlp.loss(&pp, &x, &x);
+                let fd = (lp - lm) / (2.0 * h);
+                assert!(
+                    (fd - g[i]).abs() < 0.05 * fd.abs().max(1.0),
+                    "coord {i}: fd {fd} vs {}",
+                    g[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn softmax_grads_match_finite_differences() {
+        check("softmax grads == finite diff", 8, |rng| {
+            let mlp = Mlp::new(&[6, 5, 4]);
+            let mut p = mlp.init(rng);
+            for v in &mut p {
+                *v += 0.01 * rng.normal_f32();
+            }
+            let x = Mat::from_rows(3, 6, rng.normal_vec(18));
+            let labels = vec![rng.below(4), rng.below(4), rng.below(4)];
+            let (_, g) = mlp.loss_and_grad_softmax(&p, &x, &labels);
+            let h = 1e-3f32;
+            let lossf = |p: &[f32]| {
+                let (l, _) = mlp.loss_and_grad_softmax(p, &x, &labels);
+                l
+            };
+            for _ in 0..6 {
+                let i = rng.below(mlp.total);
+                let mut pp = p.to_vec();
+                pp[i] += h;
+                let lp = lossf(&pp);
+                pp[i] -= 2.0 * h;
+                let lm = lossf(&pp);
+                let fd = (lp - lm) / (2.0 * h);
+                assert!(
+                    (fd - g[i]).abs() < 0.05 * fd.abs().max(1.0),
+                    "coord {i}: fd {fd} vs {}",
+                    g[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn trains_under_sgd() {
+        let mut rng = Rng::new(1);
+        let mlp = Mlp::new(&[16, 12, 8, 12, 16]);
+        let mut p = mlp.init(&mut rng);
+        let x = Mat::from_rows(8, 16, rng.uniform_vec(128, 0.0, 1.0));
+        let (l0, _) = mlp.loss_and_grad(&p, &x);
+        for _ in 0..300 {
+            let (_, g) = mlp.loss_and_grad(&p, &x);
+            for (pi, &gi) in p.iter_mut().zip(&g) {
+                *pi -= 0.05 * gi;
+            }
+        }
+        let (l1, _) = mlp.loss_and_grad(&p, &x);
+        assert!(l1 < 0.85 * l0, "{l0} -> {l1}");
+    }
+
+    #[test]
+    fn param_count_matches_python_layout() {
+        assert_eq!(Mlp::autoencoder().total, 2_837_314);
+        assert_eq!(
+            Mlp::autoencoder_small().total,
+            196 * 256 + 256 + 256 * 128 + 128 + 128 * 64 + 64 + 64 * 16 + 16
+                + 16 * 64 + 64 + 64 * 128 + 128 + 128 * 256 + 256 + 256 * 196
+                + 196
+        );
+    }
+
+    #[test]
+    fn blocks_cover_vector_exactly() {
+        let mlp = Mlp::new(&[7, 5, 3]);
+        let blocks = mlp.blocks();
+        let mut cover = vec![false; mlp.total];
+        for (off, len) in blocks {
+            for c in &mut cover[off..off + len] {
+                assert!(!*c, "overlap");
+                *c = true;
+            }
+        }
+        assert!(cover.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn accuracy_perfect_on_separable() {
+        let mut rng = Rng::new(2);
+        let mlp = Mlp::new(&[2, 8, 2]);
+        let mut p = mlp.init(&mut rng);
+        // two gaussian blobs
+        let mut xs = Vec::new();
+        let mut labels = Vec::new();
+        for i in 0..40 {
+            let cls = i % 2;
+            let cx = if cls == 0 { -2.0 } else { 2.0 };
+            xs.push(cx + 0.3 * rng.normal_f32());
+            xs.push(cx + 0.3 * rng.normal_f32());
+            labels.push(cls);
+        }
+        let x = Mat::from_rows(40, 2, xs);
+        for _ in 0..200 {
+            let (_, g) = mlp.loss_and_grad_softmax(&p, &x, &labels);
+            for (pi, &gi) in p.iter_mut().zip(&g) {
+                *pi -= 0.5 * gi;
+            }
+        }
+        assert!(mlp.accuracy(&p, &x, &labels) > 0.95);
+    }
+}

@@ -1,0 +1,9 @@
+//! Native-Rust models: the no-artifact gradient engines used by tests,
+//! benches and the proxy experiments (the deployment path executes the
+//! AOT HLO artifacts through `runtime::Engine` instead).
+
+pub mod linear;
+pub mod mlp;
+
+pub use linear::LinearProblem;
+pub use mlp::Mlp;

@@ -1,0 +1,195 @@
+//! First-order baselines from §5.1: Nesterov, Adagrad, RMSProp, Adam.
+//! (SGD is `Identity`; Momentum is `Identity` + the core's beta1.)
+
+use super::Direction;
+
+/// Nesterov accelerated gradient as a direction provider:
+/// `m <- beta1 m + g; u = g + beta1 m` (the standard "lookahead" form).
+pub struct Nesterov {
+    beta1: f32,
+    m: Vec<f32>,
+}
+
+impl Nesterov {
+    pub fn new(n: usize, beta1: f32) -> Self {
+        Self { beta1, m: vec![0.0; n] }
+    }
+}
+
+impl Direction for Nesterov {
+    fn name(&self) -> String {
+        "nesterov".into()
+    }
+    fn compute(&mut self, g: &[f32], u: &mut [f32]) {
+        let b = self.beta1;
+        for ((mi, &gi), ui) in self.m.iter_mut().zip(g).zip(u.iter_mut()) {
+            *mi = b * *mi + gi;
+            *ui = gi + b * *mi;
+        }
+    }
+    fn memory_floats(&self) -> usize {
+        self.m.len()
+    }
+}
+
+/// Adagrad [Duchi et al. 2011]: accumulate squared gradients, scale by
+/// the inverse square root.
+pub struct Adagrad {
+    eps: f32,
+    acc: Vec<f32>,
+}
+
+impl Adagrad {
+    pub fn new(n: usize, eps: f32) -> Self {
+        Self { eps, acc: vec![0.0; n] }
+    }
+}
+
+impl Direction for Adagrad {
+    fn name(&self) -> String {
+        "adagrad".into()
+    }
+    fn compute(&mut self, g: &[f32], u: &mut [f32]) {
+        for ((a, &gi), ui) in self.acc.iter_mut().zip(g).zip(u.iter_mut()) {
+            *a += gi * gi;
+            *ui = gi / (a.sqrt() + self.eps);
+        }
+    }
+    fn memory_floats(&self) -> usize {
+        self.acc.len()
+    }
+}
+
+/// RMSProp [Tieleman & Hinton 2012]: EMA of squared gradients.
+pub struct RmsProp {
+    beta2: f32,
+    eps: f32,
+    v: Vec<f32>,
+}
+
+impl RmsProp {
+    pub fn new(n: usize, beta2: f32, eps: f32) -> Self {
+        Self { beta2, eps, v: vec![0.0; n] }
+    }
+}
+
+impl Direction for RmsProp {
+    fn name(&self) -> String {
+        "rmsprop".into()
+    }
+    fn compute(&mut self, g: &[f32], u: &mut [f32]) {
+        let b2 = self.beta2;
+        for ((v, &gi), ui) in self.v.iter_mut().zip(g).zip(u.iter_mut()) {
+            *v = b2 * *v + (1.0 - b2) * gi * gi;
+            *ui = gi / (v.sqrt() + self.eps);
+        }
+    }
+    fn memory_floats(&self) -> usize {
+        self.v.len()
+    }
+}
+
+/// Adam [Kingma & Ba 2014] with bias correction. Also serves as the
+/// grafting-magnitude provider for SONew/rfdSON (paper §5).
+pub struct Adam {
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(n: usize, beta1: f32, beta2: f32, eps: f32) -> Self {
+        Self { beta1, beta2, eps, m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+}
+
+impl Direction for Adam {
+    fn name(&self) -> String {
+        "adam".into()
+    }
+    fn compute(&mut self, g: &[f32], u: &mut [f32]) {
+        self.t += 1;
+        let (b1, b2) = (self.beta1, self.beta2);
+        let c1 = 1.0 / (1.0 - b1.powi(self.t as i32));
+        let c2 = 1.0 / (1.0 - b2.powi(self.t as i32));
+        for (((m, v), &gi), ui) in self
+            .m
+            .iter_mut()
+            .zip(self.v.iter_mut())
+            .zip(g)
+            .zip(u.iter_mut())
+        {
+            *m = b1 * *m + (1.0 - b1) * gi;
+            *v = b2 * *v + (1.0 - b2) * gi * gi;
+            *ui = (*m * c1) / ((*v * c2).sqrt() + self.eps);
+        }
+    }
+    fn memory_floats(&self) -> usize {
+        self.m.len() + self.v.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(dir: &mut dyn Direction, steps: usize, lr: f32, n: usize) -> f32 {
+        // quadratic with heterogeneous curvature
+        let c: Vec<f32> = (0..n).map(|i| 1.0 + (i % 7) as f32).collect();
+        let mut x = vec![1.0f32; n];
+        let mut u = vec![0.0f32; n];
+        for _ in 0..steps {
+            let g: Vec<f32> = x.iter().zip(&c).map(|(xi, ci)| ci * xi).collect();
+            dir.compute(&g, &mut u);
+            for (xi, &ui) in x.iter_mut().zip(&u) {
+                *xi -= lr * ui;
+            }
+        }
+        x.iter().zip(&c).map(|(xi, ci)| 0.5 * ci * xi * xi).sum()
+    }
+
+    #[test]
+    fn all_reduce_quadratic() {
+        let n = 16;
+        assert!(run(&mut Nesterov::new(n, 0.9), 50, 0.02, n) < 0.1);
+        assert!(run(&mut Adagrad::new(n, 1e-8), 80, 0.5, n) < 0.5);
+        assert!(run(&mut RmsProp::new(n, 0.9, 1e-8), 80, 0.05, n) < 0.2);
+        assert!(run(&mut Adam::new(n, 0.9, 0.999, 1e-8), 80, 0.1, n) < 0.2);
+    }
+
+    #[test]
+    fn adam_first_step_is_sign_of_gradient() {
+        // with bias correction, step 1 gives m̂ = g, v̂ = g², u = sign-ish
+        let mut adam = Adam::new(3, 0.9, 0.999, 0.0);
+        let g = vec![2.0, -0.5, 1e-3];
+        let mut u = vec![0.0; 3];
+        adam.compute(&g, &mut u);
+        for (&ui, &gi) in u.iter().zip(&g) {
+            assert!((ui - gi.signum()).abs() < 1e-3, "{ui} vs sign {gi}");
+        }
+    }
+
+    #[test]
+    fn adagrad_monotone_accumulator() {
+        let mut a = Adagrad::new(2, 1e-8);
+        let mut u = vec![0.0; 2];
+        a.compute(&[1.0, 1.0], &mut u);
+        let acc1 = a.acc.clone();
+        a.compute(&[1.0, 1.0], &mut u);
+        assert!(a.acc.iter().zip(&acc1).all(|(now, before)| now >= before));
+    }
+
+    #[test]
+    fn rmsprop_scale_invariance_in_steady_state() {
+        // constant gradient: u -> g / |g| = sign(g) (scale-free)
+        let mut r = RmsProp::new(1, 0.9, 0.0);
+        let mut u = vec![0.0];
+        for _ in 0..500 {
+            r.compute(&[42.0], &mut u);
+        }
+        assert!((u[0] - 1.0).abs() < 1e-3);
+    }
+}

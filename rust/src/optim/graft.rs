@@ -1,0 +1,120 @@
+//! Learning-rate grafting [Agarwal et al. 2022], as used in §5: take the
+//! *direction* from one optimizer and the per-tensor step *magnitude*
+//! from another (Adam for SONew/rfdSON, RMSProp for Shampoo):
+//! `update = (|v_mag| / |v_dir|) * v_dir`, per tensor block.
+
+use crate::linalg::norm2;
+
+use super::{Blocks, Direction};
+
+pub struct Graft {
+    dir: Box<dyn Direction>,
+    mag: Box<dyn Direction>,
+    blocks: Blocks,
+    mag_buf: Vec<f32>,
+}
+
+impl Graft {
+    pub fn new(dir: Box<dyn Direction>, mag: Box<dyn Direction>, blocks: Blocks) -> Self {
+        let n = blocks.iter().map(|&(o, l)| o + l).max().unwrap_or(0);
+        Self { dir, mag, blocks, mag_buf: vec![0.0; n] }
+    }
+}
+
+impl Direction for Graft {
+    fn name(&self) -> String {
+        format!("{}+{}-graft", self.dir.name(), self.mag.name())
+    }
+
+    fn compute(&mut self, g: &[f32], u: &mut [f32]) {
+        self.dir.compute(g, u);
+        self.mag.compute(g, &mut self.mag_buf);
+        for &(off, len) in &self.blocks {
+            let d = &mut u[off..off + len];
+            let m = &self.mag_buf[off..off + len];
+            let nd = norm2(d);
+            let nm = norm2(m);
+            if nd > 1e-30 {
+                let s = nm / nd;
+                for v in d {
+                    *v *= s;
+                }
+            }
+        }
+    }
+
+    fn memory_floats(&self) -> usize {
+        self.dir.memory_floats() + self.mag.memory_floats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::first_order::Adam;
+    use crate::optim::Identity;
+
+    #[test]
+    fn grafted_norm_equals_magnitude_norm() {
+        // direction = sgd (g), magnitude = adam: per-block norm of the
+        // grafted update must equal the adam update's norm.
+        let n = 20;
+        let blocks = vec![(0usize, 10usize), (10, 10)];
+        let mut graft = Graft::new(
+            Box::new(Identity),
+            Box::new(Adam::new(n, 0.9, 0.999, 1e-8)),
+            blocks.clone(),
+        );
+        let mut adam_alone = Adam::new(n, 0.9, 0.999, 1e-8);
+        let g: Vec<f32> = (0..n).map(|i| (i as f32 - 9.5) * 0.3).collect();
+        let mut u = vec![0.0; n];
+        let mut ua = vec![0.0; n];
+        graft.compute(&g, &mut u);
+        adam_alone.compute(&g, &mut ua);
+        for &(off, len) in &blocks {
+            let nu = norm2(&u[off..off + len]);
+            let na = norm2(&ua[off..off + len]);
+            assert!((nu - na).abs() < 1e-4 * na.max(1.0), "{nu} vs {na}");
+        }
+    }
+
+    #[test]
+    fn direction_preserved_up_to_scale() {
+        let n = 8;
+        let mut graft = Graft::new(
+            Box::new(Identity),
+            Box::new(Adam::new(n, 0.9, 0.999, 1e-8)),
+            vec![(0, n)],
+        );
+        let g: Vec<f32> = (1..=n).map(|i| i as f32).collect();
+        let mut u = vec![0.0; n];
+        graft.compute(&g, &mut u);
+        // u parallel to g
+        let cos = crate::linalg::dot(&u, &g) / (norm2(&u) * norm2(&g));
+        assert!((cos - 1.0).abs() < 1e-5, "cos {cos}");
+    }
+
+    #[test]
+    fn zero_direction_stays_zero() {
+        struct Zero;
+        impl Direction for Zero {
+            fn name(&self) -> String {
+                "zero".into()
+            }
+            fn compute(&mut self, _g: &[f32], u: &mut [f32]) {
+                u.fill(0.0);
+            }
+            fn memory_floats(&self) -> usize {
+                0
+            }
+        }
+        let mut graft = Graft::new(
+            Box::new(Zero),
+            Box::new(Adam::new(4, 0.9, 0.999, 1e-8)),
+            vec![(0, 4)],
+        );
+        let mut u = vec![1.0; 4];
+        graft.compute(&[1.0, 1.0, 1.0, 1.0], &mut u);
+        assert_eq!(u, vec![0.0; 4]);
+    }
+}

@@ -1,0 +1,80 @@
+//! Analytical optimizer-memory accounting — regenerates Table 6 ("rough
+//! estimate of memory requirement comparisons across benchmarks") and the
+//! memory column of Table 1 from the model layouts, without allocating
+//! anything.
+
+use super::OptKind;
+
+/// Statistics floats (excluding parameters themselves) an optimizer holds
+/// for a model with tensors shaped `(d1, d2)` (vectors as d x 1), counted
+/// in multiples of `n = total params` where convenient.
+pub fn state_floats(kind: OptKind, mats: &[(usize, usize, usize, usize)], hp_band: usize, hp_rank: usize) -> usize {
+    let n: usize = mats.iter().map(|&(_, len, _, _)| len).sum();
+    match kind {
+        OptKind::Sgd => 0,
+        OptKind::Momentum | OptKind::Nesterov => n,
+        OptKind::Adagrad => n,
+        OptKind::RmsProp => n,
+        OptKind::Adam => 2 * n,
+        // non-factored AdaFactor: v + per-tensor scale (+ beta1 momentum
+        // counted by the core when enabled)
+        OptKind::AdaFactor => n + mats.len(),
+        // diag statistics + adam-graft (m, v) handled separately; bare: n
+        OptKind::DiagSonew => n,
+        OptKind::TridiagSonew => 2 * n,
+        OptKind::BandSonew => (hp_band + 1) * n,
+        // statistics + cached preconditioners (paper A.4.2)
+        OptKind::Shampoo | OptKind::KfacProxy => mats
+            .iter()
+            .map(|&(_, _, d1, d2)| 2 * (d1 * d1 + d2 * d2))
+            .sum(),
+        OptKind::RfdSon => (hp_rank + 1) * n,
+        OptKind::Ons => n * n,
+        OptKind::Eva => mats.iter().map(|&(_, _, d1, d2)| d1 + d2).sum(),
+        OptKind::FishLegDiag => 2 * n,
+    }
+}
+
+/// Memory in units of n (#params), as Table 6 reports it.
+pub fn state_in_params(kind: OptKind, mats: &[(usize, usize, usize, usize)], band: usize, rank: usize) -> f64 {
+    let n: usize = mats.iter().map(|&(_, len, _, _)| len).sum();
+    state_floats(kind, mats, band, rank) as f64 / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's square-vs-rectangular claim: for d1 = 4 d2, Shampoo's
+    /// d1² + d2² statistics exceed 2 d1 d2 (tridiag-SONew) by > 2x.
+    #[test]
+    fn shampoo_worse_than_tridiag_for_rectangular() {
+        let mats = vec![(0usize, 40_000usize, 400usize, 100usize)];
+        let sh = state_floats(OptKind::Shampoo, &mats, 1, 1);
+        let tds = state_floats(OptKind::TridiagSonew, &mats, 1, 1);
+        assert!(sh as f64 > 2.0 * tds as f64, "{sh} vs {tds}");
+    }
+
+    /// amgm: d1² + d2² >= 2 d1 d2 always — tridiag never uses more.
+    #[test]
+    fn tridiag_never_more_than_shampoo_stats() {
+        for (d1, d2) in [(10, 10), (100, 30), (7, 1), (1, 1)] {
+            let mats = vec![(0usize, d1 * d2, d1, d2)];
+            // compare raw statistics (Shampoo's 2x cache excluded)
+            let sh_stats = d1 * d1 + d2 * d2;
+            let tds = state_floats(OptKind::TridiagSonew, &mats, 1, 1);
+            assert!(tds <= 2 * sh_stats.max(d1 * d2), "{d1}x{d2}");
+            assert!(2 * d1 * d2 <= 2 * sh_stats);
+        }
+    }
+
+    #[test]
+    fn table1_column_ratios() {
+        let mats = vec![(0usize, 1_000_000usize, 1000usize, 1000usize)];
+        let n = 1_000_000;
+        assert_eq!(state_floats(OptKind::Adam, &mats, 4, 4), 2 * n);
+        assert_eq!(state_floats(OptKind::TridiagSonew, &mats, 4, 4), 2 * n);
+        assert_eq!(state_floats(OptKind::BandSonew, &mats, 4, 4), 5 * n);
+        assert_eq!(state_floats(OptKind::RfdSon, &mats, 4, 4), 5 * n);
+    }
+}

@@ -1,0 +1,487 @@
+//! Optimizer suite: SONew (diag / tridiag / banded) plus every baseline in
+//! the paper's evaluation — SGD, Momentum, Nesterov, Adagrad, RMSProp,
+//! Adam, AdaFactor, Shampoo(t), rfdSON(m), full-matrix Online Newton, and
+//! the Figure-7 Kronecker baselines (KFAC-proxy, Eva, FishLeg-diag).
+//!
+//! Architecture: a `Direction` computes an (unscaled) descent direction
+//! from the gradient; the `Opt` core wraps it with step-size machinery
+//! shared by everything — `beta1` momentum, weight decay, precision
+//! quantization — and the `graft` combinator implements learning-rate
+//! grafting [Agarwal et al. 2022] exactly as §5 uses it (Adam-norm
+//! magnitude with the second-order direction, per tensor).
+
+pub mod adafactor;
+pub mod first_order;
+pub mod graft;
+pub mod kron_baselines;
+pub mod memory;
+pub mod ons;
+pub mod rfdson;
+pub mod shampoo;
+pub mod sonew_opt;
+
+use crate::util::Precision;
+
+/// Block structure (offset, len) of each tensor in the flat vector; the
+/// per-tensor preconditioners and per-tensor grafting consume this.
+pub type Blocks = Vec<(usize, usize)>;
+
+/// Build `Blocks` from a runtime layout.
+pub fn blocks_of(layout: &crate::runtime::Layout) -> Blocks {
+    layout.tensors.iter().map(|t| (t.offset, t.size())).collect()
+}
+
+/// Blocks with matrix views for Kronecker methods: (offset, len, d1, d2)
+/// with d1 * d2 >= len — when the view is larger than the tensor (blocked
+/// Shampoo on capped dimensions) the gradient matrix is zero-padded,
+/// which contributes nothing to the statistics.
+pub type MatBlocks = Vec<(usize, usize, usize, usize)>;
+
+pub fn mat_blocks_of(layout: &crate::runtime::Layout) -> MatBlocks {
+    layout
+        .tensors
+        .iter()
+        .map(|t| {
+            let (d1, d2) = t.matrix_dims();
+            (t.offset, t.size(), d1, d2)
+        })
+        .collect()
+}
+
+/// A preconditioned descent-direction provider.
+pub trait Direction: Send {
+    fn name(&self) -> String;
+    /// Write the descent direction for gradient `g` into `u`.
+    fn compute(&mut self, g: &[f32], u: &mut [f32]);
+    /// Optimizer-statistics floats held (Table 1 / Table 6 accounting).
+    fn memory_floats(&self) -> usize;
+}
+
+/// Identity direction: `u = g` (SGD and the base of momentum methods).
+pub struct Identity;
+
+impl Direction for Identity {
+    fn name(&self) -> String {
+        "sgd".into()
+    }
+    fn compute(&mut self, g: &[f32], u: &mut [f32]) {
+        u.copy_from_slice(g);
+    }
+    fn memory_floats(&self) -> usize {
+        0
+    }
+}
+
+/// The optimizer core: direction + momentum + weight decay + precision.
+pub struct Opt {
+    label: String,
+    dir: Box<dyn Direction>,
+    /// heavy-ball momentum on the (possibly grafted) direction
+    pub beta1: f32,
+    /// decoupled weight decay (AdamW-style)
+    pub weight_decay: f32,
+    pub precision: Precision,
+    momentum: Option<Vec<f32>>,
+    u: Vec<f32>,
+    t: u64,
+}
+
+impl Opt {
+    pub fn new(label: impl Into<String>, dir: Box<dyn Direction>, n: usize) -> Self {
+        Self {
+            label: label.into(),
+            dir,
+            beta1: 0.0,
+            weight_decay: 0.0,
+            precision: Precision::F32,
+            momentum: None,
+            u: vec![0.0; n],
+            t: 0,
+        }
+    }
+
+    pub fn with_momentum(mut self, beta1: f32) -> Self {
+        self.beta1 = beta1;
+        if beta1 > 0.0 {
+            self.momentum = Some(vec![0.0; self.u.len()]);
+        }
+        self
+    }
+
+    pub fn with_weight_decay(mut self, wd: f32) -> Self {
+        self.weight_decay = wd;
+        self
+    }
+
+    pub fn with_precision(mut self, p: Precision) -> Self {
+        self.precision = p;
+        self
+    }
+
+    pub fn name(&self) -> &str {
+        &self.label
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.t
+    }
+
+    /// Apply one update: `p -= lr * (momentum(dir(g)) + wd * p)`.
+    pub fn step(&mut self, params: &mut [f32], g: &[f32], lr: f32) {
+        assert_eq!(params.len(), g.len());
+        assert_eq!(params.len(), self.u.len());
+        self.t += 1;
+        self.dir.compute(g, &mut self.u);
+        self.precision.quantize_slice(&mut self.u);
+        let upd: &[f32] = if let Some(m) = &mut self.momentum {
+            // EMA momentum with bias correction so early steps are not
+            // under-scaled (matches Adam-style conventions).
+            let b1 = self.beta1;
+            let corr = 1.0 / (1.0 - b1.powi(self.t as i32));
+            for (mi, &ui) in m.iter_mut().zip(self.u.iter()) {
+                *mi = self.precision.quantize(b1 * *mi + (1.0 - b1) * ui);
+            }
+            for (ui, &mi) in self.u.iter_mut().zip(m.iter()) {
+                *ui = mi * corr;
+            }
+            &self.u
+        } else {
+            &self.u
+        };
+        let wd = self.weight_decay;
+        for (p, &u) in params.iter_mut().zip(upd) {
+            *p = self.precision.quantize(*p - lr * (u + wd * *p));
+        }
+    }
+
+    /// Total optimizer-state floats (direction stats + momentum).
+    pub fn memory_floats(&self) -> usize {
+        self.dir.memory_floats() + self.momentum.as_ref().map_or(0, |m| m.len())
+    }
+}
+
+/// Hyperparameters shared by the factory (config system / sweeps).
+#[derive(Debug, Clone)]
+pub struct HyperParams {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// Algorithm-3 Schur tolerance (0 disables the stable variant)
+    pub gamma: f32,
+    pub weight_decay: f32,
+    /// band size for band-SONew
+    pub band: usize,
+    /// sketch rank for rfdSON
+    pub rank: usize,
+    /// preconditioner refresh interval for Shampoo(t) / KFAC
+    pub interval: usize,
+    pub precision: Precision,
+    /// apply Adam-norm grafting to second-order directions (paper §5)
+    pub grafting: bool,
+}
+
+impl Default for HyperParams {
+    fn default() -> Self {
+        Self {
+            lr: 1e-3,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-6,
+            gamma: 0.0,
+            weight_decay: 0.0,
+            band: 4,
+            rank: 4,
+            interval: 20,
+            precision: Precision::F32,
+            grafting: true,
+        }
+    }
+}
+
+/// Every optimizer in the evaluation, by name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptKind {
+    Sgd,
+    Momentum,
+    Nesterov,
+    Adagrad,
+    RmsProp,
+    Adam,
+    AdaFactor,
+    DiagSonew,
+    TridiagSonew,
+    BandSonew,
+    Shampoo,
+    RfdSon,
+    Ons,
+    KfacProxy,
+    Eva,
+    FishLegDiag,
+}
+
+impl OptKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "sgd" => Self::Sgd,
+            "momentum" => Self::Momentum,
+            "nesterov" => Self::Nesterov,
+            "adagrad" => Self::Adagrad,
+            "rmsprop" => Self::RmsProp,
+            "adam" => Self::Adam,
+            "adafactor" => Self::AdaFactor,
+            "diag-sonew" | "diag_sonew" => Self::DiagSonew,
+            "tridiag-sonew" | "tds" | "tridiag_sonew" => Self::TridiagSonew,
+            "band-sonew" | "bds" | "band_sonew" => Self::BandSonew,
+            "shampoo" => Self::Shampoo,
+            "rfdson" => Self::RfdSon,
+            "ons" => Self::Ons,
+            "kfac" => Self::KfacProxy,
+            "eva" => Self::Eva,
+            "fishleg" => Self::FishLegDiag,
+            _ => return None,
+        })
+    }
+
+    pub fn all_table2() -> &'static [OptKind] {
+        &[
+            Self::Sgd,
+            Self::Nesterov,
+            Self::Adagrad,
+            Self::Momentum,
+            Self::RmsProp,
+            Self::Adam,
+            Self::DiagSonew,
+            Self::Shampoo,
+            Self::RfdSon,
+            Self::TridiagSonew,
+            Self::BandSonew,
+        ]
+    }
+}
+
+/// Build a ready-to-run optimizer for an `n`-dim flat parameter vector
+/// with per-tensor `blocks` (pass a single block for whole-vector).
+pub fn build(kind: OptKind, n: usize, blocks: &Blocks, mats: &MatBlocks, hp: &HyperParams) -> Opt {
+    use first_order as fo;
+    let single = vec![(0usize, n)];
+    let blocks = if blocks.is_empty() { &single } else { blocks };
+    let graft_mag = || -> Box<dyn Direction> {
+        Box::new(fo::Adam::new(n, hp.beta1, hp.beta2, hp.eps))
+    };
+    let wrap_graft = |label: &str, d: Box<dyn Direction>| -> Opt {
+        let dir: Box<dyn Direction> = if hp.grafting {
+            Box::new(graft::Graft::new(d, graft_mag(), blocks.clone()))
+        } else {
+            d
+        };
+        Opt::new(label, dir, n)
+            .with_momentum(hp.beta1)
+            .with_weight_decay(hp.weight_decay)
+            .with_precision(hp.precision)
+    };
+    match kind {
+        OptKind::Sgd => Opt::new("sgd", Box::new(Identity), n)
+            .with_weight_decay(hp.weight_decay)
+            .with_precision(hp.precision),
+        OptKind::Momentum => Opt::new("momentum", Box::new(Identity), n)
+            .with_momentum(hp.beta1)
+            .with_weight_decay(hp.weight_decay)
+            .with_precision(hp.precision),
+        OptKind::Nesterov => Opt::new(
+            "nesterov",
+            Box::new(fo::Nesterov::new(n, hp.beta1)),
+            n,
+        )
+        .with_weight_decay(hp.weight_decay)
+        .with_precision(hp.precision),
+        OptKind::Adagrad => Opt::new("adagrad", Box::new(fo::Adagrad::new(n, hp.eps)), n)
+            .with_weight_decay(hp.weight_decay)
+            .with_precision(hp.precision),
+        OptKind::RmsProp => Opt::new(
+            "rmsprop",
+            Box::new(fo::RmsProp::new(n, hp.beta2, hp.eps)),
+            n,
+        )
+        .with_weight_decay(hp.weight_decay)
+        .with_precision(hp.precision),
+        OptKind::Adam => Opt::new(
+            "adam",
+            Box::new(fo::Adam::new(n, hp.beta1, hp.beta2, hp.eps)),
+            n,
+        )
+        .with_weight_decay(hp.weight_decay)
+        .with_precision(hp.precision),
+        OptKind::AdaFactor => Opt::new(
+            "adafactor",
+            Box::new(adafactor::AdaFactor::new(n, blocks.clone(), hp.beta2, hp.eps)),
+            n,
+        )
+        .with_momentum(hp.beta1)
+        .with_weight_decay(hp.weight_decay)
+        .with_precision(hp.precision),
+        OptKind::DiagSonew => wrap_graft(
+            "diag-sonew",
+            Box::new(sonew_opt::SonewDir::diag(n, blocks, hp)),
+        ),
+        OptKind::TridiagSonew => wrap_graft(
+            "tridiag-sonew",
+            Box::new(sonew_opt::SonewDir::tridiag(n, blocks, hp)),
+        ),
+        OptKind::BandSonew => wrap_graft(
+            &format!("band-{}-sonew", hp.band),
+            Box::new(sonew_opt::SonewDir::banded(n, blocks, hp)),
+        ),
+        OptKind::Shampoo => {
+            // paper default: Shampoo uses RMSProp grafting
+            let d = Box::new(shampoo::Shampoo::new(n, mats.clone(), hp));
+            let dir: Box<dyn Direction> = if hp.grafting {
+                Box::new(graft::Graft::new(
+                    d,
+                    Box::new(fo::RmsProp::new(n, hp.beta2, hp.eps)),
+                    blocks.clone(),
+                ))
+            } else {
+                d
+            };
+            Opt::new(format!("shampoo({})", hp.interval), dir, n)
+                .with_momentum(hp.beta1)
+                .with_weight_decay(hp.weight_decay)
+                .with_precision(hp.precision)
+        }
+        OptKind::RfdSon => wrap_graft(
+            &format!("rfdson({})", hp.rank),
+            Box::new(rfdson::RfdSon::new(n, blocks.clone(), hp.rank, hp.eps)),
+        ),
+        OptKind::Ons => Opt::new("ons", Box::new(ons::FullOns::new(n, hp.eps)), n)
+            .with_precision(hp.precision),
+        OptKind::KfacProxy => wrap_graft(
+            "kfac-proxy",
+            Box::new(kron_baselines::KfacProxy::new(n, mats.clone(), hp)),
+        ),
+        OptKind::Eva => wrap_graft(
+            "eva",
+            Box::new(kron_baselines::Eva::new(n, mats.clone(), hp)),
+        ),
+        OptKind::FishLegDiag => wrap_graft(
+            "fishleg-diag",
+            Box::new(kron_baselines::FishLegDiag::new(n, hp)),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for s in [
+            "sgd", "momentum", "nesterov", "adagrad", "rmsprop", "adam",
+            "adafactor", "diag-sonew", "tridiag-sonew", "band-sonew",
+            "shampoo", "rfdson", "ons", "kfac", "eva", "fishleg",
+        ] {
+            assert!(OptKind::parse(s).is_some(), "{s}");
+        }
+        assert!(OptKind::parse("bogus").is_none());
+    }
+
+    #[test]
+    fn every_optimizer_reduces_a_quadratic() {
+        // min 0.5 x^T A x with A = diag(c) + chain coupling — a loss
+        // geometry with genuine adjacent-coordinate curvature structure
+        // (the regime the chain-graph preconditioner is built for); every
+        // optimizer must make progress on it.
+        let n = 24;
+        let blocks = vec![(0, 12), (12, 12)];
+        let mats = vec![(0, 12, 3, 4), (12, 12, 4, 3)];
+        let c: Vec<f32> = (0..n).map(|i| 0.5 + (i % 5) as f32).collect();
+        let couple = 0.2f32;
+        for &kind in &[
+            OptKind::Sgd,
+            OptKind::Momentum,
+            OptKind::Nesterov,
+            OptKind::Adagrad,
+            OptKind::RmsProp,
+            OptKind::Adam,
+            OptKind::AdaFactor,
+            OptKind::DiagSonew,
+            OptKind::TridiagSonew,
+            OptKind::BandSonew,
+            OptKind::Shampoo,
+            OptKind::RfdSon,
+            // ONS is the small-n convex reference (own tests + convex
+            // suite); on this noisy stream its 1/t steps barely move.
+            OptKind::KfacProxy,
+            OptKind::Eva,
+            OptKind::FishLegDiag,
+        ] {
+            // Signal-scale additive gradient noise mimics minibatch
+            // sampling: it keeps adjacent-coordinate gradient correlation
+            // away from +/-1 (a deterministic stream is exactly the
+            // rank-deficient Lemma A.13 case, exercised elsewhere) and the
+            // gamma > 0 stable variant covers the rest.
+            let hp = HyperParams { lr: 0.05, gamma: 1e-4, eps: 1e-3, ..Default::default() };
+            let mut opt = build(kind, n, &blocks, &mats, &hp);
+            let mut rng = crate::util::Rng::new(17);
+            let mut x: Vec<f32> = (0..n).map(|i| 1.0 + (i as f32) * 0.1).collect();
+            let f = |x: &[f32]| -> f32 {
+                let mut acc: f32 =
+                    x.iter().zip(&c).map(|(xi, ci)| 0.5 * ci * xi * xi).sum();
+                for i in 0..n - 1 {
+                    acc += couple * x[i] * x[i + 1];
+                }
+                acc
+            };
+            let f0 = f(&x);
+            for _ in 0..120 {
+                let mut g: Vec<f32> = x
+                    .iter()
+                    .zip(&c)
+                    .map(|(xi, ci)| ci * xi + 1.0 * rng.normal_f32())
+                    .collect();
+                for i in 0..n {
+                    if i > 0 {
+                        g[i] += couple * x[i - 1];
+                    }
+                    if i + 1 < n {
+                        g[i] += couple * x[i + 1];
+                    }
+                }
+                opt.step(&mut x, &g, 0.05);
+            }
+            let f1 = f(&x);
+            // Smoke-level bar: strict, visible progress for every method.
+            // (Sharper convergence claims are covered by the per-optimizer
+            // tests and the autoencoder benchmark harness; second-order
+            // directions whiten by estimated-Fisher and are deliberately
+            // conservative on this short coherent stream.)
+            assert!(
+                f1 < 0.93 * f0 && f1.is_finite(),
+                "{} failed to reduce quadratic: {f0} -> {f1}",
+                opt.name()
+            );
+            assert!(x.iter().all(|v| v.is_finite()), "{}", opt.name());
+        }
+    }
+
+    #[test]
+    fn momentum_state_accounted() {
+        let hp = HyperParams::default();
+        let opt = build(OptKind::Adam, 100, &vec![(0, 100)], &vec![(0, 100, 100, 1)], &hp);
+        assert_eq!(opt.memory_floats(), 200); // m + v
+        let m = build(OptKind::Momentum, 100, &vec![(0, 100)], &vec![(0, 100, 100, 1)], &hp);
+        assert_eq!(m.memory_floats(), 100);
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut opt = Opt::new("sgd", Box::new(Identity), 4).with_weight_decay(0.1);
+        let mut p = vec![1.0f32; 4];
+        let g = vec![0.0f32; 4];
+        opt.step(&mut p, &g, 1.0);
+        for &v in &p {
+            assert!((v - 0.9).abs() < 1e-6);
+        }
+    }
+}

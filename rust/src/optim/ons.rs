@@ -1,0 +1,125 @@
+//! Full-matrix Online Newton Step [Hazan et al. 2007] — the O(n^2)
+//! method SONew sparsifies. Kept exact via Sherman–Morrison on the
+//! inverse; usable only for small n (convex experiments, regret tests)
+//! which is precisely the paper's point.
+
+use super::Direction;
+
+pub struct FullOns {
+    n: usize,
+    /// inverse statistics  A^{-1}, row-major, A = eps I + sum g g^T
+    ainv: Vec<f32>,
+}
+
+impl FullOns {
+    pub fn new(n: usize, eps: f32) -> Self {
+        let mut ainv = vec![0.0; n * n];
+        let inv = 1.0 / eps.max(1e-8);
+        for i in 0..n {
+            ainv[i * n + i] = inv;
+        }
+        Self { n, ainv }
+    }
+}
+
+impl Direction for FullOns {
+    fn name(&self) -> String {
+        "ons".into()
+    }
+
+    fn compute(&mut self, g: &[f32], u: &mut [f32]) {
+        let n = self.n;
+        // Sherman–Morrison: (A + g g^T)^{-1} = A^{-1} - (A^{-1}g)(A^{-1}g)^T / (1 + g^T A^{-1} g)
+        let mut ag = vec![0.0f32; n];
+        for i in 0..n {
+            let row = &self.ainv[i * n..(i + 1) * n];
+            let mut acc = 0.0;
+            for k in 0..n {
+                acc += row[k] * g[k];
+            }
+            ag[i] = acc;
+        }
+        let denom = 1.0 + crate::linalg::dot(g, &ag);
+        let inv_denom = 1.0 / denom.max(1e-12);
+        for i in 0..n {
+            let agi = ag[i] * inv_denom;
+            let row = &mut self.ainv[i * n..(i + 1) * n];
+            for k in 0..n {
+                row[k] -= agi * ag[k];
+            }
+        }
+        // u = A^{-1} g with the *updated* inverse
+        for i in 0..n {
+            let row = &self.ainv[i * n..(i + 1) * n];
+            let mut acc = 0.0;
+            for k in 0..n {
+                acc += row[k] * g[k];
+            }
+            u[i] = acc;
+        }
+    }
+
+    fn memory_floats(&self) -> usize {
+        self.n * self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+    use crate::util::prop::{assert_close, check};
+
+    #[test]
+    fn sherman_morrison_matches_direct_inverse() {
+        check("ONS inverse == direct", 16, |rng| {
+            let n = 1 + rng.below(8);
+            let eps = 0.5f32;
+            let mut ons = FullOns::new(n, eps);
+            let mut a = Mat::zeros(n, n);
+            for i in 0..n {
+                *a.at_mut(i, i) = eps;
+            }
+            let mut u = vec![0.0; n];
+            for _ in 0..6 {
+                let g = rng.normal_vec(n);
+                ons.compute(&g, &mut u);
+                for i in 0..n {
+                    for j in 0..n {
+                        *a.at_mut(i, j) += g[i] * g[j];
+                    }
+                }
+                // direct solve A x = g
+                let want = crate::linalg::spd_solve(&a, &g).unwrap();
+                assert_close(&u, &want, 2e-2, 1e-3, "ons-u");
+            }
+        });
+    }
+
+    #[test]
+    fn quadratic_progress() {
+        // ONS steps decay like 1/t as statistics accumulate, so progress
+        // on a deterministic quadratic is steady rather than geometric.
+        let n = 6;
+        let c: Vec<f32> = (1..=n).map(|i| i as f32).collect();
+        let mut ons = FullOns::new(n, 1.0);
+        let mut x = vec![1.0f32; n];
+        let mut u = vec![0.0; n];
+        let f0: f32 = x.iter().zip(&c).map(|(xi, ci)| 0.5 * ci * xi * xi).sum();
+        for _ in 0..60 {
+            let g: Vec<f32> = x.iter().zip(&c).map(|(xi, ci)| ci * xi).collect();
+            ons.compute(&g, &mut u);
+            for (xi, &ui) in x.iter_mut().zip(&u) {
+                *xi -= 1.0 * ui;
+            }
+        }
+        let f: f32 = x.iter().zip(&c).map(|(xi, ci)| 0.5 * ci * xi * xi).sum();
+        assert!(f < 0.7 * f0, "{f0} -> {f}");
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn memory_is_quadratic() {
+        assert_eq!(FullOns::new(50, 1.0).memory_floats(), 2500);
+    }
+}

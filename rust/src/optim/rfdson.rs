@@ -1,0 +1,258 @@
+//! rfdSON [Luo et al. 2019]: robust-frequent-directions sketched online
+//! Newton — the paper's memory-efficient second-order competitor.
+//!
+//! Per tensor block of size n: maintain a rank-m sketch `B` (m+1 rows of
+//! width n). Each step inserts g into the spare row, shrinks by the
+//! smallest sketch singular value (the "robust" FD update, with the
+//! shrinkage mass alpha_t accumulating into the damping term), and
+//! preconditions via Woodbury:
+//!   H = B^T B + alpha I,
+//!   H^{-1} g = (g - B^T (B B^T + alpha I)^{-1} B g) / alpha.
+//! The SVD of the short-fat sketch is computed from the (m+1) x (m+1)
+//! Gram matrix with the Jacobi eigensolver — O(m^2 n) per step, matching
+//! Table 1's O(m^2 d1 d2).
+
+use crate::linalg::{sym_eig, Mat};
+
+use super::{Blocks, Direction};
+
+pub(crate) struct BlockSketch {
+    off: usize,
+    n: usize,
+    /// (m+1) x n sketch, row-major
+    b: Vec<f32>,
+    /// accumulated shrinkage + base damping
+    alpha: f32,
+}
+
+pub struct RfdSon {
+    m: usize,
+    pub(crate) blocks: Vec<BlockSketch>,
+}
+
+impl RfdSon {
+    pub fn new(_n: usize, blocks: Blocks, m: usize, alpha0: f32) -> Self {
+        let m = m.max(1);
+        let blocks = blocks
+            .into_iter()
+            .map(|(off, n)| BlockSketch {
+                off,
+                n,
+                b: vec![0.0; (m + 1) * n],
+                alpha: alpha0.max(1e-8),
+            })
+            .collect();
+        Self { m, blocks }
+    }
+}
+
+impl Direction for RfdSon {
+    fn name(&self) -> String {
+        format!("rfdson({})", self.m)
+    }
+
+    fn compute(&mut self, g: &[f32], u: &mut [f32]) {
+        let m1 = self.m + 1;
+        for blk in &mut self.blocks {
+            let n = blk.n;
+            let gs = &g[blk.off..blk.off + n];
+            // insert g into the spare (last) row
+            blk.b[self.m * n..m1 * n].copy_from_slice(gs);
+
+            // SVD via Gram: B B^T = V diag(w) V^T, singular values sqrt(w)
+            let mut gram = Mat::zeros(m1, m1);
+            for i in 0..m1 {
+                for j in i..m1 {
+                    let mut acc = 0.0f32;
+                    let (ri, rj) = (&blk.b[i * n..(i + 1) * n], &blk.b[j * n..(j + 1) * n]);
+                    for k in 0..n {
+                        acc += ri[k] * rj[k];
+                    }
+                    *gram.at_mut(i, j) = acc;
+                    *gram.at_mut(j, i) = acc;
+                }
+            }
+            let (w, v) = sym_eig(&gram, 30);
+            // eigenvalues ascending: w[0] is the smallest = sigma_{m+1}^2
+            let delta = w[0].max(0.0);
+            // robust FD: shrink all directions by delta, drop the smallest;
+            // half of the shrinkage feeds the damping (Luo et al. alg. 3)
+            blk.alpha += delta / 2.0;
+            // new sketch rows: sqrt(max(w_i - delta, 0)) * u_i^T where
+            // u_i = B^T v_i / sigma_i. Compute rows = diag(scale) V^T B.
+            let mut newb = vec![0.0f32; m1 * n];
+            for (dst_row, i) in (1..m1).rev().enumerate() {
+                // keep the m largest (indices m1-1 down to 1)
+                let wi = w[i];
+                if wi <= delta || wi <= 0.0 {
+                    continue;
+                }
+                let scale = ((wi - delta) / wi).sqrt();
+                // row = scale * sum_r v[r, i] * B[r, :]
+                let dst = &mut newb[dst_row * n..(dst_row + 1) * n];
+                for r in 0..m1 {
+                    let c = scale * v.at(r, i);
+                    if c == 0.0 {
+                        continue;
+                    }
+                    let src = &blk.b[r * n..(r + 1) * n];
+                    for k in 0..n {
+                        dst[k] += c * src[k];
+                    }
+                }
+            }
+            blk.b = newb;
+
+            // Woodbury solve on the *updated* sketch (spare row now empty):
+            // H^{-1} g = (g - B^T (B B^T + alpha I)^{-1} B g) / alpha
+            let rows = self.m;
+            let mut bg = vec![0.0f32; rows];
+            for r in 0..rows {
+                let row = &blk.b[r * n..(r + 1) * n];
+                let mut acc = 0.0;
+                for k in 0..n {
+                    acc += row[k] * gs[k];
+                }
+                bg[r] = acc;
+            }
+            let mut small = Mat::zeros(rows, rows);
+            for i in 0..rows {
+                for j in i..rows {
+                    let mut acc = 0.0f32;
+                    let (ri, rj) = (&blk.b[i * n..(i + 1) * n], &blk.b[j * n..(j + 1) * n]);
+                    for k in 0..n {
+                        acc += ri[k] * rj[k];
+                    }
+                    *small.at_mut(i, j) = acc;
+                    *small.at_mut(j, i) = acc;
+                }
+                *small.at_mut(i, i) += blk.alpha;
+            }
+            let y = crate::linalg::spd_solve(&small, &bg)
+                .unwrap_or_else(|| vec![0.0; rows]);
+            let dst = &mut u[blk.off..blk.off + n];
+            dst.copy_from_slice(gs);
+            for r in 0..rows {
+                let c = y[r];
+                if c == 0.0 {
+                    continue;
+                }
+                let row = &blk.b[r * n..(r + 1) * n];
+                for k in 0..n {
+                    dst[k] -= c * row[k];
+                }
+            }
+            let inv_alpha = 1.0 / blk.alpha;
+            for v in dst {
+                *v *= inv_alpha;
+            }
+        }
+    }
+
+    /// (m+1) * n sketch floats per block (Table 1's m d1 d2 class).
+    fn memory_floats(&self) -> usize {
+        self.blocks.iter().map(|b| (self.m + 1) * b.n).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn matches_full_ons_on_low_rank_stream() {
+        // When gradients live in a rank <= m subspace, the FD sketch is
+        // exact (zero shrinkage), so rfdSON's direction must agree with
+        // the full-matrix Online Newton step using the same damping.
+        use crate::optim::ons::FullOns;
+        let n = 20;
+        let m = 2;
+        let alpha0 = 0.5f32;
+        let mut rng = Rng::new(3);
+        let v1 = rng.normal_vec(n);
+        let v2 = rng.normal_vec(n);
+        let mut rfd = RfdSon::new(n, vec![(0, n)], m, alpha0);
+        let mut ons = FullOns::new(n, alpha0);
+        let mut u_r = vec![0.0; n];
+        let mut u_o = vec![0.0; n];
+        for t in 0..12 {
+            let (a, b) = (rng.normal_f32(), rng.normal_f32());
+            let g: Vec<f32> = v1
+                .iter()
+                .zip(&v2)
+                .map(|(&p, &q)| a * p + b * q)
+                .collect();
+            rfd.compute(&g, &mut u_r);
+            ons.compute(&g, &mut u_o);
+            crate::util::prop::assert_close(&u_r, &u_o, 5e-2, 1e-4,
+                &format!("rfd vs ons at t={t}"));
+        }
+        // and the accumulated shrinkage stayed ~0 (sketch was exact)
+        assert!(rfd.blocks[0].alpha < alpha0 * 1.5);
+    }
+
+    #[test]
+    fn preconditions_low_rank_curvature() {
+        // Gradients confined to a 2-dim subspace: the rank-2 sketch
+        // captures the curvature and rfdSON makes ONS-like (1/t-decaying)
+        // progress while staying finite.
+        let n = 30;
+        let mut rng = Rng::new(3);
+        let v1 = rng.normal_vec(n);
+        let v2 = rng.normal_vec(n);
+        let loss_grad = |x: &[f32]| -> (f32, Vec<f32>) {
+            let a = crate::linalg::dot(x, &v1);
+            let b = crate::linalg::dot(x, &v2);
+            let f = 10.0 * a * a + 0.5 * b * b;
+            let g: Vec<f32> = v1
+                .iter()
+                .zip(&v2)
+                .map(|(&p, &q)| 20.0 * a * p + b * q)
+                .collect();
+            (f, g)
+        };
+        let mut rfd = RfdSon::new(n, vec![(0, n)], 2, 1.0);
+        let mut x = rng.normal_vec(n);
+        let (f0, _) = loss_grad(&x);
+        let mut u = vec![0.0; n];
+        for _ in 0..200 {
+            let (_, g) = loss_grad(&x);
+            rfd.compute(&g, &mut u);
+            for (xi, &ui) in x.iter_mut().zip(&u) {
+                *xi -= 0.5 * ui;
+            }
+        }
+        let (f1, _) = loss_grad(&x);
+        // ONS-family steps decay harmonically on a deterministic stream:
+        // expect steady (not geometric) progress; the equivalence test
+        // above is the sharp correctness check.
+        assert!(f1 < 0.97 * f0, "{f0} -> {f1}");
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn sketch_memory_matches_table1() {
+        let rfd = RfdSon::new(100, vec![(0, 100)], 4, 1.0);
+        assert_eq!(rfd.memory_floats(), 500);
+    }
+
+    #[test]
+    fn sketch_captures_repeated_direction() {
+        let n = 10;
+        let mut rfd = RfdSon::new(n, vec![(0, n)], 1, 1e-3);
+        let mut g = vec![0.0f32; n];
+        g[0] = 1.0;
+        let mut u = vec![0.0f32; n];
+        for _ in 0..10 {
+            rfd.compute(&g, &mut u);
+        }
+        // after repeated e0 gradients, H ~ c e0 e0^T + alpha I with large c:
+        // the preconditioned step along e0 must be much smaller than along e1
+        let mut g1 = vec![0.0f32; n];
+        g1[1] = 1.0;
+        let mut u1 = vec![0.0f32; n];
+        rfd.compute(&g1, &mut u1);
+        assert!(u[0].abs() < u1[1].abs(), "{} vs {}", u[0], u1[1]);
+    }
+}

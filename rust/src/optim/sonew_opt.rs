@@ -1,0 +1,220 @@
+//! SONew as a `Direction`: per-tensor diagonal / tridiagonal / banded
+//! preconditioning of the flat gradient (Algorithm 1 with the practical
+//! EMA statistics; see `crate::sonew` for the kernels).
+
+use crate::sonew::{BandedState, LambdaMode, TridiagState};
+use crate::util::Precision;
+
+use super::{Blocks, Direction, HyperParams};
+
+enum State {
+    Diag(TridiagState),
+    Tridiag(TridiagState),
+    Banded(BandedState),
+}
+
+pub struct SonewDir {
+    state: State,
+    mode: LambdaMode,
+    eps: f32,
+    gamma: f32,
+    precision: Precision,
+    label: String,
+}
+
+fn tensor_ids(n: usize, blocks: &Blocks) -> Vec<f32> {
+    let mut ids = vec![0.0f32; n];
+    for (i, &(off, len)) in blocks.iter().enumerate() {
+        for v in &mut ids[off..off + len] {
+            *v = i as f32;
+        }
+    }
+    ids
+}
+
+impl SonewDir {
+    pub fn diag(n: usize, _blocks: &Blocks, hp: &HyperParams) -> Self {
+        Self {
+            state: State::Diag(TridiagState::new(n, None)),
+            mode: LambdaMode::Ema(hp.beta2),
+            eps: hp.eps,
+            gamma: hp.gamma,
+            precision: hp.precision,
+            label: "diag-sonew".into(),
+        }
+    }
+
+    pub fn tridiag(n: usize, blocks: &Blocks, hp: &HyperParams) -> Self {
+        let ids = tensor_ids(n, blocks);
+        Self {
+            state: State::Tridiag(TridiagState::new(n, Some(&ids))),
+            mode: LambdaMode::Ema(hp.beta2),
+            eps: hp.eps,
+            gamma: hp.gamma,
+            precision: hp.precision,
+            label: "tridiag-sonew".into(),
+        }
+    }
+
+    pub fn banded(n: usize, blocks: &Blocks, hp: &HyperParams) -> Self {
+        let ids = tensor_ids(n, blocks);
+        Self {
+            state: State::Banded(BandedState::new(n, hp.band.max(1), Some(&ids))),
+            mode: LambdaMode::Ema(hp.beta2),
+            eps: hp.eps,
+            gamma: hp.gamma,
+            precision: hp.precision,
+            label: format!("band-{}-sonew", hp.band.max(1)),
+        }
+    }
+
+    /// Theory-mode constructor (Thm 3.3 lambda_t schedule) for the regret
+    /// experiments.
+    pub fn tridiag_sqrt_t(n: usize, g_inf: f32, eps: f32) -> Self {
+        Self {
+            state: State::Tridiag(TridiagState::new(n, None)),
+            mode: LambdaMode::SqrtT { g_inf },
+            eps,
+            gamma: 0.0,
+            precision: Precision::F32,
+            label: "tridiag-sonew-sqrt-t".into(),
+        }
+    }
+
+    /// Edges dropped by Algorithm 3 on the last step (diagnostic).
+    pub fn last_dropped(&self) -> usize {
+        match &self.state {
+            State::Diag(_) => 0,
+            State::Tridiag(s) => s.last_dropped,
+            State::Banded(s) => s.last_dropped,
+        }
+    }
+}
+
+impl Direction for SonewDir {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn compute(&mut self, g: &[f32], u: &mut [f32]) {
+        match &mut self.state {
+            State::Diag(s) => s.step_diag(g, u, self.mode, self.eps, self.precision),
+            State::Tridiag(s) => {
+                s.step(g, u, self.mode, self.eps, self.gamma, self.precision)
+            }
+            State::Banded(s) => {
+                s.step(g, u, self.mode, self.eps, self.gamma, self.precision)
+            }
+        }
+    }
+
+    fn memory_floats(&self) -> usize {
+        match &self.state {
+            // diag-SONew stores only hd
+            State::Diag(s) => s.len(),
+            State::Tridiag(s) => s.memory_floats(),
+            State::Banded(s) => s.memory_floats(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_matches_table1() {
+        let hp = HyperParams { band: 4, ..Default::default() };
+        let blocks = vec![(0usize, 1000usize)];
+        assert_eq!(SonewDir::diag(1000, &blocks, &hp).memory_floats(), 1000);
+        assert_eq!(SonewDir::tridiag(1000, &blocks, &hp).memory_floats(), 2000);
+        assert_eq!(SonewDir::banded(1000, &blocks, &hp).memory_floats(), 5000);
+    }
+
+    /// Measure preconditioner quality directly: install H = P_G(Sigma)
+    /// exactly (LambdaMode::Ema(1.0) leaves statistics untouched) and
+    /// compare the preconditioned direction X g against the true Newton
+    /// direction Sigma^{-1} g, averaged over random probes. Wider sparsity
+    /// patterns solve (11) over a superset, so alignment improves — the
+    /// paper's core qualitative claim. (Deterministic rank-1 gradient
+    /// streams are the Lemma A.13 degenerate case, tested separately.)
+    fn newton_cosine(band: usize, sigma_band: usize, n: usize, seed: u64) -> f32 {
+        use crate::linalg::{spd_solve, Mat};
+        use crate::sonew::{BandedState, LambdaMode, TridiagState};
+        use crate::util::Precision;
+        let mut sigma = Mat::zeros(n, n);
+        for i in 0..n {
+            *sigma.at_mut(i, i) = 2.0;
+            for k in 1..=sigma_band {
+                if i + k < n {
+                    *sigma.at_mut(i, i + k) = 0.8 / k as f32;
+                    *sigma.at_mut(i + k, i) = 0.8 / k as f32;
+                }
+            }
+        }
+        let mut rng = crate::util::Rng::new(seed);
+        let mut acc = 0.0f32;
+        let probes = 40;
+        for _ in 0..probes {
+            let g = rng.normal_vec(n);
+            let newton = spd_solve(&sigma, &g).unwrap();
+            let mut u = vec![0.0f32; n];
+            if band == 0 {
+                let mut st = TridiagState::new(n, None);
+                for j in 0..n {
+                    st.hd[j] = sigma.at(j, j);
+                }
+                st.step_diag(&g, &mut u, LambdaMode::Ema(1.0), 0.0, Precision::F32);
+            } else {
+                let mut st = BandedState::new(n, band, None);
+                for k in 0..=band {
+                    for j in 0..n {
+                        if j + k < n {
+                            st.diags[k][j] = sigma.at(j + k, j);
+                        }
+                    }
+                }
+                st.step(&g, &mut u, LambdaMode::Ema(1.0), 0.0, 0.0, Precision::F32);
+            }
+            acc += crate::linalg::dot(&u, &newton)
+                / (crate::linalg::norm2(&u) * crate::linalg::norm2(&newton));
+        }
+        acc / probes as f32
+    }
+
+    #[test]
+    fn tridiag_closer_to_newton_than_diag() {
+        let n = 40;
+        let c_diag = newton_cosine(0, 4, n, 7);
+        let c_tri = newton_cosine(1, 4, n, 7);
+        assert!(
+            c_tri > c_diag + 0.01,
+            "tridiag cos {c_tri} should beat diag cos {c_diag}"
+        );
+        assert!(c_tri > 0.95, "{c_tri}");
+    }
+
+    #[test]
+    fn band_size_ordering_toward_newton() {
+        // Table 3's expectation: wider bands capture more correlation.
+        let n = 40;
+        let c1 = newton_cosine(1, 4, n, 9);
+        let c4 = newton_cosine(4, 4, n, 9);
+        assert!(
+            c4 > c1 - 1e-4,
+            "band-4 cos {c4} should not lose to band-1 cos {c1}"
+        );
+    }
+
+    #[test]
+    fn last_dropped_surfaces_algorithm3() {
+        let n = 16;
+        let hp = HyperParams { gamma: 1e-2, eps: 0.0, beta2: 0.5, ..Default::default() };
+        let mut d = SonewDir::tridiag(n, &vec![(0, n)], &hp);
+        let g = vec![1.0f32; n]; // perfectly correlated adjacent entries
+        let mut u = vec![0.0f32; n];
+        d.compute(&g, &mut u);
+        assert!(d.last_dropped() > 0);
+        assert!(u.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,210 @@
+//! PJRT execution engine: loads the AOT HLO-text artifacts and runs them
+//! from the Rust hot path. This is the only place the `xla` crate is
+//! touched; the rest of the coordinator sees plain `Vec<f32>` buffers.
+//!
+//! Artifacts are compiled lazily on first use and cached for the lifetime
+//! of the engine (compilation of the larger grads programs takes O(100ms);
+//! a training run executes the same program thousands of times).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, DType, Manifest};
+
+/// A host-side tensor handed to / received from an artifact.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            HostTensor::I32(_) => bail!("expected f32 tensor, got i32"),
+        }
+    }
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            HostTensor::I32(_) => bail!("expected f32 tensor, got i32"),
+        }
+    }
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Loads `artifacts/` once; executes programs by name.
+pub struct Engine {
+    dir: PathBuf,
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    // name -> compiled executable (lazy). Mutex so &self can exec —
+    // the coordinator shares one Engine across the run.
+    exes: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Engine {
+    /// Open the artifacts directory (must contain `manifest.txt`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self { dir, manifest, client, exes: Mutex::new(HashMap::new()) })
+    }
+
+    /// Default artifacts location relative to the repo root, overridable
+    /// with `SONEW_ARTIFACTS`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("SONEW_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// True if an artifacts directory with a manifest exists (tests use
+    /// this to skip gracefully before `make artifacts`).
+    pub fn available(dir: impl AsRef<Path>) -> bool {
+        dir.as_ref().join("manifest.txt").exists()
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest.artifact(name)
+    }
+
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        let mut exes = self.exes.lock().unwrap();
+        if exes.contains_key(name) {
+            return Ok(());
+        }
+        let spec = self.manifest.artifact(name)?;
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not utf-8")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e}"))?;
+        exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` with positional inputs; returns the outputs
+    /// in manifest order. Shapes/dtypes are validated against the manifest
+    /// before anything touches PJRT.
+    pub fn exec(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec = self.manifest.artifact(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (port, t) in spec.inputs.iter().zip(inputs) {
+            if t.len() != port.elements() {
+                bail!(
+                    "{name}: input {} expects {} elements ({:?}), got {}",
+                    port.name,
+                    port.elements(),
+                    port.dims,
+                    t.len()
+                );
+            }
+            let dims: Vec<i64> = port.dims.iter().map(|&d| d as i64).collect();
+            let lit = match (t, port.dtype) {
+                (HostTensor::F32(v), DType::F32) => xla::Literal::vec1(v),
+                (HostTensor::I32(v), DType::I32) => xla::Literal::vec1(v),
+                _ => bail!("{name}: input {} dtype mismatch", port.name),
+            };
+            let lit = if dims.is_empty() {
+                // rank-0: reshape a 1-element vec to scalar
+                lit.reshape(&[]).map_err(|e| anyhow::anyhow!("{e}"))?
+            } else if dims.len() == 1 {
+                lit
+            } else {
+                lit.reshape(&dims).map_err(|e| anyhow::anyhow!("{e}"))?
+            };
+            literals.push(lit);
+        }
+
+        self.ensure_compiled(name)?;
+        let exes = self.exes.lock().unwrap();
+        let exe = exes.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
+        drop(literals);
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {name} result: {e}"))?;
+        // aot.py lowers with return_tuple=True: output is always a tuple.
+        let parts = out
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {name}: {e}"))?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "{name}: manifest promises {} outputs, program returned {}",
+                spec.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (port, lit) in spec.outputs.iter().zip(parts) {
+            let t = match port.dtype {
+                DType::F32 => HostTensor::F32(
+                    lit.to_vec::<f32>()
+                        .map_err(|e| anyhow::anyhow!("{name}/{}: {e}", port.name))?,
+                ),
+                DType::I32 => HostTensor::I32(
+                    lit.to_vec::<i32>()
+                        .map_err(|e| anyhow::anyhow!("{name}/{}: {e}", port.name))?,
+                ),
+            };
+            if t.len() != port.elements() {
+                bail!(
+                    "{name}: output {} expected {} elements, got {}",
+                    port.name,
+                    port.elements(),
+                    t.len()
+                );
+            }
+            outs.push(t);
+        }
+        Ok(outs)
+    }
+
+    /// Convenience: execute a grads artifact `(params, batch...) ->
+    /// (loss, grads)`.
+    pub fn loss_and_grad(
+        &self,
+        name: &str,
+        params: &[f32],
+        batch: Vec<HostTensor>,
+    ) -> Result<(f32, Vec<f32>)> {
+        let mut inputs = vec![HostTensor::F32(params.to_vec())];
+        inputs.extend(batch);
+        let mut out = self.exec(name, &inputs)?;
+        if out.len() != 2 {
+            bail!("{name}: expected (loss, grads)");
+        }
+        let grads = out.pop().unwrap().into_f32()?;
+        let loss = out.pop().unwrap().into_f32()?;
+        Ok((loss[0], grads))
+    }
+}

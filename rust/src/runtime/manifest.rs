@@ -1,0 +1,320 @@
+//! Parser for `artifacts/manifest.txt`, the index emitted by
+//! `python/compile/aot.py` describing every AOT artifact (inputs, outputs,
+//! metadata) and every model's flat-parameter layout.
+//!
+//! The format is deliberately a trivial line-based text format (no serde in
+//! the offline dependency closure):
+//!
+//! ```text
+//! artifact ae_grads_b256
+//!   file ae_grads_b256.hlo.txt
+//!   in params f32 2837314
+//!   in x f32 256 784
+//!   out loss f32
+//!   out grads f32 2837314
+//!   meta model ae
+//! end
+//! layout ae
+//!   tensor layer0.w 0 784 1000
+//! end
+//! ```
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Element type of an artifact input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unknown dtype {other:?} in manifest"),
+        }
+    }
+}
+
+/// One named, shaped input or output of an artifact.
+#[derive(Debug, Clone)]
+pub struct Port {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl Port {
+    pub fn elements(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One AOT-compiled program.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<Port>,
+    pub outputs: Vec<Port>,
+    pub meta: HashMap<String, String>,
+}
+
+impl ArtifactSpec {
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.meta.get(key).and_then(|v| v.parse().ok())
+    }
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.parse().ok())
+    }
+}
+
+/// One tensor inside a flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+    /// (d1, d2) view used by matrix-shaped preconditioners (Shampoo, KFAC):
+    /// vectors are treated as d x 1.
+    pub fn matrix_dims(&self) -> (usize, usize) {
+        match self.shape.len() {
+            0 => (1, 1),
+            1 => (self.shape[0], 1),
+            _ => {
+                let d2 = *self.shape.last().unwrap();
+                (self.size() / d2, d2)
+            }
+        }
+    }
+}
+
+/// A model's flat-parameter layout: ordered tensors with offsets.
+#[derive(Debug, Clone, Default)]
+pub struct Layout {
+    pub name: String,
+    pub tensors: Vec<TensorSpec>,
+}
+
+impl Layout {
+    pub fn total(&self) -> usize {
+        self.tensors
+            .last()
+            .map(|t| t.offset + t.size())
+            .unwrap_or(0)
+    }
+
+    /// Per-element tensor-id vector consumed by the SONew kernels
+    /// (same contract as `Layout.boundary_ids` in python/compile/model.py).
+    pub fn tensor_ids(&self) -> Vec<f32> {
+        let mut ids = vec![0.0f32; self.total()];
+        for (i, t) in self.tensors.iter().enumerate() {
+            for v in &mut ids[t.offset..t.offset + t.size()] {
+                *v = i as f32;
+            }
+        }
+        ids
+    }
+}
+
+/// The whole parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+    pub layouts: Vec<Layout>,
+}
+
+impl Manifest {
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn layout(&self, name: &str) -> Result<&Layout> {
+        self.layouts
+            .iter()
+            .find(|l| l.name == name)
+            .ok_or_else(|| anyhow!("layout {name:?} not in manifest"))
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut man = Manifest::default();
+        let mut cur_art: Option<ArtifactSpec> = None;
+        let mut cur_lay: Option<Layout> = None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let kw = it.next().unwrap();
+            let rest: Vec<&str> = it.collect();
+            let err = |m: &str| anyhow!("manifest line {}: {m}", lineno + 1);
+            match kw {
+                "artifact" => {
+                    cur_art = Some(ArtifactSpec {
+                        name: rest.first().ok_or_else(|| err("name"))?.to_string(),
+                        file: String::new(),
+                        inputs: vec![],
+                        outputs: vec![],
+                        meta: HashMap::new(),
+                    });
+                }
+                "layout" => {
+                    cur_lay = Some(Layout {
+                        name: rest.first().ok_or_else(|| err("name"))?.to_string(),
+                        tensors: vec![],
+                    });
+                }
+                "file" => {
+                    cur_art
+                        .as_mut()
+                        .ok_or_else(|| err("file outside artifact"))?
+                        .file = rest.first().ok_or_else(|| err("fname"))?.to_string();
+                }
+                "in" | "out" => {
+                    let art = cur_art
+                        .as_mut()
+                        .ok_or_else(|| err("port outside artifact"))?;
+                    let port = Port {
+                        name: rest.first().ok_or_else(|| err("port name"))?.to_string(),
+                        dtype: DType::parse(rest.get(1).ok_or_else(|| err("dtype"))?)?,
+                        dims: rest[2..]
+                            .iter()
+                            .map(|d| d.parse::<usize>().map_err(|e| anyhow!("{e}")))
+                            .collect::<Result<_>>()?,
+                    };
+                    if kw == "in" {
+                        art.inputs.push(port);
+                    } else {
+                        art.outputs.push(port);
+                    }
+                }
+                "meta" => {
+                    let art = cur_art
+                        .as_mut()
+                        .ok_or_else(|| err("meta outside artifact"))?;
+                    art.meta.insert(
+                        rest.first().ok_or_else(|| err("meta key"))?.to_string(),
+                        rest.get(1).copied().unwrap_or("").to_string(),
+                    );
+                }
+                "tensor" => {
+                    let lay = cur_lay
+                        .as_mut()
+                        .ok_or_else(|| err("tensor outside layout"))?;
+                    lay.tensors.push(TensorSpec {
+                        name: rest.first().ok_or_else(|| err("tensor name"))?.to_string(),
+                        offset: rest
+                            .get(1)
+                            .ok_or_else(|| err("offset"))?
+                            .parse()
+                            .map_err(|e| anyhow!("bad offset: {e}"))?,
+                        shape: rest[2..]
+                            .iter()
+                            .map(|d| d.parse::<usize>().map_err(|e| anyhow!("{e}")))
+                            .collect::<Result<_>>()?,
+                    });
+                }
+                "end" => {
+                    if let Some(a) = cur_art.take() {
+                        if a.file.is_empty() {
+                            bail!("artifact {} missing file", a.name);
+                        }
+                        man.artifacts.push(a);
+                    } else if let Some(l) = cur_lay.take() {
+                        man.layouts.push(l);
+                    } else {
+                        bail!("manifest line {}: stray end", lineno + 1);
+                    }
+                }
+                other => bail!("manifest line {}: unknown keyword {other:?}", lineno + 1),
+            }
+        }
+        if cur_art.is_some() || cur_lay.is_some() {
+            bail!("manifest: unterminated block");
+        }
+        Ok(man)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+artifact toy
+  file toy.hlo.txt
+  in params f32 10
+  in x f32 2 5
+  out loss f32
+  meta model toy
+end
+layout toy
+  tensor w 0 2 5
+end
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.artifact("toy").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[1].dims, vec![2, 5]);
+        assert_eq!(a.inputs[1].elements(), 10);
+        assert_eq!(a.outputs[0].dims, Vec::<usize>::new());
+        assert_eq!(a.meta["model"], "toy");
+        let l = m.layout("toy").unwrap();
+        assert_eq!(l.total(), 10);
+        assert_eq!(l.tensors[0].matrix_dims(), (2, 5));
+    }
+
+    #[test]
+    fn tensor_ids_mark_blocks() {
+        let m = Manifest::parse(
+            "layout l\n  tensor a 0 3\n  tensor b 3 2 2\nend\n",
+        )
+        .unwrap();
+        let l = m.layout("l").unwrap();
+        assert_eq!(l.total(), 7);
+        assert_eq!(l.tensor_ids(), vec![0., 0., 0., 1., 1., 1., 1.]);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("artifact x\nend\n").is_err()); // no file
+        assert!(Manifest::parse("bogus line\n").is_err());
+        assert!(Manifest::parse("artifact x\n file f\n").is_err()); // no end
+    }
+
+    #[test]
+    fn matrix_dims_conventions() {
+        let t = TensorSpec { name: "v".into(), offset: 0, shape: vec![5] };
+        assert_eq!(t.matrix_dims(), (5, 1));
+        let t3 = TensorSpec { name: "t".into(), offset: 0, shape: vec![2, 3, 4] };
+        assert_eq!(t3.matrix_dims(), (6, 4));
+        let s = TensorSpec { name: "s".into(), offset: 0, shape: vec![] };
+        assert_eq!(s.matrix_dims(), (1, 1));
+    }
+}

@@ -1,0 +1,13 @@
+//! Runtime layer: PJRT client wrapper that loads and executes the AOT
+//! HLO-text artifacts produced by `python/compile/aot.py`.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//! protos with 64-bit instruction ids that the pinned xla_extension 0.5.1
+//! rejects; `HloModuleProto::from_text_file` reassigns ids and round-trips
+//! cleanly.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, HostTensor};
+pub use manifest::{ArtifactSpec, DType, Layout, Manifest, Port, TensorSpec};

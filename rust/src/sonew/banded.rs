@@ -1,0 +1,402 @@
+//! Banded-b SONew: Theorem 3.2 / Algorithm 2 — for every row j solve the
+//! b x b SPD system `H_{I_j I_j} L_{I_j j} = -H_{I_j j}` and form
+//! `D_jj = 1/(H_jj + H_{I_j j}^T L_{I_j j})`, then apply `u = L D L^T g`
+//! in a single forward scan with a ring buffer of the last `b` columns.
+//! O((b^3)(n-b+1)) flops, O(b n) memory — linear in n as the paper claims.
+
+use crate::linalg::chol::{cholesky_in_place, cholesky_solve_in_place};
+use crate::util::Precision;
+
+use super::LambdaMode;
+
+/// Banded statistics: `diags[k][j] = H[j+k][j]`, k = 0..=b.
+#[derive(Debug, Clone)]
+pub struct BandedState {
+    pub b: usize,
+    /// (b+1) stacked diagonals, each of length n
+    pub diags: Vec<Vec<f32>>,
+    /// edge_masks[k-1][j]: keep H[j+k][j]? (k = 1..=b)
+    pub edge: Vec<Vec<bool>>,
+    pub last_dropped: usize,
+    // preallocated per-step scratch (ring buffers + solve workspace)
+    xs_ring: Vec<f32>,
+    s_ring: Vec<f32>,
+    hii: Vec<f32>,
+    rhs: Vec<f32>,
+    x_col: Vec<f32>,
+    t: u64,
+}
+
+impl BandedState {
+    pub fn new(n: usize, b: usize, tensor_ids: Option<&[f32]>) -> Self {
+        assert!(b >= 1, "use TridiagState::step_diag for b = 0");
+        let edge = (1..=b)
+            .map(|k| match tensor_ids {
+                Some(ids) => super::edge_mask(ids, k),
+                None => (0..n).map(|j| j + k < n).collect(),
+            })
+            .collect();
+        Self {
+            b,
+            diags: vec![vec![0.0; n]; b + 1],
+            edge,
+            last_dropped: 0,
+            xs_ring: vec![0.0; b * b],
+            s_ring: vec![0.0; b],
+            hii: vec![0.0; b * b],
+            rhs: vec![0.0; b],
+            x_col: vec![0.0; b],
+            t: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.diags[0].len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.diags[0].is_empty()
+    }
+
+    /// Paper Table 1: band-b SONew stores (b+1) * n statistics floats.
+    pub fn memory_floats(&self) -> usize {
+        (self.b + 1) * self.len()
+    }
+
+    /// One fused banded SONew step (statistics + solve + direction).
+    pub fn step(
+        &mut self,
+        g: &[f32],
+        u: &mut [f32],
+        mode: LambdaMode,
+        eps: f32,
+        gamma: f32,
+        precision: Precision,
+    ) {
+        let n = self.len();
+        let b = self.b;
+        assert_eq!(g.len(), n);
+        assert_eq!(u.len(), n);
+        if n == 0 {
+            return;
+        }
+        self.t += 1;
+        let (decay, inno) = mode.coeffs(self.t);
+
+        // --- statistics update (eq. 10) ---
+        for j in 0..n {
+            let gj = g[j];
+            self.diags[0][j] = precision.quantize(decay * self.diags[0][j] + inno * gj * gj);
+        }
+        for k in 1..=b {
+            let (head, tail) = (&mut self.diags[k], &self.edge[k - 1]);
+            for j in 0..n {
+                head[j] = if tail[j] {
+                    precision.quantize(decay * head[j] + inno * g[j] * g[j + k])
+                } else {
+                    0.0
+                };
+            }
+        }
+
+        // --- per-row solve + streaming direction ---
+        // Perf (EXPERIMENTS.md §Perf): all scratch is preallocated and
+        // reused — zero allocations per row; the b x b Cholesky runs on a
+        // flat stack buffer.
+        let mut dropped = 0usize;
+        if self.xs_ring.len() != b * b {
+            self.xs_ring = vec![0.0f32; b * b];
+            self.s_ring = vec![0.0f32; b];
+            self.hii = vec![0.0f32; b * b];
+            self.rhs = vec![0.0f32; b];
+            self.x_col = vec![0.0f32; b];
+        }
+        let xs_ring = &mut self.xs_ring;
+        let s_ring = &mut self.s_ring;
+        let hii = &mut self.hii;
+        let rhs = &mut self.rhs;
+        let x_col = &mut self.x_col;
+        xs_ring.fill(0.0);
+        s_ring.fill(0.0);
+
+        for j in 0..n {
+            // active band width at row j (clipped at the vector end; tensor
+            // boundaries are handled by masked-zero entries making the
+            // corresponding solve components vanish)
+            let w = b.min(n - 1 - j);
+            let a_jj = self.diags[0][j] + eps;
+            x_col.fill(0.0);
+            let mut d_j;
+            if w > 0 {
+                // assemble H_{I_j I_j} (damped) and rhs = H_{I_j j}
+                for p in 0..w {
+                    for q in 0..w {
+                        let k = p.abs_diff(q);
+                        let row = j + 1 + p.min(q);
+                        let v = if k == 0 {
+                            self.diags[0][row] + eps
+                        } else {
+                            self.diags[k][row]
+                        };
+                        hii[p * w + q] = v;
+                    }
+                    rhs[p] = -self.diags[p + 1][j];
+                }
+                let ok = cholesky_in_place(&mut hii[..w * w], w);
+                if ok {
+                    cholesky_solve_in_place(&hii[..w * w], w, &mut rhs[..w]);
+                    // rhs now holds x = -H_II^{-1} H_Ij;
+                    // sv = H_jj + H_Ij^T x  (eq. 14)
+                    let mut sv = a_jj;
+                    for p in 0..w {
+                        sv += self.diags[p + 1][j] * rhs[p];
+                    }
+                    if sv > gamma {
+                        d_j = 1.0 / sv;
+                        x_col[..w].copy_from_slice(&rhs[..w]);
+                    } else {
+                        // Algorithm 3: drop row j's forward edges
+                        dropped += 1;
+                        d_j = 1.0 / a_jj;
+                    }
+                } else {
+                    dropped += 1;
+                    d_j = 1.0 / a_jj;
+                }
+            } else {
+                d_j = 1.0 / a_jj;
+            }
+            if !d_j.is_finite() {
+                d_j = 0.0;
+            }
+
+            // t_j = g_j + sum_p x_col[p] g_{j+1+p};  s_j = d_j t_j
+            let mut t_j = g[j];
+            for p in 0..w {
+                t_j += x_col[p] * g[j + 1 + p];
+            }
+            let s_j = d_j * t_j;
+
+            // u_j = s_j + sum_{m=1..b, j>=m} X[j-m][m-1] * s_{j-m}
+            let mut u_j = s_j;
+            for m in 1..=b.min(j) {
+                let slot = (j - m) % b;
+                u_j += xs_ring[slot * b + m - 1] * s_ring[slot];
+            }
+            u[j] = precision.quantize(u_j);
+
+            let slot = j % b;
+            xs_ring[slot * b..(slot + 1) * b].copy_from_slice(x_col);
+            s_ring[slot] = s_j;
+        }
+        self.last_dropped = dropped;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{assert_close, check};
+    use crate::util::{Precision, Rng};
+
+    /// Dense oracle: build H, solve every row with dense LA, dense matvec.
+    fn oracle(diags: &[Vec<f32>], g: &[f32], eps: f32, gamma: f32) -> Vec<f32> {
+        let n = g.len();
+        let b = diags.len() - 1;
+        // dense damped H
+        let mut h = vec![0.0f64; n * n];
+        for j in 0..n {
+            h[j * n + j] = (diags[0][j] + eps) as f64;
+            for k in 1..=b {
+                if j + k < n && diags[k][j] != 0.0 {
+                    h[(j + k) * n + j] = diags[k][j] as f64;
+                    h[j * n + (j + k)] = diags[k][j] as f64;
+                }
+            }
+        }
+        // explicit per-row solves (Gaussian elimination, f64)
+        let mut lmat = vec![0.0f64; n * n];
+        let mut d = vec![0.0f64; n];
+        for j in 0..n {
+            lmat[j * n + j] = 1.0;
+            let hi = (j + b).min(n - 1);
+            let w = hi - j;
+            if w == 0 {
+                d[j] = 1.0 / h[j * n + j];
+                continue;
+            }
+            // solve A x = -r with A = H[I,I], r = H[I,j]
+            let mut a = vec![0.0f64; w * w];
+            let mut r = vec![0.0f64; w];
+            for p in 0..w {
+                for q in 0..w {
+                    a[p * w + q] = h[(j + 1 + p) * n + (j + 1 + q)];
+                }
+                r[p] = -h[(j + 1 + p) * n + j];
+            }
+            // gaussian elimination with partial pivot
+            let mut x = r.clone();
+            let mut aa = a.clone();
+            let mut ok = true;
+            for c in 0..w {
+                let mut piv = c;
+                for rr in c + 1..w {
+                    if aa[rr * w + c].abs() > aa[piv * w + c].abs() {
+                        piv = rr;
+                    }
+                }
+                if aa[piv * w + c].abs() < 1e-300 {
+                    ok = false;
+                    break;
+                }
+                if piv != c {
+                    for cc in 0..w {
+                        aa.swap(c * w + cc, piv * w + cc);
+                    }
+                    x.swap(c, piv);
+                }
+                for rr in c + 1..w {
+                    let f = aa[rr * w + c] / aa[c * w + c];
+                    for cc in c..w {
+                        aa[rr * w + cc] -= f * aa[c * w + cc];
+                    }
+                    x[rr] -= f * x[c];
+                }
+            }
+            if ok {
+                for c in (0..w).rev() {
+                    for cc in c + 1..w {
+                        x[c] -= aa[c * w + cc] * x[cc];
+                    }
+                    x[c] /= aa[c * w + c];
+                }
+                let mut s = h[j * n + j];
+                for p in 0..w {
+                    s += h[(j + 1 + p) * n + j] * x[p];
+                }
+                if ok && s > gamma as f64 {
+                    d[j] = 1.0 / s;
+                    for p in 0..w {
+                        lmat[(j + 1 + p) * n + j] = x[p];
+                    }
+                    continue;
+                }
+            }
+            d[j] = 1.0 / h[j * n + j];
+        }
+        // u = L D L^T g
+        let mut t = vec![0.0f64; n];
+        for j in 0..n {
+            let mut acc = g[j] as f64;
+            for i in j + 1..n {
+                acc += lmat[i * n + j] * g[i] as f64;
+            }
+            t[j] = acc * d[j];
+        }
+        let mut u = vec![0.0f32; n];
+        for i in 0..n {
+            let mut acc = t[i];
+            for j in 0..i {
+                acc += lmat[i * n + j] * t[j];
+            }
+            u[i] = acc as f32;
+        }
+        u
+    }
+
+    #[test]
+    fn step_matches_dense_oracle() {
+        check("banded step == dense oracle", 32, |rng| {
+            let n = 2 + rng.below(80);
+            let b = 1 + rng.below(5.min(n - 1).max(1));
+            let mut st = BandedState::new(n, b, None);
+            let mut u = vec![0.0; n];
+            // enough warmup steps that H is full-rank within the band and
+            // the f32 solve is well-conditioned against the f64 oracle
+            for _ in 0..(b + 8) {
+                let g = rng.normal_vec(n);
+                st.step(&g, &mut u, LambdaMode::Ema(0.9), 1e-3, 0.0, Precision::F32);
+            }
+            let g = rng.normal_vec(n);
+            let mut st2 = st.clone();
+            st2.step(&g, &mut u, LambdaMode::Ema(0.9), 1e-3, 0.0, Precision::F32);
+            // manual update then oracle
+            let mut diags = st.diags.clone();
+            for j in 0..n {
+                diags[0][j] = 0.9 * diags[0][j] + 0.1 * g[j] * g[j];
+            }
+            for k in 1..=b {
+                for j in 0..n {
+                    diags[k][j] = if st.edge[k - 1][j] {
+                        0.9 * diags[k][j] + 0.1 * g[j] * g[j + k]
+                    } else {
+                        0.0
+                    };
+                }
+            }
+            let want = oracle(&diags, &g, 1e-3, 0.0);
+            assert_close(&u, &want, 1e-3, 1e-4, "u");
+        });
+    }
+
+    #[test]
+    fn b1_equals_tridiag() {
+        check("banded(b=1) == tridiag", 24, |rng| {
+            let n = 1 + rng.below(100);
+            let mut bs = BandedState::new(n, 1, None);
+            let mut ts = super::super::TridiagState::new(n, None);
+            let mut ub = vec![0.0; n];
+            let mut ut = vec![0.0; n];
+            for _ in 0..5 {
+                let g = rng.normal_vec(n);
+                bs.step(&g, &mut ub, LambdaMode::Ema(0.95), 1e-6, 0.0, Precision::F32);
+                ts.step(&g, &mut ut, LambdaMode::Ema(0.95), 1e-6, 0.0, Precision::F32);
+            }
+            assert_close(&ub, &ut, 1e-4, 1e-5, "b1");
+        });
+    }
+
+    #[test]
+    fn rank_deficient_statistics_stay_finite() {
+        // Lemma A.13 case 2: during the first b steps H is rank-deficient.
+        let n = 40;
+        let b = 4;
+        let mut st = BandedState::new(n, b, None);
+        let mut u = vec![0.0; n];
+        let mut rng = Rng::new(7);
+        for _ in 0..3 {
+            let g = rng.normal_vec(n);
+            st.step(&g, &mut u, LambdaMode::Ema(0.99), 0.0, 1e-10, Precision::F32);
+            assert!(u.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn boundaries_isolate_tensors() {
+        check("banded per-tensor == independent", 12, |rng| {
+            let n1 = 3 + rng.below(30);
+            let n2 = 3 + rng.below(30);
+            let b = 3;
+            let n = n1 + n2;
+            let ids: Vec<f32> = (0..n).map(|j| if j < n1 { 0.0 } else { 1.0 }).collect();
+            let mut joint = BandedState::new(n, b, Some(&ids));
+            let mut pa = BandedState::new(n1, b, None);
+            let mut pb = BandedState::new(n2, b, None);
+            let (mut uj, mut ua, mut ub) = (vec![0.0; n], vec![0.0; n1], vec![0.0; n2]);
+            for _ in 0..4 {
+                let g = rng.normal_vec(n);
+                joint.step(&g, &mut uj, LambdaMode::Ema(0.9), 1e-5, 0.0, Precision::F32);
+                pa.step(&g[..n1], &mut ua, LambdaMode::Ema(0.9), 1e-5, 0.0, Precision::F32);
+                pb.step(&g[n1..], &mut ub, LambdaMode::Ema(0.9), 1e-5, 0.0, Precision::F32);
+            }
+            assert_close(&uj[..n1], &ua, 1e-4, 1e-5, "block a");
+            assert_close(&uj[n1..], &ub, 1e-4, 1e-5, "block b");
+        });
+    }
+
+    #[test]
+    fn memory_matches_table1() {
+        let st = BandedState::new(1000, 4, None);
+        assert_eq!(st.memory_floats(), 5000); // 5 * d1*d2 per Table 1
+    }
+}

@@ -1,0 +1,348 @@
+//! Autoencoder benchmark harness — regenerates Tables 2/3/4/5/7/8 and the
+//! loss-curve CSVs behind Figures 2/4/7 (see DESIGN.md §4).
+//!
+//! Gradients come from the AOT HLO artifact (`ae_grads_b{B}`) when one
+//! matching the requested batch exists, otherwise from the native MLP —
+//! both compute the same model (parity asserted by integration tests).
+
+use crate::coordinator::{train_single, Metrics, Schedule, TrainConfig};
+use crate::coordinator::trainer::{HloAeProvider, NativeAeProvider};
+use crate::data::SynthImages;
+use crate::models::Mlp;
+use crate::optim::{build, HyperParams, MatBlocks, Opt, OptKind};
+use crate::runtime::Engine;
+use crate::util::io::{fmt_f, Csv, MdTable};
+use crate::util::Precision;
+
+/// Kronecker methods on the full AE would need 1000^3 eigensolves; real
+/// Shampoo deployments *block* large tensors (distributed Shampoo's
+/// `block_size`). Any tensor with a dimension above `max_dim` is split
+/// into consecutive (max_dim x max_dim) chunks; the final partial chunk
+/// is zero-padded inside the Kronecker methods.
+pub fn cap_mat_blocks(mats: &MatBlocks, max_dim: usize) -> MatBlocks {
+    let mut out = Vec::new();
+    for &(off, len, d1, d2) in mats {
+        if d1 <= max_dim && d2 <= max_dim {
+            out.push((off, len, d1, d2));
+            continue;
+        }
+        let chunk = max_dim * max_dim;
+        let mut o = off;
+        let mut remaining = len;
+        while remaining > 0 {
+            let l = remaining.min(chunk);
+            let d2c = max_dim.min(l);
+            let d1c = l.div_ceil(d2c);
+            out.push((o, l, d1c, d2c));
+            o += l;
+            remaining -= l;
+        }
+    }
+    out
+}
+
+#[derive(Debug, Clone)]
+pub struct AeBenchConfig {
+    pub steps: u64,
+    pub batch: usize,
+    pub precision: Precision,
+    pub optimizers: Vec<OptKind>,
+    /// Algorithm-3 tolerance (Table 5 toggles this)
+    pub gamma: f32,
+    /// use the full 2.84M-param AE (true) or the small test AE
+    pub full: bool,
+    /// force the native gradient engine even if artifacts exist
+    pub force_native: bool,
+    pub seed: u64,
+    pub verbose: bool,
+    /// extra per-band ablation sizes (Table 3); empty = none
+    pub band_sizes: Vec<usize>,
+}
+
+impl Default for AeBenchConfig {
+    fn default() -> Self {
+        Self {
+            steps: 60,
+            batch: 256,
+            precision: Precision::F32,
+            optimizers: OptKind::all_table2().to_vec(),
+            gamma: 0.0,
+            full: true,
+            force_native: false,
+            seed: 0,
+            verbose: false,
+            band_sizes: vec![],
+        }
+    }
+}
+
+/// Per-optimizer tuned defaults approximating Table 12's optima.
+pub fn tuned_hp(kind: OptKind, precision: Precision, gamma: f32) -> (f32, HyperParams) {
+    let mut hp = HyperParams { precision, gamma, ..Default::default() };
+    let lr = match kind {
+        OptKind::Sgd => 1.17e-2,
+        OptKind::Nesterov => {
+            hp.beta1 = 0.914;
+            5.74e-3
+        }
+        OptKind::Adagrad => {
+            hp.eps = 1e-6;
+            1.82e-2
+        }
+        OptKind::Momentum => {
+            hp.beta1 = 0.9;
+            6.89e-3
+        }
+        OptKind::RmsProp => {
+            hp.beta2 = 0.9;
+            hp.eps = 1e-8;
+            4.61e-4
+        }
+        OptKind::Adam => {
+            hp.beta2 = 0.94;
+            hp.eps = 1.65e-6;
+            3.75e-3
+        }
+        OptKind::AdaFactor => {
+            hp.beta2 = 0.99;
+            hp.eps = 1e-8;
+            3e-3
+        }
+        OptKind::DiagSonew => {
+            hp.beta2 = 0.95;
+            hp.eps = 4.63e-6;
+            1.18e-3
+        }
+        OptKind::Shampoo => {
+            hp.beta2 = 0.95;
+            hp.eps = 1e-6;
+            hp.interval = 20;
+            3.70e-3
+        }
+        OptKind::RfdSon => {
+            hp.rank = 1;
+            hp.eps = 1e-3;
+            3e-3
+        }
+        OptKind::TridiagSonew => {
+            hp.beta2 = 0.96;
+            hp.eps = 1.3e-6;
+            8.60e-3
+        }
+        OptKind::BandSonew => {
+            hp.band = 4;
+            hp.beta2 = 0.95;
+            hp.eps = 1.5e-3;
+            5.53e-3
+        }
+        OptKind::KfacProxy => {
+            hp.eps = 1e-3;
+            hp.interval = 15;
+            3e-3
+        }
+        OptKind::Eva => {
+            hp.eps = 0.03;
+            3e-3
+        }
+        OptKind::FishLegDiag => {
+            hp.eps = 1e-6;
+            1e-3
+        }
+        OptKind::Ons => 1e-2,
+    };
+    (lr, hp)
+}
+
+pub struct AeRow {
+    pub name: String,
+    pub final_loss: f32,
+    pub best_loss: f32,
+    pub wall_s: f64,
+    pub opt_s: f64,
+    pub grad_s: f64,
+    pub state_floats: usize,
+    pub metrics: Metrics,
+}
+
+fn build_opt(kind: OptKind, mlp: &Mlp, lr_hp: &(f32, HyperParams)) -> Opt {
+    let blocks = mlp.blocks();
+    let mats = cap_mat_blocks(&mlp.mat_blocks(), 128);
+    build(kind, mlp.total, &blocks, &mats, &lr_hp.1)
+}
+
+/// Run one optimizer through the AE benchmark.
+pub fn run_one(kind: OptKind, cfg: &AeBenchConfig, band_override: Option<usize>) -> anyhow::Result<AeRow> {
+    let mlp = if cfg.full { Mlp::autoencoder() } else { Mlp::autoencoder_small() };
+    let (lr, mut hp) = tuned_hp(kind, cfg.precision, cfg.gamma);
+    if let Some(b) = band_override {
+        hp.band = b.max(1);
+    }
+    let mut rng = crate::util::Rng::new(cfg.seed);
+    let mut params = mlp.init(&mut rng);
+    let mut opt = build_opt(kind, &mlp, &(lr, hp.clone()));
+    let state_floats = opt.memory_floats();
+    let tc = TrainConfig {
+        steps: cfg.steps,
+        schedule: Schedule::CosineWarmup {
+            lr,
+            warmup: cfg.steps / 20,
+            total: cfg.steps,
+            final_frac: 0.1,
+        },
+        clip: 0.0,
+        log_every: 1,
+        precision: cfg.precision,
+        verbose: cfg.verbose,
+    };
+
+    // prefer the matching HLO artifact (full model only)
+    let art_dir = Engine::default_dir();
+    let artifact = format!("ae_grads_b{}", cfg.batch);
+    let metrics = if cfg.full
+        && !cfg.force_native
+        && Engine::available(&art_dir)
+        && Engine::open(&art_dir)
+            .map(|e| e.manifest.artifact(&artifact).is_ok())
+            .unwrap_or(false)
+    {
+        let engine = Engine::open(&art_dir)?;
+        let provider = HloAeProvider {
+            engine,
+            artifact,
+            images: SynthImages::new(cfg.seed + 1),
+            batch: cfg.batch,
+        };
+        train_single(&mut params, &mut opt, provider, &tc)?
+    } else {
+        let provider = NativeAeProvider {
+            mlp: mlp.clone(),
+            images: SynthImages::new(cfg.seed + 1),
+            batch: cfg.batch,
+        };
+        train_single(&mut params, &mut opt, provider, &tc)?
+    };
+
+    Ok(AeRow {
+        name: if let Some(b) = band_override {
+            format!("band-{b}-sonew")
+        } else {
+            opt.name().to_string()
+        },
+        final_loss: metrics.tail_mean_loss(5).unwrap_or(f32::NAN),
+        best_loss: metrics.best_loss().unwrap_or(f32::NAN),
+        wall_s: metrics.total_wall().as_secs_f64(),
+        opt_s: metrics.opt_time.as_secs_f64(),
+        grad_s: metrics.grad_time.as_secs_f64(),
+        state_floats,
+        metrics,
+    })
+}
+
+/// Run the full benchmark; writes `results/ae_<tag>.{md,csv}`.
+pub fn run(cfg: &AeBenchConfig, tag: &str) -> anyhow::Result<Vec<AeRow>> {
+    let mut rows = Vec::new();
+    let mut table = MdTable::new(&[
+        "optimizer", "train CE loss", "best loss", "time(s)", "opt time(s)",
+        "state floats",
+    ]);
+    let mut curves = Csv::new(&["label", "step", "loss", "lr", "wall_s"]);
+    for &kind in &cfg.optimizers {
+        println!("[ae:{tag}] {kind:?} ...");
+        let row = run_one(kind, cfg, None)?;
+        println!(
+            "[ae:{tag}] {:<18} loss {:>9.3}  wall {:>6.1}s",
+            row.name, row.final_loss, row.wall_s
+        );
+        table.row([
+            row.name.clone(),
+            fmt_f(row.final_loss as f64),
+            fmt_f(row.best_loss as f64),
+            fmt_f(row.wall_s),
+            fmt_f(row.opt_s),
+            row.state_floats.to_string(),
+        ]);
+        for p in &row.metrics.points {
+            curves.row([
+                row.name.clone(),
+                p.step.to_string(),
+                format!("{}", p.loss),
+                format!("{}", p.lr),
+                format!("{:.3}", p.wall_s),
+            ]);
+        }
+        rows.push(row);
+    }
+    // band ablation (Table 3)
+    for &b in &cfg.band_sizes {
+        let kind = if b == 0 { OptKind::DiagSonew } else { OptKind::BandSonew };
+        let row = run_one(kind, cfg, if b == 0 { None } else { Some(b) })?;
+        println!(
+            "[ae:{tag}] band={b:<2} loss {:>9.3}  wall {:>6.1}s",
+            row.final_loss, row.wall_s
+        );
+        table.row([
+            format!("band-{b} (ablation)"),
+            fmt_f(row.final_loss as f64),
+            fmt_f(row.best_loss as f64),
+            fmt_f(row.wall_s),
+            fmt_f(row.opt_s),
+            row.state_floats.to_string(),
+        ]);
+        rows.push(row);
+    }
+    table.write(format!("ae_{tag}.md"))?;
+    curves.write(format!("ae_curves_{tag}.csv"))?;
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cap_blocks_bounds_dims() {
+        let mats = vec![
+            (0usize, 784_000usize, 784usize, 1000usize),
+            (784_000, 1000, 1000, 1),
+        ];
+        let capped = cap_mat_blocks(&mats, 128);
+        // every emitted block respects the cap, covers its span exactly,
+        // and chunks tile the original tensor contiguously
+        let mut cursor = 0usize;
+        let mut covered = 0usize;
+        for &(off, len, d1, d2) in &capped {
+            assert!(d1 <= 128 && d2 <= 128, "{d1}x{d2}");
+            assert!(d1 * d2 >= len);
+            if off < 784_000 {
+                assert_eq!(off, cursor);
+                cursor += len;
+                covered += len;
+            }
+        }
+        assert_eq!(covered, 784_000);
+    }
+
+    #[test]
+    fn tuned_hp_covers_all_kinds() {
+        for &k in OptKind::all_table2() {
+            let (lr, _) = tuned_hp(k, Precision::F32, 0.0);
+            assert!(lr > 0.0);
+        }
+    }
+
+    #[test]
+    fn small_native_bench_runs() {
+        let cfg = AeBenchConfig {
+            steps: 4,
+            batch: 16,
+            full: false,
+            force_native: true,
+            optimizers: vec![OptKind::Adam, OptKind::TridiagSonew],
+            ..Default::default()
+        };
+        let r = run_one(OptKind::Adam, &cfg, None).unwrap();
+        assert!(r.final_loss.is_finite());
+        let r2 = run_one(OptKind::TridiagSonew, &cfg, None).unwrap();
+        assert!(r2.final_loss.is_finite());
+    }
+}

@@ -1,0 +1,109 @@
+//! Table 9/10/11: convex least-squares experiments — rfdSON(m) vs
+//! tridiag-SONew test accuracy on the three (synthesized) datasets,
+//! following §A.4.5's protocol: 70/30 split, squared loss, best test
+//! accuracy over the run.
+
+use crate::data::convex::{convex_suite, ConvexDataset};
+use crate::models::LinearProblem;
+use crate::optim::{build, HyperParams, OptKind};
+use crate::util::io::{fmt_f, MdTable};
+use crate::util::Rng;
+
+pub struct ConvexRow {
+    pub dataset: String,
+    pub rfd2: f32,
+    pub rfd5: f32,
+    pub tds: f32,
+    pub paper_rfd2: f32,
+    pub paper_tds: f32,
+}
+
+fn train_eval(
+    p: &LinearProblem,
+    kind: OptKind,
+    rank: usize,
+    epochs: usize,
+    lr: f32,
+    seed: u64,
+) -> f32 {
+    let d = p.d;
+    let hp = HyperParams {
+        rank,
+        eps: 1e-4,
+        beta2: 0.99,
+        gamma: 1e-10,
+        grafting: kind == OptKind::TridiagSonew,
+        ..Default::default()
+    };
+    let blocks = vec![(0usize, d)];
+    let mats = vec![(0usize, d, d, 1)];
+    let mut opt = build(kind, d, &blocks, &mats, &hp);
+    let mut w = vec![0.0f32; d];
+    let mut rng = Rng::new(seed);
+    let batch = 32;
+    let steps_per_epoch = (p.n_train() / batch).max(1);
+    let mut best = 0.0f32;
+    for _ in 0..epochs {
+        for _ in 0..steps_per_epoch {
+            let idx: Vec<usize> = (0..batch).map(|_| rng.below(p.n_train())).collect();
+            let (_, g) = p.loss_and_grad(&w, &idx);
+            opt.step(&mut w, &g, lr);
+        }
+        best = best.max(p.test_accuracy(&w));
+    }
+    best * 100.0
+}
+
+/// Run the suite; `scale` shrinks dataset rows for quick runs (1.0 =
+/// paper-size), `epochs` defaults to the paper's 20.
+pub fn run(scale: f32, epochs: usize) -> anyhow::Result<Vec<ConvexRow>> {
+    let suite = convex_suite(scale);
+    let mut table = MdTable::new(&[
+        "dataset", "RFD-SON m=2", "RFD-SON m=5", "tridiag-SONew",
+        "paper RFD m=2", "paper tds",
+    ]);
+    let mut rows = Vec::new();
+    for ConvexDataset { name, problem, paper_tds_acc, paper_rfd2_acc } in suite {
+        println!("[convex] {name} (train={} d={})", problem.n_train(), problem.d);
+        let rfd2 = train_eval(&problem, OptKind::RfdSon, 2, epochs, 0.05, 1);
+        let rfd5 = train_eval(&problem, OptKind::RfdSon, 5, epochs, 0.05, 2);
+        let tds = train_eval(&problem, OptKind::TridiagSonew, 0, epochs, 0.05, 3);
+        println!("[convex] {name}: rfd2={rfd2:.1} rfd5={rfd5:.1} tds={tds:.1}");
+        table.row([
+            name.to_string(),
+            fmt_f(rfd2 as f64),
+            fmt_f(rfd5 as f64),
+            fmt_f(tds as f64),
+            fmt_f(paper_rfd2_acc as f64),
+            fmt_f(paper_tds_acc as f64),
+        ]);
+        rows.push(ConvexRow {
+            dataset: name.to_string(),
+            rfd2,
+            rfd5,
+            tds,
+            paper_rfd2: paper_rfd2_acc,
+            paper_tds: paper_tds_acc,
+        });
+    }
+    table.write("t9_convex.md")?;
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tds_learns_a9a_at_reduced_scale() {
+        // Unit-level check on the a9a-proxy only (the full Table 9 run
+        // uses paper-size datasets and 20 epochs via the convex_suite
+        // example; at 2% scale the wide datasets are data-starved).
+        let suite = crate::data::convex::convex_suite(0.15);
+        let a9a = &suite[0];
+        let tds = train_eval(&a9a.problem, OptKind::TridiagSonew, 0, 10, 0.05, 3);
+        let rfd2 = train_eval(&a9a.problem, OptKind::RfdSon, 2, 10, 0.05, 1);
+        assert!(tds > 70.0, "tds acc {tds}");
+        assert!(tds >= rfd2 - 5.0, "tds {tds} vs rfd2 {rfd2}");
+    }
+}

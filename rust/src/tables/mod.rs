@@ -1,0 +1,10 @@
+//! Per-table/figure experiment harnesses (DESIGN.md §4's experiment
+//! index). Each module regenerates the rows/series of one paper artifact
+//! and writes markdown/CSV under `results/`.
+
+pub mod autoencoder;
+pub mod convex;
+pub mod lm;
+pub mod t1_complexity;
+pub mod t6_memory;
+pub mod vit_gnn;

@@ -1,0 +1,112 @@
+//! Software bfloat16 simulation (DESIGN.md §5).
+//!
+//! The paper's Table 5/8 experiments run optimizer state and updates in
+//! bfloat16 to stress numerical stability (motivating Algorithm 3). This
+//! environment has no bf16 hardware; we reproduce the *precision loss
+//! mechanism* exactly by rounding every f32 to the nearest bfloat16
+//! (round-to-nearest-even on the top 16 bits) at the same program points
+//! where a bf16 training stack would store values.
+
+/// Round one f32 to the nearest bfloat16, returned widened back to f32.
+#[inline]
+pub fn bf16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    // round-to-nearest-even on bit 16
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7FFF + lsb);
+    f32::from_bits(rounded & 0xFFFF_0000)
+}
+
+/// Round a slice in place.
+pub fn bf16_round_slice(xs: &mut [f32]) {
+    for x in xs {
+        *x = bf16_round(*x);
+    }
+}
+
+/// Precision mode threaded through optimizers and trainers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    #[default]
+    F32,
+    /// Simulated bfloat16: statistics and updates are bf16-rounded.
+    Bf16,
+}
+
+impl Precision {
+    #[inline]
+    pub fn quantize(self, x: f32) -> f32 {
+        match self {
+            Precision::F32 => x,
+            Precision::Bf16 => bf16_round(x),
+        }
+    }
+
+    pub fn quantize_slice(self, xs: &mut [f32]) {
+        if self == Precision::Bf16 {
+            bf16_round_slice(xs);
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "f32" | "float32" => Some(Precision::F32),
+            "bf16" | "bfloat16" => Some(Precision::Bf16),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_values_pass_through() {
+        for v in [0.0f32, 1.0, -2.0, 0.5, 256.0] {
+            assert_eq!(bf16_round(v), v);
+        }
+    }
+
+    #[test]
+    fn mantissa_truncated() {
+        // 1 + 2^-9 is not representable in bf16 (7 mantissa bits)
+        let x = 1.0f32 + 2f32.powi(-9);
+        let r = bf16_round(x);
+        assert!(r == 1.0 || r == 1.0 + 2f32.powi(-7));
+        assert_ne!(r, x);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // exactly halfway: 1 + 2^-8 sits between 1.0 and 1 + 2^-7;
+        // RNE picks the even mantissa (1.0).
+        let x = 1.0f32 + 2f32.powi(-8);
+        assert_eq!(bf16_round(x), 1.0);
+        // just above halfway rounds up
+        let y = 1.0f32 + 2f32.powi(-8) + 2f32.powi(-12);
+        assert_eq!(bf16_round(y), 1.0 + 2f32.powi(-7));
+    }
+
+    #[test]
+    fn relative_error_bounded() {
+        let mut r = crate::util::rng::Rng::new(5);
+        for _ in 0..10_000 {
+            let x = (r.normal() * 100.0) as f32;
+            if x == 0.0 {
+                continue;
+            }
+            let e = (bf16_round(x) - x).abs() / x.abs();
+            assert!(e <= 1.0 / 128.0, "x={x} err={e}");
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut r = crate::util::rng::Rng::new(6);
+        for _ in 0..1000 {
+            let x = r.normal_f32() * 3.0;
+            assert_eq!(bf16_round(bf16_round(x)), bf16_round(x));
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Result emitters: CSV series and markdown tables, written under
+//! `results/`. Every table/figure harness reports through these so the
+//! regenerated artifacts are diffable against EXPERIMENTS.md.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Directory where harnesses drop their outputs (overridable for tests).
+pub fn results_dir() -> PathBuf {
+    std::env::var_os("SONEW_RESULTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("results"))
+}
+
+/// A simple column-ordered CSV writer.
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row<I: IntoIterator<Item = String>>(&mut self, cells: I) {
+        let row: Vec<String> = cells.into_iter().collect();
+        assert_eq!(row.len(), self.header.len(), "csv row arity");
+        self.rows.push(row);
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
+        write_result_file(path, &self.to_string())
+    }
+}
+
+/// A markdown table builder for table-shaped results.
+pub struct MdTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl MdTable {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row<I: IntoIterator<Item = String>>(&mut self, cells: I) {
+        let row: Vec<String> = cells.into_iter().collect();
+        assert_eq!(row.len(), self.header.len(), "md row arity");
+        self.rows.push(row);
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "| {} |", self.header.join(" | "));
+        let _ = writeln!(
+            s,
+            "|{}|",
+            self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for r in &self.rows {
+            let _ = writeln!(s, "| {} |", r.join(" | "));
+        }
+        s
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
+        write_result_file(path, &self.to_string())
+    }
+}
+
+/// Write `content` to `results/<path>`, creating directories.
+pub fn write_result_file(path: impl AsRef<Path>, content: &str) -> Result<()> {
+    let full = results_dir().join(path.as_ref());
+    if let Some(parent) = full.parent() {
+        fs::create_dir_all(parent)
+            .with_context(|| format!("mkdir {}", parent.display()))?;
+    }
+    fs::write(&full, content)
+        .with_context(|| format!("writing {}", full.display()))?;
+    println!("  -> wrote {}", full.display());
+    Ok(())
+}
+
+/// Format a float with sensible digits for tables.
+pub fn fmt_f(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else if v.abs() >= 1000.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.3}")
+    } else {
+        format!("{v:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_shape() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(["1".into(), "2".into()]);
+        assert_eq!(c.to_string(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn csv_arity_enforced() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(["1".into()]);
+    }
+
+    #[test]
+    fn md_render() {
+        let mut t = MdTable::new(&["opt", "loss"]);
+        t.row(["adam".into(), "53.5".into()]);
+        let s = t.to_string();
+        assert!(s.contains("| opt | loss |"));
+        assert!(s.contains("| adam | 53.5 |"));
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt_f(0.0), "0");
+        assert_eq!(fmt_f(1234.0), "1234");
+        assert_eq!(fmt_f(53.591), "53.591");
+        assert_eq!(fmt_f(0.00123), "0.0012");
+    }
+}

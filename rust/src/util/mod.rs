@@ -1,0 +1,11 @@
+//! Shared utilities: deterministic RNG, bf16 simulation, timing, result
+//! emitters, and a small property-test harness.
+
+pub mod bf16;
+pub mod io;
+pub mod prop;
+pub mod rng;
+pub mod timer;
+
+pub use bf16::{bf16_round, Precision};
+pub use rng::Rng;

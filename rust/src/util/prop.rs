@@ -1,0 +1,106 @@
+//! Minimal property-testing harness (proptest is not in the offline
+//! dependency closure; see DESIGN.md §5).
+//!
+//! `check` runs a property over `cases` seeded RNGs and, on failure,
+//! reports the failing seed so the case can be replayed deterministically:
+//!
+//! ```no_run
+//! use sonew::util::prop::check;
+//! check("vec reverse involutive", 64, |rng| {
+//!     let n = rng.below(50);
+//!     let xs: Vec<f32> = rng.normal_vec(n);
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     assert_eq!(xs, ys);
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `prop` for `cases` deterministic seeds; panic with the seed on the
+/// first failure. Set `SONEW_PROP_SEED` to replay a single seed.
+pub fn check(name: &str, cases: u64, mut prop: impl FnMut(&mut Rng)) {
+    if let Ok(s) = std::env::var("SONEW_PROP_SEED") {
+        let seed: u64 = s.parse().expect("SONEW_PROP_SEED must be u64");
+        let mut rng = Rng::new(seed);
+        prop(&mut rng);
+        return;
+    }
+    for case in 0..cases {
+        let seed = 0x5151_0000 + case;
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property {name:?} failed at seed {seed} \
+                 (replay: SONEW_PROP_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert |a - b| <= atol + rtol * |b| elementwise.
+#[track_caller]
+pub fn assert_close(a: &[f32], b: &[f32], rtol: f32, atol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        assert!(
+            (x - y).abs() <= tol || (x.is_nan() && y.is_nan()),
+            "{what}[{i}]: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+/// Max relative error between two slices (for reporting).
+pub fn max_rel_err(a: &[f32], b: &[f32]) -> f32 {
+    let denom = b
+        .iter()
+        .fold(0.0f32, |m, v| m.max(v.abs()))
+        .max(1e-6);
+    a.iter()
+        .zip(b)
+        .fold(0.0f32, |m, (&x, &y)| m.max((x - y).abs()))
+        / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add commutes", 16, |rng| {
+            let a = rng.normal_f32();
+            let b = rng.normal_f32();
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay")]
+    fn failing_property_reports_seed() {
+        check("always fails", 4, |_rng| {
+            panic!("boom");
+        });
+    }
+
+    #[test]
+    fn close_assertion() {
+        assert_close(&[1.0, 2.0], &[1.0 + 1e-7, 2.0], 1e-5, 1e-6, "x");
+    }
+
+    #[test]
+    fn rel_err() {
+        assert!(max_rel_err(&[1.0], &[1.0]) == 0.0);
+        assert!((max_rel_err(&[1.1], &[1.0]) - 0.1).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,172 @@
+//! Deterministic PRNG for workload synthesis and property tests.
+//!
+//! The offline dependency closure has no `rand`, so we carry a small,
+//! well-known generator: SplitMix64 (Steele et al. 2014) — 64-bit state,
+//! passes BigCrush when used as here, and cheap enough for data synthesis
+//! in the training loop.
+
+/// SplitMix64 PRNG. Deterministic given a seed; `split` derives
+/// independent streams (used by data-parallel workers).
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    /// cached second normal from Box-Muller
+    spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_add(0x9E3779B97F4A7C15), spare: None }
+    }
+
+    /// Derive an independent stream (worker shards, datasets).
+    pub fn split(&mut self, tag: u64) -> Rng {
+        let s = self.next_u64() ^ tag.wrapping_mul(0xBF58476D1CE4E5B9);
+        Rng::new(s)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        loop {
+            let u = self.uniform();
+            if u <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let v = self.uniform();
+            let r = (-2.0 * u.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * v).sin_cos();
+            self.spare = Some(r * s);
+            return r * c;
+        }
+    }
+
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal_f32()).collect()
+    }
+
+    /// Vector of uniforms in [lo, hi).
+    pub fn uniform_vec(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.range(lo as f64, hi as f64) as f32).collect()
+    }
+
+    /// log-uniform in [lo, hi] — the paper's hyperparameter search draws
+    /// learning rates and eps this way.
+    pub fn log_uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        (self.range(lo.ln(), hi.ln())).exp()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Zipf-distributed integer in [0, n) with exponent `s` (LM corpus).
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        // inverse-CDF on a precomputable harmonic sum is overkill here;
+        // rejection sampling is fine for n <= vocab sizes we use.
+        loop {
+            let k = self.below(n) + 1;
+            let p = 1.0 / (k as f64).powf(s);
+            if self.uniform() < p {
+                return k - 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn split_streams_differ() {
+        let mut r = Rng::new(1);
+        let mut s1 = r.split(0);
+        let mut s2 = r.split(1);
+        let same = (0..64).filter(|_| s1.next_u64() == s2.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn uniform_in_range() {
+        let mut r = Rng::new(3);
+        for _ in 0..1000 {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(7);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n as f64;
+        assert!(mean.abs() < 0.03, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(9);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zipf_biased_to_small() {
+        let mut r = Rng::new(11);
+        let n = 5000;
+        let small = (0..n).filter(|_| r.zipf(100, 1.2) < 10).count();
+        assert!(small > n / 3, "zipf not head-heavy: {small}");
+    }
+}

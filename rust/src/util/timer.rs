@@ -1,0 +1,119 @@
+//! Timing helpers for the custom benchmark harness (criterion is not in
+//! the offline dependency closure; see DESIGN.md §5).
+
+use std::time::{Duration, Instant};
+
+/// Accumulating stopwatch for phase attribution inside the trainer
+/// (grad time vs optimizer time vs all-reduce time).
+#[derive(Debug, Default, Clone)]
+pub struct Stopwatch {
+    total: Duration,
+    laps: u64,
+}
+
+impl Stopwatch {
+    pub fn time<R>(&mut self, f: impl FnOnce() -> R) -> R {
+        let t = Instant::now();
+        let r = f();
+        self.total += t.elapsed();
+        self.laps += 1;
+        r
+    }
+
+    pub fn total(&self) -> Duration {
+        self.total
+    }
+
+    pub fn laps(&self) -> u64 {
+        self.laps
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.laps == 0 {
+            Duration::ZERO
+        } else {
+            self.total / self.laps as u32
+        }
+    }
+}
+
+/// One benchmark measurement: warms up, then reports the median and spread
+/// of `k` timed runs of `f` (each run may loop internally).
+pub struct BenchResult {
+    pub name: String,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub iters_per_run: u64,
+}
+
+impl BenchResult {
+    pub fn per_iter_ns(&self) -> f64 {
+        self.median.as_nanos() as f64 / self.iters_per_run as f64
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12.2} us/iter  (min {:.2}, max {:.2}, {} iters)",
+            self.name,
+            self.per_iter_ns() / 1000.0,
+            self.min.as_nanos() as f64 / self.iters_per_run as f64 / 1000.0,
+            self.max.as_nanos() as f64 / self.iters_per_run as f64 / 1000.0,
+            self.iters_per_run,
+        )
+    }
+}
+
+/// Median-of-k timing with warmup. `f` is called with the iteration count
+/// and must execute the measured operation that many times.
+pub fn bench(name: &str, iters: u64, k: usize, mut f: impl FnMut(u64)) -> BenchResult {
+    f(iters.div_ceil(4).max(1)); // warmup
+    let mut samples: Vec<Duration> = (0..k.max(1))
+        .map(|_| {
+            let t = Instant::now();
+            f(iters);
+            t.elapsed()
+        })
+        .collect();
+    samples.sort();
+    BenchResult {
+        name: name.to_string(),
+        median: samples[samples.len() / 2],
+        min: samples[0],
+        max: *samples.last().unwrap(),
+        iters_per_run: iters,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut s = Stopwatch::default();
+        let v = s.time(|| 21 * 2);
+        assert_eq!(v, 42);
+        s.time(|| std::thread::sleep(Duration::from_millis(1)));
+        assert_eq!(s.laps(), 2);
+        assert!(s.total() >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn bench_scales_with_iters() {
+        let work = |n: u64| {
+            let mut acc = 0u64;
+            for i in 0..n * 2000 {
+                acc = acc.wrapping_add(i * i);
+            }
+            std::hint::black_box(acc);
+        };
+        let r1 = bench("w1", 8, 3, |n| work(n));
+        let r2 = bench("w2", 64, 3, |n| work(n));
+        // per-iter cost should be in the same decade (extremely loose:
+        // this runs under arbitrary CI/background load)
+        let ratio = r1.per_iter_ns() / r2.per_iter_ns();
+        assert!(ratio > 0.02 && ratio < 50.0, "ratio {ratio}");
+        assert!(r1.per_iter_ns() > 0.0 && r2.per_iter_ns() > 0.0);
+    }
+}

@@ -1,0 +1,309 @@
+//! Cross-layer integration tests: the L3-native implementations against
+//! the L1/L2 AOT artifacts executed through PJRT. These are the tests
+//! that prove the three layers compose; they skip gracefully when
+//! `make artifacts` has not been run.
+
+use sonew::optim::{build, HyperParams, OptKind};
+use sonew::runtime::{Engine, HostTensor};
+use sonew::sonew::{LambdaMode, TridiagState};
+use sonew::util::prop::max_rel_err;
+use sonew::util::{Precision, Rng};
+
+fn engine() -> Option<Engine> {
+    let dir = Engine::default_dir();
+    if !Engine::available(&dir) {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::open(dir).expect("open artifacts"))
+}
+
+/// The Pallas tridiag kernel inside the HLO artifact must agree with the
+/// native Rust kernel over a multi-step (H, g) stream — the SONew hot
+/// path exists twice by design (DESIGN.md §6) and must be bit-comparable.
+#[test]
+fn sonew_hlo_pallas_matches_native() {
+    let Some(engine) = engine() else { return };
+    let spec = engine.spec("sonew_tridiag_ae_small").unwrap().clone();
+    let n = spec.inputs[0].elements();
+    let beta2 = spec.meta_f64("beta2").unwrap() as f32;
+    let eps = spec.meta_f64("eps").unwrap() as f32;
+    let gamma = spec.meta_f64("gamma").unwrap_or(0.0) as f32;
+    let tids = engine.manifest.layout("ae_small").unwrap().tensor_ids();
+
+    let mut native = TridiagState::new(n, Some(&tids));
+    let mut hd = vec![0.0f32; n];
+    let mut ho = vec![0.0f32; n];
+    let mut u_native = vec![0.0f32; n];
+    let mut rng = Rng::new(11);
+
+    for step in 0..4 {
+        let g = rng.normal_vec(n);
+        let out = engine
+            .exec(
+                "sonew_tridiag_ae_small",
+                &[
+                    HostTensor::F32(hd.clone()),
+                    HostTensor::F32(ho.clone()),
+                    HostTensor::F32(g.clone()),
+                    HostTensor::F32(tids.clone()),
+                ],
+            )
+            .unwrap();
+        let hd2 = out[0].as_f32().unwrap();
+        let ho2 = out[1].as_f32().unwrap();
+        let u_hlo = out[2].as_f32().unwrap();
+
+        native.step(&g, &mut u_native, LambdaMode::Ema(beta2), eps, gamma, Precision::F32);
+
+        assert!(
+            max_rel_err(hd2, &native.hd) < 1e-5,
+            "step {step}: hd diverged ({})",
+            max_rel_err(hd2, &native.hd)
+        );
+        assert!(
+            max_rel_err(ho2, &native.ho) < 1e-5,
+            "step {step}: ho diverged ({})",
+            max_rel_err(ho2, &native.ho)
+        );
+        // Early-step statistics are near-degenerate (rank ~ t), so the
+        // 1/schur amplification magnifies fp32 ordering differences on a
+        // few lanes; require tight global alignment + bounded worst lane.
+        let cos = sonew::linalg::dot(u_hlo, &u_native)
+            / (sonew::linalg::norm2(u_hlo) * sonew::linalg::norm2(&u_native));
+        assert!(cos > 0.9999, "step {step}: direction cos {cos}");
+        assert!(
+            max_rel_err(u_hlo, &u_native) < 5e-2,
+            "step {step}: direction diverged ({})",
+            max_rel_err(u_hlo, &u_native)
+        );
+        hd = hd2.to_vec();
+        ho = ho2.to_vec();
+    }
+}
+
+/// The HLO grads program and the native Rust MLP compute the same model:
+/// identical parameters + identical batch => matching loss and gradients.
+#[test]
+fn hlo_grads_match_native_mlp() {
+    let Some(engine) = engine() else { return };
+    let spec = engine.spec("ae_small_grads_b64").unwrap().clone();
+    let n = spec.inputs[0].elements();
+    let batch_elems = spec.inputs[1].elements();
+    let pixels = spec.inputs[1].dims[1];
+    let batch = batch_elems / pixels;
+
+    let mlp = sonew::models::Mlp::autoencoder_small();
+    assert_eq!(mlp.total, n, "layout mismatch between python and rust");
+    let mut rng = Rng::new(5);
+    let params = mlp.init(&mut rng);
+    let x_flat = rng.uniform_vec(batch_elems, 0.0, 1.0);
+
+    let (loss_hlo, grads_hlo) = engine
+        .loss_and_grad("ae_small_grads_b64", &params, vec![HostTensor::F32(x_flat.clone())])
+        .unwrap();
+    let x = sonew::linalg::Mat::from_rows(batch, pixels, x_flat);
+    let (loss_native, grads_native) = mlp.loss_and_grad(&params, &x);
+
+    assert!(
+        (loss_hlo - loss_native).abs() < 1e-2 * loss_native.abs().max(1.0),
+        "loss: hlo {loss_hlo} vs native {loss_native}"
+    );
+    assert!(
+        max_rel_err(&grads_hlo, &grads_native) < 1e-3,
+        "grads diverged: {}",
+        max_rel_err(&grads_hlo, &grads_native)
+    );
+}
+
+/// End-to-end smoke on the deployment path: HLO grads + HLO Pallas SONew
+/// update + rust coordinator reduce the AE loss.
+#[test]
+fn hlo_end_to_end_training_reduces_loss() {
+    let Some(engine) = engine() else { return };
+    let spec = engine.spec("ae_small_grads_b64").unwrap().clone();
+    let n = spec.inputs[0].elements();
+    let pixels = spec.inputs[1].dims[1];
+    let batch = spec.inputs[1].elements() / pixels;
+    let tids = engine.manifest.layout("ae_small").unwrap().tensor_ids();
+
+    let mlp = sonew::models::Mlp::autoencoder_small();
+    let mut rng = Rng::new(7);
+    let mut params = mlp.init(&mut rng);
+    let mut images = sonew::data::SynthImages::new(3);
+
+    let mut hd = vec![0.0f32; n];
+    let mut ho = vec![0.0f32; n];
+    let mut first = None;
+    let mut last = 0.0f32;
+    for _ in 0..12 {
+        // 28x28 synth images pooled to the small AE's 14x14 input
+        let (img, _) = images.batch(batch);
+        let mut x = Vec::with_capacity(batch * pixels);
+        for r in 0..batch {
+            let row = img.row(r);
+            for oy in 0..14 {
+                for ox in 0..14 {
+                    let mut acc = 0.0;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            acc += row[(oy * 2 + dy) * 28 + ox * 2 + dx];
+                        }
+                    }
+                    x.push(acc / 4.0);
+                }
+            }
+        }
+        let (loss, grads) = engine
+            .loss_and_grad("ae_small_grads_b64", &params, vec![HostTensor::F32(x)])
+            .unwrap();
+        let out = engine
+            .exec(
+                "sonew_tridiag_ae_small",
+                &[
+                    HostTensor::F32(std::mem::take(&mut hd)),
+                    HostTensor::F32(std::mem::take(&mut ho)),
+                    HostTensor::F32(grads),
+                    HostTensor::F32(tids.clone()),
+                ],
+            )
+            .unwrap();
+        let mut it = out.into_iter();
+        hd = it.next().unwrap().into_f32().unwrap();
+        ho = it.next().unwrap().into_f32().unwrap();
+        let mut u = it.next().unwrap().into_f32().unwrap();
+        // gradient-norm grafting (§5): early rank-deficient statistics
+        // make the raw Newton direction enormous; the paper always runs
+        // SONew with a grafted step magnitude.
+        let gn = {
+            // recompute ||g|| from the statistics innovation is overkill;
+            // normalize u to unit norm and use a fixed trust region.
+            let un = sonew::linalg::norm2(&u);
+            if un > 1e-30 { 1.0 / un } else { 0.0 }
+        };
+        for (p, &ui) in params.iter_mut().zip(&u) {
+            *p -= 0.05 * ui * gn;
+        }
+        u.clear();
+        if first.is_none() {
+            first = Some(loss);
+        }
+        last = loss;
+        assert!(loss.is_finite());
+    }
+    let first = first.unwrap();
+    assert!(last < first, "no progress: {first} -> {last}");
+}
+
+/// Banded artifact parity on the small AE.
+#[test]
+fn sonew_banded_hlo_matches_native() {
+    let Some(engine) = engine() else { return };
+    let Ok(spec) = engine.spec("sonew_band4_ae_small") else { return };
+    let spec = spec.clone();
+    let n = spec.inputs[1].elements();
+    let b = spec.inputs[0].dims[0] - 1;
+    let beta2 = spec.meta_f64("beta2").unwrap() as f32;
+    let eps = spec.meta_f64("eps").unwrap() as f32;
+    let tids = engine.manifest.layout("ae_small").unwrap().tensor_ids();
+
+    let mut native = sonew::sonew::BandedState::new(n, b, Some(&tids));
+    let mut diags = vec![0.0f32; (b + 1) * n];
+    let mut u_native = vec![0.0f32; n];
+    let mut rng = Rng::new(13);
+    for step in 0..2 {
+        let g = rng.normal_vec(n);
+        let out = engine
+            .exec(
+                "sonew_band4_ae_small",
+                &[
+                    HostTensor::F32(diags.clone()),
+                    HostTensor::F32(g.clone()),
+                    HostTensor::F32(tids.clone()),
+                ],
+            )
+            .unwrap();
+        let d2 = out[0].as_f32().unwrap();
+        let u_hlo = out[1].as_f32().unwrap();
+        native.step(&g, &mut u_native, LambdaMode::Ema(beta2), eps, 0.0, Precision::F32);
+        let native_flat: Vec<f32> = native.diags.concat();
+        assert!(
+            max_rel_err(d2, &native_flat) < 1e-4,
+            "step {step}: banded stats diverged ({})",
+            max_rel_err(d2, &native_flat)
+        );
+        assert!(
+            max_rel_err(u_hlo, &u_native) < 5e-3,
+            "step {step}: banded direction diverged ({})",
+            max_rel_err(u_hlo, &u_native)
+        );
+        diags = d2.to_vec();
+    }
+}
+
+/// Failure injection: wrong shapes and unknown artifacts produce clean
+/// errors, not aborts.
+#[test]
+fn engine_rejects_bad_inputs() {
+    let Some(engine) = engine() else { return };
+    assert!(engine.exec("no_such_artifact", &[]).is_err());
+    let err = engine
+        .exec("sonew_tridiag_ae_small", &[HostTensor::F32(vec![1.0])])
+        .unwrap_err();
+    assert!(format!("{err}").contains("inputs"), "{err}");
+    let spec = engine.spec("sonew_tridiag_ae_small").unwrap().clone();
+    let n = spec.inputs[0].elements();
+    let err = engine
+        .exec(
+            "sonew_tridiag_ae_small",
+            &[
+                HostTensor::F32(vec![0.0; n]),
+                HostTensor::F32(vec![0.0; n]),
+                HostTensor::F32(vec![0.0; 3]), // wrong length
+                HostTensor::F32(vec![0.0; n]),
+            ],
+        )
+        .unwrap_err();
+    assert!(format!("{err}").contains("elements"), "{err}");
+}
+
+/// Grafted tridiag-SONew through the full optimizer stack trains the
+/// (native) small AE — the Table 2 pipeline end to end without artifacts.
+#[test]
+fn full_optimizer_stack_trains_small_ae() {
+    let mlp = sonew::models::Mlp::autoencoder_small();
+    let mut rng = Rng::new(2);
+    let mut params = mlp.init(&mut rng);
+    let hp = HyperParams { gamma: 1e-8, ..Default::default() };
+    let mut opt = build(OptKind::TridiagSonew, mlp.total, &mlp.blocks(), &mlp.mat_blocks(), &hp);
+    let mut images = sonew::data::SynthImages::new(9);
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..25 {
+        let (x, _) = images.batch(32);
+        // pool to 14x14
+        let mut data = Vec::with_capacity(32 * 196);
+        for r in 0..32 {
+            let row = x.row(r);
+            for oy in 0..14 {
+                for ox in 0..14 {
+                    let mut acc = 0.0;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            acc += row[(oy * 2 + dy) * 28 + ox * 2 + dx];
+                        }
+                    }
+                    data.push(acc / 4.0);
+                }
+            }
+        }
+        let xm = sonew::linalg::Mat::from_rows(32, 196, data);
+        let (loss, g) = mlp.loss_and_grad(&params, &xm);
+        opt.step(&mut params, &g, 5e-3);
+        if first.is_none() {
+            first = Some(loss);
+        }
+        last = loss;
+    }
+    assert!(last < 0.95 * first.unwrap(), "{:?} -> {last}", first);
+}
