@@ -6,12 +6,15 @@
 //!   [step]  full-AE per-step wall time share, tridiag vs Adam (the
 //!           "~3% slower per step" claim, §1)
 //!   [kernel] native SONew kernel throughput (GB/s of parameter state)
-//!   [hlo]   PJRT execution overhead of the AOT artifacts (if present)
+//!   [backend] grads-program dispatch overhead through the Backend trait
+//!   [hlo]   PJRT execution overhead of the AOT artifacts (xla feature +
+//!           artifacts present; skipped otherwise)
 //!
 //!     cargo bench            # all sections
 //!     cargo bench -- t1      # one section
 
 use sonew::optim::{build, HyperParams, OptKind};
+use sonew::runtime::{Backend, HostTensor, NativeBackend};
 use sonew::sonew::{BandedState, LambdaMode, TridiagState};
 use sonew::util::timer::bench;
 use sonew::util::{Precision, Rng};
@@ -73,50 +76,85 @@ fn main() {
         }
     }
 
+    if run("backend") {
+        println!("== [backend] grads dispatch through the Backend trait ==");
+        let backend = NativeBackend::new();
+        let mlp = sonew::models::Mlp::autoencoder_small();
+        let mut rng = Rng::new(4);
+        let params = mlp.init(&mut rng);
+        let x = rng.uniform_vec(64 * mlp.dims[0], 0.0, 1.0);
+        let r = bench("native ae_small grads b64", 5, 5, |k| {
+            for _ in 0..k {
+                backend
+                    .loss_and_grad(
+                        "ae_small_grads_b64",
+                        &params,
+                        vec![HostTensor::F32(x.clone())],
+                    )
+                    .unwrap();
+            }
+        });
+        println!("{}", r.report());
+    }
+
     if run("hlo") {
-        let dir = sonew::runtime::Engine::default_dir();
-        if sonew::runtime::Engine::available(&dir) {
+        'hlo: {
+        let dir = sonew::runtime::default_artifacts_dir();
+        let backend = match sonew::runtime::open_backend(&dir) {
+            Ok(b) => b,
+            Err(e) => {
+                println!("[hlo] skipped (failed to open artifacts backend: {e:#})");
+                break 'hlo;
+            }
+        };
+        if let Some(man) = backend.manifest() {
             println!("== [hlo] PJRT artifact execution ==");
-            let engine = sonew::runtime::Engine::open(&dir).unwrap();
-            if let Ok(spec) = engine.spec("sonew_tridiag_ae_small") {
+            if let Ok(spec) = man.artifact("sonew_tridiag_ae_small") {
                 let n = spec.inputs[0].elements();
                 let hd = vec![1.0f32; n];
                 let ho = vec![0.0f32; n];
                 let mut rng = Rng::new(3);
                 let g = rng.normal_vec(n);
-                let tids = engine.manifest.layout("ae_small").unwrap().tensor_ids();
-                use sonew::runtime::HostTensor as HT;
+                let tids = man.layout("ae_small").unwrap().tensor_ids();
                 let r = bench(&format!("hlo sonew_tridiag n={n}"), 5, 5, |k| {
                     for _ in 0..k {
-                        engine
+                        backend
                             .exec("sonew_tridiag_ae_small", &[
-                                HT::F32(hd.clone()),
-                                HT::F32(ho.clone()),
-                                HT::F32(g.clone()),
-                                HT::F32(tids.clone()),
+                                HostTensor::F32(hd.clone()),
+                                HostTensor::F32(ho.clone()),
+                                HostTensor::F32(g.clone()),
+                                HostTensor::F32(tids.clone()),
                             ])
                             .unwrap();
                     }
                 });
                 println!("{}", r.report());
             }
-            if let Ok(spec) = engine.spec("ae_small_grads_b64") {
+            if let Ok(spec) = man.artifact("ae_small_grads_b64") {
                 let np = spec.inputs[0].elements();
                 let bx = spec.inputs[1].elements();
                 let params = vec![0.01f32; np];
                 let x = vec![0.5f32; bx];
-                use sonew::runtime::HostTensor as HT;
                 let r = bench("hlo ae_small grads b64", 5, 5, |k| {
                     for _ in 0..k {
-                        engine
-                            .loss_and_grad("ae_small_grads_b64", &params, vec![HT::F32(x.clone())])
+                        backend
+                            .loss_and_grad(
+                                "ae_small_grads_b64",
+                                &params,
+                                vec![HostTensor::F32(x.clone())],
+                            )
                             .unwrap();
                     }
                 });
                 println!("{}", r.report());
             }
         } else {
-            println!("[hlo] skipped (no artifacts; run `make artifacts`)");
+            println!(
+                "[hlo] skipped ({} backend; build with --features xla and run \
+                 `make artifacts`)",
+                backend.name()
+            );
+        }
         }
     }
     println!("bench done");

@@ -40,7 +40,33 @@ pub fn load(path: impl AsRef<Path>) -> Result<(u64, Vec<f32>)> {
     f.read_exact(&mut buf8)?;
     let step = u64::from_le_bytes(buf8);
     f.read_exact(&mut buf8)?;
-    let n = u64::from_le_bytes(buf8) as usize;
+    let declared = u64::from_le_bytes(buf8);
+    // Validate the declared element count against the actual file size
+    // before allocating: a truncated or corrupted header must produce a
+    // clear error, not an unbounded allocation or a confusing read_exact
+    // failure mid-buffer.
+    let header = (MAGIC.len() + 16) as u64;
+    let expected = declared
+        .checked_mul(4)
+        .and_then(|body| body.checked_add(header))
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "corrupt checkpoint {}: implausible element count {declared}",
+                path.display()
+            )
+        })?;
+    let actual = f
+        .metadata()
+        .with_context(|| format!("stat {}", path.display()))?
+        .len();
+    if actual != expected {
+        bail!(
+            "truncated checkpoint {}: header declares {declared} params \
+             ({expected} bytes expected) but file has {actual} bytes",
+            path.display(),
+        );
+    }
+    let n = declared as usize;
     let mut bytes = vec![0u8; n * 4];
     f.read_exact(&mut bytes)?;
     let mut params = vec![0f32; n];
@@ -63,6 +89,41 @@ mod tests {
         let (step, back) = load(&path).unwrap();
         assert_eq!(step, 42);
         assert_eq!(back, params);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let dir = std::env::temp_dir().join("sonew_ckpt_test3");
+        let path = dir.join("trunc.ck");
+        let params: Vec<f32> = (0..256).map(|i| i as f32).collect();
+        save(&path, 7, &params).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // cut the body short: header intact, payload truncated
+        std::fs::write(&path, &full[..full.len() - 100]).unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err}").contains("truncated"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_absurd_element_count_without_allocating() {
+        let dir = std::env::temp_dir().join("sonew_ckpt_test4");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("huge.ck");
+        // header declaring ~2^61 elements and no body: must error out
+        // (checked size validation), not attempt a giant allocation
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        bytes.extend_from_slice(&(1u64 << 61).to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err();
+        let msg = format!("{err}");
+        assert!(
+            msg.contains("truncated") || msg.contains("implausible"),
+            "{msg}"
+        );
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -14,10 +14,10 @@ use std::thread::JoinHandle;
 
 use anyhow::Result;
 
-/// A per-worker gradient source: owns its data shard and (for the HLO
-/// path) its PJRT engine handle. Not required to be `Send`: providers are
-/// constructed *inside* their worker thread (PJRT clients are
-/// thread-affine), so only the factory crosses threads.
+/// A per-worker gradient source: owns its data shard and (for the
+/// backend path) its runtime `Backend` handle. Not required to be
+/// `Send`: providers are constructed *inside* their worker thread (PJRT
+/// clients are thread-affine), so only the factory crosses threads.
 pub trait GradProvider {
     /// Compute (loss, grads) for the next minibatch at `params`.
     fn next_loss_and_grad(&mut self, params: &[f32]) -> Result<(f32, Vec<f32>)>;

@@ -1,7 +1,9 @@
 //! Random-search hyperparameter sweeps over the paper's search space
 //! (§A.4.3): log-uniform learning rate and eps, uniform betas — the
 //! machinery behind Table 12 and the "200 hyperparameters per optimizer"
-//! protocol (scaled by `trials`).
+//! protocol (scaled by `trials`). Objectives are plain closures, so a
+//! sweep can evaluate trials against any runtime `Backend` (the CLI
+//! drives it with a native-backend training run).
 
 use crate::optim::HyperParams;
 use crate::util::Rng;

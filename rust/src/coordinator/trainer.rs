@@ -1,6 +1,7 @@
-//! The training loop: data-parallel gradients (native or AOT-HLO), global
-//! gradient clipping, optimizer step, LR schedule, metrics — the L3
-//! runtime every experiment harness drives.
+//! The training loop: data-parallel gradients (through any runtime
+//! `Backend` — native or AOT-HLO), global gradient clipping, optimizer
+//! step, LR schedule, metrics — the L3 runtime every experiment harness
+//! drives.
 
 use std::sync::Arc;
 
@@ -106,8 +107,8 @@ pub fn train(
 }
 
 /// Single-worker convenience (tests, quickstart): runs the provider
-/// inline on the calling thread — no Send requirement, so HLO providers
-/// (thread-affine PJRT clients) work directly.
+/// inline on the calling thread — no Send requirement, so backend
+/// providers (thread-affine PJRT clients) work directly.
 pub fn train_single(
     params: &mut Vec<f32>,
     opt: &mut Opt,
@@ -167,41 +168,43 @@ fn pool_to(x: &crate::linalg::Mat, side: usize, want: usize) -> crate::linalg::M
     crate::linalg::Mat::from_rows(x.rows, want, data)
 }
 
-/// AOT-HLO autoencoder provider: batches executed through PJRT. The
-/// engine is owned by the provider (PJRT clients are thread-affine);
-/// workers construct their own engine inside their thread.
-pub struct HloAeProvider {
-    pub engine: crate::runtime::Engine,
-    pub artifact: String,
+/// Backend autoencoder provider: batches executed through any runtime
+/// [`Backend`](crate::runtime::Backend) — the native model zoo or PJRT
+/// artifacts. The backend is owned by the provider (PJRT clients are
+/// thread-affine); workers construct their own backend inside their
+/// thread.
+pub struct BackendAeProvider {
+    pub backend: Box<dyn crate::runtime::Backend>,
+    pub program: String,
     pub images: crate::data::SynthImages,
     pub batch: usize,
 }
 
-impl GradProvider for HloAeProvider {
+impl GradProvider for BackendAeProvider {
     fn next_loss_and_grad(&mut self, params: &[f32]) -> Result<(f32, Vec<f32>)> {
         let x = self.images.flat_batch(self.batch);
-        self.engine.loss_and_grad(
-            &self.artifact,
+        self.backend.loss_and_grad(
+            &self.program,
             params,
             vec![crate::runtime::HostTensor::F32(x)],
         )
     }
 }
 
-/// AOT-HLO language-model provider (Figure 3 driver).
-pub struct HloLmProvider {
-    pub engine: crate::runtime::Engine,
-    pub artifact: String,
+/// Backend language-model provider (Figure 3 driver).
+pub struct BackendLmProvider {
+    pub backend: Box<dyn crate::runtime::Backend>,
+    pub program: String,
     pub corpus: crate::data::LmCorpus,
     pub batch: usize,
     pub seq: usize,
 }
 
-impl GradProvider for HloLmProvider {
+impl GradProvider for BackendLmProvider {
     fn next_loss_and_grad(&mut self, params: &[f32]) -> Result<(f32, Vec<f32>)> {
         let (toks, tgts) = self.corpus.batch(self.batch, self.seq);
-        self.engine.loss_and_grad(
-            &self.artifact,
+        self.backend.loss_and_grad(
+            &self.program,
             params,
             vec![
                 crate::runtime::HostTensor::I32(toks),

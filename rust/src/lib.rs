@@ -6,6 +6,11 @@
 //! * this crate is L3: the training coordinator, the native SONew core,
 //!   every baseline optimizer from the paper's evaluation, the synthetic
 //!   workloads, and the per-table/figure benchmark harnesses.
+//!
+//! Program execution goes through the pluggable [`runtime::Backend`]
+//! seam: the pure-Rust `NativeBackend` (always built, hermetic) or the
+//! PJRT artifact engine (`--features xla` + `make artifacts`); see
+//! `rust/README.md`.
 
 pub mod cli;
 pub mod coordinator;

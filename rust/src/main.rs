@@ -220,8 +220,13 @@ fn sweep(args: &Args) -> Result<()> {
 }
 
 fn list() -> Result<()> {
-    let dir = sonew::runtime::Engine::default_dir();
-    if !sonew::runtime::Engine::available(&dir) {
+    let dir = sonew::runtime::default_artifacts_dir();
+    println!(
+        "runtime backend: {} (xla feature {})",
+        sonew::runtime::preferred_backend_name(&dir),
+        if cfg!(feature = "xla") { "on" } else { "off" },
+    );
+    if !sonew::runtime::artifacts_available(&dir) {
         println!("no artifacts at {} — run `make artifacts`", dir.display());
         return Ok(());
     }

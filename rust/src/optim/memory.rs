@@ -35,9 +35,14 @@ pub fn state_floats(kind: OptKind, mats: &[(usize, usize, usize, usize)], hp_ban
     }
 }
 
-/// Memory in units of n (#params), as Table 6 reports it.
+/// Memory in units of n (#params), as Table 6 reports it. An empty
+/// layout holds no state: report 0 rather than letting 0/0 = NaN
+/// silently propagate into the table output.
 pub fn state_in_params(kind: OptKind, mats: &[(usize, usize, usize, usize)], band: usize, rank: usize) -> f64 {
     let n: usize = mats.iter().map(|&(_, len, _, _)| len).sum();
+    if n == 0 {
+        return 0.0;
+    }
     state_floats(kind, mats, band, rank) as f64 / n as f64
 }
 
@@ -66,6 +71,18 @@ mod tests {
             assert!(tds <= 2 * sh_stats.max(d1 * d2), "{d1}x{d2}");
             assert!(2 * d1 * d2 <= 2 * sh_stats);
         }
+    }
+
+    #[test]
+    fn empty_layout_reports_zero_not_nan() {
+        for &kind in &[OptKind::Adam, OptKind::TridiagSonew, OptKind::Shampoo] {
+            let v = state_in_params(kind, &[], 4, 4);
+            assert!(v.is_finite(), "{kind:?}: {v}");
+            assert_eq!(v, 0.0, "{kind:?}");
+        }
+        // zero-length tensors (degenerate layout) must not NaN either
+        let mats = vec![(0usize, 0usize, 0usize, 0usize)];
+        assert_eq!(state_in_params(OptKind::Adam, &mats, 4, 4), 0.0);
     }
 
     #[test]

@@ -1,0 +1,550 @@
+//! The runtime backend seam: a `Backend` executes named gradient /
+//! optimizer programs over host tensors. Two implementations exist:
+//!
+//! * [`NativeBackend`] — pure Rust, always available. Grads programs
+//!   route through the `models::{mlp,linear}` forward/backward code and
+//!   the `sonew_tridiag_*` optimizer program through the native
+//!   `sonew::TridiagState` kernel, so the whole training stack runs from
+//!   a clean clone with no Python, no artifacts and no PJRT toolchain.
+//! * `PjrtBackend` (behind the `xla` cargo feature) — wraps the
+//!   [`Engine`](super::engine::Engine) that compiles and executes the
+//!   AOT HLO artifacts produced by `python/compile/aot.py`.
+//!
+//! The coordinator, tables, benches and integration tests all hold a
+//! `Box<dyn Backend>` from [`open_backend`], which picks PJRT when the
+//! feature is compiled in and artifacts exist, and falls back to native
+//! otherwise — "skip gracefully" became "always runnable".
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::linalg::Mat;
+use crate::models::{LinearProblem, Mlp};
+use crate::sonew::{LambdaMode, TridiagState};
+use crate::util::Precision;
+
+/// A host-side tensor handed to / received from a backend program.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            HostTensor::I32(_) => bail!("expected f32 tensor, got i32"),
+        }
+    }
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32(v) => Ok(v),
+            HostTensor::I32(_) => bail!("expected f32 tensor, got i32"),
+        }
+    }
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32(v) => v.len(),
+            HostTensor::I32(v) => v.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Executes named programs over host tensors. Implementations are not
+/// required to be `Send` (PJRT clients are thread-affine); data-parallel
+/// workers construct their own backend inside their thread.
+pub trait Backend {
+    /// Short identifier ("native", "pjrt") for logs and diagnostics.
+    fn name(&self) -> &'static str;
+
+    /// True when the backend can execute programs at all. The native
+    /// backend is always available; a PJRT backend is available once its
+    /// artifacts directory has been compiled.
+    fn available(&self) -> bool;
+
+    /// Can this backend run `program` right now?
+    fn supports(&self, program: &str) -> bool;
+
+    /// Execute `program` with positional inputs; returns the outputs in
+    /// program order.
+    fn exec(&self, program: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>;
+
+    /// Convenience for grads programs `(params, batch...) -> (loss, grads)`.
+    fn loss_and_grad(
+        &self,
+        program: &str,
+        params: &[f32],
+        batch: Vec<HostTensor>,
+    ) -> Result<(f32, Vec<f32>)> {
+        let mut inputs = vec![HostTensor::F32(params.to_vec())];
+        inputs.extend(batch);
+        let mut out = self.exec(program, &inputs)?;
+        if out.len() != 2 {
+            bail!("{program}: expected (loss, grads), got {} outputs", out.len());
+        }
+        let grads = out.pop().unwrap().into_f32()?;
+        let loss = out.pop().unwrap().into_f32()?;
+        if loss.is_empty() {
+            bail!("{program}: empty loss output");
+        }
+        Ok((loss[0], grads))
+    }
+
+    /// The artifact manifest, when the backend is driven by one (PJRT).
+    /// Harnesses that need artifact metadata (the LM experiment reads
+    /// batch/seq/vocab and the parameter layout from it) probe this and
+    /// error cleanly on backends without one.
+    fn manifest(&self) -> Option<&super::manifest::Manifest> {
+        None
+    }
+}
+
+/// Default artifacts location relative to the repo root, overridable
+/// with `SONEW_ARTIFACTS`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("SONEW_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// True if an artifacts directory with a manifest exists (`make
+/// artifacts` has been run).
+pub fn artifacts_available(dir: impl AsRef<Path>) -> bool {
+    dir.as_ref().join("manifest.txt").exists()
+}
+
+/// Name of the backend [`open_backend`] prefers for `dir`, without
+/// constructing it (no PJRT client startup) — for read-only listings.
+/// Kept next to `open_backend` so the selection rule lives in one place.
+pub fn preferred_backend_name(dir: impl AsRef<Path>) -> &'static str {
+    if cfg!(feature = "xla") && artifacts_available(dir) {
+        "pjrt"
+    } else {
+        "native"
+    }
+}
+
+/// Open the preferred backend for `dir`: PJRT when the crate was built
+/// with the `xla` feature and compiled artifacts are present, the native
+/// backend otherwise. Never fails in the fallback path, so callers can
+/// train unconditionally.
+pub fn open_backend(dir: impl AsRef<Path>) -> Result<Box<dyn Backend>> {
+    let dir = dir.as_ref();
+    #[cfg(feature = "xla")]
+    {
+        if artifacts_available(dir) {
+            let engine = super::engine::Engine::open(dir)?;
+            return Ok(Box::new(PjrtBackend::new(engine)));
+        }
+    }
+    let _ = dir;
+    Ok(Box::new(NativeBackend::new()))
+}
+
+// ---------------------------------------------------------------------------
+// NativeBackend
+// ---------------------------------------------------------------------------
+
+/// Statistics decay / damping the native `sonew_tridiag_*` program runs
+/// with; they mirror the values the LM harness uses natively. The PJRT
+/// side reads its hyperparameters from artifact metadata instead.
+pub const NATIVE_TRIDIAG_BETA2: f32 = 0.95;
+pub const NATIVE_TRIDIAG_EPS: f32 = 1e-6;
+
+/// Pure-Rust backend: resolves program names to the native model zoo.
+///
+/// Supported programs (`B`/digits are parsed from the name):
+/// * `ae_grads_b{B}` — full autoencoder grads `(params, x) -> (loss, grads)`
+/// * `ae_small_grads_b{B}` — scaled-down autoencoder grads
+/// * `sonew_tridiag_*` — one fused tridiag-SONew step
+///   `(hd, ho, g, tensor_ids) -> (hd', ho', u)`
+/// * `linear_grads` — least-squares grads `(w, x, y) -> (loss, grads)`
+#[derive(Debug, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self
+    }
+
+    /// Resolve an `ae*_grads*` program name to its MLP; batch suffixes
+    /// (`_b256`) are accepted and ignored — the native model infers the
+    /// batch from the input length.
+    fn mlp_for(program: &str) -> Option<Mlp> {
+        let stem = strip_batch_suffix(program);
+        match stem {
+            "ae_grads" => Some(Mlp::autoencoder()),
+            "ae_small_grads" => Some(Mlp::autoencoder_small()),
+            _ => None,
+        }
+    }
+}
+
+/// `"ae_grads_b256"` -> `"ae_grads"`; names without a `_b{digits}` tail
+/// pass through unchanged.
+fn strip_batch_suffix(program: &str) -> &str {
+    if let Some(i) = program.rfind("_b") {
+        let tail = &program[i + 2..];
+        if !tail.is_empty() && tail.bytes().all(|c| c.is_ascii_digit()) {
+            return &program[..i];
+        }
+    }
+    program
+}
+
+fn mlp_grads(mlp: &Mlp, program: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    if inputs.len() != 2 {
+        bail!("{program}: expected (params, x), got {} inputs", inputs.len());
+    }
+    let params = inputs[0].as_f32()?;
+    let x = inputs[1].as_f32()?;
+    if params.len() != mlp.total {
+        bail!(
+            "{program}: params expects {} elements, got {}",
+            mlp.total,
+            params.len()
+        );
+    }
+    let d = mlp.dims[0];
+    if x.is_empty() || x.len() % d != 0 {
+        bail!(
+            "{program}: batch expects a non-empty multiple of {d} elements, got {}",
+            x.len()
+        );
+    }
+    let rows = x.len() / d;
+    let xm = Mat::from_rows(rows, d, x.to_vec());
+    let (loss, grads) = mlp.loss_and_grad(params, &xm);
+    Ok(vec![HostTensor::F32(vec![loss]), HostTensor::F32(grads)])
+}
+
+fn tridiag_step(program: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    if inputs.len() != 4 {
+        bail!(
+            "{program}: expected (hd, ho, g, tensor_ids), got {} inputs",
+            inputs.len()
+        );
+    }
+    let hd = inputs[0].as_f32()?;
+    let ho = inputs[1].as_f32()?;
+    let g = inputs[2].as_f32()?;
+    let tids = inputs[3].as_f32()?;
+    let n = hd.len();
+    if ho.len() != n || g.len() != n || tids.len() != n {
+        bail!(
+            "{program}: hd/ho/g/tensor_ids lengths must match ({n}/{}/{}/{})",
+            ho.len(),
+            g.len(),
+            tids.len()
+        );
+    }
+    let mut st = TridiagState::new(n, Some(tids));
+    st.hd.copy_from_slice(hd);
+    st.ho.copy_from_slice(ho);
+    let mut u = vec![0.0f32; n];
+    st.step(
+        g,
+        &mut u,
+        LambdaMode::Ema(NATIVE_TRIDIAG_BETA2),
+        NATIVE_TRIDIAG_EPS,
+        0.0,
+        Precision::F32,
+    );
+    Ok(vec![
+        HostTensor::F32(st.hd),
+        HostTensor::F32(st.ho),
+        HostTensor::F32(u),
+    ])
+}
+
+fn linear_grads(inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    if inputs.len() != 3 {
+        bail!("linear_grads: expected (w, x, y), got {} inputs", inputs.len());
+    }
+    let w = inputs[0].as_f32()?;
+    let x = inputs[1].as_f32()?;
+    let y = inputs[2].as_f32()?;
+    let d = w.len();
+    if d == 0 {
+        bail!("linear_grads: empty weight vector");
+    }
+    let b = y.len();
+    if b == 0 || x.len() != b * d {
+        bail!(
+            "linear_grads: x expects {b} x {d} = {} elements, got {}",
+            b * d,
+            x.len()
+        );
+    }
+    let prob = LinearProblem {
+        d,
+        x_train: x.to_vec(),
+        y_train: y.to_vec(),
+        x_test: vec![],
+        y_test: vec![],
+    };
+    let idx: Vec<usize> = (0..b).collect();
+    let (loss, grads) = prob.loss_and_grad(w, &idx);
+    Ok(vec![HostTensor::F32(vec![loss]), HostTensor::F32(grads)])
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn available(&self) -> bool {
+        true
+    }
+
+    fn supports(&self, program: &str) -> bool {
+        Self::mlp_for(program).is_some()
+            || program.starts_with("sonew_tridiag")
+            || program == "linear_grads"
+    }
+
+    fn exec(&self, program: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        if let Some(mlp) = Self::mlp_for(program) {
+            return mlp_grads(&mlp, program, inputs);
+        }
+        if program.starts_with("sonew_tridiag") {
+            return tridiag_step(program, inputs);
+        }
+        if program == "linear_grads" {
+            return linear_grads(inputs);
+        }
+        bail!(
+            "program {program:?} is not supported by the native backend \
+             (known: ae_grads_b*, ae_small_grads_b*, sonew_tridiag_*, linear_grads)"
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PjrtBackend (xla feature)
+// ---------------------------------------------------------------------------
+
+/// PJRT-backed implementation: every call delegates to the artifact
+/// [`Engine`](super::engine::Engine).
+#[cfg(feature = "xla")]
+pub struct PjrtBackend {
+    engine: super::engine::Engine,
+}
+
+#[cfg(feature = "xla")]
+impl PjrtBackend {
+    pub fn new(engine: super::engine::Engine) -> Self {
+        Self { engine }
+    }
+
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        Ok(Self::new(super::engine::Engine::open(dir)?))
+    }
+
+    pub fn engine(&self) -> &super::engine::Engine {
+        &self.engine
+    }
+}
+
+#[cfg(feature = "xla")]
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn available(&self) -> bool {
+        true
+    }
+
+    fn supports(&self, program: &str) -> bool {
+        self.engine.manifest.artifact(program).is_ok()
+    }
+
+    fn exec(&self, program: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.engine.exec(program, inputs)
+    }
+
+    // loss_and_grad: the trait default (build inputs, exec, unpack) is
+    // the single copy of that logic for both backends.
+
+    fn manifest(&self) -> Option<&super::manifest::Manifest> {
+        Some(&self.engine.manifest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn batch_suffix_stripping() {
+        assert_eq!(strip_batch_suffix("ae_grads_b256"), "ae_grads");
+        assert_eq!(strip_batch_suffix("ae_small_grads_b64"), "ae_small_grads");
+        assert_eq!(strip_batch_suffix("ae_grads"), "ae_grads");
+        assert_eq!(strip_batch_suffix("lm_grads_bx"), "lm_grads_bx");
+        assert_eq!(strip_batch_suffix("_b12"), "");
+    }
+
+    #[test]
+    fn native_supports_known_programs() {
+        let b = NativeBackend::new();
+        assert!(b.available());
+        assert!(b.supports("ae_grads_b256"));
+        assert!(b.supports("ae_small_grads_b64"));
+        assert!(b.supports("sonew_tridiag_ae_small"));
+        assert!(b.supports("linear_grads"));
+        assert!(!b.supports("lm_grads"));
+        assert!(!b.supports("no_such_program"));
+    }
+
+    #[test]
+    fn native_grads_match_direct_mlp_call() {
+        let b = NativeBackend::new();
+        let mlp = Mlp::autoencoder_small();
+        let mut rng = Rng::new(1);
+        let params = mlp.init(&mut rng);
+        let x = rng.uniform_vec(4 * mlp.dims[0], 0.0, 1.0);
+        let (loss, grads) = b
+            .loss_and_grad("ae_small_grads_b4", &params, vec![HostTensor::F32(x.clone())])
+            .unwrap();
+        let xm = Mat::from_rows(4, mlp.dims[0], x);
+        let (want_loss, want_grads) = mlp.loss_and_grad(&params, &xm);
+        assert_eq!(loss, want_loss);
+        assert_eq!(grads, want_grads);
+    }
+
+    #[test]
+    fn native_tridiag_matches_state_kernel() {
+        let b = NativeBackend::new();
+        let n = 64;
+        let mut rng = Rng::new(2);
+        let hd = rng.uniform_vec(n, 0.1, 1.0);
+        let ho = rng.uniform_vec(n - 1, -0.1, 0.1);
+        let mut ho_full = ho.clone();
+        ho_full.push(0.0);
+        let g = rng.normal_vec(n);
+        let tids = vec![0.0f32; n];
+        let out = b
+            .exec(
+                "sonew_tridiag_test",
+                &[
+                    HostTensor::F32(hd.clone()),
+                    HostTensor::F32(ho_full.clone()),
+                    HostTensor::F32(g.clone()),
+                    HostTensor::F32(tids.clone()),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 3);
+
+        let mut st = TridiagState::new(n, Some(&tids));
+        st.hd.copy_from_slice(&hd);
+        st.ho.copy_from_slice(&ho_full);
+        let mut u = vec![0.0f32; n];
+        st.step(
+            &g,
+            &mut u,
+            LambdaMode::Ema(NATIVE_TRIDIAG_BETA2),
+            NATIVE_TRIDIAG_EPS,
+            0.0,
+            Precision::F32,
+        );
+        assert_eq!(out[0].as_f32().unwrap(), &st.hd[..]);
+        assert_eq!(out[1].as_f32().unwrap(), &st.ho[..]);
+        assert_eq!(out[2].as_f32().unwrap(), &u[..]);
+    }
+
+    #[test]
+    fn native_linear_grads_match_model() {
+        let b = NativeBackend::new();
+        let d = 8;
+        let n = 10;
+        let mut rng = Rng::new(3);
+        let w = rng.normal_vec(d);
+        let x = rng.normal_vec(n * d);
+        let y: Vec<f32> = (0..n).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let out = b
+            .exec(
+                "linear_grads",
+                &[
+                    HostTensor::F32(w.clone()),
+                    HostTensor::F32(x.clone()),
+                    HostTensor::F32(y.clone()),
+                ],
+            )
+            .unwrap();
+        let prob = LinearProblem {
+            d,
+            x_train: x,
+            y_train: y,
+            x_test: vec![],
+            y_test: vec![],
+        };
+        let idx: Vec<usize> = (0..n).collect();
+        let (want_loss, want_grads) = prob.loss_and_grad(&w, &idx);
+        assert_eq!(out[0].as_f32().unwrap(), &[want_loss][..]);
+        assert_eq!(out[1].as_f32().unwrap(), &want_grads[..]);
+    }
+
+    #[test]
+    fn native_rejects_bad_inputs() {
+        let b = NativeBackend::new();
+        assert!(b.exec("no_such_program", &[]).is_err());
+        // wrong input count
+        let err = b
+            .exec("ae_small_grads_b4", &[HostTensor::F32(vec![1.0])])
+            .unwrap_err();
+        assert!(format!("{err}").contains("inputs"), "{err}");
+        // wrong param length
+        let mlp = Mlp::autoencoder_small();
+        let err = b
+            .exec(
+                "ae_small_grads_b4",
+                &[
+                    HostTensor::F32(vec![0.0; 3]),
+                    HostTensor::F32(vec![0.0; mlp.dims[0]]),
+                ],
+            )
+            .unwrap_err();
+        assert!(format!("{err}").contains("elements"), "{err}");
+        // batch not a multiple of the input width
+        let err = b
+            .exec(
+                "ae_small_grads_b4",
+                &[
+                    HostTensor::F32(vec![0.0; mlp.total]),
+                    HostTensor::F32(vec![0.0; mlp.dims[0] + 1]),
+                ],
+            )
+            .unwrap_err();
+        assert!(format!("{err}").contains("multiple"), "{err}");
+        // i32 where f32 expected
+        let err = b
+            .exec(
+                "linear_grads",
+                &[
+                    HostTensor::I32(vec![1]),
+                    HostTensor::F32(vec![0.0]),
+                    HostTensor::F32(vec![0.0]),
+                ],
+            )
+            .unwrap_err();
+        assert!(format!("{err}").contains("f32"), "{err}");
+    }
+
+    #[test]
+    fn open_backend_falls_back_to_native() {
+        let dir = std::env::temp_dir().join("sonew_no_artifacts_here");
+        let b = open_backend(&dir).unwrap();
+        if !artifacts_available(&dir) {
+            assert_eq!(b.name(), "native");
+        }
+        assert!(b.available());
+    }
+}

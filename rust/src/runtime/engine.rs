@@ -1,6 +1,8 @@
 //! PJRT execution engine: loads the AOT HLO-text artifacts and runs them
 //! from the Rust hot path. This is the only place the `xla` crate is
-//! touched; the rest of the coordinator sees plain `Vec<f32>` buffers.
+//! touched (the module only compiles with the `xla` cargo feature); the
+//! rest of the coordinator sees the [`Backend`](super::backend::Backend)
+//! trait and plain `Vec<f32>` buffers.
 //!
 //! Artifacts are compiled lazily on first use and cached for the lifetime
 //! of the engine (compilation of the larger grads programs takes O(100ms);
@@ -12,38 +14,8 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
+use super::backend::HostTensor;
 use super::manifest::{ArtifactSpec, DType, Manifest};
-
-/// A host-side tensor handed to / received from an artifact.
-#[derive(Debug, Clone)]
-pub enum HostTensor {
-    F32(Vec<f32>),
-    I32(Vec<i32>),
-}
-
-impl HostTensor {
-    pub fn as_f32(&self) -> Result<&[f32]> {
-        match self {
-            HostTensor::F32(v) => Ok(v),
-            HostTensor::I32(_) => bail!("expected f32 tensor, got i32"),
-        }
-    }
-    pub fn into_f32(self) -> Result<Vec<f32>> {
-        match self {
-            HostTensor::F32(v) => Ok(v),
-            HostTensor::I32(_) => bail!("expected f32 tensor, got i32"),
-        }
-    }
-    pub fn len(&self) -> usize {
-        match self {
-            HostTensor::F32(v) => v.len(),
-            HostTensor::I32(v) => v.len(),
-        }
-    }
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
-    }
-}
 
 /// Loads `artifacts/` once; executes programs by name.
 pub struct Engine {
@@ -63,20 +35,6 @@ impl Engine {
         let client = xla::PjRtClient::cpu()
             .map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
         Ok(Self { dir, manifest, client, exes: Mutex::new(HashMap::new()) })
-    }
-
-    /// Default artifacts location relative to the repo root, overridable
-    /// with `SONEW_ARTIFACTS`.
-    pub fn default_dir() -> PathBuf {
-        std::env::var_os("SONEW_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|| PathBuf::from("artifacts"))
-    }
-
-    /// True if an artifacts directory with a manifest exists (tests use
-    /// this to skip gracefully before `make artifacts`).
-    pub fn available(dir: impl AsRef<Path>) -> bool {
-        dir.as_ref().join("manifest.txt").exists()
     }
 
     pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
@@ -150,7 +108,16 @@ impl Engine {
             .execute::<xla::Literal>(&literals)
             .map_err(|e| anyhow::anyhow!("executing {name}: {e}"))?;
         drop(literals);
-        let out = result[0][0]
+        // A failed execution can surface as an empty result set rather
+        // than an Err from PJRT; turn it into a clean error instead of
+        // panicking in the hot loop.
+        let buffer = result
+            .first()
+            .and_then(|replica| replica.first())
+            .ok_or_else(|| {
+                anyhow::anyhow!("executing {name}: PJRT returned an empty result set")
+            })?;
+        let out = buffer
             .to_literal_sync()
             .map_err(|e| anyhow::anyhow!("fetching {name} result: {e}"))?;
         // aot.py lowers with return_tuple=True: output is always a tuple.
@@ -189,22 +156,4 @@ impl Engine {
         Ok(outs)
     }
 
-    /// Convenience: execute a grads artifact `(params, batch...) ->
-    /// (loss, grads)`.
-    pub fn loss_and_grad(
-        &self,
-        name: &str,
-        params: &[f32],
-        batch: Vec<HostTensor>,
-    ) -> Result<(f32, Vec<f32>)> {
-        let mut inputs = vec![HostTensor::F32(params.to_vec())];
-        inputs.extend(batch);
-        let mut out = self.exec(name, &inputs)?;
-        if out.len() != 2 {
-            bail!("{name}: expected (loss, grads)");
-        }
-        let grads = out.pop().unwrap().into_f32()?;
-        let loss = out.pop().unwrap().into_f32()?;
-        Ok((loss[0], grads))
-    }
 }

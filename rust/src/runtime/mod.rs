@@ -1,13 +1,24 @@
-//! Runtime layer: PJRT client wrapper that loads and executes the AOT
-//! HLO-text artifacts produced by `python/compile/aot.py`.
+//! Runtime layer: the pluggable [`Backend`] seam over named gradient /
+//! optimizer programs, with a pure-Rust [`NativeBackend`] (always built)
+//! and a PJRT engine for the AOT HLO artifacts produced by
+//! `python/compile/aot.py` (behind the `xla` cargo feature).
 //!
-//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
-//! protos with 64-bit instruction ids that the pinned xla_extension 0.5.1
-//! rejects; `HloModuleProto::from_text_file` reassigns ids and round-trips
-//! cleanly.
+//! Interchange on the PJRT side is HLO *text* (not serialized protos):
+//! jax >= 0.5 emits protos with 64-bit instruction ids that the pinned
+//! xla_extension 0.5.1 rejects; `HloModuleProto::from_text_file`
+//! reassigns ids and round-trips cleanly.
 
+pub mod backend;
+#[cfg(feature = "xla")]
 pub mod engine;
 pub mod manifest;
 
-pub use engine::{Engine, HostTensor};
+pub use backend::{
+    artifacts_available, default_artifacts_dir, open_backend, preferred_backend_name,
+    Backend, HostTensor, NativeBackend,
+};
+#[cfg(feature = "xla")]
+pub use backend::PjrtBackend;
+#[cfg(feature = "xla")]
+pub use engine::Engine;
 pub use manifest::{ArtifactSpec, DType, Layout, Manifest, Port, TensorSpec};

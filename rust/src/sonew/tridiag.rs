@@ -163,6 +163,14 @@ impl TridiagState {
         precision: Precision,
     ) {
         let n = self.hd.len();
+        assert_eq!(g.len(), n, "step_diag: gradient length != state length");
+        assert_eq!(u.len(), n, "step_diag: direction length != state length");
+        // diag mode drops no edges; clear the diagnostic so a prior
+        // tridiag/banded step's count doesn't leak across modes
+        self.last_dropped = 0;
+        if n == 0 {
+            return;
+        }
         self.t += 1;
         let (decay, inno) = mode.coeffs(self.t);
         for j in 0..n {
@@ -305,6 +313,53 @@ mod tests {
         assert!((u[0] - 0.5).abs() < 1e-5);
         assert!((u[1] + 1.0).abs() < 1e-4);
         assert_eq!(u[3], 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "gradient length")]
+    fn diag_step_rejects_mismatched_gradient() {
+        let mut st = TridiagState::new(8, None);
+        let mut u = vec![0.0; 8];
+        let g = vec![1.0f32; 5]; // wrong length
+        st.step_diag(&g, &mut u, LambdaMode::Ema(0.9), 1e-6, Precision::F32);
+    }
+
+    #[test]
+    #[should_panic(expected = "direction length")]
+    fn diag_step_rejects_mismatched_direction() {
+        let mut st = TridiagState::new(8, None);
+        let mut u = vec![0.0; 3]; // wrong length
+        let g = vec![1.0f32; 8];
+        st.step_diag(&g, &mut u, LambdaMode::Ema(0.9), 1e-6, Precision::F32);
+    }
+
+    #[test]
+    fn diag_step_handles_empty_state() {
+        let mut st = TridiagState::new(0, None);
+        let mut u: Vec<f32> = vec![];
+        st.step_diag(&[], &mut u, LambdaMode::Ema(0.9), 1e-6, Precision::F32);
+        assert_eq!(st.last_dropped, 0);
+    }
+
+    #[test]
+    fn diag_step_resets_dropped_diagnostic() {
+        // force Algorithm-3 drops with a tridiag step, then check the
+        // diag step clears the stale diagnostic
+        let n = 32;
+        let mut st = TridiagState::new(n, None);
+        let mut u = vec![0.0; n];
+        let mut rng = Rng::new(4);
+        for _ in 0..10 {
+            let mut g = rng.normal_vec(n);
+            for j in (1..n).step_by(2) {
+                g[j] = g[j - 1];
+            }
+            st.step(&g, &mut u, LambdaMode::Ema(0.99), 0.0, 1e-12, Precision::F32);
+        }
+        assert!(st.last_dropped > 0, "setup never dropped an edge");
+        let g = rng.normal_vec(n);
+        st.step_diag(&g, &mut u, LambdaMode::Ema(0.99), 1e-6, Precision::F32);
+        assert_eq!(st.last_dropped, 0, "diag step must clear the diagnostic");
     }
 
     #[test]

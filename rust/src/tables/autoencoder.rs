@@ -1,16 +1,17 @@
 //! Autoencoder benchmark harness — regenerates Tables 2/3/4/5/7/8 and the
 //! loss-curve CSVs behind Figures 2/4/7 (see DESIGN.md §4).
 //!
-//! Gradients come from the AOT HLO artifact (`ae_grads_b{B}`) when one
-//! matching the requested batch exists, otherwise from the native MLP —
-//! both compute the same model (parity asserted by integration tests).
+//! Gradients come from the runtime backend's `ae_grads_b{B}` program —
+//! the PJRT artifact when built with the `xla` feature and `make
+//! artifacts` has run, the native MLP otherwise. Both compute the same
+//! model (parity asserted by integration tests).
 
 use crate::coordinator::{train_single, Metrics, Schedule, TrainConfig};
-use crate::coordinator::trainer::{HloAeProvider, NativeAeProvider};
+use crate::coordinator::trainer::{BackendAeProvider, NativeAeProvider};
 use crate::data::SynthImages;
 use crate::models::Mlp;
 use crate::optim::{build, HyperParams, MatBlocks, Opt, OptKind};
-use crate::runtime::Engine;
+use crate::runtime::{default_artifacts_dir, open_backend};
 use crate::util::io::{fmt_f, Csv, MdTable};
 use crate::util::Precision;
 
@@ -195,20 +196,27 @@ pub fn run_one(kind: OptKind, cfg: &AeBenchConfig, band_override: Option<usize>)
         verbose: cfg.verbose,
     };
 
-    // prefer the matching HLO artifact (full model only)
-    let art_dir = Engine::default_dir();
-    let artifact = format!("ae_grads_b{}", cfg.batch);
-    let metrics = if cfg.full
-        && !cfg.force_native
-        && Engine::available(&art_dir)
-        && Engine::open(&art_dir)
-            .map(|e| e.manifest.artifact(&artifact).is_ok())
-            .unwrap_or(false)
-    {
-        let engine = Engine::open(&art_dir)?;
-        let provider = HloAeProvider {
-            engine,
-            artifact,
+    // run the full model through the backend's grads program (PJRT when
+    // artifacts exist, native otherwise); the small model feeds pooled
+    // images through the NativeAeProvider directly
+    let program = format!("ae_grads_b{}", cfg.batch);
+    let backend = if cfg.full && !cfg.force_native {
+        // a corrupt artifacts directory degrades to the native gradient
+        // path (with a warning) rather than aborting the benchmark
+        match open_backend(default_artifacts_dir()) {
+            Ok(b) => b.supports(&program).then_some(b),
+            Err(e) => {
+                eprintln!("[ae] artifacts backend unavailable ({e:#}); using native gradients");
+                None
+            }
+        }
+    } else {
+        None
+    };
+    let metrics = if let Some(backend) = backend {
+        let provider = BackendAeProvider {
+            backend,
+            program,
             images: SynthImages::new(cfg.seed + 1),
             batch: cfg.batch,
         };

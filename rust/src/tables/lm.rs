@@ -6,14 +6,30 @@
 //! for SONew to reach AdaFactor's final loss (paper: 26% fewer) and
 //! relative final-loss gap (paper: ~1.7%).
 
-use crate::coordinator::trainer::HloLmProvider;
+use crate::coordinator::trainer::BackendLmProvider;
 use crate::coordinator::{Metrics, Schedule, TrainConfig};
 use crate::data::LmCorpus;
 use crate::linalg::norm2;
 use crate::optim::first_order::Adam;
 use crate::optim::{build, Direction, HyperParams, OptKind};
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::{
+    default_artifacts_dir, open_backend, ArtifactSpec, Backend, HostTensor, Layout,
+};
 use crate::util::io::{fmt_f, Csv, MdTable};
+
+/// The LM experiment is artifact-driven (there is no native transformer):
+/// pull the grads spec and parameter layout out of the backend's
+/// manifest, or explain exactly what is missing.
+fn lm_specs(backend: &dyn Backend) -> anyhow::Result<(ArtifactSpec, Layout)> {
+    let man = backend.manifest().ok_or_else(|| {
+        anyhow::anyhow!(
+            "LM pretraining needs the AOT artifacts: build with `--features xla` \
+             and run `make artifacts` (current backend: {})",
+            backend.name()
+        )
+    })?;
+    Ok((man.artifact("lm_grads")?.clone(), man.layout("lm")?.clone()))
+}
 
 pub struct LmRunConfig {
     pub steps: u64,
@@ -33,13 +49,12 @@ impl Default for LmRunConfig {
 
 /// Train the LM with AdaFactor (baseline) — returns the metrics curve.
 pub fn run_adafactor(cfg: &LmRunConfig) -> anyhow::Result<Metrics> {
-    let engine = Engine::open(Engine::default_dir())?;
-    let spec = engine.spec("lm_grads")?.clone();
+    let backend = open_backend(default_artifacts_dir())?;
+    let (spec, layout) = lm_specs(backend.as_ref())?;
     let n = spec.inputs[0].elements();
     let batch = spec.meta_usize("batch").unwrap_or(8);
     let seq = spec.meta_usize("seq").unwrap_or(128);
     let vocab = spec.meta_usize("vocab").unwrap_or(512);
-    let layout = engine.manifest.layout("lm")?.clone();
     let blocks = crate::optim::blocks_of(&layout);
     let mats = crate::tables::autoencoder::cap_mat_blocks(
         &crate::optim::mat_blocks_of(&layout),
@@ -48,9 +63,9 @@ pub fn run_adafactor(cfg: &LmRunConfig) -> anyhow::Result<Metrics> {
     let hp = HyperParams { beta1: 0.9, beta2: 0.99, eps: 1e-8, weight_decay: 1e-3, ..Default::default() };
     let mut opt = build(OptKind::AdaFactor, n, &blocks, &mats, &hp);
     let mut params = init_lm_params(&layout, 0);
-    let provider = HloLmProvider {
-        engine,
-        artifact: "lm_grads".into(),
+    let provider = BackendLmProvider {
+        backend,
+        program: "lm_grads".into(),
         corpus: LmCorpus::new(vocab, 42),
         batch,
         seq,
@@ -69,13 +84,12 @@ pub fn run_adafactor(cfg: &LmRunConfig) -> anyhow::Result<Metrics> {
 /// Train the LM with tridiag-SONew; the preconditioner runs through the
 /// `sonew_tridiag_lm` HLO artifact (Pallas L1) when `sonew_via_hlo`.
 pub fn run_sonew(cfg: &LmRunConfig) -> anyhow::Result<Metrics> {
-    let engine = Engine::open(Engine::default_dir())?;
-    let spec = engine.spec("lm_grads")?.clone();
+    let backend = open_backend(default_artifacts_dir())?;
+    let (spec, layout) = lm_specs(backend.as_ref())?;
     let n = spec.inputs[0].elements();
     let batch = spec.meta_usize("batch").unwrap_or(8);
     let seq = spec.meta_usize("seq").unwrap_or(128);
     let vocab = spec.meta_usize("vocab").unwrap_or(512);
-    let layout = engine.manifest.layout("lm")?.clone();
     let tensor_ids = layout.tensor_ids();
     let blocks = crate::optim::blocks_of(&layout);
 
@@ -97,7 +111,7 @@ pub fn run_sonew(cfg: &LmRunConfig) -> anyhow::Result<Metrics> {
     for step in 0..cfg.steps {
         let (toks, tgts) = corpus.batch(batch, seq);
         let t_grad = std::time::Instant::now();
-        let (loss, mut grads) = engine.loss_and_grad(
+        let (loss, mut grads) = backend.loss_and_grad(
             "lm_grads",
             &params,
             vec![HostTensor::I32(toks), HostTensor::I32(tgts)],
@@ -115,7 +129,7 @@ pub fn run_sonew(cfg: &LmRunConfig) -> anyhow::Result<Metrics> {
         let t_opt = std::time::Instant::now();
         let mut u = vec![0.0f32; n];
         if cfg.sonew_via_hlo {
-            let out = engine.exec(
+            let out = backend.exec(
                 "sonew_tridiag_lm",
                 &[
                     HostTensor::F32(std::mem::take(&mut hd)),

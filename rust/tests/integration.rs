@@ -1,35 +1,200 @@
-//! Cross-layer integration tests: the L3-native implementations against
-//! the L1/L2 AOT artifacts executed through PJRT. These are the tests
-//! that prove the three layers compose; they skip gracefully when
-//! `make artifacts` has not been run.
+//! Cross-layer integration tests, all driven through the runtime
+//! `Backend` trait object.
+//!
+//! The native-backend tests always run: a clean clone with no Python, no
+//! artifacts and no PJRT toolchain still trains end to end. The PJRT
+//! parity tests (L3-native implementations against the L1/L2 AOT
+//! artifacts) additionally require the `xla` cargo feature and a
+//! compiled `artifacts/` directory; they skip gracefully otherwise.
 
+use sonew::coordinator::trainer::BackendAeProvider;
+use sonew::coordinator::{train_single, Schedule, TrainConfig};
 use sonew::optim::{build, HyperParams, OptKind};
-use sonew::runtime::{Engine, HostTensor};
-use sonew::sonew::{LambdaMode, TridiagState};
-use sonew::util::prop::max_rel_err;
-use sonew::util::{Precision, Rng};
+use sonew::runtime::{Backend, HostTensor, NativeBackend};
+use sonew::util::Rng;
 
-fn engine() -> Option<Engine> {
-    let dir = Engine::default_dir();
-    if !Engine::available(&dir) {
+#[cfg(feature = "xla")]
+use sonew::sonew::{LambdaMode, TridiagState};
+#[cfg(feature = "xla")]
+use sonew::util::prop::max_rel_err;
+#[cfg(feature = "xla")]
+use sonew::util::Precision;
+
+/// 28x28 synth images average-pooled to the small AE's 14x14 input.
+fn pooled_small_batch(images: &mut sonew::data::SynthImages, batch: usize) -> Vec<f32> {
+    let (img, _) = images.batch(batch);
+    let mut x = Vec::with_capacity(batch * 196);
+    for r in 0..batch {
+        let row = img.row(r);
+        for oy in 0..14 {
+            for ox in 0..14 {
+                let mut acc = 0.0f32;
+                for dy in 0..2 {
+                    for dx in 0..2 {
+                        acc += row[(oy * 2 + dy) * 28 + ox * 2 + dx];
+                    }
+                }
+                x.push(acc / 4.0);
+            }
+        }
+    }
+    x
+}
+
+// ---------------------------------------------------------------------------
+// NativeBackend: always-on end-to-end coverage
+// ---------------------------------------------------------------------------
+
+/// The acceptance path: a real training loop where every gradient flows
+/// through `Backend::loss_and_grad` on the trait object, no artifacts
+/// required.
+#[test]
+fn native_backend_end_to_end_training_reduces_loss() {
+    let backend: Box<dyn Backend> = Box::new(NativeBackend::new());
+    assert!(backend.available());
+    let mlp = sonew::models::Mlp::autoencoder_small();
+    let mut rng = Rng::new(21);
+    let mut params = mlp.init(&mut rng);
+    let hp = HyperParams::default();
+    let mut opt = build(OptKind::Adam, mlp.total, &mlp.blocks(), &mlp.mat_blocks(), &hp);
+    let mut images = sonew::data::SynthImages::new(22);
+    let mut losses = Vec::new();
+    for _ in 0..15 {
+        let x = pooled_small_batch(&mut images, 16);
+        let (loss, g) = backend
+            .loss_and_grad("ae_small_grads_b16", &params, vec![HostTensor::F32(x)])
+            .unwrap();
+        assert_eq!(g.len(), mlp.total);
+        assert!(loss.is_finite());
+        opt.step(&mut params, &g, 5e-3);
+        losses.push(loss);
+    }
+    let first = losses[0];
+    let tail = losses[losses.len() - 3..].iter().sum::<f32>() / 3.0;
+    assert!(
+        tail < first,
+        "no progress through the backend: {first} -> {tail} ({losses:?})"
+    );
+}
+
+/// `open_backend` + `BackendAeProvider` + the coordinator's training loop
+/// compose over the trait object (full AE, native fallback backend).
+#[test]
+fn backend_provider_trains_through_coordinator() {
+    // a directory with no manifest forces the native fallback even on
+    // xla-enabled builds
+    let backend = sonew::runtime::open_backend(
+        std::env::temp_dir().join("sonew_definitely_missing_artifacts"),
+    )
+    .unwrap();
+    assert!(backend.available());
+    let program = "ae_grads_b4".to_string();
+    assert!(backend.supports(&program), "{} backend", backend.name());
+
+    let mlp = sonew::models::Mlp::autoencoder();
+    let mut rng = Rng::new(31);
+    let mut params = mlp.init(&mut rng);
+    let hp = HyperParams::default();
+    let mut opt = build(OptKind::Momentum, mlp.total, &mlp.blocks(), &mlp.mat_blocks(), &hp);
+    let cfg = TrainConfig {
+        steps: 2,
+        schedule: Schedule::Constant { lr: 1e-3 },
+        ..Default::default()
+    };
+    let provider = BackendAeProvider {
+        backend,
+        program,
+        images: sonew::data::SynthImages::new(32),
+        batch: 4,
+    };
+    let m = train_single(&mut params, &mut opt, provider, &cfg).unwrap();
+    assert_eq!(m.points.len(), 2);
+    assert!(m.points.iter().all(|p| p.loss.is_finite()));
+}
+
+/// Failure injection on the native backend: unknown programs and wrong
+/// shapes produce clean errors through the trait object, not panics.
+#[test]
+fn native_backend_rejects_bad_inputs() {
+    let backend: Box<dyn Backend> = Box::new(NativeBackend::new());
+    assert!(backend.exec("no_such_artifact", &[]).is_err());
+    assert!(!backend.supports("no_such_artifact"));
+    let err = backend
+        .exec("ae_small_grads_b16", &[HostTensor::F32(vec![1.0])])
+        .unwrap_err();
+    assert!(format!("{err}").contains("inputs"), "{err}");
+    // tridiag executes fine with 4 inputs but returns 3 outputs, which
+    // is not a (loss, grads) pair — the trait-default arity check fires
+    let t = vec![0.0f32; 4];
+    let err = backend
+        .loss_and_grad(
+            "sonew_tridiag_x",
+            &t,
+            vec![
+                HostTensor::F32(t.clone()),
+                HostTensor::F32(t.clone()),
+                HostTensor::F32(t.clone()),
+            ],
+        )
+        .unwrap_err();
+    assert!(format!("{err}").contains("outputs"), "{err}");
+}
+
+/// Grafted tridiag-SONew through the full optimizer stack trains the
+/// (native) small AE — the Table 2 pipeline end to end without artifacts.
+#[test]
+fn full_optimizer_stack_trains_small_ae() {
+    let mlp = sonew::models::Mlp::autoencoder_small();
+    let mut rng = Rng::new(2);
+    let mut params = mlp.init(&mut rng);
+    let hp = HyperParams { gamma: 1e-8, ..Default::default() };
+    let mut opt = build(OptKind::TridiagSonew, mlp.total, &mlp.blocks(), &mlp.mat_blocks(), &hp);
+    let mut images = sonew::data::SynthImages::new(9);
+    let mut first = None;
+    let mut last = 0.0;
+    for _ in 0..25 {
+        let data = pooled_small_batch(&mut images, 32);
+        let xm = sonew::linalg::Mat::from_rows(32, 196, data);
+        let (loss, g) = mlp.loss_and_grad(&params, &xm);
+        opt.step(&mut params, &g, 5e-3);
+        if first.is_none() {
+            first = Some(loss);
+        }
+        last = loss;
+    }
+    assert!(last < 0.95 * first.unwrap(), "{:?} -> {last}", first);
+}
+
+// ---------------------------------------------------------------------------
+// PJRT parity (xla feature + artifacts)
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "xla")]
+fn pjrt() -> Option<Box<dyn Backend>> {
+    let dir = sonew::runtime::default_artifacts_dir();
+    if !sonew::runtime::artifacts_available(&dir) {
         eprintln!("skipping: no artifacts (run `make artifacts`)");
         return None;
     }
-    Some(Engine::open(dir).expect("open artifacts"))
+    let backend = sonew::runtime::open_backend(dir).expect("open artifacts");
+    assert_eq!(backend.name(), "pjrt");
+    Some(backend)
 }
 
 /// The Pallas tridiag kernel inside the HLO artifact must agree with the
 /// native Rust kernel over a multi-step (H, g) stream — the SONew hot
 /// path exists twice by design (DESIGN.md §6) and must be bit-comparable.
+#[cfg(feature = "xla")]
 #[test]
 fn sonew_hlo_pallas_matches_native() {
-    let Some(engine) = engine() else { return };
-    let spec = engine.spec("sonew_tridiag_ae_small").unwrap().clone();
+    let Some(backend) = pjrt() else { return };
+    let man = backend.manifest().expect("pjrt backend exposes its manifest");
+    let spec = man.artifact("sonew_tridiag_ae_small").unwrap().clone();
     let n = spec.inputs[0].elements();
     let beta2 = spec.meta_f64("beta2").unwrap() as f32;
     let eps = spec.meta_f64("eps").unwrap() as f32;
     let gamma = spec.meta_f64("gamma").unwrap_or(0.0) as f32;
-    let tids = engine.manifest.layout("ae_small").unwrap().tensor_ids();
+    let tids = man.layout("ae_small").unwrap().tensor_ids();
 
     let mut native = TridiagState::new(n, Some(&tids));
     let mut hd = vec![0.0f32; n];
@@ -39,7 +204,7 @@ fn sonew_hlo_pallas_matches_native() {
 
     for step in 0..4 {
         let g = rng.normal_vec(n);
-        let out = engine
+        let out = backend
             .exec(
                 "sonew_tridiag_ae_small",
                 &[
@@ -84,10 +249,12 @@ fn sonew_hlo_pallas_matches_native() {
 
 /// The HLO grads program and the native Rust MLP compute the same model:
 /// identical parameters + identical batch => matching loss and gradients.
+#[cfg(feature = "xla")]
 #[test]
 fn hlo_grads_match_native_mlp() {
-    let Some(engine) = engine() else { return };
-    let spec = engine.spec("ae_small_grads_b64").unwrap().clone();
+    let Some(backend) = pjrt() else { return };
+    let man = backend.manifest().unwrap();
+    let spec = man.artifact("ae_small_grads_b64").unwrap().clone();
     let n = spec.inputs[0].elements();
     let batch_elems = spec.inputs[1].elements();
     let pixels = spec.inputs[1].dims[1];
@@ -99,7 +266,7 @@ fn hlo_grads_match_native_mlp() {
     let params = mlp.init(&mut rng);
     let x_flat = rng.uniform_vec(batch_elems, 0.0, 1.0);
 
-    let (loss_hlo, grads_hlo) = engine
+    let (loss_hlo, grads_hlo) = backend
         .loss_and_grad("ae_small_grads_b64", &params, vec![HostTensor::F32(x_flat.clone())])
         .unwrap();
     let x = sonew::linalg::Mat::from_rows(batch, pixels, x_flat);
@@ -118,14 +285,16 @@ fn hlo_grads_match_native_mlp() {
 
 /// End-to-end smoke on the deployment path: HLO grads + HLO Pallas SONew
 /// update + rust coordinator reduce the AE loss.
+#[cfg(feature = "xla")]
 #[test]
 fn hlo_end_to_end_training_reduces_loss() {
-    let Some(engine) = engine() else { return };
-    let spec = engine.spec("ae_small_grads_b64").unwrap().clone();
+    let Some(backend) = pjrt() else { return };
+    let man = backend.manifest().unwrap();
+    let spec = man.artifact("ae_small_grads_b64").unwrap().clone();
     let n = spec.inputs[0].elements();
     let pixels = spec.inputs[1].dims[1];
     let batch = spec.inputs[1].elements() / pixels;
-    let tids = engine.manifest.layout("ae_small").unwrap().tensor_ids();
+    let tids = man.layout("ae_small").unwrap().tensor_ids();
 
     let mlp = sonew::models::Mlp::autoencoder_small();
     let mut rng = Rng::new(7);
@@ -137,27 +306,11 @@ fn hlo_end_to_end_training_reduces_loss() {
     let mut first = None;
     let mut last = 0.0f32;
     for _ in 0..12 {
-        // 28x28 synth images pooled to the small AE's 14x14 input
-        let (img, _) = images.batch(batch);
-        let mut x = Vec::with_capacity(batch * pixels);
-        for r in 0..batch {
-            let row = img.row(r);
-            for oy in 0..14 {
-                for ox in 0..14 {
-                    let mut acc = 0.0;
-                    for dy in 0..2 {
-                        for dx in 0..2 {
-                            acc += row[(oy * 2 + dy) * 28 + ox * 2 + dx];
-                        }
-                    }
-                    x.push(acc / 4.0);
-                }
-            }
-        }
-        let (loss, grads) = engine
+        let x = pooled_small_batch(&mut images, batch);
+        let (loss, grads) = backend
             .loss_and_grad("ae_small_grads_b64", &params, vec![HostTensor::F32(x)])
             .unwrap();
-        let out = engine
+        let out = backend
             .exec(
                 "sonew_tridiag_ae_small",
                 &[
@@ -196,16 +349,18 @@ fn hlo_end_to_end_training_reduces_loss() {
 }
 
 /// Banded artifact parity on the small AE.
+#[cfg(feature = "xla")]
 #[test]
 fn sonew_banded_hlo_matches_native() {
-    let Some(engine) = engine() else { return };
-    let Ok(spec) = engine.spec("sonew_band4_ae_small") else { return };
+    let Some(backend) = pjrt() else { return };
+    let man = backend.manifest().unwrap();
+    let Ok(spec) = man.artifact("sonew_band4_ae_small") else { return };
     let spec = spec.clone();
     let n = spec.inputs[1].elements();
     let b = spec.inputs[0].dims[0] - 1;
     let beta2 = spec.meta_f64("beta2").unwrap() as f32;
     let eps = spec.meta_f64("eps").unwrap() as f32;
-    let tids = engine.manifest.layout("ae_small").unwrap().tensor_ids();
+    let tids = man.layout("ae_small").unwrap().tensor_ids();
 
     let mut native = sonew::sonew::BandedState::new(n, b, Some(&tids));
     let mut diags = vec![0.0f32; (b + 1) * n];
@@ -213,7 +368,7 @@ fn sonew_banded_hlo_matches_native() {
     let mut rng = Rng::new(13);
     for step in 0..2 {
         let g = rng.normal_vec(n);
-        let out = engine
+        let out = backend
             .exec(
                 "sonew_band4_ae_small",
                 &[
@@ -242,18 +397,20 @@ fn sonew_banded_hlo_matches_native() {
 }
 
 /// Failure injection: wrong shapes and unknown artifacts produce clean
-/// errors, not aborts.
+/// errors through the PJRT backend, not aborts.
+#[cfg(feature = "xla")]
 #[test]
 fn engine_rejects_bad_inputs() {
-    let Some(engine) = engine() else { return };
-    assert!(engine.exec("no_such_artifact", &[]).is_err());
-    let err = engine
+    let Some(backend) = pjrt() else { return };
+    assert!(backend.exec("no_such_artifact", &[]).is_err());
+    let err = backend
         .exec("sonew_tridiag_ae_small", &[HostTensor::F32(vec![1.0])])
         .unwrap_err();
     assert!(format!("{err}").contains("inputs"), "{err}");
-    let spec = engine.spec("sonew_tridiag_ae_small").unwrap().clone();
+    let man = backend.manifest().unwrap();
+    let spec = man.artifact("sonew_tridiag_ae_small").unwrap().clone();
     let n = spec.inputs[0].elements();
-    let err = engine
+    let err = backend
         .exec(
             "sonew_tridiag_ae_small",
             &[
@@ -265,45 +422,4 @@ fn engine_rejects_bad_inputs() {
         )
         .unwrap_err();
     assert!(format!("{err}").contains("elements"), "{err}");
-}
-
-/// Grafted tridiag-SONew through the full optimizer stack trains the
-/// (native) small AE — the Table 2 pipeline end to end without artifacts.
-#[test]
-fn full_optimizer_stack_trains_small_ae() {
-    let mlp = sonew::models::Mlp::autoencoder_small();
-    let mut rng = Rng::new(2);
-    let mut params = mlp.init(&mut rng);
-    let hp = HyperParams { gamma: 1e-8, ..Default::default() };
-    let mut opt = build(OptKind::TridiagSonew, mlp.total, &mlp.blocks(), &mlp.mat_blocks(), &hp);
-    let mut images = sonew::data::SynthImages::new(9);
-    let mut first = None;
-    let mut last = 0.0;
-    for _ in 0..25 {
-        let (x, _) = images.batch(32);
-        // pool to 14x14
-        let mut data = Vec::with_capacity(32 * 196);
-        for r in 0..32 {
-            let row = x.row(r);
-            for oy in 0..14 {
-                for ox in 0..14 {
-                    let mut acc = 0.0;
-                    for dy in 0..2 {
-                        for dx in 0..2 {
-                            acc += row[(oy * 2 + dy) * 28 + ox * 2 + dx];
-                        }
-                    }
-                    data.push(acc / 4.0);
-                }
-            }
-        }
-        let xm = sonew::linalg::Mat::from_rows(32, 196, data);
-        let (loss, g) = mlp.loss_and_grad(&params, &xm);
-        opt.step(&mut params, &g, 5e-3);
-        if first.is_none() {
-            first = Some(loss);
-        }
-        last = loss;
-    }
-    assert!(last < 0.95 * first.unwrap(), "{:?} -> {last}", first);
 }
