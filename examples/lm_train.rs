@@ -1,8 +1,10 @@
 //! End-to-end Figure-3 driver: pretrain the transformer LM on the
-//! synthetic corpus with AdaFactor vs tridiag-SONew, gradients AND the
-//! SONew update both executing as AOT HLO programs through PJRT (the
-//! Pallas L1 kernel is inside `sonew_tridiag_lm.hlo.txt`). Python never
-//! runs. Requires `make artifacts`.
+//! synthetic corpus with AdaFactor vs tridiag-SONew. Hermetic on a clean
+//! clone — gradients run through the native transformer
+//! (`models::transformer`) and the SONew update through the native
+//! tridiag kernel. With `--features xla` + `make artifacts` the same
+//! driver executes the AOT HLO programs through PJRT instead (the Pallas
+//! L1 kernel is inside `sonew_tridiag_lm.hlo.txt`).
 //!
 //!     cargo run --release --example lm_train -- --steps 200 --verbose
 use sonew::cli::Args;
@@ -10,12 +12,5 @@ use sonew::tables::lm::{run, LmRunConfig};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse();
-    let cfg = LmRunConfig {
-        steps: args.u64_or("steps", 200),
-        lr: args.f32_or("lr", 3e-3),
-        log_every: args.u64_or("log-every", 5),
-        verbose: !args.has("quiet"),
-        sonew_via_hlo: !args.has("native-sonew"),
-    };
-    run(&cfg)
+    run(&LmRunConfig::from_args(&args, 200, true))
 }

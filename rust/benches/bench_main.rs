@@ -7,12 +7,16 @@
 //!           "~3% slower per step" claim, §1)
 //!   [kernel] native SONew kernel throughput (GB/s of parameter state)
 //!   [backend] grads-program dispatch overhead through the Backend trait
+//!   [lm]    native transformer lm_grads step cost (Figure-3 model), so
+//!           the LM forward/backward is tracked alongside the tridiag
+//!           kernel it feeds
 //!   [hlo]   PJRT execution overhead of the AOT artifacts (xla feature +
 //!           artifacts present; skipped otherwise)
 //!
 //!     cargo bench            # all sections
 //!     cargo bench -- t1      # one section
 
+use sonew::models::{LmConfig, Transformer};
 use sonew::optim::{build, HyperParams, OptKind};
 use sonew::runtime::{Backend, HostTensor, NativeBackend};
 use sonew::sonew::{BandedState, LambdaMode, TridiagState};
@@ -94,6 +98,51 @@ fn main() {
                     .unwrap();
             }
         });
+        println!("{}", r.report());
+    }
+
+    if run("lm") {
+        println!("== [lm] native transformer lm_grads (Figure-3 model) ==");
+        let backend = NativeBackend::new();
+        // scaled-down config: layer-stack + dispatch overhead
+        let small = Transformer::new(LmConfig::small());
+        let params = small.init(5);
+        let mut corpus = sonew::data::LmCorpus::new(small.cfg.vocab, 6);
+        let (toks, tgts) = corpus.batch(4, small.cfg.seq);
+        let r = bench("native lm_small grads b4", 5, 5, |k| {
+            for _ in 0..k {
+                backend
+                    .loss_and_grad(
+                        "lm_small_grads",
+                        &params,
+                        vec![HostTensor::I32(toks.clone()), HostTensor::I32(tgts.clone())],
+                    )
+                    .unwrap();
+            }
+        });
+        println!("{}", r.report());
+        // the Figure-3 model itself: the per-step grads cost that the
+        // tridiag-SONew optimizer step rides on top of
+        let full = Transformer::new(LmConfig::figure3());
+        let params = full.init(7);
+        let mut corpus = sonew::data::LmCorpus::new(full.cfg.vocab, 8);
+        let (toks, tgts) = corpus.batch(2, full.cfg.seq);
+        let r = bench(
+            &format!("native lm grads b2 s{} n={}", full.cfg.seq, full.total),
+            3,
+            2,
+            |k| {
+                for _ in 0..k {
+                    backend
+                        .loss_and_grad(
+                            "lm_grads",
+                            &params,
+                            vec![HostTensor::I32(toks.clone()), HostTensor::I32(tgts.clone())],
+                        )
+                        .unwrap();
+                }
+            },
+        );
         println!("{}", r.report());
     }
 

@@ -191,7 +191,9 @@ impl GradProvider for BackendAeProvider {
     }
 }
 
-/// Backend language-model provider (Figure 3 driver).
+/// Backend language-model provider (Figure 3 driver): next-token batches
+/// from the synthetic corpus through any backend's `lm_grads` program —
+/// the native transformer (always available) or the AOT HLO artifact.
 pub struct BackendLmProvider {
     pub backend: Box<dyn crate::runtime::Backend>,
     pub program: String,
@@ -281,6 +283,34 @@ mod tests {
             let x = crate::linalg::Mat::from_rows(8, 49, data);
             Ok(self.mlp.loss_and_grad(params, &x))
         }
+    }
+
+    #[test]
+    fn lm_provider_trains_through_native_backend() {
+        // the Figure-3 wiring in miniature: corpus -> BackendLmProvider
+        // -> NativeBackend lm_small_grads -> coordinator loop
+        let model = crate::models::Transformer::new(crate::models::LmConfig::small());
+        let cfg_lm = model.cfg;
+        let mut params = model.init(3);
+        let hp = HyperParams::default();
+        let blocks = crate::optim::blocks_of(&model.layout);
+        let mats = crate::optim::mat_blocks_of(&model.layout);
+        let mut opt = build(OptKind::Adam, model.total, &blocks, &mats, &hp);
+        let provider = BackendLmProvider {
+            backend: Box::new(crate::runtime::NativeBackend::new()),
+            program: "lm_small_grads".into(),
+            corpus: crate::data::LmCorpus::new(cfg_lm.vocab, 11),
+            batch: 2,
+            seq: cfg_lm.seq,
+        };
+        let cfg = TrainConfig {
+            steps: 3,
+            schedule: Schedule::Constant { lr: 3e-3 },
+            ..Default::default()
+        };
+        let m = train_single(&mut params, &mut opt, provider, &cfg).unwrap();
+        assert_eq!(m.points.len(), 3);
+        assert!(m.points.iter().all(|p| p.loss.is_finite()));
     }
 
     #[test]

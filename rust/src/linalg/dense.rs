@@ -1,9 +1,14 @@
 //! Dense row-major matrices and the matmul kernels used by the native
 //! gradient engine (`models/`) and the Kronecker-factored optimizers.
 //!
-//! The hot kernel is `matmul_into`: i-k-j loop order with a contiguous
-//! inner j-loop so rustc autovectorizes, plus std::thread row-parallelism
-//! for large shapes (no rayon in the offline closure).
+//! The hot kernels are `matmul_into` and the transpose variants
+//! `matmul_tn` / `matmul_nt` (the layer-stack backward path: dW = x^T dz
+//! and dx = dz W^T): contiguous inner j-loops so rustc autovectorizes,
+//! plus std::thread row-chunked parallelism over the output matrix for
+//! large shapes (no rayon in the offline closure). The chunked workers
+//! keep every output element's accumulation order identical to the
+//! single-threaded kernels, so results are bitwise reproducible at any
+//! thread count.
 
 /// Row-major dense matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -136,37 +141,65 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
-/// C = A^T @ B  ((k x m)^T @ (k x n)) without materializing A^T.
-pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.rows, b.rows, "matmul_tn dims");
-    let (k, m, n) = (a.rows, a.cols, b.cols);
-    let mut c = Mat::zeros(m, n);
+/// Rows `lo..lo + c_chunk.len()/n` of C = A^T B, written at offset 0 of
+/// `c_chunk`. The kk-outer loop order accumulates each output element in
+/// the same order as the single-threaded kernel did, so the parallel
+/// split is bitwise-neutral.
+fn matmul_tn_rows(a: &[f32], b: &[f32], c_chunk: &mut [f32], lo: usize, k: usize, m: usize, n: usize) {
+    let rows = c_chunk.len() / n;
     for kk in 0..k {
-        let arow = &a.data[kk * m..(kk + 1) * m];
-        let brow = &b.data[kk * n..(kk + 1) * n];
-        for (i, &aki) in arow.iter().enumerate() {
+        let arow = &a[kk * m..(kk + 1) * m];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for r in 0..rows {
+            let aki = arow[lo + r];
             if aki == 0.0 {
                 continue;
             }
-            let crow = &mut c.data[i * n..(i + 1) * n];
+            let crow = &mut c_chunk[r * n..(r + 1) * n];
             for j in 0..n {
                 crow[j] += aki * brow[j];
             }
         }
     }
+}
+
+/// C = A^T @ B  ((k x m)^T @ (k x n)) without materializing A^T, with the
+/// same row-chunked worker splitting as `matmul_into` (this is dW = x^T dz
+/// on the layer-stack backward hot path).
+pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows, "matmul_tn dims");
+    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    let threads = hw_threads().min(m.max(1));
+    if flops < 2e6 || threads <= 1 {
+        matmul_tn_rows(&a.data, &b.data, &mut c.data, 0, k, m, n);
+        return c;
+    }
+    let chunk = m.div_ceil(threads);
+    let a_data = &a.data;
+    let b_data = &b.data;
+    std::thread::scope(|s| {
+        for (t, c_chunk) in c.data.chunks_mut(chunk * n).enumerate() {
+            let lo = t * chunk;
+            s.spawn(move || matmul_tn_rows(a_data, b_data, c_chunk, lo, k, m, n));
+        }
+    });
     c
 }
 
-/// C = A @ B^T  ((m x k) @ (n x k)^T) without materializing B^T.
-pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.cols, b.cols, "matmul_nt dims");
-    let (m, k, n) = (a.rows, a.cols, b.rows);
-    let mut c = Mat::zeros(m, n);
-    for i in 0..m {
-        let arow = &a.data[i * k..(i + 1) * k];
-        let crow = &mut c.data[i * n..(i + 1) * n];
+/// Rows `lo..lo + c_chunk.len()/n` of C = A B^T, written at offset 0 of
+/// `c_chunk` (each element is an independent dot product).
+fn matmul_nt_rows(a: &[f32], b: &[f32], c_chunk: &mut [f32], lo: usize, k: usize, n: usize) {
+    let rows = c_chunk.len() / n;
+    for r in 0..rows {
+        let arow = &a[(lo + r) * k..(lo + r + 1) * k];
+        let crow = &mut c_chunk[r * n..(r + 1) * n];
         for j in 0..n {
-            let brow = &b.data[j * k..(j + 1) * k];
+            let brow = &b[j * k..(j + 1) * k];
             let mut acc = 0.0f32;
             for kk in 0..k {
                 acc += arow[kk] * brow[kk];
@@ -174,6 +207,33 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
             crow[j] = acc;
         }
     }
+}
+
+/// C = A @ B^T  ((m x k) @ (n x k)^T) without materializing B^T, with the
+/// same row-chunked worker splitting as `matmul_into` (this is
+/// dx = dz W^T on the layer-stack backward hot path).
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_nt dims");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Mat::zeros(m, n);
+    if m == 0 || n == 0 {
+        return c;
+    }
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    let threads = hw_threads().min(m.max(1));
+    if flops < 2e6 || threads <= 1 {
+        matmul_nt_rows(&a.data, &b.data, &mut c.data, 0, k, n);
+        return c;
+    }
+    let chunk = m.div_ceil(threads);
+    let a_data = &a.data;
+    let b_data = &b.data;
+    std::thread::scope(|s| {
+        for (t, c_chunk) in c.data.chunks_mut(chunk * n).enumerate() {
+            let lo = t * chunk;
+            s.spawn(move || matmul_nt_rows(a_data, b_data, c_chunk, lo, k, n));
+        }
+    });
     c
 }
 
@@ -258,6 +318,41 @@ mod tests {
             let want2 = naive(&a2, &b2.transpose());
             assert_close(&matmul_nt(&a2, &b2).data, &want2.data, 1e-4, 1e-5, "nt");
         });
+    }
+
+    #[test]
+    fn tn_and_nt_parallel_paths() {
+        // shapes past the 2e6-flop threshold exercise the threaded split
+        let mut rng = crate::util::Rng::new(6);
+        let (m, k, n) = (300, 150, 70);
+        let a = Mat::from_rows(k, m, rng.normal_vec(k * m));
+        let b = Mat::from_rows(k, n, rng.normal_vec(k * n));
+        let want = naive(&a.transpose(), &b);
+        assert_close(&matmul_tn(&a, &b).data, &want.data, 1e-3, 1e-4, "tn-par");
+        let a2 = Mat::from_rows(m, k, rng.normal_vec(m * k));
+        let b2 = Mat::from_rows(n, k, rng.normal_vec(n * k));
+        let want2 = naive(&a2, &b2.transpose());
+        assert_close(&matmul_nt(&a2, &b2).data, &want2.data, 1e-3, 1e-4, "nt-par");
+    }
+
+    #[test]
+    fn tn_parallel_split_is_bitwise_neutral() {
+        // the chunked workers must reproduce the sequential kernel
+        // exactly (same per-element accumulation order)
+        let mut rng = crate::util::Rng::new(7);
+        let (m, k, n) = (256, 120, 80);
+        let a = Mat::from_rows(k, m, rng.normal_vec(k * m));
+        let b = Mat::from_rows(k, n, rng.normal_vec(k * n));
+        let par = matmul_tn(&a, &b);
+        let mut seq = Mat::zeros(m, n);
+        matmul_tn_rows(&a.data, &b.data, &mut seq.data, 0, k, m, n);
+        assert_eq!(par.data, seq.data);
+        let a2 = Mat::from_rows(m, k, rng.normal_vec(m * k));
+        let b2 = Mat::from_rows(n, k, rng.normal_vec(n * k));
+        let par2 = matmul_nt(&a2, &b2);
+        let mut seq2 = Mat::zeros(m, n);
+        matmul_nt_rows(&a2.data, &b2.data, &mut seq2.data, 0, k, n);
+        assert_eq!(par2.data, seq2.data);
     }
 
     #[test]

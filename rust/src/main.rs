@@ -3,6 +3,7 @@
 //!
 //! ```text
 //! sonew table t1|t6|t9|ae|f1-vit|f1-gnn|f3   # regenerate a paper artifact
+//! sonew lm --steps 60                        # Figure-3 LM run (native transformer)
 //! sonew train --model ae --opt tridiag-sonew --steps 100
 //! sonew sweep --opt adam --trials 20         # Table 12 protocol
 //! sonew list                                 # artifact inventory
@@ -26,18 +27,25 @@ fn run() -> Result<()> {
     let args = Args::parse();
     match args.positional.first().map(|s| s.as_str()) {
         Some("table") => table(&args),
+        Some("lm") => lm(&args),
         Some("train") => train(&args),
         Some("sweep") => sweep(&args),
         Some("list") => list(),
         _ => {
             println!(
-                "usage: sonew <table|train|sweep|list> [flags]\n\
+                "usage: sonew <table|lm|train|sweep|list> [flags]\n\
                  tables: t1 t6 t9 ae ae-band ae-batch ae-bf16 f1-vit f1-gnn f3\n\
                  see README.md for the full flag reference"
             );
             Ok(())
         }
     }
+}
+
+/// Figure-3 LM pretraining (AdaFactor vs tridiag-SONew) — hermetic via
+/// the native transformer; `sonew table f3` is the long-form alias.
+fn lm(args: &Args) -> Result<()> {
+    tables::lm::run(&tables::lm::LmRunConfig::from_args(args, 60, true))
 }
 
 fn table(args: &Args) -> Result<()> {
@@ -131,14 +139,7 @@ fn table(args: &Args) -> Result<()> {
             tables::vit_gnn::run(tables::vit_gnn::Proxy::Gnn, steps.max(120), 64)?;
         }
         "f3" => {
-            let cfg = tables::lm::LmRunConfig {
-                steps,
-                lr: args.f32_or("lr", 3e-3),
-                verbose: args.has("verbose"),
-                sonew_via_hlo: !args.has("native-sonew"),
-                ..Default::default()
-            };
-            tables::lm::run(&cfg)?;
+            tables::lm::run(&tables::lm::LmRunConfig::from_args(args, 60, false))?;
         }
         other => anyhow::bail!("unknown table {other:?}"),
     }

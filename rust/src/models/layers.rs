@@ -1,0 +1,756 @@
+//! The shared layer/tape model stack: every native model (the MLP
+//! autoencoder, the proxy classifiers, the decoder-only transformer LM)
+//! is a composition of [`Layer`]s that run forward into a [`Tape`] and
+//! backward from it, so there is exactly one backward implementation per
+//! layer kind instead of one hand-rolled loop per model/loss pairing.
+//!
+//! Conventions:
+//! * activations are row-major [`Mat`]s with one example (or one token
+//!   position, `rows = batch * seq`) per row;
+//! * a layer's parameters are a single contiguous `&[f32]` slice of the
+//!   model's flat parameter vector (weight first, then bias where one
+//!   exists — the python `Layout` order);
+//! * `forward` consumes its input and pushes whatever backward needs onto
+//!   the tape; `backward` pops in exact reverse order, accumulates (`+=`)
+//!   parameter gradients into its slice and returns the input gradient.
+
+use crate::linalg::{matmul, matmul_nt, matmul_tn, Mat};
+
+/// Stack of cached forward activations. Layers push during the forward
+/// pass and pop (in reverse) during backward; the strict stack discipline
+/// means arbitrarily nested compositions (residual blocks, the FFN's two
+/// dense layers) need no per-layer bookkeeping.
+#[derive(Debug, Default)]
+pub struct Tape {
+    stack: Vec<Mat>,
+}
+
+impl Tape {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, m: Mat) {
+        self.stack.push(m);
+    }
+
+    pub fn pop(&mut self) -> Mat {
+        self.stack.pop().expect("tape underflow: backward out of sync with forward")
+    }
+
+    pub fn len(&self) -> usize {
+        self.stack.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stack.is_empty()
+    }
+}
+
+/// A differentiable module over flat parameter slices.
+pub trait Layer {
+    /// Length of this layer's contiguous parameter slice.
+    fn n_params(&self) -> usize;
+
+    /// Forward: consume `x`, push backward caches, return the output.
+    /// `p` is exactly `n_params()` long.
+    fn forward(&self, p: &[f32], x: Mat, tape: &mut Tape) -> Mat;
+
+    /// Backward: consume the output gradient `dy`, pop this layer's
+    /// caches, accumulate parameter gradients into `g` (`+=`, so shared
+    /// parameters compose) and return the input gradient.
+    fn backward(&self, p: &[f32], dy: Mat, tape: &mut Tape, g: &mut [f32]) -> Mat;
+}
+
+/// Elementwise activation fused into [`Dense`] (the backward through the
+/// activation uses the cached value the forward already produced).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Act {
+    Linear,
+    Tanh,
+    /// tanh-approximated GELU (the transformer FFN's nonlinearity,
+    /// matching `jax.nn.gelu`'s default approximation).
+    Gelu,
+}
+
+const GELU_C0: f32 = 0.797_884_56; // sqrt(2 / pi)
+const GELU_C1: f32 = 0.044_715;
+
+#[inline]
+pub fn gelu(z: f32) -> f32 {
+    0.5 * z * (1.0 + (GELU_C0 * (z + GELU_C1 * z * z * z)).tanh())
+}
+
+#[inline]
+fn gelu_prime(z: f32) -> f32 {
+    let t = (GELU_C0 * (z + GELU_C1 * z * z * z)).tanh();
+    0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * GELU_C0 * (1.0 + 3.0 * GELU_C1 * z * z)
+}
+
+/// Fully-connected layer `y = act(x W [+ b])` with W stored row-major
+/// `(d_in x d_out)` and the optional bias immediately after it — the
+/// python `Layout` convention every checkpoint and optimizer block
+/// structure assumes.
+#[derive(Debug, Clone)]
+pub struct Dense {
+    pub d_in: usize,
+    pub d_out: usize,
+    pub bias: bool,
+    pub act: Act,
+}
+
+impl Dense {
+    pub fn new(d_in: usize, d_out: usize, bias: bool, act: Act) -> Self {
+        Self { d_in, d_out, bias, act }
+    }
+
+    fn weight(&self, p: &[f32]) -> Mat {
+        Mat::from_rows(self.d_in, self.d_out, p[..self.d_in * self.d_out].to_vec())
+    }
+}
+
+impl Layer for Dense {
+    fn n_params(&self) -> usize {
+        self.d_in * self.d_out + if self.bias { self.d_out } else { 0 }
+    }
+
+    fn forward(&self, p: &[f32], x: Mat, tape: &mut Tape) -> Mat {
+        assert_eq!(x.cols, self.d_in, "dense input width");
+        let w = self.weight(p);
+        let mut z = matmul(&x, &w);
+        if self.bias {
+            let bias = &p[self.d_in * self.d_out..];
+            for r in 0..z.rows {
+                for (zc, &bc) in z.data[r * z.cols..(r + 1) * z.cols]
+                    .iter_mut()
+                    .zip(bias)
+                {
+                    *zc += bc;
+                }
+            }
+        }
+        tape.push(x);
+        match self.act {
+            Act::Linear => z,
+            Act::Tanh => {
+                for v in &mut z.data {
+                    *v = v.tanh();
+                }
+                tape.push(z.clone());
+                z
+            }
+            Act::Gelu => {
+                tape.push(z.clone());
+                for v in &mut z.data {
+                    *v = gelu(*v);
+                }
+                z
+            }
+        }
+    }
+
+    fn backward(&self, p: &[f32], dy: Mat, tape: &mut Tape, g: &mut [f32]) -> Mat {
+        let mut dz = dy;
+        match self.act {
+            Act::Linear => {}
+            Act::Tanh => {
+                // cached activated output: tanh' = 1 - y^2
+                let y = tape.pop();
+                for (dv, &a) in dz.data.iter_mut().zip(&y.data) {
+                    *dv *= 1.0 - a * a;
+                }
+            }
+            Act::Gelu => {
+                // cached pre-activation
+                let z = tape.pop();
+                for (dv, &zi) in dz.data.iter_mut().zip(&z.data) {
+                    *dv *= gelu_prime(zi);
+                }
+            }
+        }
+        let x = tape.pop();
+        // dW = x^T dz ; db = column sums of dz ; dx = dz W^T
+        let dw = matmul_tn(&x, &dz);
+        for (gi, &v) in g[..dw.data.len()].iter_mut().zip(&dw.data) {
+            *gi += v;
+        }
+        if self.bias {
+            let boff = self.d_in * self.d_out;
+            for r in 0..dz.rows {
+                for (gb, &dc) in g[boff..boff + dz.cols]
+                    .iter_mut()
+                    .zip(&dz.data[r * dz.cols..(r + 1) * dz.cols])
+                {
+                    *gb += dc;
+                }
+            }
+        }
+        let w = self.weight(p);
+        matmul_nt(&dz, &w)
+    }
+}
+
+/// Token-embedding lookup. The input is a `rows x 1` matrix whose single
+/// column holds token ids (exact in f32 for every realistic vocab); the
+/// output is `rows x d`. Backward scatter-adds into the table and returns
+/// an empty gradient (ids are not differentiable).
+#[derive(Debug, Clone)]
+pub struct Embedding {
+    pub vocab: usize,
+    pub d: usize,
+}
+
+impl Layer for Embedding {
+    fn n_params(&self) -> usize {
+        self.vocab * self.d
+    }
+
+    fn forward(&self, p: &[f32], x: Mat, tape: &mut Tape) -> Mat {
+        assert_eq!(x.cols, 1, "embedding input is one id column");
+        let mut y = Mat::zeros(x.rows, self.d);
+        for r in 0..x.rows {
+            let id = x.data[r] as usize;
+            assert!(id < self.vocab, "token id {id} out of vocab {}", self.vocab);
+            y.data[r * self.d..(r + 1) * self.d]
+                .copy_from_slice(&p[id * self.d..(id + 1) * self.d]);
+        }
+        tape.push(x);
+        y
+    }
+
+    fn backward(&self, _p: &[f32], dy: Mat, tape: &mut Tape, g: &mut [f32]) -> Mat {
+        let x = tape.pop();
+        for r in 0..x.rows {
+            let id = x.data[r] as usize;
+            for (gv, &dv) in g[id * self.d..(id + 1) * self.d]
+                .iter_mut()
+                .zip(&dy.data[r * self.d..(r + 1) * self.d])
+            {
+                *gv += dv;
+            }
+        }
+        Mat::zeros(x.rows, 1)
+    }
+}
+
+/// Per-row layer normalization `y = (x - mu) / sqrt(var + eps) * g + b`
+/// with parameters `[g; b]` contiguous (gain first).
+#[derive(Debug, Clone)]
+pub struct LayerNorm {
+    pub d: usize,
+}
+
+/// Matches `model.py::TransformerLM._ln`.
+pub const LN_EPS: f32 = 1e-5;
+
+impl Layer for LayerNorm {
+    fn n_params(&self) -> usize {
+        2 * self.d
+    }
+
+    fn forward(&self, p: &[f32], x: Mat, tape: &mut Tape) -> Mat {
+        assert_eq!(x.cols, self.d, "layernorm width");
+        let d = self.d;
+        let (gain, bias) = p.split_at(d);
+        let mut y = Mat::zeros(x.rows, d);
+        let mut xhat = Mat::zeros(x.rows, d);
+        let mut rstd = Mat::zeros(x.rows, 1);
+        for r in 0..x.rows {
+            let row = &x.data[r * d..(r + 1) * d];
+            let mu = row.iter().sum::<f32>() / d as f32;
+            let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / d as f32;
+            let rs = 1.0 / (var + LN_EPS).sqrt();
+            rstd.data[r] = rs;
+            for j in 0..d {
+                let xh = (row[j] - mu) * rs;
+                xhat.data[r * d + j] = xh;
+                y.data[r * d + j] = xh * gain[j] + bias[j];
+            }
+        }
+        tape.push(xhat);
+        tape.push(rstd);
+        y
+    }
+
+    fn backward(&self, p: &[f32], dy: Mat, tape: &mut Tape, g: &mut [f32]) -> Mat {
+        let d = self.d;
+        let rstd = tape.pop();
+        let xhat = tape.pop();
+        let gain = &p[..d];
+        let mut dx = Mat::zeros(dy.rows, d);
+        for r in 0..dy.rows {
+            let dyr = &dy.data[r * d..(r + 1) * d];
+            let xhr = &xhat.data[r * d..(r + 1) * d];
+            // parameter grads: dg = sum_r dy * xhat ; db = sum_r dy
+            for j in 0..d {
+                g[j] += dyr[j] * xhr[j];
+                g[d + j] += dyr[j];
+            }
+            // dxhat = dy * g ; dx = rstd * (dxhat - mean(dxhat)
+            //                               - xhat * mean(dxhat * xhat))
+            let mut m1 = 0.0f32;
+            let mut m2 = 0.0f32;
+            for j in 0..d {
+                let dxh = dyr[j] * gain[j];
+                m1 += dxh;
+                m2 += dxh * xhr[j];
+            }
+            m1 /= d as f32;
+            m2 /= d as f32;
+            let rs = rstd.data[r];
+            for j in 0..d {
+                let dxh = dyr[j] * gain[j];
+                dx.data[r * d + j] = rs * (dxh - m1 - xhr[j] * m2);
+            }
+        }
+        dx
+    }
+}
+
+/// Causal multi-head self-attention over `rows = batch * seq` token rows.
+/// Parameters are `[W_qkv (d x 3d); W_out (d x d)]` contiguous, matching
+/// the `attn.qkv` / `attn.out` manifest tensors. No projection biases
+/// (the python reference model has none).
+#[derive(Debug, Clone)]
+pub struct CausalSelfAttention {
+    pub d: usize,
+    pub n_head: usize,
+    /// sequence length of the current batch (rows = batch * seq)
+    pub seq: usize,
+}
+
+impl CausalSelfAttention {
+    pub fn new(d: usize, n_head: usize, seq: usize) -> Self {
+        assert!(n_head > 0 && d % n_head == 0, "d_model {d} not divisible by heads {n_head}");
+        Self { d, n_head, seq }
+    }
+}
+
+impl Layer for CausalSelfAttention {
+    fn n_params(&self) -> usize {
+        4 * self.d * self.d
+    }
+
+    fn forward(&self, p: &[f32], x: Mat, tape: &mut Tape) -> Mat {
+        let (d, nh, s) = (self.d, self.n_head, self.seq);
+        assert_eq!(x.cols, d, "attention width");
+        assert!(s > 0 && x.rows % s == 0, "rows {} not a multiple of seq {s}", x.rows);
+        let b = x.rows / s;
+        let hd = d / nh;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let wqkv = Mat::from_rows(d, 3 * d, p[..3 * d * d].to_vec());
+        let qkv = matmul(&x, &wqkv); // rows x 3d, [q | k | v]
+        let mut att = Mat::zeros(b * nh * s, s); // softmax(QK^T) rows, causal-zeroed
+        let mut o = Mat::zeros(b * s, d);
+        for bi in 0..b {
+            for h in 0..nh {
+                let arows = (bi * nh + h) * s;
+                for t in 0..s {
+                    let qrow = &qkv.data[(bi * s + t) * 3 * d + h * hd..][..hd];
+                    let arow = &mut att.data[(arows + t) * s..(arows + t + 1) * s];
+                    let mut maxv = f32::NEG_INFINITY;
+                    for j in 0..=t {
+                        let krow = &qkv.data[(bi * s + j) * 3 * d + d + h * hd..][..hd];
+                        let mut acc = 0.0f32;
+                        for kk in 0..hd {
+                            acc += qrow[kk] * krow[kk];
+                        }
+                        let sc = acc * scale;
+                        arow[j] = sc;
+                        maxv = maxv.max(sc);
+                    }
+                    let mut sum = 0.0f32;
+                    for j in 0..=t {
+                        arow[j] = (arow[j] - maxv).exp();
+                        sum += arow[j];
+                    }
+                    let inv = 1.0 / sum;
+                    for j in 0..=t {
+                        arow[j] *= inv;
+                    }
+                    // o_t = sum_j att[t][j] * v_j (future positions stay 0)
+                    let orow = &mut o.data[(bi * s + t) * d + h * hd..][..hd];
+                    for j in 0..=t {
+                        let vrow = &qkv.data[(bi * s + j) * 3 * d + 2 * d + h * hd..][..hd];
+                        let aj = arow[j];
+                        for kk in 0..hd {
+                            orow[kk] += aj * vrow[kk];
+                        }
+                    }
+                }
+            }
+        }
+        let wout = Mat::from_rows(d, d, p[3 * d * d..].to_vec());
+        let y = matmul(&o, &wout);
+        tape.push(x);
+        tape.push(qkv);
+        tape.push(att);
+        tape.push(o);
+        y
+    }
+
+    fn backward(&self, p: &[f32], dy: Mat, tape: &mut Tape, g: &mut [f32]) -> Mat {
+        let (d, nh, s) = (self.d, self.n_head, self.seq);
+        let b = dy.rows / s;
+        let hd = d / nh;
+        let scale = 1.0 / (hd as f32).sqrt();
+        let o = tape.pop();
+        let att = tape.pop();
+        let qkv = tape.pop();
+        let x = tape.pop();
+
+        let wout = Mat::from_rows(d, d, p[3 * d * d..].to_vec());
+        let dwout = matmul_tn(&o, &dy);
+        for (gi, &v) in g[3 * d * d..].iter_mut().zip(&dwout.data) {
+            *gi += v;
+        }
+        let dmo = matmul_nt(&dy, &wout); // grad wrt o
+
+        let mut dqkv = Mat::zeros(b * s, 3 * d);
+        let mut datt = vec![0.0f32; s];
+        for bi in 0..b {
+            for h in 0..nh {
+                let arows = (bi * nh + h) * s;
+                for t in 0..s {
+                    let dorow = &dmo.data[(bi * s + t) * d + h * hd..][..hd];
+                    let arow = &att.data[(arows + t) * s..(arows + t + 1) * s];
+                    // datt[j] = do . v_j ; dv_j += att[t][j] * do
+                    for j in 0..=t {
+                        let vbase = (bi * s + j) * 3 * d + 2 * d + h * hd;
+                        let mut acc = 0.0f32;
+                        for kk in 0..hd {
+                            acc += dorow[kk] * qkv.data[vbase + kk];
+                        }
+                        datt[j] = acc;
+                        for kk in 0..hd {
+                            dqkv.data[vbase + kk] += arow[j] * dorow[kk];
+                        }
+                    }
+                    // softmax backward: ds_j = a_j (datt_j - sum_k a_k datt_k),
+                    // then through the 1/sqrt(hd) scale into q and k.
+                    let mut dotsum = 0.0f32;
+                    for j in 0..=t {
+                        dotsum += arow[j] * datt[j];
+                    }
+                    let qbase = (bi * s + t) * 3 * d + h * hd;
+                    for j in 0..=t {
+                        let ds = arow[j] * (datt[j] - dotsum) * scale;
+                        let kbase = (bi * s + j) * 3 * d + d + h * hd;
+                        for kk in 0..hd {
+                            dqkv.data[qbase + kk] += ds * qkv.data[kbase + kk];
+                            dqkv.data[kbase + kk] += ds * qkv.data[qbase + kk];
+                        }
+                    }
+                }
+            }
+        }
+        let dwqkv = matmul_tn(&x, &dqkv);
+        for (gi, &v) in g[..3 * d * d].iter_mut().zip(&dwqkv.data) {
+            *gi += v;
+        }
+        let wqkv = Mat::from_rows(d, 3 * d, p[..3 * d * d].to_vec());
+        matmul_nt(&dqkv, &wqkv)
+    }
+}
+
+/// The transformer's position-wise feed-forward block: GELU up-projection
+/// then linear down-projection, `[W_up (d x f); W_down (f x d)]`
+/// contiguous (the `mlp.up` / `mlp.down` manifest tensors).
+#[derive(Debug, Clone)]
+pub struct Ffn {
+    up: Dense,
+    down: Dense,
+}
+
+impl Ffn {
+    pub fn new(d: usize, f: usize) -> Self {
+        Self {
+            up: Dense::new(d, f, false, Act::Gelu),
+            down: Dense::new(f, d, false, Act::Linear),
+        }
+    }
+}
+
+impl Layer for Ffn {
+    fn n_params(&self) -> usize {
+        self.up.n_params() + self.down.n_params()
+    }
+
+    fn forward(&self, p: &[f32], x: Mat, tape: &mut Tape) -> Mat {
+        let n_up = self.up.n_params();
+        let h = self.up.forward(&p[..n_up], x, tape);
+        self.down.forward(&p[n_up..], h, tape)
+    }
+
+    fn backward(&self, p: &[f32], dy: Mat, tape: &mut Tape, g: &mut [f32]) -> Mat {
+        let n_up = self.up.n_params();
+        let (gu, gd) = g.split_at_mut(n_up);
+        let dh = self.down.backward(&p[n_up..], dy, tape, gd);
+        self.up.backward(&p[..n_up], dh, tape, gu)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Loss heads
+// ---------------------------------------------------------------------------
+
+/// Softmax cross-entropy over class-index labels: mean CE over rows.
+/// Returns `(loss, dL/dlogits)`. Used by the proxy classifiers (rows =
+/// batch) and the LM head (rows = batch * seq, labels = next tokens).
+pub fn softmax_ce(logits: &Mat, labels: &[usize]) -> (f32, Mat) {
+    assert_eq!(logits.rows, labels.len(), "one label per row");
+    let rows = logits.rows as f32;
+    let classes = logits.cols;
+    let mut loss = 0.0f64;
+    let mut delta = Mat::zeros(logits.rows, classes);
+    for r in 0..logits.rows {
+        let row = &logits.data[r * classes..(r + 1) * classes];
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let sum: f32 = row.iter().map(|&z| (z - maxv).exp()).sum();
+        let logz = maxv + sum.ln();
+        loss += (logz - row[labels[r]]) as f64;
+        for c in 0..classes {
+            let pmc = (row[c] - logz).exp();
+            delta.data[r * classes + c] =
+                (pmc - if c == labels[r] { 1.0 } else { 0.0 }) / rows;
+        }
+    }
+    ((loss / rows as f64) as f32, delta)
+}
+
+/// Loss-only softmax CE (validation / eval paths).
+pub fn softmax_ce_loss(logits: &Mat, labels: &[usize]) -> f32 {
+    assert_eq!(logits.rows, labels.len(), "one label per row");
+    let classes = logits.cols;
+    let mut loss = 0.0f64;
+    for r in 0..logits.rows {
+        let row = &logits.data[r * classes..(r + 1) * classes];
+        let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let sum: f32 = row.iter().map(|&z| (z - maxv).exp()).sum();
+        let logz = maxv + sum.ln();
+        loss += (logz - row[labels[r]]) as f64;
+    }
+    (loss / logits.rows as f64) as f32
+}
+
+/// Sigmoid cross-entropy against targets in [0, 1], summed over columns
+/// and averaged over rows (the autoencoder reconstruction loss). Returns
+/// `(loss, dL/dlogits)` via the numerically-stable BCE-with-logits form
+/// `max(z,0) - z*y + log1p(exp(-|z|))`, `dL/dz = sigma(z) - y`.
+pub fn sigmoid_ce(logits: &Mat, targets: &Mat) -> (f32, Mat) {
+    assert_eq!(logits.rows, targets.rows, "target rows");
+    assert_eq!(logits.cols, targets.cols, "target cols");
+    let batch = logits.rows as f32;
+    let mut loss = 0.0f64;
+    let mut delta = Mat::zeros(logits.rows, logits.cols);
+    for (i, (&z, &t)) in logits.data.iter().zip(&targets.data).enumerate() {
+        loss += (z.max(0.0) - z * t + (-z.abs()).exp().ln_1p()) as f64;
+        let sig = 1.0 / (1.0 + (-z).exp());
+        delta.data[i] = (sig - t) / batch;
+    }
+    ((loss / batch as f64) as f32, delta)
+}
+
+/// Loss-only sigmoid CE.
+pub fn sigmoid_ce_loss(logits: &Mat, targets: &Mat) -> f32 {
+    assert_eq!(logits.data.len(), targets.data.len(), "target shape");
+    let mut loss = 0.0f64;
+    for (&z, &t) in logits.data.iter().zip(&targets.data) {
+        loss += (z.max(0.0) - z * t + (-z.abs()).exp().ln_1p()) as f64;
+    }
+    (loss / logits.rows as f64) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+    use crate::util::Rng;
+
+    /// Finite-difference check of one layer under the synthetic scalar
+    /// loss L = sum(y * m) for a fixed random mixing matrix m (so dL/dy =
+    /// m). Verifies both parameter gradients and the input gradient.
+    fn fd_check(layer: &dyn Layer, rows: usize, d_in: usize, rng: &mut Rng, int_input: Option<usize>) {
+        let np = layer.n_params();
+        let mut p: Vec<f32> = rng.normal_vec(np).iter().map(|&v| 0.3 * v).collect();
+        // layernorm-style gains must stay near 1 to keep the map generic
+        for v in &mut p {
+            *v += 0.05;
+        }
+        let x = match int_input {
+            Some(vocab) => Mat::from_rows(
+                rows,
+                1,
+                (0..rows).map(|_| rng.below(vocab) as f32).collect(),
+            ),
+            None => Mat::from_rows(rows, d_in, rng.normal_vec(rows * d_in)),
+        };
+        let mut tape = Tape::new();
+        let y = layer.forward(&p, x.clone(), &mut tape);
+        let m = {
+            let mut r2 = Rng::new(77);
+            Mat::from_rows(y.rows, y.cols, r2.normal_vec(y.rows * y.cols))
+        };
+        let loss_of = |p: &[f32], x: &Mat| -> f64 {
+            let mut t = Tape::new();
+            let y = layer.forward(p, x.clone(), &mut t);
+            y.data.iter().zip(&m.data).map(|(&a, &b)| (a * b) as f64).sum()
+        };
+        let mut g = vec![0.0f32; np];
+        let dx = layer.backward(&p, m.clone(), &mut tape, &mut g);
+        assert!(tape.is_empty(), "backward left caches on the tape");
+
+        let h = 1e-3f32;
+        for _ in 0..8.min(np) {
+            let i = rng.below(np);
+            let mut pp = p.clone();
+            pp[i] += h;
+            let lp = loss_of(&pp, &x);
+            pp[i] -= 2.0 * h;
+            let lm = loss_of(&pp, &x);
+            let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+            assert!(
+                (fd - g[i]).abs() <= 1e-2 * fd.abs().max(1.0),
+                "param {i}: fd {fd} vs analytic {}",
+                g[i]
+            );
+        }
+        if int_input.is_none() {
+            for _ in 0..6 {
+                let i = rng.below(rows * d_in);
+                let mut xx = x.clone();
+                xx.data[i] += h;
+                let lp = loss_of(&p, &xx);
+                xx.data[i] -= 2.0 * h;
+                let lm = loss_of(&p, &xx);
+                let fd = ((lp - lm) / (2.0 * h as f64)) as f32;
+                assert!(
+                    (fd - dx.data[i]).abs() <= 1e-2 * fd.abs().max(1.0),
+                    "input {i}: fd {fd} vs analytic {}",
+                    dx.data[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dense_grads_match_fd() {
+        check("dense fd", 6, |rng| {
+            for act in [Act::Linear, Act::Tanh, Act::Gelu] {
+                let l = Dense::new(5, 4, true, act);
+                fd_check(&l, 3, 5, rng, None);
+                let l = Dense::new(4, 6, false, act);
+                fd_check(&l, 2, 4, rng, None);
+            }
+        });
+    }
+
+    #[test]
+    fn layernorm_grads_match_fd() {
+        check("layernorm fd", 6, |rng| {
+            let l = LayerNorm { d: 7 };
+            fd_check(&l, 4, 7, rng, None);
+        });
+    }
+
+    #[test]
+    fn attention_grads_match_fd() {
+        check("attention fd", 4, |rng| {
+            let l = CausalSelfAttention::new(8, 2, 5);
+            fd_check(&l, 10, 8, rng, None); // batch 2 x seq 5
+        });
+    }
+
+    #[test]
+    fn embedding_grads_match_fd() {
+        check("embedding fd", 6, |rng| {
+            let l = Embedding { vocab: 11, d: 5 };
+            fd_check(&l, 9, 1, rng, Some(11));
+        });
+    }
+
+    #[test]
+    fn ffn_grads_match_fd() {
+        check("ffn fd", 4, |rng| {
+            let l = Ffn::new(6, 10);
+            fd_check(&l, 3, 6, rng, None);
+        });
+    }
+
+    #[test]
+    fn softmax_head_grads_match_fd() {
+        check("softmax head fd", 6, |rng| {
+            let logits = Mat::from_rows(3, 5, rng.normal_vec(15));
+            let labels = vec![rng.below(5), rng.below(5), rng.below(5)];
+            let (_, delta) = softmax_ce(&logits, &labels);
+            let h = 1e-3f32;
+            for _ in 0..6 {
+                let i = rng.below(15);
+                let mut z = logits.clone();
+                z.data[i] += h;
+                let lp = softmax_ce_loss(&z, &labels);
+                z.data[i] -= 2.0 * h;
+                let lm = softmax_ce_loss(&z, &labels);
+                let fd = (lp - lm) / (2.0 * h);
+                assert!(
+                    (fd - delta.data[i]).abs() <= 1e-2 * fd.abs().max(1.0),
+                    "logit {i}: fd {fd} vs {}",
+                    delta.data[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn sigmoid_head_grads_match_fd() {
+        check("sigmoid head fd", 6, |rng| {
+            let logits = Mat::from_rows(3, 4, rng.normal_vec(12));
+            let targets = Mat::from_rows(3, 4, rng.uniform_vec(12, 0.0, 1.0));
+            let (loss, delta) = sigmoid_ce(&logits, &targets);
+            assert_eq!(loss, sigmoid_ce_loss(&logits, &targets));
+            let h = 1e-3f32;
+            for _ in 0..6 {
+                let i = rng.below(12);
+                let mut z = logits.clone();
+                z.data[i] += h;
+                let lp = sigmoid_ce_loss(&z, &targets);
+                z.data[i] -= 2.0 * h;
+                let lm = sigmoid_ce_loss(&z, &targets);
+                let fd = (lp - lm) / (2.0 * h);
+                assert!(
+                    (fd - delta.data[i]).abs() <= 1e-2 * fd.abs().max(1.0),
+                    "logit {i}: fd {fd} vs {}",
+                    delta.data[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn attention_is_causal() {
+        // perturbing a future token must not change earlier outputs
+        let mut rng = Rng::new(9);
+        let l = CausalSelfAttention::new(6, 2, 4);
+        let p = rng.normal_vec(l.n_params());
+        let x = Mat::from_rows(4, 6, rng.normal_vec(24));
+        let mut tape = Tape::new();
+        let y = l.forward(&p, x.clone(), &mut tape);
+        let mut x2 = x.clone();
+        for v in &mut x2.data[3 * 6..] {
+            *v += 1.0; // perturb the last position only
+        }
+        let mut tape2 = Tape::new();
+        let y2 = l.forward(&p, x2, &mut tape2);
+        assert_eq!(&y.data[..3 * 6], &y2.data[..3 * 6], "causality violated");
+        assert_ne!(&y.data[3 * 6..], &y2.data[3 * 6..]);
+    }
+
+    #[test]
+    fn gelu_matches_reference_points() {
+        // reference values from jax.nn.gelu (tanh approximation)
+        assert!((gelu(0.0)).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841_192).abs() < 1e-4);
+        assert!((gelu(-1.0) + 0.158_808).abs() < 1e-4);
+        assert!((gelu(3.0) - 2.996_363).abs() < 1e-4);
+    }
+}

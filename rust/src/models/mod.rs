@@ -1,9 +1,15 @@
 //! Native-Rust models: the no-artifact gradient engines used by tests,
-//! benches and the proxy experiments (the deployment path executes the
-//! AOT HLO artifacts through `runtime::Engine` instead).
+//! benches, the proxy experiments and (since the native transformer) the
+//! Figure-3 LM pretraining run. Every model composes the shared
+//! layer/tape stack in [`layers`]; the deployment path can still execute
+//! AOT HLO artifacts through `runtime::Engine` instead.
 
+pub mod layers;
 pub mod linear;
 pub mod mlp;
+pub mod transformer;
 
+pub use layers::{Act, CausalSelfAttention, Dense, Embedding, Ffn, Layer, LayerNorm, Tape};
 pub use linear::LinearProblem;
 pub use mlp::Mlp;
+pub use transformer::{init_lm_params, LmConfig, Transformer};

@@ -2,10 +2,12 @@
 //! optimizer programs over host tensors. Two implementations exist:
 //!
 //! * [`NativeBackend`] — pure Rust, always available. Grads programs
-//!   route through the `models::{mlp,linear}` forward/backward code and
-//!   the `sonew_tridiag_*` optimizer program through the native
-//!   `sonew::TridiagState` kernel, so the whole training stack runs from
-//!   a clean clone with no Python, no artifacts and no PJRT toolchain.
+//!   route through the `models::{mlp,linear,transformer}`
+//!   forward/backward code (the layer/tape stack) and the
+//!   `sonew_tridiag_*` optimizer program through the native
+//!   `sonew::TridiagState` kernel, so the whole training stack — the
+//!   Figure-3 transformer LM included — runs from a clean clone with no
+//!   Python, no artifacts and no PJRT toolchain.
 //! * `PjrtBackend` (behind the `xla` cargo feature) — wraps the
 //!   [`Engine`](super::engine::Engine) that compiles and executes the
 //!   AOT HLO artifacts produced by `python/compile/aot.py`.
@@ -20,7 +22,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Result};
 
 use crate::linalg::Mat;
-use crate::models::{LinearProblem, Mlp};
+use crate::models::{LinearProblem, LmConfig, Mlp, Transformer};
 use crate::sonew::{LambdaMode, TridiagState};
 use crate::util::Precision;
 
@@ -42,6 +44,12 @@ impl HostTensor {
         match self {
             HostTensor::F32(v) => Ok(v),
             HostTensor::I32(_) => bail!("expected f32 tensor, got i32"),
+        }
+    }
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32(v) => Ok(v),
+            HostTensor::F32(_) => bail!("expected i32 tensor, got f32"),
         }
     }
     pub fn len(&self) -> usize {
@@ -161,6 +169,10 @@ pub const NATIVE_TRIDIAG_EPS: f32 = 1e-6;
 /// Supported programs (`B`/digits are parsed from the name):
 /// * `ae_grads_b{B}` — full autoencoder grads `(params, x) -> (loss, grads)`
 /// * `ae_small_grads_b{B}` — scaled-down autoencoder grads
+/// * `lm_grads` — Figure-3 transformer LM grads
+///   `(params, tokens, targets) -> (loss, grads)`; `lm_loss` is the
+///   loss-only eval form `-> (loss)`
+/// * `lm_small_grads` / `lm_small_loss` — scaled-down LM (tests, benches)
 /// * `sonew_tridiag_*` — one fused tridiag-SONew step
 ///   `(hd, ho, g, tensor_ids) -> (hd', ho', u)`
 /// * `linear_grads` — least-squares grads `(w, x, y) -> (loss, grads)`
@@ -180,6 +192,18 @@ impl NativeBackend {
         match stem {
             "ae_grads" => Some(Mlp::autoencoder()),
             "ae_small_grads" => Some(Mlp::autoencoder_small()),
+            _ => None,
+        }
+    }
+
+    /// Resolve an `lm*` program name to its transformer config and
+    /// whether the program is the loss-only eval form.
+    fn lm_for(program: &str) -> Option<(LmConfig, bool)> {
+        match strip_batch_suffix(program) {
+            "lm_grads" => Some((LmConfig::figure3(), false)),
+            "lm_loss" => Some((LmConfig::figure3(), true)),
+            "lm_small_grads" => Some((LmConfig::small(), false)),
+            "lm_small_loss" => Some((LmConfig::small(), true)),
             _ => None,
         }
     }
@@ -221,6 +245,61 @@ fn mlp_grads(mlp: &Mlp, program: &str, inputs: &[HostTensor]) -> Result<Vec<Host
     let xm = Mat::from_rows(rows, d, x.to_vec());
     let (loss, grads) = mlp.loss_and_grad(params, &xm);
     Ok(vec![HostTensor::F32(vec![loss]), HostTensor::F32(grads)])
+}
+
+/// Native transformer LM programs: `(params, tokens, targets) ->
+/// (loss, grads)` or `-> (loss)` for the eval form. The sequence length
+/// is the model's configured `seq`; the batch is inferred from the token
+/// count, as the `ae*` programs infer theirs from the pixel count.
+fn lm_program(
+    cfg: LmConfig,
+    program: &str,
+    inputs: &[HostTensor],
+    loss_only: bool,
+) -> Result<Vec<HostTensor>> {
+    if inputs.len() != 3 {
+        bail!(
+            "{program}: expected (params, tokens, targets), got {} inputs",
+            inputs.len()
+        );
+    }
+    let params = inputs[0].as_f32()?;
+    let tokens = inputs[1].as_i32()?;
+    let targets = inputs[2].as_i32()?;
+    let model = Transformer::new(cfg);
+    if params.len() != model.total {
+        bail!(
+            "{program}: params expects {} elements, got {}",
+            model.total,
+            params.len()
+        );
+    }
+    let seq = cfg.seq;
+    if tokens.is_empty() || tokens.len() % seq != 0 {
+        bail!(
+            "{program}: tokens expects a non-empty multiple of seq {seq} elements, got {}",
+            tokens.len()
+        );
+    }
+    if targets.len() != tokens.len() {
+        bail!(
+            "{program}: targets length {} must match tokens length {}",
+            targets.len(),
+            tokens.len()
+        );
+    }
+    for &t in tokens.iter().chain(targets.iter()) {
+        if t < 0 || t as usize >= cfg.vocab {
+            bail!("{program}: token id {t} outside vocab {}", cfg.vocab);
+        }
+    }
+    if loss_only {
+        let loss = model.loss(params, tokens, targets, seq);
+        Ok(vec![HostTensor::F32(vec![loss])])
+    } else {
+        let (loss, grads) = model.loss_and_grad(params, tokens, targets, seq);
+        Ok(vec![HostTensor::F32(vec![loss]), HostTensor::F32(grads)])
+    }
 }
 
 fn tridiag_step(program: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
@@ -304,6 +383,7 @@ impl Backend for NativeBackend {
 
     fn supports(&self, program: &str) -> bool {
         Self::mlp_for(program).is_some()
+            || Self::lm_for(program).is_some()
             || program.starts_with("sonew_tridiag")
             || program == "linear_grads"
     }
@@ -311,6 +391,9 @@ impl Backend for NativeBackend {
     fn exec(&self, program: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
         if let Some(mlp) = Self::mlp_for(program) {
             return mlp_grads(&mlp, program, inputs);
+        }
+        if let Some((cfg, loss_only)) = Self::lm_for(program) {
+            return lm_program(cfg, program, inputs, loss_only);
         }
         if program.starts_with("sonew_tridiag") {
             return tridiag_step(program, inputs);
@@ -320,7 +403,8 @@ impl Backend for NativeBackend {
         }
         bail!(
             "program {program:?} is not supported by the native backend \
-             (known: ae_grads_b*, ae_small_grads_b*, sonew_tridiag_*, linear_grads)"
+             (known: ae_grads_b*, ae_small_grads_b*, lm_grads, lm_loss, \
+             lm_small_grads, lm_small_loss, sonew_tridiag_*, linear_grads)"
         )
     }
 }
@@ -399,8 +483,103 @@ mod tests {
         assert!(b.supports("ae_small_grads_b64"));
         assert!(b.supports("sonew_tridiag_ae_small"));
         assert!(b.supports("linear_grads"));
-        assert!(!b.supports("lm_grads"));
+        assert!(b.supports("lm_grads"));
+        assert!(b.supports("lm_loss"));
+        assert!(b.supports("lm_small_grads"));
+        assert!(b.supports("lm_small_loss"));
+        assert!(!b.supports("lm_medium_grads"));
         assert!(!b.supports("no_such_program"));
+    }
+
+    #[test]
+    fn native_lm_grads_match_direct_transformer_call() {
+        let b = NativeBackend::new();
+        let cfg = LmConfig::small();
+        let model = Transformer::new(cfg);
+        let params = model.init(4);
+        let mut corpus = crate::data::LmCorpus::new(cfg.vocab, 5);
+        let (toks, tgts) = corpus.batch(2, cfg.seq);
+        let (loss, grads) = b
+            .loss_and_grad(
+                "lm_small_grads",
+                &params,
+                vec![HostTensor::I32(toks.clone()), HostTensor::I32(tgts.clone())],
+            )
+            .unwrap();
+        let (want_loss, want_grads) = model.loss_and_grad(&params, &toks, &tgts, cfg.seq);
+        assert_eq!(loss, want_loss);
+        assert_eq!(grads, want_grads);
+        // the eval program returns the same loss, no grads
+        let out = b
+            .exec(
+                "lm_small_loss",
+                &[
+                    HostTensor::F32(params),
+                    HostTensor::I32(toks),
+                    HostTensor::I32(tgts),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].as_f32().unwrap(), &[want_loss][..]);
+    }
+
+    #[test]
+    fn native_lm_rejects_bad_inputs() {
+        let b = NativeBackend::new();
+        let cfg = LmConfig::small();
+        let model = Transformer::new(cfg);
+        let params = model.init(0);
+        // wrong param length
+        let err = b
+            .exec(
+                "lm_small_grads",
+                &[
+                    HostTensor::F32(vec![0.0; 3]),
+                    HostTensor::I32(vec![0; cfg.seq]),
+                    HostTensor::I32(vec![0; cfg.seq]),
+                ],
+            )
+            .unwrap_err();
+        assert!(format!("{err}").contains("elements"), "{err}");
+        // tokens not a multiple of seq
+        let err = b
+            .exec(
+                "lm_small_grads",
+                &[
+                    HostTensor::F32(params.clone()),
+                    HostTensor::I32(vec![0; cfg.seq + 1]),
+                    HostTensor::I32(vec![0; cfg.seq + 1]),
+                ],
+            )
+            .unwrap_err();
+        assert!(format!("{err}").contains("multiple"), "{err}");
+        // out-of-vocab token errors instead of panicking
+        let mut toks = vec![0i32; cfg.seq];
+        toks[3] = cfg.vocab as i32;
+        let err = b
+            .exec(
+                "lm_small_grads",
+                &[
+                    HostTensor::F32(params.clone()),
+                    HostTensor::I32(toks),
+                    HostTensor::I32(vec![0; cfg.seq]),
+                ],
+            )
+            .unwrap_err();
+        assert!(format!("{err}").contains("vocab"), "{err}");
+        // f32 tokens where i32 expected
+        let err = b
+            .exec(
+                "lm_small_grads",
+                &[
+                    HostTensor::F32(params),
+                    HostTensor::F32(vec![0.0; cfg.seq]),
+                    HostTensor::I32(vec![0; cfg.seq]),
+                ],
+            )
+            .unwrap_err();
+        assert!(format!("{err}").contains("i32"), "{err}");
     }
 
     #[test]

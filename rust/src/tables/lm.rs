@@ -1,34 +1,57 @@
 //! Figure 3: language-model pretraining — tridiag-SONew vs AdaFactor
-//! log-perplexity vs steps, with the SONew update running through the
-//! **Pallas L1 kernel inside the `sonew_tridiag_lm` HLO artifact** (the
-//! deployment path: Python never runs, PJRT executes both the grads
-//! program and the optimizer program). Headline numbers reported: steps
-//! for SONew to reach AdaFactor's final loss (paper: 26% fewer) and
-//! relative final-loss gap (paper: ~1.7%).
+//! log-perplexity vs steps. Fully hermetic since the native transformer
+//! (`models::transformer`) joined the NativeBackend program zoo: on a
+//! clean clone both the `lm_grads` program and the `sonew_tridiag_lm`
+//! optimizer step run pure-Rust; with `--features xla` + artifacts the
+//! same harness executes the AOT HLO programs (the Pallas L1 kernel)
+//! through PJRT instead. Headline numbers reported: steps for SONew to
+//! reach AdaFactor's final loss (paper: 26% fewer) and relative
+//! final-loss gap (paper: ~1.7%).
 
 use crate::coordinator::trainer::BackendLmProvider;
 use crate::coordinator::{Metrics, Schedule, TrainConfig};
 use crate::data::LmCorpus;
 use crate::linalg::norm2;
+use crate::models::{LmConfig, Transformer};
 use crate::optim::first_order::Adam;
 use crate::optim::{build, Direction, HyperParams, OptKind};
-use crate::runtime::{
-    default_artifacts_dir, open_backend, ArtifactSpec, Backend, HostTensor, Layout,
-};
+use crate::runtime::{default_artifacts_dir, open_backend, Backend, HostTensor, Layout};
 use crate::util::io::{fmt_f, Csv, MdTable};
 
-/// The LM experiment is artifact-driven (there is no native transformer):
-/// pull the grads spec and parameter layout out of the backend's
-/// manifest, or explain exactly what is missing.
-fn lm_specs(backend: &dyn Backend) -> anyhow::Result<(ArtifactSpec, Layout)> {
-    let man = backend.manifest().ok_or_else(|| {
-        anyhow::anyhow!(
-            "LM pretraining needs the AOT artifacts: build with `--features xla` \
-             and run `make artifacts` (current backend: {})",
-            backend.name()
-        )
-    })?;
-    Ok((man.artifact("lm_grads")?.clone(), man.layout("lm")?.clone()))
+pub use crate::models::transformer::init_lm_params;
+
+/// Everything the harness needs about the LM: parameter count, batch
+/// geometry and the flat layout. Sourced from the backend's artifact
+/// manifest when it has one (PJRT), from the native transformer's
+/// Figure-3 config otherwise — so the experiment never dies for lack of
+/// an `artifacts/` directory.
+struct LmSetup {
+    n: usize,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+    layout: Layout,
+}
+
+fn lm_setup(backend: &dyn Backend) -> anyhow::Result<LmSetup> {
+    if let Some(man) = backend.manifest() {
+        let spec = man.artifact("lm_grads")?;
+        return Ok(LmSetup {
+            n: spec.inputs[0].elements(),
+            batch: spec.meta_usize("batch").unwrap_or(8),
+            seq: spec.meta_usize("seq").unwrap_or(128),
+            vocab: spec.meta_usize("vocab").unwrap_or(512),
+            layout: man.layout("lm")?.clone(),
+        });
+    }
+    let model = Transformer::new(LmConfig::figure3());
+    Ok(LmSetup {
+        n: model.total,
+        batch: 8,
+        seq: model.cfg.seq,
+        vocab: model.cfg.vocab,
+        layout: model.layout,
+    })
 }
 
 pub struct LmRunConfig {
@@ -36,8 +59,9 @@ pub struct LmRunConfig {
     pub lr: f32,
     pub log_every: u64,
     pub verbose: bool,
-    /// run the SONew update through the HLO Pallas artifact (default) or
-    /// the native Rust kernel (ablation / no-artifact fallback)
+    /// run the SONew update through the backend's `sonew_tridiag_lm`
+    /// program (default; the HLO Pallas artifact under PJRT) or call the
+    /// in-process Rust kernel directly (ablation)
     pub sonew_via_hlo: bool,
 }
 
@@ -47,14 +71,27 @@ impl Default for LmRunConfig {
     }
 }
 
+impl LmRunConfig {
+    /// The one CLI flag mapping every Figure-3 entry point (`sonew lm`,
+    /// `sonew table f3`, `examples/lm_train.rs`) shares. Per-surface
+    /// differences stay as parameters: the step default, and whether the
+    /// surface logs by default (`--quiet` opts out) or stays headline-only
+    /// (`--verbose` opts in, the `table` convention).
+    pub fn from_args(args: &crate::cli::Args, default_steps: u64, default_verbose: bool) -> Self {
+        Self {
+            steps: args.u64_or("steps", default_steps),
+            lr: args.f32_or("lr", 3e-3),
+            log_every: args.u64_or("log-every", 5),
+            verbose: (default_verbose && !args.has("quiet")) || args.has("verbose"),
+            sonew_via_hlo: !args.has("native-sonew"),
+        }
+    }
+}
+
 /// Train the LM with AdaFactor (baseline) — returns the metrics curve.
 pub fn run_adafactor(cfg: &LmRunConfig) -> anyhow::Result<Metrics> {
     let backend = open_backend(default_artifacts_dir())?;
-    let (spec, layout) = lm_specs(backend.as_ref())?;
-    let n = spec.inputs[0].elements();
-    let batch = spec.meta_usize("batch").unwrap_or(8);
-    let seq = spec.meta_usize("seq").unwrap_or(128);
-    let vocab = spec.meta_usize("vocab").unwrap_or(512);
+    let LmSetup { n, batch, seq, vocab, layout } = lm_setup(backend.as_ref())?;
     let blocks = crate::optim::blocks_of(&layout);
     let mats = crate::tables::autoencoder::cap_mat_blocks(
         &crate::optim::mat_blocks_of(&layout),
@@ -81,15 +118,14 @@ pub fn run_adafactor(cfg: &LmRunConfig) -> anyhow::Result<Metrics> {
     crate::coordinator::train_single(&mut params, &mut opt, provider, &tc)
 }
 
-/// Train the LM with tridiag-SONew; the preconditioner runs through the
-/// `sonew_tridiag_lm` HLO artifact (Pallas L1) when `sonew_via_hlo`.
+/// Train the LM with tridiag-SONew; when `sonew_via_hlo` the
+/// preconditioner runs through the backend's `sonew_tridiag_lm` program
+/// (the Pallas-L1 HLO artifact under PJRT, the native kernel otherwise),
+/// exercising the deployment path; otherwise it calls the in-process
+/// `TridiagState` directly.
 pub fn run_sonew(cfg: &LmRunConfig) -> anyhow::Result<Metrics> {
     let backend = open_backend(default_artifacts_dir())?;
-    let (spec, layout) = lm_specs(backend.as_ref())?;
-    let n = spec.inputs[0].elements();
-    let batch = spec.meta_usize("batch").unwrap_or(8);
-    let seq = spec.meta_usize("seq").unwrap_or(128);
-    let vocab = spec.meta_usize("vocab").unwrap_or(512);
+    let LmSetup { n, batch, seq, vocab, layout } = lm_setup(backend.as_ref())?;
     let tensor_ids = layout.tensor_ids();
     let blocks = crate::optim::blocks_of(&layout);
 
@@ -189,36 +225,6 @@ pub fn run_sonew(cfg: &LmRunConfig) -> anyhow::Result<Metrics> {
         }
     }
     Ok(metrics)
-}
-
-/// Deterministic LM init matching model.py's conventions (layernorm gains
-/// at 1, projections gaussian 0.02, embeddings gaussian 0.02).
-pub fn init_lm_params(layout: &crate::runtime::Layout, seed: u64) -> Vec<f32> {
-    let mut rng = crate::util::Rng::new(seed);
-    let mut p = vec![0.0f32; layout.total()];
-    let n_layer = layout
-        .tensors
-        .iter()
-        .filter(|t| t.name.ends_with("attn.qkv"))
-        .count()
-        .max(1);
-    for t in &layout.tensors {
-        let sl = &mut p[t.offset..t.offset + t.size()];
-        if t.name.ends_with(".g") {
-            sl.fill(1.0);
-        } else if t.name.ends_with(".b") {
-            // zeros
-        } else {
-            let mut std = 0.02f32;
-            if t.name.ends_with("attn.out") || t.name.ends_with("mlp.down") {
-                std = 0.02 / (2.0 * n_layer as f32).sqrt();
-            }
-            for v in sl {
-                *v = std * rng.normal_f32();
-            }
-        }
-    }
-    p
 }
 
 /// Full Figure-3 harness: both curves + headline numbers.
