@@ -14,7 +14,6 @@
 //!   --native            force the native gradient engine
 //!   --small             use the scaled-down AE
 use sonew::cli::Args;
-use sonew::optim::OptKind;
 use sonew::tables::autoencoder::{run, AeBenchConfig};
 use sonew::util::Precision;
 
@@ -43,13 +42,9 @@ fn main() -> anyhow::Result<()> {
         Some("batch") => {
             // Table 4: batch sizes (paper: 100/1000/5000/10000; default
             // here keeps CPU wall time sane — pass --batches to widen)
-            cfg.optimizers = vec![
-                OptKind::RmsProp,
-                OptKind::Adam,
-                OptKind::Shampoo,
-                OptKind::TridiagSonew,
-                OptKind::BandSonew,
-            ];
+            cfg.optimizers = ["rmsprop", "adam", "shampoo", "tridiag-sonew", "band-sonew"]
+                .map(String::from)
+                .to_vec();
             for b in args.list_or("batches", "100,1000") {
                 cfg.batch = b.parse().unwrap_or(256);
                 run(&cfg, &format!("t4_batch{b}"))?;
@@ -58,7 +53,7 @@ fn main() -> anyhow::Result<()> {
         Some("stable") => {
             // Table 5: bf16 with and without Algorithm 3
             cfg.precision = Precision::Bf16;
-            cfg.optimizers = vec![OptKind::TridiagSonew, OptKind::BandSonew];
+            cfg.optimizers = vec!["tridiag-sonew".into(), "band-sonew".into()];
             cfg.gamma = 0.0;
             run(&cfg, "t5_bf16_plain")?;
             cfg.gamma = args.f32_or("gamma", 1e-5).max(1e-8);
@@ -66,12 +61,8 @@ fn main() -> anyhow::Result<()> {
         }
         _ => {
             if args.has("extended") {
-                cfg.optimizers = vec![
-                    OptKind::KfacProxy,
-                    OptKind::Eva,
-                    OptKind::FishLegDiag,
-                    OptKind::TridiagSonew,
-                ];
+                cfg.optimizers =
+                    vec!["kfac".into(), "eva".into(), "fishleg".into(), "tridiag-sonew".into()];
                 run(&cfg, "f7_extended")?;
             } else {
                 let tag = match cfg.precision {

@@ -8,7 +8,7 @@ use sonew::coordinator::trainer::NativeAeProvider;
 use sonew::coordinator::{train_single, Schedule, TrainConfig};
 use sonew::data::SynthImages;
 use sonew::models::Mlp;
-use sonew::optim::{build, HyperParams, OptKind};
+use sonew::optim::{HyperParams, OptSpec};
 
 fn main() -> anyhow::Result<()> {
     // the scaled-down autoencoder (full 2.84M-param model: Mlp::autoencoder())
@@ -16,9 +16,11 @@ fn main() -> anyhow::Result<()> {
     let mut rng = sonew::util::Rng::new(0);
     let mut params = mlp.init(&mut rng);
 
-    // tridiag-SONew with Adam grafting, exactly the paper's §5 setup
-    let hp = HyperParams { beta2: 0.95, eps: 1e-6, gamma: 1e-8, ..Default::default() };
-    let mut opt = build(OptKind::TridiagSonew, mlp.total, &mlp.blocks(), &mlp.mat_blocks(), &hp);
+    // tridiag-SONew with Adam grafting, exactly the paper's §5 setup —
+    // the spec string is the same one the CLI and sweeps consume
+    let hp = HyperParams { beta2: 0.95, eps: 1e-6, ..Default::default() };
+    let mut opt = OptSpec::parse("tridiag-sonew:gamma=1e-8,graft=adam")?
+        .build(mlp.total, &mlp.blocks(), &mlp.mat_blocks(), &hp)?;
 
     let cfg = TrainConfig {
         steps: 100,

@@ -17,7 +17,7 @@
 //!     cargo bench -- t1      # one section
 
 use sonew::models::{LmConfig, Transformer};
-use sonew::optim::{build, HyperParams, OptKind};
+use sonew::optim::{HyperParams, OptSpec};
 use sonew::runtime::{Backend, HostTensor, NativeBackend};
 use sonew::sonew::{BandedState, LambdaMode, TridiagState};
 use sonew::util::timer::bench;
@@ -67,9 +67,12 @@ fn main() {
         let n = mlp.total;
         let mut rng = Rng::new(2);
         let g = rng.normal_vec(n);
-        for kind in [OptKind::Adam, OptKind::DiagSonew, OptKind::TridiagSonew, OptKind::BandSonew] {
+        for spec in ["adam", "diag-sonew", "tridiag-sonew", "band-sonew"] {
             let hp = HyperParams { grafting: false, beta1: 0.0, ..Default::default() };
-            let mut opt = build(kind, n, &mlp.blocks(), &mlp.mat_blocks(), &hp);
+            let mut opt = OptSpec::parse(spec)
+                .unwrap()
+                .build(n, &mlp.blocks(), &mlp.mat_blocks(), &hp)
+                .unwrap();
             let mut params = vec![0.01f32; n];
             let r = bench(&format!("{} step n={n}", opt.name()), 5, 5, |k| {
                 for _ in 0..k {

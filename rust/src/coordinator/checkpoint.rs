@@ -1,79 +1,226 @@
-//! Minimal binary checkpointing: flat f32 parameter vectors with a magic
-//! header and length check (no serde in the offline closure).
+//! Binary checkpointing (no serde in the offline closure).
+//!
+//! Two on-disk formats:
+//! * **v1** (`SONEWCK1`) — step + flat f32 parameter vector. Still
+//!   written by [`save`] and read back by both loaders.
+//! * **v2** (`SONEWCK2`) — step + optimizer spec string + params +
+//!   opaque optimizer-state blob + opaque data-stream (RNG) blob, the
+//!   format behind `TrainSession`'s exact-resume guarantee: everything
+//!   that influences the trajectory is persisted, so a resumed run is
+//!   bitwise-identical to an uninterrupted one.
+//!
+//! All multi-byte values are little-endian, written per element — the
+//! files are portable across hosts.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-const MAGIC: &[u8; 8] = b"SONEWCK1";
+use crate::optim::state as codec;
 
-/// Write a flat parameter vector.
-pub fn save(path: impl AsRef<Path>, step: u64, params: &[f32]) -> Result<()> {
-    let path = path.as_ref();
+const MAGIC_V1: &[u8; 8] = b"SONEWCK1";
+const MAGIC_V2: &[u8; 8] = b"SONEWCK2";
+
+/// Everything a v2 checkpoint carries. v1 files load with `spec` empty
+/// and empty state blobs (params-only resume).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    /// Next step to run (steps completed so far).
+    pub step: u64,
+    /// Canonical optimizer spec string ("" for v1 files).
+    pub spec: String,
+    pub params: Vec<f32>,
+    /// `Optimizer::save_state` blob ("" for v1 files).
+    pub opt_state: Vec<u8>,
+    /// Provider / data-stream state blob ("" for v1 files).
+    pub data_state: Vec<u8>,
+}
+
+/// Write a checkpoint atomically: stream into a sibling `.tmp` file,
+/// flush, then rename over the target. A crash mid-write (the exact
+/// failure checkpoints exist to survive) leaves the previous checkpoint
+/// intact instead of a truncated file — `TrainSession` overwrites the
+/// same path every `checkpoint_every` steps, so in-place truncate-then-
+/// write would put the only copy at risk on every save.
+fn write_atomic(
+    path: &Path,
+    body: impl FnOnce(&mut std::io::BufWriter<std::fs::File>) -> Result<()>,
+) -> Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent).ok();
     }
-    let mut f = std::fs::File::create(path)
-        .with_context(|| format!("creating {}", path.display()))?;
-    f.write_all(MAGIC)?;
-    f.write_all(&step.to_le_bytes())?;
-    f.write_all(&(params.len() as u64).to_le_bytes())?;
-    let bytes: &[u8] = unsafe {
-        std::slice::from_raw_parts(params.as_ptr().cast(), params.len() * 4)
-    };
-    f.write_all(bytes)?;
+    let file_name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "checkpoint".into());
+    // pid-unique temp name: two processes checkpointing the same path
+    // must not truncate each other's in-flight temp file
+    let tmp = path.with_file_name(format!("{file_name}.{}.tmp", std::process::id()));
+    let f = std::fs::File::create(&tmp)
+        .with_context(|| format!("creating {}", tmp.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    let result = body(&mut w)
+        .and_then(|()| w.flush().map_err(Into::into))
+        // flush() only empties the BufWriter into the page cache; force
+        // the data to disk before the rename makes the new file visible,
+        // so a crash never replaces a good checkpoint with a hollow one
+        .and_then(|()| w.get_ref().sync_all().map_err(Into::into));
+    drop(w);
+    if let Err(e) = result {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e);
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("replacing {}", path.display()))?;
     Ok(())
 }
 
-/// Read a checkpoint back; returns (step, params).
-pub fn load(path: impl AsRef<Path>) -> Result<(u64, Vec<f32>)> {
-    let path = path.as_ref();
-    let mut f = std::fs::File::open(path)
-        .with_context(|| format!("opening {}", path.display()))?;
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{} is not a SONew checkpoint", path.display());
+/// Write a v1 (params-only) checkpoint. Sections use the shared
+/// `optim::state` codec: little-endian per element, length-prefixed.
+pub fn save(path: impl AsRef<Path>, step: u64, params: &[f32]) -> Result<()> {
+    write_atomic(path.as_ref(), |f| {
+        f.write_all(MAGIC_V1)?;
+        f.write_all(&step.to_le_bytes())?;
+        codec::write_f32s(f, params)?;
+        Ok(())
+    })
+}
+
+/// Write a v2 checkpoint (params + optimizer state + data-stream state).
+pub fn save_v2(
+    path: impl AsRef<Path>,
+    step: u64,
+    spec: &str,
+    params: &[f32],
+    opt_state: &[u8],
+    data_state: &[u8],
+) -> Result<()> {
+    write_atomic(path.as_ref(), |f| {
+        f.write_all(MAGIC_V2)?;
+        f.write_all(&step.to_le_bytes())?;
+        codec::write_bytes(f, spec.as_bytes())?;
+        codec::write_f32s(f, params)?;
+        codec::write_bytes(f, opt_state)?;
+        codec::write_bytes(f, data_state)?;
+        Ok(())
+    })
+}
+
+/// Bounded section reader for the `optim::state` on-disk conventions
+/// (little-endian, length-prefixed). Unlike the plain codec readers it
+/// checks every declared length against the bytes actually remaining in
+/// the file before allocating, so truncated or corrupt headers fail
+/// with a clear error instead of a giant allocation or a confusing
+/// read_exact failure mid-buffer.
+struct Bounded<R> {
+    inner: R,
+    remaining: u64,
+    path: String,
+}
+
+impl<R: Read> Bounded<R> {
+    fn read_u64(&mut self) -> Result<u64> {
+        self.take(8, "header")?;
+        Ok(codec::read_u64(&mut self.inner)?)
     }
-    let mut buf8 = [0u8; 8];
-    f.read_exact(&mut buf8)?;
-    let step = u64::from_le_bytes(buf8);
-    f.read_exact(&mut buf8)?;
-    let declared = u64::from_le_bytes(buf8);
-    // Validate the declared element count against the actual file size
-    // before allocating: a truncated or corrupted header must produce a
-    // clear error, not an unbounded allocation or a confusing read_exact
-    // failure mid-buffer.
-    let header = (MAGIC.len() + 16) as u64;
-    let expected = declared
-        .checked_mul(4)
-        .and_then(|body| body.checked_add(header))
-        .ok_or_else(|| {
+
+    fn take(&mut self, n: u64, what: &str) -> Result<()> {
+        if n > self.remaining {
+            bail!(
+                "truncated checkpoint {}: {what} needs {n} bytes but only {} remain",
+                self.path,
+                self.remaining
+            );
+        }
+        self.remaining -= n;
+        Ok(())
+    }
+
+    fn read_bytes(&mut self, what: &str) -> Result<Vec<u8>> {
+        let n = self.read_u64()?;
+        self.take(n, what)?;
+        let mut buf = vec![0u8; n as usize];
+        self.inner.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+
+    fn read_f32s(&mut self, what: &str) -> Result<Vec<f32>> {
+        let n = self.read_u64()?;
+        let bytes = n.checked_mul(4).ok_or_else(|| {
             anyhow::anyhow!(
-                "corrupt checkpoint {}: implausible element count {declared}",
-                path.display()
+                "corrupt checkpoint {}: implausible element count {n}",
+                self.path
             )
         })?;
-    let actual = f
+        self.take(bytes, what)?;
+        Ok(codec::read_f32_payload(&mut self.inner, n as usize)?)
+    }
+}
+
+/// Read any checkpoint version; v1 files yield empty spec/state blobs.
+pub fn load_any(path: impl AsRef<Path>) -> Result<Checkpoint> {
+    let path = path.as_ref();
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let total = f
         .metadata()
         .with_context(|| format!("stat {}", path.display()))?
         .len();
-    if actual != expected {
-        bail!(
-            "truncated checkpoint {}: header declares {declared} params \
-             ({expected} bytes expected) but file has {actual} bytes",
-            path.display(),
-        );
+    let mut f = std::io::BufReader::new(f);
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    let mut r = Bounded {
+        inner: f,
+        remaining: total - 8,
+        path: path.display().to_string(),
+    };
+    match &magic {
+        m if m == MAGIC_V1 => {
+            let step = r.read_u64()?;
+            let params = r.read_f32s("params")?;
+            if r.remaining != 0 {
+                bail!(
+                    "corrupt checkpoint {}: {} trailing bytes after v1 body",
+                    path.display(),
+                    r.remaining
+                );
+            }
+            Ok(Checkpoint {
+                step,
+                spec: String::new(),
+                params,
+                opt_state: Vec::new(),
+                data_state: Vec::new(),
+            })
+        }
+        m if m == MAGIC_V2 => {
+            let step = r.read_u64()?;
+            let spec_bytes = r.read_bytes("spec")?;
+            let spec = String::from_utf8(spec_bytes).map_err(|_| {
+                anyhow::anyhow!("corrupt checkpoint {}: spec is not utf-8", path.display())
+            })?;
+            let params = r.read_f32s("params")?;
+            let opt_state = r.read_bytes("optimizer state")?;
+            let data_state = r.read_bytes("data-stream state")?;
+            if r.remaining != 0 {
+                bail!(
+                    "corrupt checkpoint {}: {} trailing bytes after v2 body",
+                    path.display(),
+                    r.remaining
+                );
+            }
+            Ok(Checkpoint { step, spec, params, opt_state, data_state })
+        }
+        _ => bail!("{} is not a SONew checkpoint", path.display()),
     }
-    let n = declared as usize;
-    let mut bytes = vec![0u8; n * 4];
-    f.read_exact(&mut bytes)?;
-    let mut params = vec![0f32; n];
-    for (i, chunk) in bytes.chunks_exact(4).enumerate() {
-        params[i] = f32::from_le_bytes(chunk.try_into().unwrap());
-    }
-    Ok((step, params))
+}
+
+/// Read a checkpoint back; returns (step, params). Accepts both v1 and
+/// v2 files (the historical params-only view).
+pub fn load(path: impl AsRef<Path>) -> Result<(u64, Vec<f32>)> {
+    let ck = load_any(path)?;
+    Ok((ck.step, ck.params))
 }
 
 #[cfg(test)]
@@ -93,6 +240,62 @@ mod tests {
     }
 
     #[test]
+    fn v1_bytes_are_little_endian_per_element() {
+        // the format is defined by the file bytes, not the host: check
+        // the first payload element against an explicit LE encoding
+        let dir = std::env::temp_dir().join("sonew_ckpt_test_le");
+        let path = dir.join("le.ck");
+        save(&path, 1, &[1.5f32, -2.0]).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let body = &bytes[8 + 8 + 8..];
+        assert_eq!(&body[..4], &1.5f32.to_le_bytes());
+        assert_eq!(&body[4..8], &(-2.0f32).to_le_bytes());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn v2_roundtrip_with_state_blobs() {
+        let dir = std::env::temp_dir().join("sonew_ckpt_test_v2");
+        let path = dir.join("s.ck");
+        let params: Vec<f32> = (0..257).map(|i| (i as f32).sin()).collect();
+        let opt_state = vec![1u8, 2, 3, 4, 5];
+        let data_state = vec![9u8; 17];
+        save_v2(&path, 7, "tridiag-sonew:gamma=1e-4", &params, &opt_state, &data_state)
+            .unwrap();
+        let ck = load_any(&path).unwrap();
+        assert_eq!(ck.step, 7);
+        assert_eq!(ck.spec, "tridiag-sonew:gamma=1e-4");
+        assert_eq!(ck.params, params);
+        assert_eq!(ck.opt_state, opt_state);
+        assert_eq!(ck.data_state, data_state);
+        // the params-only view reads v2 files too
+        let (step, back) = load(&path).unwrap();
+        assert_eq!(step, 7);
+        assert_eq!(back, params);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn overwrite_is_atomic_and_leaves_no_temp_file() {
+        let dir = std::env::temp_dir().join("sonew_ckpt_test_atomic");
+        let path = dir.join("run.ck");
+        save_v2(&path, 1, "adam", &[1.0; 8], &[1], &[2]).unwrap();
+        // overwriting the same path (the TrainSession periodic pattern)
+        // must replace the old file and clean up the temp sibling
+        save_v2(&path, 2, "adam", &[2.0; 8], &[3], &[4]).unwrap();
+        let ck = load_any(&path).unwrap();
+        assert_eq!(ck.step, 2);
+        assert_eq!(ck.params, vec![2.0; 8]);
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .filter(|n| n.ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
     fn rejects_truncated_file() {
         let dir = std::env::temp_dir().join("sonew_ckpt_test3");
         let path = dir.join("trunc.ck");
@@ -107,6 +310,18 @@ mod tests {
     }
 
     #[test]
+    fn rejects_truncated_v2_sections() {
+        let dir = std::env::temp_dir().join("sonew_ckpt_test5");
+        let path = dir.join("trunc2.ck");
+        save_v2(&path, 3, "adam", &[1.0; 64], &[7u8; 100], &[8u8; 100]).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &full[..full.len() - 150]).unwrap();
+        let err = load_any(&path).unwrap_err();
+        assert!(format!("{err}").contains("truncated"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
     fn rejects_absurd_element_count_without_allocating() {
         let dir = std::env::temp_dir().join("sonew_ckpt_test4");
         std::fs::create_dir_all(&dir).unwrap();
@@ -114,7 +329,7 @@ mod tests {
         // header declaring ~2^61 elements and no body: must error out
         // (checked size validation), not attempt a giant allocation
         let mut bytes = Vec::new();
-        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(MAGIC_V1);
         bytes.extend_from_slice(&0u64.to_le_bytes());
         bytes.extend_from_slice(&(1u64 << 61).to_le_bytes());
         std::fs::write(&path, &bytes).unwrap();

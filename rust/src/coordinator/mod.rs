@@ -12,4 +12,6 @@ pub mod trainer;
 pub use metrics::Metrics;
 pub use parallel::{GradProvider, WorkerPool};
 pub use schedule::Schedule;
-pub use trainer::{train, train_single, TrainConfig};
+pub use trainer::{
+    train, train_single, SessionConfig, StatefulProvider, TrainConfig, TrainSession,
+};

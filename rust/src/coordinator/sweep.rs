@@ -3,9 +3,11 @@
 //! machinery behind Table 12 and the "200 hyperparameters per optimizer"
 //! protocol (scaled by `trials`). Objectives are plain closures, so a
 //! sweep can evaluate trials against any runtime `Backend` (the CLI
-//! drives it with a native-backend training run).
+//! drives it with a native-backend training run). Every trial carries
+//! the optimizer's [`OptSpec`], so a winning row is directly runnable
+//! (`Trial::build`) and reportable as a spec string.
 
-use crate::optim::HyperParams;
+use crate::optim::{Blocks, HyperParams, MatBlocks, Opt, OptSpec};
 use crate::util::Rng;
 
 /// The §A.4.3 search box.
@@ -28,15 +30,24 @@ impl Default for SearchSpace {
     }
 }
 
-/// One sampled trial.
+/// One sampled trial: the optimizer spec plus the sampled point.
 #[derive(Debug, Clone)]
 pub struct Trial {
+    pub spec: OptSpec,
     pub lr: f32,
     pub hp: HyperParams,
 }
 
+impl Trial {
+    /// Construct the trial's optimizer (spec keys override the sampled
+    /// hyperparameters, exactly as everywhere else).
+    pub fn build(&self, n: usize, blocks: &Blocks, mats: &MatBlocks) -> anyhow::Result<Opt> {
+        self.spec.build(n, blocks, mats, &self.hp)
+    }
+}
+
 impl SearchSpace {
-    pub fn sample(&self, rng: &mut Rng, base: &HyperParams) -> Trial {
+    pub fn sample(&self, rng: &mut Rng, spec: &OptSpec, base: &HyperParams) -> Trial {
         let lr = rng.log_uniform(self.lr.0, self.lr.1) as f32;
         let hp = HyperParams {
             lr,
@@ -45,7 +56,7 @@ impl SearchSpace {
             eps: rng.log_uniform(self.eps.0, self.eps.1) as f32,
             ..base.clone()
         };
-        Trial { lr, hp }
+        Trial { spec: spec.clone(), lr, hp }
     }
 }
 
@@ -53,13 +64,18 @@ impl SearchSpace {
 pub struct SweepResult {
     pub best: Trial,
     pub best_objective: f32,
+    /// trials that produced a finite objective
     pub evaluated: usize,
+    /// trials discarded for a non-finite objective (diverged runs)
+    pub discarded: usize,
 }
 
 /// Run `trials` random-search evaluations of `objective`. Non-finite
 /// objectives (diverged runs) are discarded, exactly as a practical
-/// tuner does.
+/// tuner does; the summary reports finite evaluations and discards
+/// separately so "evaluated" is never inflated by diverged trials.
 pub fn random_search(
+    spec: &OptSpec,
     space: &SearchSpace,
     base: &HyperParams,
     trials: usize,
@@ -68,12 +84,16 @@ pub fn random_search(
 ) -> Option<SweepResult> {
     let mut rng = Rng::new(seed);
     let mut best: Option<(Trial, f32)> = None;
+    let mut evaluated = 0usize;
+    let mut discarded = 0usize;
     for _ in 0..trials {
-        let trial = space.sample(&mut rng, base);
+        let trial = space.sample(&mut rng, spec, base);
         let obj = objective(&trial);
         if !obj.is_finite() {
+            discarded += 1;
             continue;
         }
+        evaluated += 1;
         if best.as_ref().map_or(true, |(_, b)| obj < *b) {
             best = Some((trial, obj));
         }
@@ -81,7 +101,8 @@ pub fn random_search(
     best.map(|(best, best_objective)| SweepResult {
         best,
         best_objective,
-        evaluated: trials,
+        evaluated,
+        discarded,
     })
 }
 
@@ -89,16 +110,22 @@ pub fn random_search(
 mod tests {
     use super::*;
 
+    fn spec() -> OptSpec {
+        OptSpec::parse("adam").unwrap()
+    }
+
     #[test]
     fn samples_stay_in_box() {
         let space = SearchSpace::default();
         let base = HyperParams::default();
+        let s = spec();
         let mut rng = Rng::new(1);
         for _ in 0..200 {
-            let t = space.sample(&mut rng, &base);
+            let t = space.sample(&mut rng, &s, &base);
             assert!(t.lr >= 1e-7 && t.lr <= 1e-1);
             assert!(t.hp.beta1 >= 0.1 && t.hp.beta1 <= 0.999);
             assert!(t.hp.eps >= 1e-10 && t.hp.eps <= 1e-1);
+            assert_eq!(t.spec.canonical(), "adam");
         }
     }
 
@@ -107,19 +134,21 @@ mod tests {
         // objective minimized at lr = 1e-3
         let space = SearchSpace::default();
         let base = HyperParams::default();
-        let r = random_search(&space, &base, 300, 2, |t| {
+        let r = random_search(&spec(), &space, &base, 300, 2, |t| {
             ((t.lr.ln() - (1e-3f32).ln()).abs()) as f32
         })
         .unwrap();
         assert!(r.best.lr > 2e-4 && r.best.lr < 5e-3, "{}", r.best.lr);
+        assert_eq!(r.evaluated, 300);
+        assert_eq!(r.discarded, 0);
     }
 
     #[test]
-    fn discards_nan_trials() {
+    fn discards_nan_trials_and_reports_honest_counts() {
         let space = SearchSpace::default();
         let base = HyperParams::default();
         let mut flip = false;
-        let r = random_search(&space, &base, 50, 3, |_| {
+        let r = random_search(&spec(), &space, &base, 50, 3, |_| {
             flip = !flip;
             if flip {
                 f32::NAN
@@ -129,5 +158,26 @@ mod tests {
         })
         .unwrap();
         assert_eq!(r.best_objective, 1.0);
+        // evaluated counts only the finite half; discarded the rest
+        assert_eq!(r.evaluated, 25);
+        assert_eq!(r.discarded, 25);
+    }
+
+    #[test]
+    fn all_diverged_returns_none() {
+        let space = SearchSpace::default();
+        let base = HyperParams::default();
+        assert!(random_search(&spec(), &space, &base, 10, 4, |_| f32::NAN).is_none());
+    }
+
+    #[test]
+    fn trial_builds_its_spec() {
+        let space = SearchSpace::default();
+        let base = HyperParams::default();
+        let s = OptSpec::parse("tridiag-sonew:gamma=1e-6").unwrap();
+        let mut rng = Rng::new(8);
+        let t = space.sample(&mut rng, &s, &base);
+        let opt = t.build(16, &vec![(0, 16)], &vec![(0, 16, 4, 4)]).unwrap();
+        assert_eq!(opt.name(), "tridiag-sonew");
     }
 }

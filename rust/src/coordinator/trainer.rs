@@ -1,16 +1,19 @@
 //! The training loop: data-parallel gradients (through any runtime
 //! `Backend` — native or AOT-HLO), global gradient clipping, optimizer
 //! step, LR schedule, metrics — the L3 runtime every experiment harness
-//! drives.
+//! drives. [`TrainSession`] adds the serving shape: periodic v2
+//! checkpoints and exact (bitwise) resume.
 
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::linalg::norm2;
-use crate::optim::Opt;
+use crate::optim::{OptSpec, Optimizer};
 use crate::util::Precision;
 
+use super::checkpoint;
 use super::metrics::Metrics;
 use super::parallel::{GradProvider, WorkerPool};
 use super::schedule::Schedule;
@@ -43,50 +46,65 @@ impl Default for TrainConfig {
     }
 }
 
+/// One full train step minus the gradient: clip, quantize, schedule,
+/// optimizer update, metrics — shared verbatim by the plain loop and
+/// the checkpointable session so their trajectories are identical.
+fn apply_step(
+    params: &mut [f32],
+    opt: &mut dyn Optimizer,
+    cfg: &TrainConfig,
+    step: u64,
+    loss: f32,
+    mut grads: Vec<f32>,
+    metrics: &mut Metrics,
+) -> Result<()> {
+    if cfg.clip > 0.0 {
+        let gn = norm2(&grads);
+        if gn > cfg.clip {
+            let s = cfg.clip / gn;
+            for g in &mut grads {
+                *g *= s;
+            }
+        }
+    }
+    cfg.precision.quantize_slice(&mut grads);
+
+    let lr = cfg.schedule.at(step);
+    let t_opt = std::time::Instant::now();
+    opt.step(params, &grads, lr);
+    metrics.opt_time += t_opt.elapsed();
+
+    if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+        metrics.record(step, loss, lr);
+        if cfg.verbose {
+            println!(
+                "  step {:>6}  loss {:>12.5}  lr {:.2e}  ({})",
+                step,
+                loss,
+                lr,
+                opt.name()
+            );
+        }
+    }
+    if !loss.is_finite() {
+        anyhow::bail!("loss diverged at step {step} ({})", opt.name());
+    }
+    Ok(())
+}
+
 /// Core loop over an arbitrary gradient source.
 pub fn train_with(
     params: &mut Vec<f32>,
-    opt: &mut Opt,
+    opt: &mut dyn Optimizer,
     cfg: &TrainConfig,
     mut grad_step: impl FnMut(&[f32]) -> Result<(f32, Vec<f32>)>,
 ) -> Result<Metrics> {
     let mut metrics = Metrics::default();
     for step in 0..cfg.steps {
         let t_grad = std::time::Instant::now();
-        let (loss, mut grads) = grad_step(params)?;
+        let (loss, grads) = grad_step(params)?;
         metrics.grad_time += t_grad.elapsed();
-
-        if cfg.clip > 0.0 {
-            let gn = norm2(&grads);
-            if gn > cfg.clip {
-                let s = cfg.clip / gn;
-                for g in &mut grads {
-                    *g *= s;
-                }
-            }
-        }
-        cfg.precision.quantize_slice(&mut grads);
-
-        let lr = cfg.schedule.at(step);
-        let t_opt = std::time::Instant::now();
-        opt.step(params, &grads, lr);
-        metrics.opt_time += t_opt.elapsed();
-
-        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
-            metrics.record(step, loss, lr);
-            if cfg.verbose {
-                println!(
-                    "  step {:>6}  loss {:>12.5}  lr {:.2e}  ({})",
-                    step,
-                    loss,
-                    lr,
-                    opt.name()
-                );
-            }
-        }
-        if !loss.is_finite() {
-            anyhow::bail!("loss diverged at step {step} ({})", opt.name());
-        }
+        apply_step(params, opt, cfg, step, loss, grads, &mut metrics)?;
     }
     Ok(metrics)
 }
@@ -94,7 +112,7 @@ pub fn train_with(
 /// Train against a data-parallel worker pool (broadcast + tree reduce).
 pub fn train(
     params: &mut Vec<f32>,
-    opt: &mut Opt,
+    opt: &mut dyn Optimizer,
     pool: &mut WorkerPool,
     cfg: &TrainConfig,
 ) -> Result<Metrics> {
@@ -111,11 +129,163 @@ pub fn train(
 /// providers (thread-affine PJRT clients) work directly.
 pub fn train_single(
     params: &mut Vec<f32>,
-    opt: &mut Opt,
+    opt: &mut dyn Optimizer,
     mut provider: impl GradProvider,
     cfg: &TrainConfig,
 ) -> Result<Metrics> {
     train_with(params, opt, cfg, |p| provider.next_loss_and_grad(p))
+}
+
+// ---------------------------------------------------------------------------
+// Checkpointable training sessions
+// ---------------------------------------------------------------------------
+
+/// A gradient provider whose data-stream position can be serialized —
+/// the third leg (after params and optimizer state) of the exact-resume
+/// guarantee. Implementations persist their RNG positions; static
+/// tables derived from the construction seed are rebuilt, not stored.
+pub trait StatefulProvider: GradProvider {
+    fn save_state(&self, w: &mut dyn std::io::Write) -> std::io::Result<()>;
+    fn load_state(&mut self, r: &mut dyn std::io::Read) -> std::io::Result<()>;
+}
+
+/// Session configuration on top of the plain [`TrainConfig`].
+#[derive(Debug, Clone, Default)]
+pub struct SessionConfig {
+    pub train: TrainConfig,
+    /// write a v2 checkpoint every k completed steps (0 = only on
+    /// explicit `checkpoint()` calls)
+    pub checkpoint_every: u64,
+    /// where periodic checkpoints go (required if `checkpoint_every > 0`)
+    pub checkpoint_path: Option<PathBuf>,
+    /// restore from this checkpoint before the first step
+    pub resume_from: Option<PathBuf>,
+}
+
+/// A long-running training session: the plain training loop plus v2
+/// checkpointing (`SONEWCK2`: params + optimizer state + data-stream
+/// RNG) and exact resume. A session checkpointed at step k and resumed
+/// in a fresh process reproduces the uninterrupted run bitwise — same
+/// params, same loss trajectory.
+pub struct TrainSession<P: StatefulProvider> {
+    pub spec: OptSpec,
+    pub opt: crate::optim::Opt,
+    pub params: Vec<f32>,
+    pub provider: P,
+    /// next step to run (absolute, 0-based)
+    pub step: u64,
+    pub cfg: SessionConfig,
+}
+
+impl<P: StatefulProvider> TrainSession<P> {
+    /// Assemble a session; when `cfg.resume_from` is set the checkpoint
+    /// is restored immediately (params, optimizer state, data stream,
+    /// step clock).
+    pub fn new(
+        spec: OptSpec,
+        opt: crate::optim::Opt,
+        params: Vec<f32>,
+        provider: P,
+        cfg: SessionConfig,
+    ) -> Result<Self> {
+        anyhow::ensure!(
+            cfg.checkpoint_every == 0 || cfg.checkpoint_path.is_some(),
+            "SessionConfig: checkpoint_every = {} but no checkpoint_path — periodic \
+             checkpoints would be silently skipped",
+            cfg.checkpoint_every
+        );
+        let mut s = Self { spec, opt, params, provider, step: 0, cfg };
+        if let Some(path) = s.cfg.resume_from.clone() {
+            s.restore(&path)?;
+        }
+        Ok(s)
+    }
+
+    /// Restore from a checkpoint file (v2 restores everything; v1 files
+    /// restore params + step only, with a fresh optimizer state).
+    pub fn restore(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let path = path.as_ref();
+        let ck = checkpoint::load_any(path)?;
+        if !ck.spec.is_empty() && ck.spec != self.spec.canonical() {
+            anyhow::bail!(
+                "checkpoint {} was written by optimizer `{}` but this session runs `{}`",
+                path.display(),
+                ck.spec,
+                self.spec.canonical()
+            );
+        }
+        anyhow::ensure!(
+            ck.params.len() == self.params.len(),
+            "checkpoint {} holds {} params, session expects {}",
+            path.display(),
+            ck.params.len(),
+            self.params.len()
+        );
+        self.params = ck.params;
+        self.step = ck.step;
+        if !ck.opt_state.is_empty() {
+            self.opt.load_state(&mut &ck.opt_state[..])?;
+        }
+        if !ck.data_state.is_empty() {
+            self.provider.load_state(&mut &ck.data_state[..])?;
+        }
+        Ok(())
+    }
+
+    /// Write a v2 checkpoint of the complete session state.
+    pub fn checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let mut opt_state = Vec::new();
+        self.opt.save_state(&mut opt_state)?;
+        let mut data_state = Vec::new();
+        self.provider.save_state(&mut data_state)?;
+        checkpoint::save_v2(
+            path,
+            self.step,
+            &self.spec.canonical(),
+            &self.params,
+            &opt_state,
+            &data_state,
+        )
+    }
+
+    /// Steps remaining until `cfg.train.steps`.
+    pub fn remaining(&self) -> u64 {
+        self.cfg.train.steps.saturating_sub(self.step)
+    }
+
+    /// Advance at most `k` steps (bounded by the configured total),
+    /// writing periodic checkpoints per `checkpoint_every`.
+    pub fn run_steps(&mut self, k: u64) -> Result<Metrics> {
+        let mut metrics = Metrics::default();
+        let until = self.cfg.train.steps.min(self.step + k);
+        while self.step < until {
+            let step = self.step;
+            let t_grad = std::time::Instant::now();
+            let (loss, grads) = self.provider.next_loss_and_grad(&self.params)?;
+            metrics.grad_time += t_grad.elapsed();
+            apply_step(
+                &mut self.params,
+                &mut self.opt,
+                &self.cfg.train,
+                step,
+                loss,
+                grads,
+                &mut metrics,
+            )?;
+            self.step += 1;
+            if self.cfg.checkpoint_every > 0 && self.step % self.cfg.checkpoint_every == 0 {
+                if let Some(path) = self.cfg.checkpoint_path.clone() {
+                    self.checkpoint(&path)?;
+                }
+            }
+        }
+        Ok(metrics)
+    }
+
+    /// Run to the configured total step count.
+    pub fn run(&mut self) -> Result<Metrics> {
+        self.run_steps(self.remaining())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -140,6 +310,15 @@ impl GradProvider for NativeAeProvider {
             pool_to(&x, self.images.side, want)
         };
         Ok(self.mlp.loss_and_grad(params, &x))
+    }
+}
+
+impl StatefulProvider for NativeAeProvider {
+    fn save_state(&self, w: &mut dyn std::io::Write) -> std::io::Result<()> {
+        self.images.rng().save_state(w)
+    }
+    fn load_state(&mut self, r: &mut dyn std::io::Read) -> std::io::Result<()> {
+        self.images.rng_mut().load_state(r)
     }
 }
 
@@ -191,6 +370,15 @@ impl GradProvider for BackendAeProvider {
     }
 }
 
+impl StatefulProvider for BackendAeProvider {
+    fn save_state(&self, w: &mut dyn std::io::Write) -> std::io::Result<()> {
+        self.images.rng().save_state(w)
+    }
+    fn load_state(&mut self, r: &mut dyn std::io::Read) -> std::io::Result<()> {
+        self.images.rng_mut().load_state(r)
+    }
+}
+
 /// Backend language-model provider (Figure 3 driver): next-token batches
 /// from the synthetic corpus through any backend's `lm_grads` program —
 /// the native transformer (always available) or the AOT HLO artifact.
@@ -216,6 +404,15 @@ impl GradProvider for BackendLmProvider {
     }
 }
 
+impl StatefulProvider for BackendLmProvider {
+    fn save_state(&self, w: &mut dyn std::io::Write) -> std::io::Result<()> {
+        self.corpus.rng().save_state(w)
+    }
+    fn load_state(&mut self, r: &mut dyn std::io::Read) -> std::io::Result<()> {
+        self.corpus.rng_mut().load_state(r)
+    }
+}
+
 /// Native softmax-classifier provider (ViT-proxy / GNN-proxy figures).
 pub enum ProxyTask {
     Images(crate::data::SynthImages),
@@ -238,11 +435,33 @@ impl GradProvider for NativeClassifierProvider {
     }
 }
 
+impl StatefulProvider for NativeClassifierProvider {
+    fn save_state(&self, w: &mut dyn std::io::Write) -> std::io::Result<()> {
+        match &self.task {
+            ProxyTask::Images(s) => s.rng().save_state(w),
+            ProxyTask::Graphs(s) => s.rng().save_state(w),
+        }
+    }
+    fn load_state(&mut self, r: &mut dyn std::io::Read) -> std::io::Result<()> {
+        match &mut self.task {
+            ProxyTask::Images(s) => s.rng_mut().load_state(r),
+            ProxyTask::Graphs(s) => s.rng_mut().load_state(r),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::models::Mlp;
-    use crate::optim::{build, HyperParams, OptKind};
+    use crate::optim::{HyperParams, Opt, OptSpec};
+
+    fn build(spec: &str, mlp: &Mlp, hp: &HyperParams) -> Opt {
+        OptSpec::parse(spec)
+            .unwrap()
+            .build(mlp.total, &mlp.blocks(), &mlp.mat_blocks(), hp)
+            .unwrap()
+    }
 
     fn small_ae_setup(seed: u64) -> (Mlp, Vec<f32>) {
         let mlp = Mlp::new(&[49, 32, 16, 32, 49]);
@@ -295,7 +514,10 @@ mod tests {
         let hp = HyperParams::default();
         let blocks = crate::optim::blocks_of(&model.layout);
         let mats = crate::optim::mat_blocks_of(&model.layout);
-        let mut opt = build(OptKind::Adam, model.total, &blocks, &mats, &hp);
+        let mut opt = OptSpec::parse("adam")
+            .unwrap()
+            .build(model.total, &blocks, &mats, &hp)
+            .unwrap();
         let provider = BackendLmProvider {
             backend: Box::new(crate::runtime::NativeBackend::new()),
             program: "lm_small_grads".into(),
@@ -316,10 +538,8 @@ mod tests {
     #[test]
     fn single_worker_training_reduces_loss() {
         let (mlp, mut p) = small_ae_setup(1);
-        let blocks = mlp.blocks();
-        let mats = mlp.mat_blocks();
         let hp = HyperParams::default();
-        let mut opt = build(OptKind::Adam, mlp.total, &blocks, &mats, &hp);
+        let mut opt = build("adam", &mlp, &hp);
         let cfg = TrainConfig {
             steps: 60,
             schedule: Schedule::Constant { lr: 3e-3 },
@@ -344,7 +564,7 @@ mod tests {
                     as Box<dyn GradProvider>
             });
             let hp = HyperParams::default();
-            let mut opt = build(OptKind::Adam, mlp.total, &mlp.blocks(), &mlp.mat_blocks(), &hp);
+            let mut opt = build("adam", &mlp, &hp);
             let cfg = TrainConfig {
                 steps: 40,
                 schedule: Schedule::Constant { lr: 3e-3 },
@@ -362,7 +582,7 @@ mod tests {
     fn clipping_bounds_update() {
         let (mlp, mut p) = small_ae_setup(5);
         let hp = HyperParams::default();
-        let mut opt = build(OptKind::Sgd, mlp.total, &mlp.blocks(), &mlp.mat_blocks(), &hp);
+        let mut opt = build("sgd", &mlp, &hp);
         let p_before = p.clone();
         let cfg = TrainConfig {
             steps: 1,
@@ -384,9 +604,9 @@ mod tests {
         // with Adam grafting trains the AE at least as well as plain
         // momentum at the same step budget.
         let (mlp, p0) = small_ae_setup(7);
-        let run = |kind: OptKind, mut p: Vec<f32>| -> f32 {
+        let run = |spec: &str, mut p: Vec<f32>| -> f32 {
             let hp = HyperParams { gamma: 1e-8, ..Default::default() };
-            let mut opt = build(kind, mlp.total, &mlp.blocks(), &mlp.mat_blocks(), &hp);
+            let mut opt = build(spec, &mlp, &hp);
             let cfg = TrainConfig {
                 steps: 80,
                 schedule: Schedule::Constant { lr: 2e-3 },
@@ -398,11 +618,53 @@ mod tests {
                 .tail_mean_loss(5)
                 .unwrap()
         };
-        let l_mom = run(OptKind::Momentum, p0.clone());
-        let l_tds = run(OptKind::TridiagSonew, p0);
+        let l_mom = run("momentum", p0.clone());
+        let l_tds = run("tridiag-sonew", p0);
         assert!(
             l_tds < l_mom * 1.1,
             "tridiag-SONew {l_tds} should be competitive with momentum {l_mom}"
         );
+    }
+
+    #[test]
+    fn session_checkpoints_and_restores_midstream() {
+        let dir = std::env::temp_dir().join("sonew_session_test");
+        let path = dir.join("s.ck");
+        let spec = OptSpec::parse("adam").unwrap();
+        let (mlp, p0) = small_ae_setup(11);
+        let hp = HyperParams::default();
+        let make = |p: Vec<f32>| {
+            TrainSession::new(
+                spec.clone(),
+                build("adam", &mlp, &hp),
+                p,
+                NativeAeProvider {
+                    mlp: mlp.clone(),
+                    images: crate::data::SynthImages::new(12),
+                    batch: 4,
+                },
+                SessionConfig {
+                    train: TrainConfig {
+                        steps: 6,
+                        schedule: Schedule::Constant { lr: 1e-3 },
+                        ..Default::default()
+                    },
+                    checkpoint_every: 2,
+                    checkpoint_path: Some(path.clone()),
+                    resume_from: None,
+                },
+            )
+            .unwrap()
+        };
+        let mut s = make(p0.clone());
+        s.run_steps(4).unwrap();
+        assert_eq!(s.step, 4);
+        // the periodic checkpoint at step 4 restores into a fresh session
+        let mut r = make(p0);
+        r.restore(&path).unwrap();
+        assert_eq!(r.step, 4);
+        assert_eq!(r.params, s.params);
+        assert_eq!(r.opt.steps(), 4);
+        std::fs::remove_dir_all(dir).ok();
     }
 }

@@ -30,6 +30,15 @@ impl SynthImages {
         self.side * self.side
     }
 
+    /// Data-stream position (checkpointable training sessions).
+    pub fn rng(&self) -> &Rng {
+        &self.rng
+    }
+
+    pub fn rng_mut(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
     /// One image of the given class: a class-specific arc + bar pattern,
     /// smoothly rendered (gaussian-profile strokes) with mild noise.
     fn render(&mut self, class: usize) -> Vec<f32> {
@@ -103,6 +112,15 @@ pub struct SynthGraphs {
 impl SynthGraphs {
     pub fn new(seed: u64) -> Self {
         Self { feat_dim: 32, classes: 2, rng: Rng::new(seed) }
+    }
+
+    /// Data-stream position (checkpointable training sessions).
+    pub fn rng(&self) -> &Rng {
+        &self.rng
+    }
+
+    pub fn rng_mut(&mut self) -> &mut Rng {
+        &mut self.rng
     }
 
     /// Generate one graph and return pooled permutation-invariant

@@ -23,6 +23,17 @@ impl LmCorpus {
         Self { vocab, rng, trans_a, trans_b }
     }
 
+    /// Data-stream position (checkpointable training sessions). The
+    /// transition tables are derived deterministically from the seed at
+    /// construction, so the RNG word is the only mutable state.
+    pub fn rng(&self) -> &Rng {
+        &self.rng
+    }
+
+    pub fn rng_mut(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
     fn next_token(&mut self, prev: usize) -> usize {
         if self.rng.uniform() < 0.75 {
             // structured successor: deterministic map + small window

@@ -8,5 +8,7 @@ pub mod dense;
 pub mod eig;
 
 pub use chol::{cholesky_in_place, cholesky_solve_in_place, spd_solve};
-pub use dense::{axpy, dot, matmul, matmul_into, matmul_nt, matmul_tn, matvec, norm2, Mat};
+pub use dense::{
+    axpy, dot, hw_threads, matmul, matmul_into, matmul_nt, matmul_tn, matvec, norm2, Mat,
+};
 pub use eig::{sym_eig, sym_pow};

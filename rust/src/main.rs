@@ -4,15 +4,22 @@
 //! ```text
 //! sonew table t1|t6|t9|ae|f1-vit|f1-gnn|f3   # regenerate a paper artifact
 //! sonew lm --steps 60                        # Figure-3 LM run (native transformer)
-//! sonew train --model ae --opt tridiag-sonew --steps 100
+//! sonew train --opt band-sonew:band=8,graft=adam --steps 100
+//! sonew train --opt tds --checkpoint run.ck --checkpoint-every 20
+//! sonew train --opt tds --resume run.ck      # exact (bitwise) resume
 //! sonew sweep --opt adam --trials 20         # Table 12 protocol
+//! sonew opts                                 # optimizer spec registry
 //! sonew list                                 # artifact inventory
 //! ```
+//!
+//! Optimizers are selected everywhere by spec string — see
+//! `sonew train --help` or `sonew opts` for the registry.
 
 use anyhow::Result;
 use sonew::cli::Args;
 use sonew::coordinator::sweep::{random_search, SearchSpace};
-use sonew::optim::{HyperParams, OptKind};
+use sonew::coordinator::{Schedule, SessionConfig, TrainConfig, TrainSession};
+use sonew::optim::{spec::registry_help, HyperParams, OptSpec};
 use sonew::tables;
 use sonew::util::Precision;
 
@@ -30,11 +37,17 @@ fn run() -> Result<()> {
         Some("lm") => lm(&args),
         Some("train") => train(&args),
         Some("sweep") => sweep(&args),
+        Some("opts") => {
+            print!("{}", registry_help());
+            Ok(())
+        }
         Some("list") => list(),
         _ => {
             println!(
-                "usage: sonew <table|lm|train|sweep|list> [flags]\n\
+                "usage: sonew <table|lm|train|sweep|opts|list> [flags]\n\
                  tables: t1 t6 t9 ae ae-band ae-batch ae-bf16 f1-vit f1-gnn f3\n\
+                 `--opt` takes an optimizer spec (name[:key=value,...]);\n\
+                 run `sonew opts` or `sonew train --help` for the registry.\n\
                  see README.md for the full flag reference"
             );
             Ok(())
@@ -46,6 +59,15 @@ fn run() -> Result<()> {
 /// the native transformer; `sonew table f3` is the long-form alias.
 fn lm(args: &Args) -> Result<()> {
     tables::lm::run(&tables::lm::LmRunConfig::from_args(args, 60, true))
+}
+
+/// Spec strings may contain commas, so multi-spec list flags split on
+/// `;` (e.g. `--opts "adam;band-sonew:band=8"`).
+fn spec_list(raw: &str) -> Vec<String> {
+    raw.split(';')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect()
 }
 
 fn table(args: &Args) -> Result<()> {
@@ -92,10 +114,10 @@ fn table(args: &Args) -> Result<()> {
                 "ae-bf16" => {
                     cfg.precision = Precision::Bf16;
                     cfg.optimizers = vec![
-                        OptKind::TridiagSonew,
-                        OptKind::BandSonew,
-                        OptKind::Adam,
-                        OptKind::RmsProp,
+                        "tridiag-sonew".into(),
+                        "band-sonew".into(),
+                        "adam".into(),
+                        "rmsprop".into(),
                     ];
                     cfg.gamma = args.f32_or("gamma", 0.0);
                     if cfg.gamma > 0.0 {
@@ -104,27 +126,24 @@ fn table(args: &Args) -> Result<()> {
                 }
                 "ae-batch" => {
                     cfg.optimizers = vec![
-                        OptKind::RmsProp,
-                        OptKind::Adam,
-                        OptKind::Shampoo,
-                        OptKind::TridiagSonew,
-                        OptKind::BandSonew,
+                        "rmsprop".into(),
+                        "adam".into(),
+                        "shampoo".into(),
+                        "tridiag-sonew".into(),
+                        "band-sonew".into(),
                     ];
                     tag = format!("{tag}_b{}", cfg.batch);
                 }
                 _ => {
                     if let Some(opts) = args.get("opts") {
-                        cfg.optimizers = opts
-                            .split(',')
-                            .filter_map(OptKind::parse)
-                            .collect();
+                        cfg.optimizers = spec_list(opts);
                     }
                     if args.has("extended") {
                         cfg.optimizers = vec![
-                            OptKind::KfacProxy,
-                            OptKind::Eva,
-                            OptKind::FishLegDiag,
-                            OptKind::TridiagSonew,
+                            "kfac".into(),
+                            "eva".into(),
+                            "fishleg".into(),
+                            "tridiag-sonew".into(),
                         ];
                         tag = "ae_extended".into();
                     }
@@ -147,10 +166,30 @@ fn table(args: &Args) -> Result<()> {
 }
 
 fn train(args: &Args) -> Result<()> {
+    if args.has("help") {
+        println!(
+            "usage: sonew train --opt <spec> [--steps N] [--batch B] [--small] [--native]\n\
+             \x20                 [--checkpoint PATH [--checkpoint-every K]] [--resume PATH]\n\
+             \n\
+             --checkpoint/--resume run a TrainSession with v2 checkpoints\n\
+             (SONEWCK2: params + optimizer state + data RNG); a resumed run\n\
+             reproduces the uninterrupted trajectory bitwise.\n\n{}",
+            registry_help()
+        );
+        return Ok(());
+    }
+    let spec = OptSpec::parse(args.get_or("opt", "tridiag-sonew"))?;
+    if args.has("checkpoint") || args.has("resume") {
+        return train_session(args, &spec);
+    }
+    if args.has("checkpoint-every") {
+        anyhow::bail!(
+            "--checkpoint-every needs a checkpoint file: add --checkpoint PATH \
+             (or --resume PATH)"
+        );
+    }
     // thin driver over the AE benchmark path (the full experiment
     // harnesses live behind `sonew table`)
-    let kind = OptKind::parse(args.get_or("opt", "tridiag-sonew"))
-        .ok_or_else(|| anyhow::anyhow!("unknown --opt"))?;
     let cfg = tables::autoencoder::AeBenchConfig {
         steps: args.u64_or("steps", 100),
         batch: args.usize_or("batch", 256),
@@ -159,7 +198,7 @@ fn train(args: &Args) -> Result<()> {
         verbose: true,
         ..Default::default()
     };
-    let row = tables::autoencoder::run_one(kind, &cfg, None)?;
+    let row = tables::autoencoder::run_one(&spec, &cfg)?;
     println!(
         "trained {}: final loss {:.4} in {:.1}s (grad {:.1}s, opt {:.1}s)",
         row.name, row.final_loss, row.wall_s, row.grad_s, row.opt_s
@@ -167,23 +206,98 @@ fn train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The serving shape: a checkpointable `TrainSession` over the native AE
+/// workload, with `--checkpoint`/`--checkpoint-every`/`--resume`.
+fn train_session(args: &Args, spec: &OptSpec) -> Result<()> {
+    // a bare `--checkpoint` / `--resume` (path swallowed by the next
+    // flag) must not silently train with checkpointing disabled
+    for flag in ["checkpoint", "resume"] {
+        if args.has(flag) && args.get(flag).is_none() {
+            anyhow::bail!("--{flag} requires a file path (e.g. --{flag} run.ck)");
+        }
+    }
+    let mlp = if args.has("small") {
+        sonew::models::Mlp::autoencoder_small()
+    } else {
+        sonew::models::Mlp::autoencoder()
+    };
+    let (lr, hp) = tables::autoencoder::tuned_hp(spec.name(), Precision::F32, 0.0);
+    let mut rng = sonew::util::Rng::new(args.u64_or("seed", 0));
+    let params = mlp.init(&mut rng);
+    let mats = tables::autoencoder::cap_mat_blocks(&mlp.mat_blocks(), 128);
+    let opt = spec.build(mlp.total, &mlp.blocks(), &mats, &hp)?;
+    let steps = args.u64_or("steps", 100);
+    let provider = sonew::coordinator::trainer::NativeAeProvider {
+        mlp: mlp.clone(),
+        images: sonew::data::SynthImages::new(args.u64_or("seed", 0) + 1),
+        batch: args.usize_or("batch", 64),
+    };
+    let cfg = SessionConfig {
+        train: TrainConfig {
+            steps,
+            schedule: Schedule::Constant { lr },
+            verbose: true,
+            ..Default::default()
+        },
+        checkpoint_every: args.u64_or("checkpoint-every", 20),
+        checkpoint_path: args
+            .get("checkpoint")
+            .or_else(|| args.get("resume"))
+            .map(Into::into),
+        resume_from: args.get("resume").map(Into::into),
+    };
+    let mut session = TrainSession::new(spec.clone(), opt, params, provider, cfg)?;
+    if session.step > 0 {
+        println!("[train] resumed {spec} at step {}", session.step);
+    }
+    if session.remaining() == 0 {
+        println!(
+            "[train] checkpoint is already at step {} of {steps}; nothing to run \
+             (raise --steps to continue training)",
+            session.step
+        );
+        return Ok(());
+    }
+    let m = session.run()?;
+    if let Some(path) = &session.cfg.checkpoint_path {
+        session.checkpoint(path)?;
+        println!("[train] checkpointed step {} -> {}", session.step, path.display());
+    }
+    println!(
+        "trained {}: final loss {:.4} over {} steps",
+        session.opt.name(),
+        m.tail_mean_loss(5).unwrap_or(f32::NAN),
+        session.step,
+    );
+    Ok(())
+}
+
 fn sweep(args: &Args) -> Result<()> {
-    let kind = OptKind::parse(args.get_or("opt", "tridiag-sonew"))
-        .ok_or_else(|| anyhow::anyhow!("unknown --opt"))?;
+    if args.has("help") {
+        println!(
+            "usage: sonew sweep --opt <spec> [--trials N] [--steps K] [--seed S]\n\n{}",
+            registry_help()
+        );
+        return Ok(());
+    }
+    let spec = OptSpec::parse(args.get_or("opt", "tridiag-sonew"))?;
     let trials = args.usize_or("trials", 20);
     let steps = args.u64_or("steps", 20);
     let space = SearchSpace::default();
     let base = HyperParams::default();
-    println!("[sweep] {kind:?}: {trials} trials x {steps} steps (small AE, native)");
-    let result = random_search(&space, &base, trials, args.u64_or("seed", 0), |trial| {
+    println!("[sweep] {spec}: {trials} trials x {steps} steps (small AE, native)");
+    let result = random_search(&spec, &space, &base, trials, args.u64_or("seed", 0), |trial| {
         let mlp = sonew::models::Mlp::autoencoder_small();
         let mut rng = sonew::util::Rng::new(0);
         let mut params = mlp.init(&mut rng);
         let mats = tables::autoencoder::cap_mat_blocks(&mlp.mat_blocks(), 128);
-        let mut opt = sonew::optim::build(kind, mlp.total, &mlp.blocks(), &mats, &trial.hp);
-        let tc = sonew::coordinator::TrainConfig {
+        let mut opt = match trial.build(mlp.total, &mlp.blocks(), &mats) {
+            Ok(o) => o,
+            Err(_) => return f32::NAN,
+        };
+        let tc = TrainConfig {
             steps,
-            schedule: sonew::coordinator::Schedule::Constant { lr: trial.lr },
+            schedule: Schedule::Constant { lr: trial.lr },
             ..Default::default()
         };
         let provider = sonew::coordinator::trainer::NativeAeProvider {
@@ -198,22 +312,35 @@ fn sweep(args: &Args) -> Result<()> {
     });
     match result {
         Some(r) => {
+            // report the *effective* hyperparameters (spec keys override
+            // the sampled point, exactly as Trial::build runs them) —
+            // never a sampled value that a pinned key shadowed
+            let eff = r.best.spec.hyperparams(&r.best.hp)?;
             println!(
-                "[sweep] best {kind:?}: loss {:.4} @ lr={:.3e} beta1={:.3} beta2={:.3} eps={:.2e}",
-                r.best_objective, r.best.lr, r.best.hp.beta1, r.best.hp.beta2, r.best.hp.eps
+                "[sweep] best {spec}: loss {:.4} @ lr={:.3e} beta1={:.3} beta2={:.3} eps={:.2e} \
+                 ({} finite, {} discarded)",
+                r.best_objective,
+                r.best.lr,
+                eff.beta1,
+                eff.beta2,
+                eff.eps,
+                r.evaluated,
+                r.discarded,
             );
             let mut t = sonew::util::io::MdTable::new(&[
-                "optimizer", "lr", "beta1", "beta2", "eps", "loss",
+                "spec", "lr", "beta1", "beta2", "eps", "loss", "evaluated", "discarded",
             ]);
             t.row([
-                format!("{kind:?}"),
+                r.best.spec.canonical(),
                 format!("{:.3e}", r.best.lr),
-                format!("{:.3}", r.best.hp.beta1),
-                format!("{:.3}", r.best.hp.beta2),
-                format!("{:.2e}", r.best.hp.eps),
+                format!("{:.3}", eff.beta1),
+                format!("{:.3}", eff.beta2),
+                format!("{:.2e}", eff.eps),
                 format!("{:.4}", r.best_objective),
+                r.evaluated.to_string(),
+                r.discarded.to_string(),
             ]);
-            t.write(format!("t12_sweep_{kind:?}.md"))?;
+            t.write(format!("t12_sweep_{}.md", spec.name()))?;
         }
         None => println!("[sweep] all trials diverged"),
     }

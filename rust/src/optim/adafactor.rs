@@ -8,7 +8,9 @@
 //! layerwise damping of the learning rate). First-moment momentum is
 //! provided by the `Opt` core's beta1.
 
-use super::{Blocks, Direction};
+use std::io::{Read, Write};
+
+use super::{state, Blocks, Direction};
 
 pub struct AdaFactor {
     beta2: f32,
@@ -82,6 +84,20 @@ impl Direction for AdaFactor {
 
     fn memory_floats(&self) -> usize {
         self.v.len() + self.param_rms.len()
+    }
+
+    fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
+        state::write_tag(w, b"ADAF")?;
+        state::write_u64(w, self.t)?;
+        state::write_f32s(w, &self.v)?;
+        state::write_f32s(w, &self.param_rms)
+    }
+
+    fn load_state(&mut self, r: &mut dyn Read) -> std::io::Result<()> {
+        state::expect_tag(r, b"ADAF", "adafactor")?;
+        self.t = state::read_u64(r)?;
+        state::read_f32s_into(r, &mut self.v, "adafactor.v")?;
+        state::read_f32s_into(r, &mut self.param_rms, "adafactor.param_rms")
     }
 }
 

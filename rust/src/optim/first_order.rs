@@ -1,6 +1,9 @@
 //! First-order baselines from §5.1: Nesterov, Adagrad, RMSProp, Adam.
 //! (SGD is `Identity`; Momentum is `Identity` + the core's beta1.)
 
+use std::io::{Read, Write};
+
+use super::state;
 use super::Direction;
 
 /// Nesterov accelerated gradient as a direction provider:
@@ -30,6 +33,14 @@ impl Direction for Nesterov {
     fn memory_floats(&self) -> usize {
         self.m.len()
     }
+    fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
+        state::write_tag(w, b"NSTR")?;
+        state::write_f32s(w, &self.m)
+    }
+    fn load_state(&mut self, r: &mut dyn Read) -> std::io::Result<()> {
+        state::expect_tag(r, b"NSTR", "nesterov")?;
+        state::read_f32s_into(r, &mut self.m, "nesterov.m")
+    }
 }
 
 /// Adagrad [Duchi et al. 2011]: accumulate squared gradients, scale by
@@ -57,6 +68,14 @@ impl Direction for Adagrad {
     }
     fn memory_floats(&self) -> usize {
         self.acc.len()
+    }
+    fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
+        state::write_tag(w, b"ADGR")?;
+        state::write_f32s(w, &self.acc)
+    }
+    fn load_state(&mut self, r: &mut dyn Read) -> std::io::Result<()> {
+        state::expect_tag(r, b"ADGR", "adagrad")?;
+        state::read_f32s_into(r, &mut self.acc, "adagrad.acc")
     }
 }
 
@@ -86,6 +105,14 @@ impl Direction for RmsProp {
     }
     fn memory_floats(&self) -> usize {
         self.v.len()
+    }
+    fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
+        state::write_tag(w, b"RMSP")?;
+        state::write_f32s(w, &self.v)
+    }
+    fn load_state(&mut self, r: &mut dyn Read) -> std::io::Result<()> {
+        state::expect_tag(r, b"RMSP", "rmsprop")?;
+        state::read_f32s_into(r, &mut self.v, "rmsprop.v")
     }
 }
 
@@ -129,6 +156,18 @@ impl Direction for Adam {
     }
     fn memory_floats(&self) -> usize {
         self.m.len() + self.v.len()
+    }
+    fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
+        state::write_tag(w, b"ADAM")?;
+        state::write_u64(w, self.t)?;
+        state::write_f32s(w, &self.m)?;
+        state::write_f32s(w, &self.v)
+    }
+    fn load_state(&mut self, r: &mut dyn Read) -> std::io::Result<()> {
+        state::expect_tag(r, b"ADAM", "adam")?;
+        self.t = state::read_u64(r)?;
+        state::read_f32s_into(r, &mut self.m, "adam.m")?;
+        state::read_f32s_into(r, &mut self.v, "adam.v")
     }
 }
 

@@ -3,6 +3,8 @@
 //! from another (Adam for SONew/rfdSON, RMSProp for Shampoo):
 //! `update = (|v_mag| / |v_dir|) * v_dir`, per tensor block.
 
+use std::io::{Read, Write};
+
 use crate::linalg::norm2;
 
 use super::{Blocks, Direction};
@@ -45,6 +47,18 @@ impl Direction for Graft {
 
     fn memory_floats(&self) -> usize {
         self.dir.memory_floats() + self.mag.memory_floats()
+    }
+
+    /// Composite state: direction stats then magnitude stats (the
+    /// `mag_buf` scratch is recomputed, not persisted).
+    fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
+        self.dir.save_state(w)?;
+        self.mag.save_state(w)
+    }
+
+    fn load_state(&mut self, r: &mut dyn Read) -> std::io::Result<()> {
+        self.dir.load_state(r)?;
+        self.mag.load_state(r)
     }
 }
 

@@ -22,9 +22,11 @@
 //!   inverse-Fisher ansatz λ, learned online by the Legendre auxiliary
 //!   objective's gradient: ∇_λ [½ λg·F(λg) − g·(λg)] with F ≈ diag(EMA g²).
 
+use std::io::{Read, Write};
+
 use crate::linalg::{matmul, sym_pow, Mat};
 
-use super::{Direction, HyperParams, MatBlocks};
+use super::{state, Direction, HyperParams, MatBlocks};
 
 
 /// kl_clip analog: rescale `u[off..off+len]` to have the same l2 norm as
@@ -133,6 +135,38 @@ impl Direction for KfacProxy {
             .iter()
             .map(|b| 2 * (b.d1 * b.d1 + b.d2 * b.d2))
             .sum()
+    }
+
+    fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
+        state::write_tag(w, b"KFAC")?;
+        state::write_u64(w, self.t)?;
+        state::write_u64(w, self.blocks.len() as u64)?;
+        for b in &self.blocks {
+            state::write_f32s(w, &b.l.data)?;
+            state::write_f32s(w, &b.r.data)?;
+            state::write_f32s(w, &b.l_inv.data)?;
+            state::write_f32s(w, &b.r_inv.data)?;
+        }
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut dyn Read) -> std::io::Result<()> {
+        state::expect_tag(r, b"KFAC", "kfac-proxy")?;
+        self.t = state::read_u64(r)?;
+        let nb = state::read_u64(r)? as usize;
+        if nb != self.blocks.len() {
+            return Err(state::bad_state(format!(
+                "kfac-proxy: {nb} blocks in state vs {} configured",
+                self.blocks.len()
+            )));
+        }
+        for b in &mut self.blocks {
+            state::read_f32s_into(r, &mut b.l.data, "kfac.l")?;
+            state::read_f32s_into(r, &mut b.r.data, "kfac.r")?;
+            state::read_f32s_into(r, &mut b.l_inv.data, "kfac.l_inv")?;
+            state::read_f32s_into(r, &mut b.r_inv.data, "kfac.r_inv")?;
+        }
+        Ok(())
     }
 }
 
@@ -244,6 +278,32 @@ impl Direction for Eva {
     fn memory_floats(&self) -> usize {
         self.blocks.iter().map(|b| b.d1 + b.d2).sum()
     }
+
+    fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
+        state::write_tag(w, b"EVA1")?;
+        state::write_u64(w, self.blocks.len() as u64)?;
+        for b in &self.blocks {
+            state::write_f32s(w, &b.a)?;
+            state::write_f32s(w, &b.b)?;
+        }
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut dyn Read) -> std::io::Result<()> {
+        state::expect_tag(r, b"EVA1", "eva")?;
+        let nb = state::read_u64(r)? as usize;
+        if nb != self.blocks.len() {
+            return Err(state::bad_state(format!(
+                "eva: {nb} blocks in state vs {} configured",
+                self.blocks.len()
+            )));
+        }
+        for b in &mut self.blocks {
+            state::read_f32s_into(r, &mut b.a, "eva.a")?;
+            state::read_f32s_into(r, &mut b.b, "eva.b")?;
+        }
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -300,6 +360,18 @@ impl Direction for FishLegDiag {
 
     fn memory_floats(&self) -> usize {
         self.q.len() + self.f.len()
+    }
+
+    fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
+        state::write_tag(w, b"FLEG")?;
+        state::write_f32s(w, &self.q)?;
+        state::write_f32s(w, &self.f)
+    }
+
+    fn load_state(&mut self, r: &mut dyn Read) -> std::io::Result<()> {
+        state::expect_tag(r, b"FLEG", "fishleg-diag")?;
+        state::read_f32s_into(r, &mut self.q, "fishleg.q")?;
+        state::read_f32s_into(r, &mut self.f, "fishleg.f")
     }
 }
 

@@ -1,49 +1,60 @@
 //! Analytical optimizer-memory accounting — regenerates Table 6 ("rough
 //! estimate of memory requirement comparisons across benchmarks") and the
 //! memory column of Table 1 from the model layouts, without allocating
-//! anything.
-
-use super::OptKind;
+//! anything. Keyed by canonical registry names (see [`super::spec`]).
 
 /// Statistics floats (excluding parameters themselves) an optimizer holds
 /// for a model with tensors shaped `(d1, d2)` (vectors as d x 1), counted
-/// in multiples of `n = total params` where convenient.
-pub fn state_floats(kind: OptKind, mats: &[(usize, usize, usize, usize)], hp_band: usize, hp_rank: usize) -> usize {
+/// in multiples of `n = total params` where convenient. `name` is a
+/// canonical registry name; unknown names panic (the registry is the
+/// source of truth).
+pub fn state_floats(
+    name: &str,
+    mats: &[(usize, usize, usize, usize)],
+    hp_band: usize,
+    hp_rank: usize,
+) -> usize {
     let n: usize = mats.iter().map(|&(_, len, _, _)| len).sum();
-    match kind {
-        OptKind::Sgd => 0,
-        OptKind::Momentum | OptKind::Nesterov => n,
-        OptKind::Adagrad => n,
-        OptKind::RmsProp => n,
-        OptKind::Adam => 2 * n,
+    match name {
+        "sgd" => 0,
+        "momentum" | "nesterov" => n,
+        "adagrad" => n,
+        "rmsprop" => n,
+        "adam" => 2 * n,
         // non-factored AdaFactor: v + per-tensor scale (+ beta1 momentum
         // counted by the core when enabled)
-        OptKind::AdaFactor => n + mats.len(),
+        "adafactor" => n + mats.len(),
         // diag statistics + adam-graft (m, v) handled separately; bare: n
-        OptKind::DiagSonew => n,
-        OptKind::TridiagSonew => 2 * n,
-        OptKind::BandSonew => (hp_band + 1) * n,
+        "diag-sonew" => n,
+        "tridiag-sonew" => 2 * n,
+        "band-sonew" => (hp_band + 1) * n,
         // statistics + cached preconditioners (paper A.4.2)
-        OptKind::Shampoo | OptKind::KfacProxy => mats
+        "shampoo" | "kfac" => mats
             .iter()
             .map(|&(_, _, d1, d2)| 2 * (d1 * d1 + d2 * d2))
             .sum(),
-        OptKind::RfdSon => (hp_rank + 1) * n,
-        OptKind::Ons => n * n,
-        OptKind::Eva => mats.iter().map(|&(_, _, d1, d2)| d1 + d2).sum(),
-        OptKind::FishLegDiag => 2 * n,
+        "rfdson" => (hp_rank + 1) * n,
+        "ons" => n * n,
+        "eva" => mats.iter().map(|&(_, _, d1, d2)| d1 + d2).sum(),
+        "fishleg" => 2 * n,
+        other => panic!("state_floats: unknown optimizer name {other:?}"),
     }
 }
 
 /// Memory in units of n (#params), as Table 6 reports it. An empty
 /// layout holds no state: report 0 rather than letting 0/0 = NaN
 /// silently propagate into the table output.
-pub fn state_in_params(kind: OptKind, mats: &[(usize, usize, usize, usize)], band: usize, rank: usize) -> f64 {
+pub fn state_in_params(
+    name: &str,
+    mats: &[(usize, usize, usize, usize)],
+    band: usize,
+    rank: usize,
+) -> f64 {
     let n: usize = mats.iter().map(|&(_, len, _, _)| len).sum();
     if n == 0 {
         return 0.0;
     }
-    state_floats(kind, mats, band, rank) as f64 / n as f64
+    state_floats(name, mats, band, rank) as f64 / n as f64
 }
 
 #[cfg(test)]
@@ -55,8 +66,8 @@ mod tests {
     #[test]
     fn shampoo_worse_than_tridiag_for_rectangular() {
         let mats = vec![(0usize, 40_000usize, 400usize, 100usize)];
-        let sh = state_floats(OptKind::Shampoo, &mats, 1, 1);
-        let tds = state_floats(OptKind::TridiagSonew, &mats, 1, 1);
+        let sh = state_floats("shampoo", &mats, 1, 1);
+        let tds = state_floats("tridiag-sonew", &mats, 1, 1);
         assert!(sh as f64 > 2.0 * tds as f64, "{sh} vs {tds}");
     }
 
@@ -67,7 +78,7 @@ mod tests {
             let mats = vec![(0usize, d1 * d2, d1, d2)];
             // compare raw statistics (Shampoo's 2x cache excluded)
             let sh_stats = d1 * d1 + d2 * d2;
-            let tds = state_floats(OptKind::TridiagSonew, &mats, 1, 1);
+            let tds = state_floats("tridiag-sonew", &mats, 1, 1);
             assert!(tds <= 2 * sh_stats.max(d1 * d2), "{d1}x{d2}");
             assert!(2 * d1 * d2 <= 2 * sh_stats);
         }
@@ -75,23 +86,34 @@ mod tests {
 
     #[test]
     fn empty_layout_reports_zero_not_nan() {
-        for &kind in &[OptKind::Adam, OptKind::TridiagSonew, OptKind::Shampoo] {
-            let v = state_in_params(kind, &[], 4, 4);
-            assert!(v.is_finite(), "{kind:?}: {v}");
-            assert_eq!(v, 0.0, "{kind:?}");
+        for name in ["adam", "tridiag-sonew", "shampoo"] {
+            let v = state_in_params(name, &[], 4, 4);
+            assert!(v.is_finite(), "{name}: {v}");
+            assert_eq!(v, 0.0, "{name}");
         }
         // zero-length tensors (degenerate layout) must not NaN either
         let mats = vec![(0usize, 0usize, 0usize, 0usize)];
-        assert_eq!(state_in_params(OptKind::Adam, &mats, 4, 4), 0.0);
+        assert_eq!(state_in_params("adam", &mats, 4, 4), 0.0);
     }
 
     #[test]
     fn table1_column_ratios() {
         let mats = vec![(0usize, 1_000_000usize, 1000usize, 1000usize)];
         let n = 1_000_000;
-        assert_eq!(state_floats(OptKind::Adam, &mats, 4, 4), 2 * n);
-        assert_eq!(state_floats(OptKind::TridiagSonew, &mats, 4, 4), 2 * n);
-        assert_eq!(state_floats(OptKind::BandSonew, &mats, 4, 4), 5 * n);
-        assert_eq!(state_floats(OptKind::RfdSon, &mats, 4, 4), 5 * n);
+        assert_eq!(state_floats("adam", &mats, 4, 4), 2 * n);
+        assert_eq!(state_floats("tridiag-sonew", &mats, 4, 4), 2 * n);
+        assert_eq!(state_floats("band-sonew", &mats, 4, 4), 5 * n);
+        assert_eq!(state_floats("rfdson", &mats, 4, 4), 5 * n);
+    }
+
+    #[test]
+    fn every_registry_name_is_accounted() {
+        // the analytic table must cover the whole registry — a new
+        // optimizer without a memory row is a hard failure, not a 0
+        let mats = vec![(0usize, 12usize, 3usize, 4usize)];
+        for e in crate::optim::registry() {
+            let v = state_in_params(e.name, &mats, 4, 4);
+            assert!(v.is_finite(), "{}", e.name);
+        }
     }
 }

@@ -3,7 +3,9 @@
 //! inverse; usable only for small n (convex experiments, regret tests)
 //! which is precisely the paper's point.
 
-use super::Direction;
+use std::io::{Read, Write};
+
+use super::{state, Direction};
 
 pub struct FullOns {
     n: usize,
@@ -61,6 +63,16 @@ impl Direction for FullOns {
 
     fn memory_floats(&self) -> usize {
         self.n * self.n
+    }
+
+    fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
+        state::write_tag(w, b"FONS")?;
+        state::write_f32s(w, &self.ainv)
+    }
+
+    fn load_state(&mut self, r: &mut dyn Read) -> std::io::Result<()> {
+        state::expect_tag(r, b"FONS", "ons")?;
+        state::read_f32s_into(r, &mut self.ainv, "ons.ainv")
     }
 }
 

@@ -12,9 +12,11 @@
 //! Gram matrix with the Jacobi eigensolver — O(m^2 n) per step, matching
 //! Table 1's O(m^2 d1 d2).
 
+use std::io::{Read, Write};
+
 use crate::linalg::{sym_eig, Mat};
 
-use super::{Blocks, Direction};
+use super::{state, Blocks, Direction};
 
 pub(crate) struct BlockSketch {
     off: usize,
@@ -152,6 +154,32 @@ impl Direction for RfdSon {
     /// (m+1) * n sketch floats per block (Table 1's m d1 d2 class).
     fn memory_floats(&self) -> usize {
         self.blocks.iter().map(|b| (self.m + 1) * b.n).sum()
+    }
+
+    fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
+        state::write_tag(w, b"RFDS")?;
+        state::write_u64(w, self.blocks.len() as u64)?;
+        for b in &self.blocks {
+            state::write_f32s(w, &b.b)?;
+            state::write_f32(w, b.alpha)?;
+        }
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut dyn Read) -> std::io::Result<()> {
+        state::expect_tag(r, b"RFDS", "rfdson")?;
+        let nb = state::read_u64(r)? as usize;
+        if nb != self.blocks.len() {
+            return Err(state::bad_state(format!(
+                "rfdson: {nb} blocks in state vs {} configured",
+                self.blocks.len()
+            )));
+        }
+        for b in &mut self.blocks {
+            state::read_f32s_into(r, &mut b.b, "rfdson.sketch")?;
+            b.alpha = state::read_f32(r)?;
+        }
+        Ok(())
     }
 }
 

@@ -7,9 +7,11 @@
 //! Jacobi eigensolver (the paper's Shampoo(20)), which is exactly the
 //! O(d1^3 + d2^3) cost / (d1^2 + d2^2) memory of Table 1.
 
+use std::io::{Read, Write};
+
 use crate::linalg::{matmul, matmul_nt, matmul_tn, sym_pow, Mat};
 
-use super::{Direction, HyperParams, MatBlocks};
+use super::{state, Direction, HyperParams, MatBlocks};
 
 struct BlockState {
     off: usize,
@@ -102,6 +104,41 @@ impl Direction for Shampoo {
 
     fn memory_floats(&self) -> usize {
         self.stat_floats()
+    }
+
+    /// Statistics + the cached roots + the refresh clock — the roots are
+    /// part of the trajectory (they stay fixed between refreshes), so
+    /// exact resume must restore them rather than recompute.
+    fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
+        state::write_tag(w, b"SHMP")?;
+        state::write_u64(w, self.t)?;
+        state::write_u64(w, self.blocks.len() as u64)?;
+        for b in &self.blocks {
+            state::write_f32s(w, &b.l.data)?;
+            state::write_f32s(w, &b.r.data)?;
+            state::write_f32s(w, &b.l_root.data)?;
+            state::write_f32s(w, &b.r_root.data)?;
+        }
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut dyn Read) -> std::io::Result<()> {
+        state::expect_tag(r, b"SHMP", "shampoo")?;
+        self.t = state::read_u64(r)?;
+        let nb = state::read_u64(r)? as usize;
+        if nb != self.blocks.len() {
+            return Err(state::bad_state(format!(
+                "shampoo: {nb} blocks in state vs {} configured",
+                self.blocks.len()
+            )));
+        }
+        for b in &mut self.blocks {
+            state::read_f32s_into(r, &mut b.l.data, "shampoo.l")?;
+            state::read_f32s_into(r, &mut b.r.data, "shampoo.r")?;
+            state::read_f32s_into(r, &mut b.l_root.data, "shampoo.l_root")?;
+            state::read_f32s_into(r, &mut b.r_root.data, "shampoo.r_root")?;
+        }
+        Ok(())
     }
 }
 

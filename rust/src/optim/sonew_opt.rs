@@ -2,10 +2,12 @@
 //! preconditioning of the flat gradient (Algorithm 1 with the practical
 //! EMA statistics; see `crate::sonew` for the kernels).
 
+use std::io::{Read, Write};
+
 use crate::sonew::{BandedState, LambdaMode, TridiagState};
 use crate::util::Precision;
 
-use super::{Blocks, Direction, HyperParams};
+use super::{state, Blocks, Direction, HyperParams};
 
 enum State {
     Diag(TridiagState),
@@ -115,6 +117,55 @@ impl Direction for SonewDir {
             State::Tridiag(s) => s.memory_floats(),
             State::Banded(s) => s.memory_floats(),
         }
+    }
+
+    /// Statistics (`hd`/`ho` or the stacked band diagonals) plus the
+    /// step clock; edge masks are structural and rebuilt from the spec.
+    fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
+        state::write_tag(w, b"SONW")?;
+        match &self.state {
+            State::Diag(s) | State::Tridiag(s) => {
+                state::write_u64(w, s.step_count())?;
+                state::write_f32s(w, &s.hd)?;
+                state::write_f32s(w, &s.ho)?;
+            }
+            State::Banded(s) => {
+                state::write_u64(w, s.step_count())?;
+                state::write_u64(w, s.diags.len() as u64)?;
+                for d in &s.diags {
+                    state::write_f32s(w, d)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn load_state(&mut self, r: &mut dyn Read) -> std::io::Result<()> {
+        state::expect_tag(r, b"SONW", &self.label)?;
+        match &mut self.state {
+            State::Diag(s) | State::Tridiag(s) => {
+                let t = state::read_u64(r)?;
+                s.set_step_count(t);
+                state::read_f32s_into(r, &mut s.hd, "sonew.hd")?;
+                state::read_f32s_into(r, &mut s.ho, "sonew.ho")?;
+            }
+            State::Banded(s) => {
+                let t = state::read_u64(r)?;
+                s.set_step_count(t);
+                let nd = state::read_u64(r)? as usize;
+                if nd != s.diags.len() {
+                    return Err(state::bad_state(format!(
+                        "{}: {nd} diagonals in state vs band+1 = {}",
+                        self.label,
+                        s.diags.len()
+                    )));
+                }
+                for d in &mut s.diags {
+                    state::read_f32s_into(r, d, "sonew.diags")?;
+                }
+            }
+        }
+        Ok(())
     }
 }
 

@@ -1,0 +1,783 @@
+//! Spec-string optimizer construction: `"band-sonew:band=8,graft=adam"`.
+//!
+//! An [`OptSpec`] is a canonical optimizer name plus `key=value`
+//! overrides, parsed from the grammar
+//!
+//! ```text
+//! spec  := name [":" pair ("," pair)*]
+//! pair  := key "=" value
+//! ```
+//!
+//! and resolved against the constructor registry below. The same spec
+//! strings are consumed by the CLI (`--opt`), the sweep scheduler
+//! (`Trial` carries a spec) and every `tables/*` harness, so a result
+//! row's label round-trips back into a runnable configuration. Unknown
+//! names and unknown keys are hard errors with a did-you-mean listing;
+//! legacy aliases (`tds`, `bds`, `band_sonew`, `band-4-sonew`) keep
+//! parsing to their canonical entries.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::Precision;
+
+use super::first_order as fo;
+use super::{
+    adafactor, graft, kron_baselines, ons, rfdson, shampoo, sonew_opt, Blocks, Direction,
+    HyperParams, Identity, MatBlocks, Opt,
+};
+
+/// Grafting-magnitude selection (`graft=` key). `Default` defers to the
+/// registry entry's paper default gated by `HyperParams::grafting`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum GraftSel {
+    Default,
+    None,
+    Adam,
+    RmsProp,
+}
+
+/// Everything a registry constructor needs.
+struct BuildCtx<'a> {
+    n: usize,
+    blocks: &'a Blocks,
+    mats: &'a MatBlocks,
+    hp: &'a HyperParams,
+    graft: GraftSel,
+}
+
+type BlockDirs = Vec<(usize, usize, Box<dyn Direction>)>;
+
+/// One registered optimizer: canonical name, aliases, accepted spec
+/// keys, and the constructor.
+pub struct OptEntry {
+    pub name: &'static str,
+    pub aliases: &'static [&'static str],
+    pub keys: &'static [&'static str],
+    pub summary: &'static str,
+    pub example: &'static str,
+    ctor: fn(&BuildCtx<'_>) -> Opt,
+}
+
+const FIRST_ORDER_KEYS: &[&str] = &["beta1", "beta2", "eps", "wd", "precision"];
+const SONEW_KEYS: &[&str] = &["beta1", "beta2", "eps", "gamma", "graft", "wd", "precision"];
+const BAND_KEYS: &[&str] = &["band", "beta1", "beta2", "eps", "gamma", "graft", "wd", "precision"];
+const KRON_KEYS: &[&str] = &["beta1", "beta2", "eps", "interval", "graft", "wd", "precision"];
+
+static REGISTRY: &[OptEntry] = &[
+    OptEntry {
+        name: "sgd",
+        aliases: &[],
+        keys: &["wd", "precision"],
+        summary: "plain stochastic gradient descent",
+        example: "sgd",
+        ctor: ctor_sgd,
+    },
+    OptEntry {
+        name: "momentum",
+        aliases: &[],
+        keys: &["beta1", "wd", "precision"],
+        summary: "SGD + heavy-ball (EMA) momentum",
+        example: "momentum:beta1=0.9",
+        ctor: ctor_momentum,
+    },
+    OptEntry {
+        name: "nesterov",
+        aliases: &[],
+        keys: &["beta1", "wd", "precision"],
+        summary: "Nesterov accelerated gradient",
+        example: "nesterov:beta1=0.9",
+        ctor: ctor_nesterov,
+    },
+    OptEntry {
+        name: "adagrad",
+        aliases: &[],
+        keys: &["eps", "wd", "precision"],
+        summary: "Adagrad (accumulated squared gradients)",
+        example: "adagrad:eps=1e-8",
+        ctor: ctor_adagrad,
+    },
+    OptEntry {
+        name: "rmsprop",
+        aliases: &[],
+        keys: &["beta2", "eps", "wd", "precision"],
+        summary: "RMSProp (EMA of squared gradients)",
+        example: "rmsprop:beta2=0.9",
+        ctor: ctor_rmsprop,
+    },
+    OptEntry {
+        name: "adam",
+        aliases: &[],
+        keys: FIRST_ORDER_KEYS,
+        summary: "Adam with bias correction",
+        example: "adam:beta2=0.94,eps=1e-6",
+        ctor: ctor_adam,
+    },
+    OptEntry {
+        name: "adafactor",
+        aliases: &[],
+        keys: FIRST_ORDER_KEYS,
+        summary: "AdaFactor (non-factored) with update clipping",
+        example: "adafactor:beta2=0.99",
+        ctor: ctor_adafactor,
+    },
+    OptEntry {
+        name: "diag-sonew",
+        aliases: &["diag_sonew"],
+        keys: SONEW_KEYS,
+        summary: "diagonal-sparsity SONew (Table 3's b=0)",
+        example: "diag-sonew:beta2=0.95",
+        ctor: ctor_diag_sonew,
+    },
+    OptEntry {
+        name: "tridiag-sonew",
+        aliases: &["tds", "tridiag_sonew"],
+        keys: SONEW_KEYS,
+        summary: "chain-graph SONew (the paper's headline method)",
+        example: "tridiag-sonew:gamma=1e-4,graft=adam",
+        ctor: ctor_tridiag_sonew,
+    },
+    OptEntry {
+        name: "band-sonew",
+        aliases: &["bds", "band_sonew"],
+        keys: BAND_KEYS,
+        summary: "banded-b SONew (Algorithm 2)",
+        example: "band-sonew:band=8,graft=adam,gamma=1e-4",
+        ctor: ctor_band_sonew,
+    },
+    OptEntry {
+        name: "shampoo",
+        aliases: &[],
+        keys: KRON_KEYS,
+        summary: "Shampoo(t) with cached inverse fourth roots",
+        example: "shampoo:interval=20,graft=rmsprop",
+        ctor: ctor_shampoo,
+    },
+    OptEntry {
+        name: "rfdson",
+        aliases: &[],
+        keys: &["rank", "beta1", "beta2", "eps", "graft", "wd", "precision"],
+        summary: "robust-frequent-directions sketched online Newton",
+        example: "rfdson:rank=4",
+        ctor: ctor_rfdson,
+    },
+    OptEntry {
+        name: "ons",
+        aliases: &[],
+        keys: &["eps", "precision"],
+        summary: "full-matrix Online Newton Step (small n only)",
+        example: "ons:eps=1.0",
+        ctor: ctor_ons,
+    },
+    OptEntry {
+        name: "kfac",
+        aliases: &["kfac-proxy"],
+        keys: KRON_KEYS,
+        summary: "KFAC-proxy (gradient-moment Kronecker factors)",
+        example: "kfac:interval=15",
+        ctor: ctor_kfac,
+    },
+    OptEntry {
+        name: "eva",
+        aliases: &[],
+        keys: &["beta1", "beta2", "eps", "graft", "wd", "precision"],
+        summary: "Eva (rank-1 Kronecker vectors, O(n) memory)",
+        example: "eva:eps=0.03",
+        ctor: ctor_eva,
+    },
+    OptEntry {
+        name: "fishleg",
+        aliases: &["fishleg-diag"],
+        keys: &["beta1", "beta2", "eps", "graft", "wd", "precision"],
+        summary: "FishLeg restricted to a diagonal inverse-Fisher ansatz",
+        example: "fishleg:eps=1e-6",
+        ctor: ctor_fishleg,
+    },
+];
+
+/// The full constructor registry (CLI help, property tests, docs).
+pub fn registry() -> &'static [OptEntry] {
+    REGISTRY
+}
+
+/// The Table-2 lineup, in the paper's row order.
+pub fn table2_specs() -> &'static [&'static str] {
+    &[
+        "sgd",
+        "nesterov",
+        "adagrad",
+        "momentum",
+        "rmsprop",
+        "adam",
+        "diag-sonew",
+        "shampoo",
+        "rfdson",
+        "tridiag-sonew",
+        "band-sonew",
+    ]
+}
+
+/// Multi-line registry listing for `--help` output.
+pub fn registry_help() -> String {
+    let mut out = String::from(
+        "optimizer specs: name[:key=value,...]   (aliases in brackets)\n",
+    );
+    for e in REGISTRY {
+        let alias = if e.aliases.is_empty() {
+            String::new()
+        } else {
+            format!(" [{}]", e.aliases.join(", "))
+        };
+        out.push_str(&format!("  {:<15}{alias:<22} {}\n", e.name, e.summary));
+        out.push_str(&format!(
+            "  {:<15}keys: {}   e.g. `{}`\n",
+            "", e.keys.join(","), e.example
+        ));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// OptSpec
+// ---------------------------------------------------------------------------
+
+/// A parsed optimizer spec: canonical name + validated key overrides.
+/// `parse -> canonical -> parse` round-trips for every registered name
+/// and alias.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct OptSpec {
+    name: String,
+    keys: BTreeMap<String, String>,
+}
+
+impl OptSpec {
+    /// Canonical registry name (aliases already resolved).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.keys.get(key).map(|s| s.as_str())
+    }
+
+    /// Canonical rendering: `name` or `name:k1=v1,k2=v2` (keys sorted).
+    pub fn canonical(&self) -> String {
+        if self.keys.is_empty() {
+            self.name.clone()
+        } else {
+            let pairs: Vec<String> =
+                self.keys.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            format!("{}:{}", self.name, pairs.join(","))
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        let s_trim = s.trim();
+        let (name_raw, rest) = match s_trim.split_once(':') {
+            Some((a, b)) => (a.trim(), Some(b)),
+            None => (s_trim, None),
+        };
+        let (entry, implied) = lookup(name_raw)?;
+        let mut keys = BTreeMap::new();
+        for (k, v) in implied {
+            keys.insert(k, v);
+        }
+        if let Some(rest) = rest {
+            for part in rest.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                let (k, v) = part.split_once('=').ok_or_else(|| {
+                    anyhow!("malformed `{part}` in spec `{s_trim}` (expected key=value)")
+                })?;
+                let (k, v) = (k.trim(), v.trim());
+                if !entry.keys.contains(&k) {
+                    let hint = suggest(k, entry.keys.iter().copied())
+                        .map(|c| format!(" — did you mean `{c}`?"))
+                        .unwrap_or_default();
+                    bail!(
+                        "unknown key `{k}` for {}{hint} (accepted: {})",
+                        entry.name,
+                        entry.keys.join(", ")
+                    );
+                }
+                validate_value(k, v)?;
+                if keys.insert(k.to_string(), v.to_string()).is_some() {
+                    bail!("duplicate key `{k}` in spec `{s_trim}`");
+                }
+            }
+        }
+        Ok(Self { name: entry.name.to_string(), keys })
+    }
+
+    /// Resolve the base hyperparameters + this spec's overrides.
+    pub fn hyperparams(&self, base: &HyperParams) -> Result<HyperParams> {
+        Ok(self.resolve(base)?.0)
+    }
+
+    fn resolve(&self, base: &HyperParams) -> Result<(HyperParams, GraftSel)> {
+        let mut hp = base.clone();
+        let mut sel = GraftSel::Default;
+        for (k, v) in &self.keys {
+            apply_key(&mut hp, &mut sel, k, v)?;
+        }
+        Ok((hp, sel))
+    }
+
+    /// Build a ready-to-run optimizer for an `n`-dim flat parameter
+    /// vector with per-tensor `blocks` and matrix views `mats` (pass
+    /// empty slices for whole-vector treatment). `base` supplies the
+    /// hyperparameters this spec's keys override.
+    pub fn build(
+        &self,
+        n: usize,
+        blocks: &Blocks,
+        mats: &MatBlocks,
+        base: &HyperParams,
+    ) -> Result<Opt> {
+        let (hp, graft) = self.resolve(base)?;
+        let blocks_one = vec![(0usize, n)];
+        let blocks = if blocks.is_empty() { &blocks_one } else { blocks };
+        let mats_one: MatBlocks =
+            blocks.iter().map(|&(off, len)| (off, len, len, 1)).collect();
+        let mats = if mats.is_empty() { &mats_one } else { mats };
+        let entry = lookup(&self.name)?.0;
+        let cx = BuildCtx { n, blocks, mats, hp: &hp, graft };
+        Ok((entry.ctor)(&cx))
+    }
+}
+
+impl std::fmt::Display for OptSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.canonical())
+    }
+}
+
+fn lookup(name: &str) -> Result<(&'static OptEntry, Vec<(String, String)>)> {
+    for e in REGISTRY {
+        if e.name == name || e.aliases.contains(&name) {
+            return Ok((e, vec![]));
+        }
+    }
+    // legacy label sugar: `band-<k>-sonew` == `band-sonew:band=<k>`
+    if let Some(mid) = name.strip_prefix("band-").and_then(|r| r.strip_suffix("-sonew")) {
+        if let Ok(b) = mid.parse::<usize>() {
+            let e = REGISTRY.iter().find(|e| e.name == "band-sonew").unwrap();
+            return Ok((e, vec![("band".into(), b.to_string())]));
+        }
+    }
+    let all: Vec<&str> = REGISTRY
+        .iter()
+        .flat_map(|e| std::iter::once(e.name).chain(e.aliases.iter().copied()))
+        .collect();
+    let hint = suggest(name, all.iter().copied())
+        .map(|c| format!(" — did you mean `{c}`?"))
+        .unwrap_or_default();
+    let names: Vec<&str> = REGISTRY.iter().map(|e| e.name).collect();
+    bail!("unknown optimizer `{name}`{hint} (known: {})", names.join(", "))
+}
+
+fn validate_value(k: &str, v: &str) -> Result<()> {
+    let mut hp = HyperParams::default();
+    let mut sel = GraftSel::Default;
+    apply_key(&mut hp, &mut sel, k, v)
+}
+
+fn apply_key(hp: &mut HyperParams, sel: &mut GraftSel, k: &str, v: &str) -> Result<()> {
+    let f = |v: &str| -> Result<f32> {
+        let x: f32 = v
+            .parse()
+            .map_err(|_| anyhow!("key `{k}`: `{v}` is not a number"))?;
+        if !x.is_finite() {
+            bail!("key `{k}`: `{v}` is not finite");
+        }
+        Ok(x)
+    };
+    let u = |v: &str| -> Result<usize> {
+        v.parse()
+            .map_err(|_| anyhow!("key `{k}`: `{v}` is not a non-negative integer"))
+    };
+    match k {
+        "beta1" => hp.beta1 = f(v)?,
+        "beta2" => hp.beta2 = f(v)?,
+        "eps" => hp.eps = f(v)?,
+        "gamma" => hp.gamma = f(v)?,
+        "wd" => hp.weight_decay = f(v)?,
+        "band" => hp.band = u(v)?,
+        "rank" => hp.rank = u(v)?,
+        "interval" => hp.interval = u(v)?,
+        "precision" => {
+            hp.precision = Precision::parse(v)
+                .ok_or_else(|| anyhow!("key `precision`: `{v}` (accepted: f32, bf16)"))?
+        }
+        "graft" => {
+            *sel = match v {
+                "adam" => GraftSel::Adam,
+                "rmsprop" => GraftSel::RmsProp,
+                "none" => GraftSel::None,
+                _ => bail!("key `graft`: `{v}` (accepted: adam, rmsprop, none)"),
+            };
+            hp.grafting = *sel != GraftSel::None;
+        }
+        _ => bail!("unknown key `{k}`"),
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// did-you-mean
+// ---------------------------------------------------------------------------
+
+fn edit_distance(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+fn suggest<'a>(input: &str, cands: impl Iterator<Item = &'a str>) -> Option<&'a str> {
+    let best = cands
+        .map(|c| (edit_distance(input, c), c))
+        .min_by_key(|&(d, _)| d)?;
+    (best.0 <= (input.len() / 3).max(2)).then_some(best.1)
+}
+
+// ---------------------------------------------------------------------------
+// constructors
+// ---------------------------------------------------------------------------
+
+fn per_block(cx: &BuildCtx, mk: impl Fn(usize) -> Box<dyn Direction>) -> BlockDirs {
+    cx.blocks.iter().map(|&(off, len)| (off, len, mk(len))).collect()
+}
+
+/// Matrix views that fall inside one tensor block, rebased to
+/// block-local offsets (Kronecker constructors).
+fn mats_in(cx: &BuildCtx, off: usize, len: usize) -> MatBlocks {
+    let mut out: MatBlocks = cx
+        .mats
+        .iter()
+        .filter(|&&(o, l, _, _)| o >= off && o + l <= off + len)
+        .map(|&(o, l, d1, d2)| (o - off, l, d1, d2))
+        .collect();
+    if out.is_empty() {
+        out.push((0, len, len, 1));
+    }
+    out
+}
+
+/// Wrap a second-order direction with its grafting magnitude (paper §5):
+/// the spec's `graft=` key, or `default_mag` when grafting is on.
+fn maybe_graft(
+    cx: &BuildCtx,
+    default_mag: GraftSel,
+    len: usize,
+    dir: Box<dyn Direction>,
+) -> Box<dyn Direction> {
+    let sel = match cx.graft {
+        GraftSel::Default => {
+            if cx.hp.grafting {
+                default_mag
+            } else {
+                GraftSel::None
+            }
+        }
+        s => s,
+    };
+    let mag: Box<dyn Direction> = match sel {
+        GraftSel::None => return dir,
+        GraftSel::Adam => Box::new(fo::Adam::new(len, cx.hp.beta1, cx.hp.beta2, cx.hp.eps)),
+        GraftSel::RmsProp => Box::new(fo::RmsProp::new(len, cx.hp.beta2, cx.hp.eps)),
+        // resolved above: Default collapses to the entry's paper default
+        GraftSel::Default => unreachable!("GraftSel::Default resolved before dispatch"),
+    };
+    Box::new(graft::Graft::new(dir, mag, vec![(0, len)]))
+}
+
+fn base(cx: &BuildCtx, label: String, dirs: BlockDirs) -> Opt {
+    Opt::from_blocks(label, dirs)
+        .with_weight_decay(cx.hp.weight_decay)
+        .with_precision(cx.hp.precision)
+}
+
+fn ctor_sgd(cx: &BuildCtx) -> Opt {
+    base(cx, "sgd".into(), per_block(cx, |_| Box::new(Identity)))
+}
+
+fn ctor_momentum(cx: &BuildCtx) -> Opt {
+    base(cx, "momentum".into(), per_block(cx, |_| Box::new(Identity)))
+        .with_momentum(cx.hp.beta1)
+}
+
+fn ctor_nesterov(cx: &BuildCtx) -> Opt {
+    let b1 = cx.hp.beta1;
+    base(cx, "nesterov".into(), per_block(cx, |len| Box::new(fo::Nesterov::new(len, b1))))
+}
+
+fn ctor_adagrad(cx: &BuildCtx) -> Opt {
+    let eps = cx.hp.eps;
+    base(cx, "adagrad".into(), per_block(cx, |len| Box::new(fo::Adagrad::new(len, eps))))
+}
+
+fn ctor_rmsprop(cx: &BuildCtx) -> Opt {
+    let (b2, eps) = (cx.hp.beta2, cx.hp.eps);
+    base(cx, "rmsprop".into(), per_block(cx, |len| Box::new(fo::RmsProp::new(len, b2, eps))))
+}
+
+fn ctor_adam(cx: &BuildCtx) -> Opt {
+    let (b1, b2, eps) = (cx.hp.beta1, cx.hp.beta2, cx.hp.eps);
+    base(cx, "adam".into(), per_block(cx, |len| Box::new(fo::Adam::new(len, b1, b2, eps))))
+}
+
+fn ctor_adafactor(cx: &BuildCtx) -> Opt {
+    let (b2, eps) = (cx.hp.beta2, cx.hp.eps);
+    base(
+        cx,
+        "adafactor".into(),
+        per_block(cx, |len| {
+            Box::new(adafactor::AdaFactor::new(len, vec![(0, len)], b2, eps))
+        }),
+    )
+    .with_momentum(cx.hp.beta1)
+}
+
+fn ctor_sonew(
+    cx: &BuildCtx,
+    label: String,
+    which: fn(usize, &Blocks, &HyperParams) -> sonew_opt::SonewDir,
+) -> Opt {
+    let dirs = cx
+        .blocks
+        .iter()
+        .map(|&(off, len)| {
+            let dir = Box::new(which(len, &vec![(0, len)], cx.hp)) as Box<dyn Direction>;
+            (off, len, maybe_graft(cx, GraftSel::Adam, len, dir))
+        })
+        .collect();
+    base(cx, label, dirs).with_momentum(cx.hp.beta1)
+}
+
+fn ctor_diag_sonew(cx: &BuildCtx) -> Opt {
+    ctor_sonew(cx, "diag-sonew".into(), sonew_opt::SonewDir::diag)
+}
+
+fn ctor_tridiag_sonew(cx: &BuildCtx) -> Opt {
+    ctor_sonew(cx, "tridiag-sonew".into(), sonew_opt::SonewDir::tridiag)
+}
+
+fn ctor_band_sonew(cx: &BuildCtx) -> Opt {
+    let label = format!("band-{}-sonew", cx.hp.band.max(1));
+    ctor_sonew(cx, label, sonew_opt::SonewDir::banded)
+}
+
+fn ctor_shampoo(cx: &BuildCtx) -> Opt {
+    let dirs = cx
+        .blocks
+        .iter()
+        .map(|&(off, len)| {
+            let dir = Box::new(shampoo::Shampoo::new(len, mats_in(cx, off, len), cx.hp))
+                as Box<dyn Direction>;
+            // paper default: Shampoo uses RMSProp grafting
+            (off, len, maybe_graft(cx, GraftSel::RmsProp, len, dir))
+        })
+        .collect();
+    base(cx, format!("shampoo({})", cx.hp.interval), dirs).with_momentum(cx.hp.beta1)
+}
+
+fn ctor_rfdson(cx: &BuildCtx) -> Opt {
+    let dirs = cx
+        .blocks
+        .iter()
+        .map(|&(off, len)| {
+            let dir = Box::new(rfdson::RfdSon::new(len, vec![(0, len)], cx.hp.rank, cx.hp.eps))
+                as Box<dyn Direction>;
+            (off, len, maybe_graft(cx, GraftSel::Adam, len, dir))
+        })
+        .collect();
+    base(cx, format!("rfdson({})", cx.hp.rank), dirs).with_momentum(cx.hp.beta1)
+}
+
+fn ctor_ons(cx: &BuildCtx) -> Opt {
+    // full-matrix statistics are not block-diagonal: one whole-vector
+    // block regardless of the layout
+    Opt::single("ons", Box::new(ons::FullOns::new(cx.n, cx.hp.eps)), cx.n)
+        .with_precision(cx.hp.precision)
+}
+
+fn ctor_kfac(cx: &BuildCtx) -> Opt {
+    let dirs = cx
+        .blocks
+        .iter()
+        .map(|&(off, len)| {
+            let dir = Box::new(kron_baselines::KfacProxy::new(len, mats_in(cx, off, len), cx.hp))
+                as Box<dyn Direction>;
+            (off, len, maybe_graft(cx, GraftSel::Adam, len, dir))
+        })
+        .collect();
+    base(cx, "kfac-proxy".into(), dirs).with_momentum(cx.hp.beta1)
+}
+
+fn ctor_eva(cx: &BuildCtx) -> Opt {
+    let dirs = cx
+        .blocks
+        .iter()
+        .map(|&(off, len)| {
+            let dir = Box::new(kron_baselines::Eva::new(len, mats_in(cx, off, len), cx.hp))
+                as Box<dyn Direction>;
+            (off, len, maybe_graft(cx, GraftSel::Adam, len, dir))
+        })
+        .collect();
+    base(cx, "eva".into(), dirs).with_momentum(cx.hp.beta1)
+}
+
+fn ctor_fishleg(cx: &BuildCtx) -> Opt {
+    let dirs = cx
+        .blocks
+        .iter()
+        .map(|&(off, len)| {
+            let dir =
+                Box::new(kron_baselines::FishLegDiag::new(len, cx.hp)) as Box<dyn Direction>;
+            (off, len, maybe_graft(cx, GraftSel::Adam, len, dir))
+        })
+        .collect();
+    base(cx, "fishleg-diag".into(), dirs).with_momentum(cx.hp.beta1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn every_name_and_alias_parses_and_roundtrips() {
+        for e in registry() {
+            for name in std::iter::once(e.name).chain(e.aliases.iter().copied()) {
+                let a = OptSpec::parse(name).unwrap();
+                assert_eq!(a.name(), e.name, "{name}");
+                let b = OptSpec::parse(&a.canonical()).unwrap();
+                assert_eq!(a, b, "{name}: parse→format→parse drifted");
+            }
+        }
+        // legacy label sugar
+        let s = OptSpec::parse("band-8-sonew").unwrap();
+        assert_eq!(s.canonical(), "band-sonew:band=8");
+        assert_eq!(OptSpec::parse(&s.canonical()).unwrap(), s);
+    }
+
+    #[test]
+    fn spec_roundtrip_property_over_random_key_subsets() {
+        // parse→format→parse is the identity for every registered
+        // optimizer under arbitrary subsets of its accepted keys.
+        check("OptSpec roundtrip", 64, |rng| {
+            let e = &registry()[rng.below(registry().len())];
+            let name = if e.aliases.is_empty() || rng.below(2) == 0 {
+                e.name
+            } else {
+                e.aliases[rng.below(e.aliases.len())]
+            };
+            let mut parts = vec![name.to_string()];
+            let mut kv = Vec::new();
+            for &k in e.keys {
+                if rng.below(2) == 0 {
+                    continue;
+                }
+                let v: String = match k {
+                    "band" | "rank" | "interval" => (1 + rng.below(16)).to_string(),
+                    "precision" => {
+                        (if rng.below(2) == 0 { "f32" } else { "bf16" }).to_string()
+                    }
+                    "graft" => ["adam", "rmsprop", "none"][rng.below(3)].to_string(),
+                    _ => format!("{}", rng.range(1e-8, 0.999) as f32),
+                };
+                kv.push(format!("{k}={v}"));
+            }
+            if !kv.is_empty() {
+                parts.push(kv.join(","));
+            }
+            let raw = parts.join(":");
+            let a = OptSpec::parse(&raw).unwrap_or_else(|e| panic!("{raw}: {e}"));
+            let b = OptSpec::parse(&a.canonical()).unwrap();
+            assert_eq!(a, b, "{raw} → {} drifted", a.canonical());
+            assert_eq!(a.canonical(), b.canonical());
+        });
+    }
+
+    #[test]
+    fn unknown_name_suggests_and_lists() {
+        let err = format!("{:#}", OptSpec::parse("shampo").unwrap_err());
+        assert!(err.contains("did you mean `shampoo`"), "{err}");
+        assert!(err.contains("tridiag-sonew"), "{err}");
+    }
+
+    #[test]
+    fn unknown_key_is_a_hard_error_with_suggestion() {
+        let err = format!("{:#}", OptSpec::parse("band-sonew:bnad=8").unwrap_err());
+        assert!(err.contains("unknown key `bnad`"), "{err}");
+        assert!(err.contains("did you mean `band`"), "{err}");
+        // keys valid for another optimizer are still rejected here
+        assert!(OptSpec::parse("adam:band=4").is_err());
+    }
+
+    #[test]
+    fn malformed_and_duplicate_keys_rejected() {
+        assert!(OptSpec::parse("adam:beta1").is_err());
+        assert!(OptSpec::parse("adam:beta1=0.9,beta1=0.8").is_err());
+        assert!(OptSpec::parse("band-4-sonew:band=8").is_err()); // sugar + explicit
+        assert!(OptSpec::parse("adam:beta1=zebra").is_err());
+        assert!(OptSpec::parse("shampoo:graft=sideways").is_err());
+    }
+
+    #[test]
+    fn keys_override_base_hyperparams() {
+        let base = HyperParams::default();
+        let hp = OptSpec::parse("band-sonew:band=8,gamma=1e-4,graft=none")
+            .unwrap()
+            .hyperparams(&base)
+            .unwrap();
+        assert_eq!(hp.band, 8);
+        assert!((hp.gamma - 1e-4).abs() < 1e-10);
+        assert!(!hp.grafting);
+        assert_eq!(hp.interval, base.interval);
+    }
+
+    #[test]
+    fn build_labels_match_legacy_names() {
+        let hp = HyperParams::default();
+        let blocks = vec![(0usize, 24usize)];
+        let mats = vec![(0usize, 24usize, 4usize, 6usize)];
+        for (spec, label) in [
+            ("tridiag-sonew", "tridiag-sonew"),
+            ("band-sonew:band=8", "band-8-sonew"),
+            ("shampoo", "shampoo(20)"),
+            ("rfdson:rank=2", "rfdson(2)"),
+            ("kfac", "kfac-proxy"),
+            ("fishleg", "fishleg-diag"),
+        ] {
+            let opt = OptSpec::parse(spec).unwrap().build(24, &blocks, &mats, &hp).unwrap();
+            assert_eq!(opt.name(), label, "{spec}");
+        }
+    }
+
+    #[test]
+    fn graft_key_switches_magnitude() {
+        let hp = HyperParams::default();
+        let blocks = vec![(0usize, 16usize)];
+        let mats = vec![(0usize, 16usize, 4usize, 4usize)];
+        // grafted tridiag carries Adam's 2n magnitude state on top of 2n
+        let g = OptSpec::parse("tridiag-sonew").unwrap().build(16, &blocks, &mats, &hp).unwrap();
+        let bare = OptSpec::parse("tridiag-sonew:graft=none")
+            .unwrap()
+            .build(16, &blocks, &mats, &hp)
+            .unwrap();
+        assert!(g.memory_floats() > bare.memory_floats());
+    }
+}

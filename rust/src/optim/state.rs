@@ -1,0 +1,148 @@
+//! Binary serialization helpers for optimizer state (the `Optimizer` /
+//! `Direction` `save_state` / `load_state` surface).
+//!
+//! Everything is written little-endian and length-prefixed so the blobs
+//! are portable across hosts and robust against shape drift: readers
+//! always know the length the writer recorded and can reject a blob
+//! whose shape no longer matches the freshly-constructed optimizer
+//! (checkpoints never silently truncate or pad statistics).
+
+use std::io::{self, Read, Write};
+
+/// `InvalidData` error with context — the uniform failure mode for
+/// malformed or shape-mismatched state blobs.
+pub fn bad_state(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+pub fn write_u8(w: &mut dyn Write, v: u8) -> io::Result<()> {
+    w.write_all(&[v])
+}
+
+pub fn read_u8(r: &mut dyn Read) -> io::Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+pub fn write_u64(w: &mut dyn Write, v: u64) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+pub fn read_u64(r: &mut dyn Read) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+pub fn write_f32(w: &mut dyn Write, v: f32) -> io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+pub fn read_f32(r: &mut dyn Read) -> io::Result<f32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(f32::from_le_bytes(b))
+}
+
+/// Length-prefixed raw byte section.
+pub fn write_bytes(w: &mut dyn Write, bytes: &[u8]) -> io::Result<()> {
+    write_u64(w, bytes.len() as u64)?;
+    w.write_all(bytes)
+}
+
+/// Length-prefixed f32 slice, little-endian per element.
+pub fn write_f32s(w: &mut dyn Write, xs: &[f32]) -> io::Result<()> {
+    write_u64(w, xs.len() as u64)?;
+    let mut buf = Vec::with_capacity(xs.len() * 4);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    w.write_all(&buf)
+}
+
+/// Read exactly `n` little-endian f32s (the payload of a section whose
+/// length prefix the caller has already consumed and validated).
+pub fn read_f32_payload(r: &mut dyn Read, n: usize) -> io::Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    let mut out = vec![0f32; n];
+    for (o, chunk) in out.iter_mut().zip(bytes.chunks_exact(4)) {
+        *o = f32::from_le_bytes(chunk.try_into().unwrap());
+    }
+    Ok(out)
+}
+
+/// Read a length-prefixed f32 slice *into* an existing buffer whose
+/// length is the expected shape; a length mismatch is a hard error
+/// (`what` names the field in the message).
+pub fn read_f32s_into(r: &mut dyn Read, dst: &mut [f32], what: &str) -> io::Result<()> {
+    let n = read_u64(r)? as usize;
+    if n != dst.len() {
+        return Err(bad_state(format!(
+            "{what}: state holds {n} floats but the optimizer expects {}",
+            dst.len()
+        )));
+    }
+    dst.copy_from_slice(&read_f32_payload(r, n)?);
+    Ok(())
+}
+
+/// 4-byte section tag, checked on read — catches blobs produced by a
+/// different optimizer stack early with a readable error.
+pub fn write_tag(w: &mut dyn Write, tag: &[u8; 4]) -> io::Result<()> {
+    w.write_all(tag)
+}
+
+pub fn expect_tag(r: &mut dyn Read, tag: &[u8; 4], what: &str) -> io::Result<()> {
+    let mut got = [0u8; 4];
+    r.read_exact(&mut got)?;
+    if &got != tag {
+        return Err(bad_state(format!(
+            "{what}: expected section {:?}, found {:?} — state was saved by a \
+             different optimizer configuration",
+            String::from_utf8_lossy(tag),
+            String::from_utf8_lossy(&got),
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars_and_slices() {
+        let mut buf = Vec::new();
+        write_u64(&mut buf, 42).unwrap();
+        write_u8(&mut buf, 7).unwrap();
+        write_f32(&mut buf, -1.5).unwrap();
+        write_f32s(&mut buf, &[1.0, 2.0, 3.0]).unwrap();
+        let mut r: &[u8] = &buf;
+        assert_eq!(read_u64(&mut r).unwrap(), 42);
+        assert_eq!(read_u8(&mut r).unwrap(), 7);
+        assert_eq!(read_f32(&mut r).unwrap(), -1.5);
+        let mut dst = [0.0f32; 3];
+        read_f32s_into(&mut r, &mut dst, "xs").unwrap();
+        assert_eq!(dst, [1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn length_mismatch_is_an_error() {
+        let mut buf = Vec::new();
+        write_f32s(&mut buf, &[1.0, 2.0]).unwrap();
+        let mut r: &[u8] = &buf;
+        let mut dst = [0.0f32; 3];
+        let err = read_f32s_into(&mut r, &mut dst, "m").unwrap_err();
+        assert!(format!("{err}").contains("expects 3"), "{err}");
+    }
+
+    #[test]
+    fn tag_mismatch_is_an_error() {
+        let mut buf = Vec::new();
+        write_tag(&mut buf, b"ADAM").unwrap();
+        let mut r: &[u8] = &buf;
+        assert!(expect_tag(&mut r, b"SHMP", "shampoo").is_err());
+    }
+}

@@ -63,6 +63,16 @@ impl BandedState {
         (self.b + 1) * self.len()
     }
 
+    /// Steps taken so far (checkpoint serialization).
+    pub fn step_count(&self) -> u64 {
+        self.t
+    }
+
+    /// Restore the step clock (checkpoint deserialization).
+    pub fn set_step_count(&mut self, t: u64) {
+        self.t = t;
+    }
+
     /// One fused banded SONew step (statistics + solve + direction).
     pub fn step(
         &mut self,

@@ -63,6 +63,17 @@ impl TridiagState {
         2 * self.hd.len()
     }
 
+    /// Steps taken so far (checkpoint serialization).
+    pub fn step_count(&self) -> u64 {
+        self.t
+    }
+
+    /// Restore the step clock (checkpoint deserialization) — together
+    /// with `hd`/`ho` this makes a resumed trajectory bitwise-exact.
+    pub fn set_step_count(&mut self, t: u64) {
+        self.t = t;
+    }
+
     /// One fused SONew step: update `H`, solve (11) via eq. (12) with the
     /// Algorithm-3 `gamma` tolerance, write the preconditioned direction
     /// into `u`. `precision` quantizes the stored statistics (bf16 sim).

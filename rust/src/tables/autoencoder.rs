@@ -4,13 +4,15 @@
 //! Gradients come from the runtime backend's `ae_grads_b{B}` program —
 //! the PJRT artifact when built with the `xla` feature and `make
 //! artifacts` has run, the native MLP otherwise. Both compute the same
-//! model (parity asserted by integration tests).
+//! model (parity asserted by integration tests). Optimizers are selected
+//! by spec string (`OptSpec`), so ablation rows are plain specs like
+//! `band-sonew:band=10`.
 
 use crate::coordinator::{train_single, Metrics, Schedule, TrainConfig};
 use crate::coordinator::trainer::{BackendAeProvider, NativeAeProvider};
 use crate::data::SynthImages;
 use crate::models::Mlp;
-use crate::optim::{build, HyperParams, MatBlocks, Opt, OptKind};
+use crate::optim::{spec::table2_specs, HyperParams, MatBlocks, OptSpec};
 use crate::runtime::{default_artifacts_dir, open_backend};
 use crate::util::io::{fmt_f, Csv, MdTable};
 use crate::util::Precision;
@@ -47,7 +49,8 @@ pub struct AeBenchConfig {
     pub steps: u64,
     pub batch: usize,
     pub precision: Precision,
-    pub optimizers: Vec<OptKind>,
+    /// optimizer spec strings (`OptSpec` grammar)
+    pub optimizers: Vec<String>,
     /// Algorithm-3 tolerance (Table 5 toggles this)
     pub gamma: f32,
     /// use the full 2.84M-param AE (true) or the small test AE
@@ -66,7 +69,7 @@ impl Default for AeBenchConfig {
             steps: 60,
             batch: 256,
             precision: Precision::F32,
-            optimizers: OptKind::all_table2().to_vec(),
+            optimizers: table2_specs().iter().map(|s| s.to_string()).collect(),
             gamma: 0.0,
             full: true,
             force_native: false,
@@ -77,79 +80,81 @@ impl Default for AeBenchConfig {
     }
 }
 
-/// Per-optimizer tuned defaults approximating Table 12's optima.
-pub fn tuned_hp(kind: OptKind, precision: Precision, gamma: f32) -> (f32, HyperParams) {
+/// Per-optimizer tuned defaults approximating Table 12's optima, keyed
+/// by canonical registry name; spec keys override these.
+pub fn tuned_hp(name: &str, precision: Precision, gamma: f32) -> (f32, HyperParams) {
     let mut hp = HyperParams { precision, gamma, ..Default::default() };
-    let lr = match kind {
-        OptKind::Sgd => 1.17e-2,
-        OptKind::Nesterov => {
+    let lr = match name {
+        "sgd" => 1.17e-2,
+        "nesterov" => {
             hp.beta1 = 0.914;
             5.74e-3
         }
-        OptKind::Adagrad => {
+        "adagrad" => {
             hp.eps = 1e-6;
             1.82e-2
         }
-        OptKind::Momentum => {
+        "momentum" => {
             hp.beta1 = 0.9;
             6.89e-3
         }
-        OptKind::RmsProp => {
+        "rmsprop" => {
             hp.beta2 = 0.9;
             hp.eps = 1e-8;
             4.61e-4
         }
-        OptKind::Adam => {
+        "adam" => {
             hp.beta2 = 0.94;
             hp.eps = 1.65e-6;
             3.75e-3
         }
-        OptKind::AdaFactor => {
+        "adafactor" => {
             hp.beta2 = 0.99;
             hp.eps = 1e-8;
             3e-3
         }
-        OptKind::DiagSonew => {
+        "diag-sonew" => {
             hp.beta2 = 0.95;
             hp.eps = 4.63e-6;
             1.18e-3
         }
-        OptKind::Shampoo => {
+        "shampoo" => {
             hp.beta2 = 0.95;
             hp.eps = 1e-6;
             hp.interval = 20;
             3.70e-3
         }
-        OptKind::RfdSon => {
+        "rfdson" => {
             hp.rank = 1;
             hp.eps = 1e-3;
             3e-3
         }
-        OptKind::TridiagSonew => {
+        "tridiag-sonew" => {
             hp.beta2 = 0.96;
             hp.eps = 1.3e-6;
             8.60e-3
         }
-        OptKind::BandSonew => {
+        "band-sonew" => {
             hp.band = 4;
             hp.beta2 = 0.95;
             hp.eps = 1.5e-3;
             5.53e-3
         }
-        OptKind::KfacProxy => {
+        "kfac" => {
             hp.eps = 1e-3;
             hp.interval = 15;
             3e-3
         }
-        OptKind::Eva => {
+        "eva" => {
             hp.eps = 0.03;
             3e-3
         }
-        OptKind::FishLegDiag => {
+        "fishleg" => {
             hp.eps = 1e-6;
             1e-3
         }
-        OptKind::Ons => 1e-2,
+        "ons" => 1e-2,
+        other => panic!("tuned_hp: unknown optimizer name {other:?}"),
     };
     (lr, hp)
 }
@@ -165,22 +170,15 @@ pub struct AeRow {
     pub metrics: Metrics,
 }
 
-fn build_opt(kind: OptKind, mlp: &Mlp, lr_hp: &(f32, HyperParams)) -> Opt {
-    let blocks = mlp.blocks();
-    let mats = cap_mat_blocks(&mlp.mat_blocks(), 128);
-    build(kind, mlp.total, &blocks, &mats, &lr_hp.1)
-}
-
-/// Run one optimizer through the AE benchmark.
-pub fn run_one(kind: OptKind, cfg: &AeBenchConfig, band_override: Option<usize>) -> anyhow::Result<AeRow> {
+/// Run one optimizer spec through the AE benchmark.
+pub fn run_one(spec: &OptSpec, cfg: &AeBenchConfig) -> anyhow::Result<AeRow> {
     let mlp = if cfg.full { Mlp::autoencoder() } else { Mlp::autoencoder_small() };
-    let (lr, mut hp) = tuned_hp(kind, cfg.precision, cfg.gamma);
-    if let Some(b) = band_override {
-        hp.band = b.max(1);
-    }
+    let (lr, hp) = tuned_hp(spec.name(), cfg.precision, cfg.gamma);
     let mut rng = crate::util::Rng::new(cfg.seed);
     let mut params = mlp.init(&mut rng);
-    let mut opt = build_opt(kind, &mlp, &(lr, hp.clone()));
+    let blocks = mlp.blocks();
+    let mats = cap_mat_blocks(&mlp.mat_blocks(), 128);
+    let mut opt = spec.build(mlp.total, &blocks, &mats, &hp)?;
     let state_floats = opt.memory_floats();
     let tc = TrainConfig {
         steps: cfg.steps,
@@ -231,11 +229,7 @@ pub fn run_one(kind: OptKind, cfg: &AeBenchConfig, band_override: Option<usize>)
     };
 
     Ok(AeRow {
-        name: if let Some(b) = band_override {
-            format!("band-{b}-sonew")
-        } else {
-            opt.name().to_string()
-        },
+        name: opt.name().to_string(),
         final_loss: metrics.tail_mean_loss(5).unwrap_or(f32::NAN),
         best_loss: metrics.best_loss().unwrap_or(f32::NAN),
         wall_s: metrics.total_wall().as_secs_f64(),
@@ -250,19 +244,21 @@ pub fn run_one(kind: OptKind, cfg: &AeBenchConfig, band_override: Option<usize>)
 pub fn run(cfg: &AeBenchConfig, tag: &str) -> anyhow::Result<Vec<AeRow>> {
     let mut rows = Vec::new();
     let mut table = MdTable::new(&[
-        "optimizer", "train CE loss", "best loss", "time(s)", "opt time(s)",
+        "optimizer", "spec", "train CE loss", "best loss", "time(s)", "opt time(s)",
         "state floats",
     ]);
     let mut curves = Csv::new(&["label", "step", "loss", "lr", "wall_s"]);
-    for &kind in &cfg.optimizers {
-        println!("[ae:{tag}] {kind:?} ...");
-        let row = run_one(kind, cfg, None)?;
+    for raw in &cfg.optimizers {
+        let spec = OptSpec::parse(raw)?;
+        println!("[ae:{tag}] {spec} ...");
+        let row = run_one(&spec, cfg)?;
         println!(
             "[ae:{tag}] {:<18} loss {:>9.3}  wall {:>6.1}s",
             row.name, row.final_loss, row.wall_s
         );
         table.row([
             row.name.clone(),
+            spec.canonical(),
             fmt_f(row.final_loss as f64),
             fmt_f(row.best_loss as f64),
             fmt_f(row.wall_s),
@@ -280,16 +276,21 @@ pub fn run(cfg: &AeBenchConfig, tag: &str) -> anyhow::Result<Vec<AeRow>> {
         }
         rows.push(row);
     }
-    // band ablation (Table 3)
+    // band ablation (Table 3): plain specs
     for &b in &cfg.band_sizes {
-        let kind = if b == 0 { OptKind::DiagSonew } else { OptKind::BandSonew };
-        let row = run_one(kind, cfg, if b == 0 { None } else { Some(b) })?;
+        let spec = if b == 0 {
+            OptSpec::parse("diag-sonew")?
+        } else {
+            OptSpec::parse(&format!("band-sonew:band={b}"))?
+        };
+        let row = run_one(&spec, cfg)?;
         println!(
             "[ae:{tag}] band={b:<2} loss {:>9.3}  wall {:>6.1}s",
             row.final_loss, row.wall_s
         );
         table.row([
             format!("band-{b} (ablation)"),
+            spec.canonical(),
             fmt_f(row.final_loss as f64),
             fmt_f(row.best_loss as f64),
             fmt_f(row.wall_s),
@@ -331,10 +332,10 @@ mod tests {
     }
 
     #[test]
-    fn tuned_hp_covers_all_kinds() {
-        for &k in OptKind::all_table2() {
-            let (lr, _) = tuned_hp(k, Precision::F32, 0.0);
-            assert!(lr > 0.0);
+    fn tuned_hp_covers_the_whole_registry() {
+        for e in crate::optim::registry() {
+            let (lr, _) = tuned_hp(e.name, Precision::F32, 0.0);
+            assert!(lr > 0.0, "{}", e.name);
         }
     }
 
@@ -345,12 +346,12 @@ mod tests {
             batch: 16,
             full: false,
             force_native: true,
-            optimizers: vec![OptKind::Adam, OptKind::TridiagSonew],
+            optimizers: vec!["adam".into(), "tridiag-sonew".into()],
             ..Default::default()
         };
-        let r = run_one(OptKind::Adam, &cfg, None).unwrap();
+        let r = run_one(&OptSpec::parse("adam").unwrap(), &cfg).unwrap();
         assert!(r.final_loss.is_finite());
-        let r2 = run_one(OptKind::TridiagSonew, &cfg, None).unwrap();
+        let r2 = run_one(&OptSpec::parse("tridiag-sonew").unwrap(), &cfg).unwrap();
         assert!(r2.final_loss.is_finite());
     }
 }

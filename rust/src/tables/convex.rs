@@ -5,7 +5,7 @@
 
 use crate::data::convex::{convex_suite, ConvexDataset};
 use crate::models::LinearProblem;
-use crate::optim::{build, HyperParams, OptKind};
+use crate::optim::{HyperParams, OptSpec};
 use crate::util::io::{fmt_f, MdTable};
 use crate::util::Rng;
 
@@ -20,24 +20,24 @@ pub struct ConvexRow {
 
 fn train_eval(
     p: &LinearProblem,
-    kind: OptKind,
-    rank: usize,
+    spec: &OptSpec,
     epochs: usize,
     lr: f32,
     seed: u64,
 ) -> f32 {
     let d = p.d;
     let hp = HyperParams {
-        rank,
         eps: 1e-4,
         beta2: 0.99,
         gamma: 1e-10,
-        grafting: kind == OptKind::TridiagSonew,
+        grafting: spec.name() == "tridiag-sonew",
         ..Default::default()
     };
     let blocks = vec![(0usize, d)];
     let mats = vec![(0usize, d, d, 1)];
-    let mut opt = build(kind, d, &blocks, &mats, &hp);
+    let mut opt = spec
+        .build(d, &blocks, &mats, &hp)
+        .expect("convex suite spec");
     let mut w = vec![0.0f32; d];
     let mut rng = Rng::new(seed);
     let batch = 32;
@@ -65,9 +65,9 @@ pub fn run(scale: f32, epochs: usize) -> anyhow::Result<Vec<ConvexRow>> {
     let mut rows = Vec::new();
     for ConvexDataset { name, problem, paper_tds_acc, paper_rfd2_acc } in suite {
         println!("[convex] {name} (train={} d={})", problem.n_train(), problem.d);
-        let rfd2 = train_eval(&problem, OptKind::RfdSon, 2, epochs, 0.05, 1);
-        let rfd5 = train_eval(&problem, OptKind::RfdSon, 5, epochs, 0.05, 2);
-        let tds = train_eval(&problem, OptKind::TridiagSonew, 0, epochs, 0.05, 3);
+        let rfd2 = train_eval(&problem, &OptSpec::parse("rfdson:rank=2")?, epochs, 0.05, 1);
+        let rfd5 = train_eval(&problem, &OptSpec::parse("rfdson:rank=5")?, epochs, 0.05, 2);
+        let tds = train_eval(&problem, &OptSpec::parse("tridiag-sonew")?, epochs, 0.05, 3);
         println!("[convex] {name}: rfd2={rfd2:.1} rfd5={rfd5:.1} tds={tds:.1}");
         table.row([
             name.to_string(),
@@ -101,8 +101,9 @@ mod tests {
         // example; at 2% scale the wide datasets are data-starved).
         let suite = crate::data::convex::convex_suite(0.15);
         let a9a = &suite[0];
-        let tds = train_eval(&a9a.problem, OptKind::TridiagSonew, 0, 10, 0.05, 3);
-        let rfd2 = train_eval(&a9a.problem, OptKind::RfdSon, 2, 10, 0.05, 1);
+        let tds = train_eval(&a9a.problem, &OptSpec::parse("tds").unwrap(), 10, 0.05, 3);
+        let rfd2 =
+            train_eval(&a9a.problem, &OptSpec::parse("rfdson:rank=2").unwrap(), 10, 0.05, 1);
         assert!(tds > 70.0, "tds acc {tds}");
         assert!(tds >= rfd2 - 5.0, "tds {tds} vs rfd2 {rfd2}");
     }

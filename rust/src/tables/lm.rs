@@ -14,7 +14,7 @@ use crate::data::LmCorpus;
 use crate::linalg::norm2;
 use crate::models::{LmConfig, Transformer};
 use crate::optim::first_order::Adam;
-use crate::optim::{build, Direction, HyperParams, OptKind};
+use crate::optim::{Direction, HyperParams, OptSpec};
 use crate::runtime::{default_artifacts_dir, open_backend, Backend, HostTensor, Layout};
 use crate::util::io::{fmt_f, Csv, MdTable};
 
@@ -98,7 +98,7 @@ pub fn run_adafactor(cfg: &LmRunConfig) -> anyhow::Result<Metrics> {
         128,
     );
     let hp = HyperParams { beta1: 0.9, beta2: 0.99, eps: 1e-8, weight_decay: 1e-3, ..Default::default() };
-    let mut opt = build(OptKind::AdaFactor, n, &blocks, &mats, &hp);
+    let mut opt = OptSpec::parse("adafactor")?.build(n, &blocks, &mats, &hp)?;
     let mut params = init_lm_params(&layout, 0);
     let provider = BackendLmProvider {
         backend,

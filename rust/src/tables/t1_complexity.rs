@@ -5,7 +5,7 @@
 //! of each other; Shampoo's preconditioner refresh is cubic in the
 //! dimensions; rfdSON carries an m^2 n factor.
 
-use crate::optim::{build, HyperParams, OptKind};
+use crate::optim::{HyperParams, OptSpec};
 use crate::util::io::{fmt_f, Csv, MdTable};
 use crate::util::timer::bench;
 use crate::util::Rng;
@@ -19,13 +19,7 @@ pub struct T1Row {
 
 /// Measure per-step optimizer cost on a single d x d layer.
 pub fn run(dims: &[usize], iters: u64) -> anyhow::Result<Vec<T1Row>> {
-    let kinds = [
-        OptKind::Adam,
-        OptKind::RfdSon,
-        OptKind::Shampoo,
-        OptKind::TridiagSonew,
-        OptKind::BandSonew,
-    ];
+    let specs = ["adam", "rfdson", "shampoo", "tridiag-sonew", "band-sonew"];
     let mut rows = Vec::new();
     let mut table = MdTable::new(&["optimizer", "d1 x d2", "us/step", "state floats", "floats/param"]);
     let mut csv = Csv::new(&["optimizer", "d", "n", "us_per_step", "state_floats"]);
@@ -35,7 +29,7 @@ pub fn run(dims: &[usize], iters: u64) -> anyhow::Result<Vec<T1Row>> {
         let mats = vec![(0usize, n, d, d)];
         let mut rng = Rng::new(7);
         let g: Vec<f32> = rng.normal_vec(n);
-        for &kind in &kinds {
+        for raw in specs {
             let hp = HyperParams {
                 band: 4,
                 rank: 4,
@@ -44,7 +38,7 @@ pub fn run(dims: &[usize], iters: u64) -> anyhow::Result<Vec<T1Row>> {
                 beta1: 0.0,      // no momentum buffer: statistics only
                 ..Default::default()
             };
-            let mut opt = build(kind, n, &blocks, &mats, &hp);
+            let mut opt = OptSpec::parse(raw)?.build(n, &blocks, &mats, &hp)?;
             let mut params = vec![0.1f32; n];
             let state = opt.memory_floats();
             let r = bench(&format!("{}/d{}", opt.name(), d), iters, 3, |k| {

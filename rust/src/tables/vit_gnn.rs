@@ -7,7 +7,7 @@ use crate::coordinator::trainer::{NativeClassifierProvider, ProxyTask};
 use crate::coordinator::{train_single, Schedule, TrainConfig};
 use crate::data::{SynthGraphs, SynthImages};
 use crate::models::Mlp;
-use crate::optim::{build, OptKind};
+use crate::optim::OptSpec;
 use crate::tables::autoencoder::{cap_mat_blocks, tuned_hp};
 use crate::util::io::{fmt_f, Csv, MdTable};
 use crate::util::Precision;
@@ -52,21 +52,21 @@ fn eval(p: Proxy, mlp: &Mlp, params: &[f32], seed: u64) -> f32 {
 
 pub fn run_one(
     proxy: Proxy,
-    kind: OptKind,
+    spec: &OptSpec,
     steps: u64,
     batch: usize,
     seed: u64,
     curves: &mut Csv,
 ) -> anyhow::Result<ProxyRow> {
     let mlp = model_for(proxy);
-    let (mut lr, mut hp) = tuned_hp(kind, Precision::F32, 1e-10);
+    let (mut lr, mut hp) = tuned_hp(spec.name(), Precision::F32, 1e-10);
     // classification proxies like slightly smaller steps than the AE
     lr *= 0.5;
     hp.weight_decay = 1e-4;
     let mut rng = crate::util::Rng::new(seed);
     let mut params = mlp.init(&mut rng);
     let mats = cap_mat_blocks(&mlp.mat_blocks(), 128);
-    let mut opt = build(kind, mlp.total, &mlp.blocks(), &mats, &hp);
+    let mut opt = spec.build(mlp.total, &mlp.blocks(), &mats, &hp)?;
     let tc = TrainConfig {
         steps,
         schedule: Schedule::CosineWarmup { lr, warmup: steps / 20, total: steps, final_frac: 0.05 },
@@ -121,19 +121,13 @@ pub fn run(proxy: Proxy, steps: u64, batch: usize) -> anyhow::Result<Vec<ProxyRo
         Proxy::Vit => "vit",
         Proxy::Gnn => "gnn",
     };
-    let kinds = [
-        OptKind::Momentum,
-        OptKind::RmsProp,
-        OptKind::Adam,
-        OptKind::RfdSon,
-        OptKind::Shampoo,
-        OptKind::TridiagSonew,
-    ];
+    let specs = ["momentum", "rmsprop", "adam", "rfdson", "shampoo", "tridiag-sonew"];
     let mut curves = Csv::new(&["label", "step", "val_err", "train_loss", "_"]);
     let mut rows = Vec::new();
-    for &k in &kinds {
-        println!("[{tag}] {k:?} ...");
-        let r = run_one(proxy, k, steps, batch, 3, &mut curves)?;
+    for raw in specs {
+        let spec = OptSpec::parse(raw)?;
+        println!("[{tag}] {spec} ...");
+        let r = run_one(proxy, &spec, steps, batch, 3, &mut curves)?;
         println!(
             "[{tag}] {:<16} val_err {:.4}  train {:.4}",
             r.optimizer, r.final_val_err, r.final_train_loss
@@ -167,7 +161,8 @@ mod tests {
         let dir = std::env::temp_dir().join("sonew_vitgnn_test");
         std::env::set_var("SONEW_RESULTS", &dir);
         let mut curves = Csv::new(&["label", "step", "val_err", "train_loss", "_"]);
-        let r = run_one(Proxy::Gnn, OptKind::Adam, 120, 64, 1, &mut curves).unwrap();
+        let r = run_one(Proxy::Gnn, &OptSpec::parse("adam").unwrap(), 120, 64, 1, &mut curves)
+            .unwrap();
         std::env::remove_var("SONEW_RESULTS");
         std::fs::remove_dir_all(dir).ok();
         // labels are ~balanced; learning must beat chance clearly

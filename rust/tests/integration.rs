@@ -9,7 +9,7 @@
 
 use sonew::coordinator::trainer::BackendAeProvider;
 use sonew::coordinator::{train_single, Schedule, TrainConfig};
-use sonew::optim::{build, HyperParams, OptKind};
+use sonew::optim::{HyperParams, OptSpec};
 use sonew::runtime::{Backend, HostTensor, NativeBackend};
 use sonew::util::Rng;
 
@@ -56,7 +56,10 @@ fn native_backend_end_to_end_training_reduces_loss() {
     let mut rng = Rng::new(21);
     let mut params = mlp.init(&mut rng);
     let hp = HyperParams::default();
-    let mut opt = build(OptKind::Adam, mlp.total, &mlp.blocks(), &mlp.mat_blocks(), &hp);
+    let mut opt = OptSpec::parse("adam")
+        .unwrap()
+        .build(mlp.total, &mlp.blocks(), &mlp.mat_blocks(), &hp)
+        .unwrap();
     let mut images = sonew::data::SynthImages::new(22);
     let mut losses = Vec::new();
     for _ in 0..15 {
@@ -95,7 +98,10 @@ fn backend_provider_trains_through_coordinator() {
     let mut rng = Rng::new(31);
     let mut params = mlp.init(&mut rng);
     let hp = HyperParams::default();
-    let mut opt = build(OptKind::Momentum, mlp.total, &mlp.blocks(), &mlp.mat_blocks(), &hp);
+    let mut opt = OptSpec::parse("momentum")
+        .unwrap()
+        .build(mlp.total, &mlp.blocks(), &mlp.mat_blocks(), &hp)
+        .unwrap();
     let cfg = TrainConfig {
         steps: 2,
         schedule: Schedule::Constant { lr: 1e-3 },
@@ -155,7 +161,10 @@ fn native_lm_end_to_end_training_reduces_loss() {
     let blocks = sonew::optim::blocks_of(&model.layout);
     let mats = sonew::optim::mat_blocks_of(&model.layout);
     let hp = HyperParams::default();
-    let mut opt = build(OptKind::Adam, model.total, &blocks, &mats, &hp);
+    let mut opt = OptSpec::parse("adam")
+        .unwrap()
+        .build(model.total, &blocks, &mats, &hp)
+        .unwrap();
     let mut corpus = sonew::data::LmCorpus::new(cfg.vocab, 18);
     let mut losses = Vec::new();
     for _ in 0..15 {
@@ -208,7 +217,10 @@ fn full_optimizer_stack_trains_small_ae() {
     let mut rng = Rng::new(2);
     let mut params = mlp.init(&mut rng);
     let hp = HyperParams { gamma: 1e-8, ..Default::default() };
-    let mut opt = build(OptKind::TridiagSonew, mlp.total, &mlp.blocks(), &mlp.mat_blocks(), &hp);
+    let mut opt = OptSpec::parse("tridiag-sonew")
+        .unwrap()
+        .build(mlp.total, &mlp.blocks(), &mlp.mat_blocks(), &hp)
+        .unwrap();
     let mut images = sonew::data::SynthImages::new(9);
     let mut first = None;
     let mut last = 0.0;

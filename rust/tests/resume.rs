@@ -1,0 +1,153 @@
+//! Exact-resume acceptance tests: a `TrainSession` checkpointed at step
+//! N/2 (v2 format: params + optimizer state + data-stream RNG) and
+//! reloaded into a freshly-constructed session — the fresh-process path:
+//! nothing survives but the file — must reproduce the uninterrupted
+//! N-step run *bitwise*: identical parameters and identical loss
+//! trajectory, for a first-order (Adam), a SONew (tridiag) and a
+//! Kronecker (Shampoo) optimizer.
+
+use sonew::coordinator::trainer::NativeAeProvider;
+use sonew::coordinator::{Schedule, SessionConfig, TrainConfig, TrainSession};
+use sonew::data::SynthImages;
+use sonew::models::Mlp;
+use sonew::optim::{HyperParams, OptSpec};
+use sonew::util::Rng;
+
+const STEPS: u64 = 12;
+
+/// Build a complete fresh session from nothing but the spec — the same
+/// construction path a new process would run.
+fn fresh_session(
+    spec: &OptSpec,
+    resume_from: Option<std::path::PathBuf>,
+) -> TrainSession<NativeAeProvider> {
+    let mlp = Mlp::new(&[49, 24, 12, 24, 49]);
+    let mut rng = Rng::new(7);
+    let params = mlp.init(&mut rng);
+    let hp = HyperParams { gamma: 1e-8, ..Default::default() };
+    let opt = spec
+        .build(mlp.total, &mlp.blocks(), &mlp.mat_blocks(), &hp)
+        .unwrap();
+    let provider = NativeAeProvider {
+        mlp: mlp.clone(),
+        images: SynthImages::new(5),
+        batch: 8,
+    };
+    TrainSession::new(
+        spec.clone(),
+        opt,
+        params,
+        provider,
+        SessionConfig {
+            train: TrainConfig {
+                steps: STEPS,
+                schedule: Schedule::CosineWarmup {
+                    lr: 2e-3,
+                    warmup: 2,
+                    total: STEPS,
+                    final_frac: 0.1,
+                },
+                log_every: 1,
+                ..Default::default()
+            },
+            checkpoint_every: 0,
+            checkpoint_path: None,
+            resume_from,
+        },
+    )
+    .unwrap()
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_exact_resume(spec_str: &str) {
+    let spec = OptSpec::parse(spec_str).unwrap();
+    let dir = std::env::temp_dir().join(format!("sonew_resume_{}", spec.name()));
+    let path = dir.join("half.ck");
+
+    // uninterrupted run: N steps straight
+    let mut straight = fresh_session(&spec, None);
+    let m_straight = straight.run().unwrap();
+
+    // interrupted run: N/2 steps, checkpoint, drop everything
+    {
+        let mut first_half = fresh_session(&spec, None);
+        let m_first = first_half.run_steps(STEPS / 2).unwrap();
+        first_half.checkpoint(&path).unwrap();
+        // the first half already matches the straight run step for step
+        for (a, b) in m_first.points.iter().zip(&m_straight.points) {
+            assert_eq!(
+                a.loss.to_bits(),
+                b.loss.to_bits(),
+                "{spec_str}: pre-checkpoint loss diverged at step {}",
+                a.step
+            );
+        }
+    }
+
+    // fresh construction + restore from the file (fresh-process path)
+    let mut resumed = fresh_session(&spec, Some(path.clone()));
+    assert_eq!(resumed.step, STEPS / 2, "{spec_str}");
+    assert_eq!(resumed.opt.steps(), STEPS / 2, "{spec_str}");
+    let m_resumed = resumed.run().unwrap();
+
+    // params bitwise identical
+    assert_eq!(
+        bits(&resumed.params),
+        bits(&straight.params),
+        "{spec_str}: resumed params differ from the uninterrupted run"
+    );
+    // and the post-resume loss trajectory matches the straight run's
+    // second half bitwise
+    let tail: Vec<_> = m_straight
+        .points
+        .iter()
+        .filter(|p| p.step >= STEPS / 2)
+        .collect();
+    assert_eq!(m_resumed.points.len(), tail.len(), "{spec_str}");
+    for (a, b) in m_resumed.points.iter().zip(tail) {
+        assert_eq!(a.step, b.step, "{spec_str}");
+        assert_eq!(
+            a.loss.to_bits(),
+            b.loss.to_bits(),
+            "{spec_str}: resumed loss diverged at step {}",
+            a.step
+        );
+        assert_eq!(a.lr.to_bits(), b.lr.to_bits(), "{spec_str}");
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn tridiag_sonew_resumes_bitwise() {
+    assert_exact_resume("tridiag-sonew");
+}
+
+#[test]
+fn adam_resumes_bitwise() {
+    assert_exact_resume("adam");
+}
+
+#[test]
+fn shampoo_resumes_bitwise() {
+    // interval 3 forces a preconditioner refresh both before and after
+    // the checkpoint boundary, exercising the cached-root persistence
+    assert_exact_resume("shampoo:interval=3");
+}
+
+#[test]
+fn resume_rejects_a_different_spec() {
+    let spec = OptSpec::parse("adam").unwrap();
+    let dir = std::env::temp_dir().join("sonew_resume_mismatch");
+    let path = dir.join("a.ck");
+    let mut s = fresh_session(&spec, None);
+    s.run_steps(2).unwrap();
+    s.checkpoint(&path).unwrap();
+    let other = OptSpec::parse("tridiag-sonew").unwrap();
+    let mut t = fresh_session(&other, None);
+    let err = t.restore(&path).unwrap_err();
+    assert!(format!("{err:#}").contains("adam"), "{err:#}");
+    std::fs::remove_dir_all(dir).ok();
+}
