@@ -2,10 +2,14 @@
 //! median-of-k timing via util::timer::bench).
 //!
 //! Sections map to the paper's evaluation:
+//!   [gemm]  blocked GEMM engine vs the seed i-k-j kernel (speedup is
+//!           the headline hot-path number)
 //!   [t1]    per-step optimizer cost vs layer size (Table 1)
 //!   [step]  full-AE per-step wall time share, tridiag vs Adam (the
 //!           "~3% slower per step" claim, §1)
 //!   [kernel] native SONew kernel throughput (GB/s of parameter state)
+//!           plus the block-parallel multi-tensor scan vs pinned
+//!           sequential
 //!   [backend] grads-program dispatch overhead through the Backend trait
 //!   [lm]    native transformer lm_grads step cost (Figure-3 model), so
 //!           the LM forward/backward is tracked alongside the tridiag
@@ -13,28 +17,202 @@
 //!   [hlo]   PJRT execution overhead of the AOT artifacts (xla feature +
 //!           artifacts present; skipped otherwise)
 //!
-//!     cargo bench            # all sections
-//!     cargo bench -- t1      # one section
+//!     cargo bench                # all sections
+//!     cargo bench -- gemm        # one section
+//!     cargo bench -- --smoke     # short CI-sized run
+//!
+//! Every run writes its numbers to a `BENCH_*.json` trajectory document
+//! (`SONEW_BENCH_OUT` overrides the `BENCH_latest.json` default) so CI
+//! can smoke-run the harness and archive per-commit perf history.
 
+use sonew::linalg::{matmul_into, matmul_nt, matmul_tn, Mat};
 use sonew::models::{LmConfig, Transformer};
 use sonew::optim::{HyperParams, OptSpec};
 use sonew::runtime::{Backend, HostTensor, NativeBackend};
 use sonew::sonew::{BandedState, LambdaMode, TridiagState};
-use sonew::util::timer::bench;
+use sonew::util::timer::{bench, BenchResult};
 use sonew::util::{Precision, Rng};
 
+/// One recorded measurement, flattened for the JSON trajectory.
+struct Rec {
+    section: String,
+    name: String,
+    us_per_iter: f64,
+    min_us: f64,
+    max_us: f64,
+    iters: u64,
+}
+
+/// Collects section results + derived scalars (speedups) and renders the
+/// `BENCH_*.json` trajectory document.
+#[derive(Default)]
+struct Recorder {
+    records: Vec<Rec>,
+    derived: Vec<(String, f64)>,
+}
+
+impl Recorder {
+    fn add(&mut self, section: &str, r: &BenchResult) {
+        self.records.push(Rec {
+            section: section.to_string(),
+            name: r.name.clone(),
+            us_per_iter: r.per_iter_ns() / 1000.0,
+            min_us: r.min.as_nanos() as f64 / r.iters_per_run as f64 / 1000.0,
+            max_us: r.max.as_nanos() as f64 / r.iters_per_run as f64 / 1000.0,
+            iters: r.iters_per_run,
+        });
+    }
+
+    fn derive(&mut self, name: String, value: f64) {
+        self.derived.push((name, value));
+    }
+
+    fn to_json(&self, smoke: bool) -> String {
+        let now = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"sonew-bench-v1\",\n");
+        s.push_str(&format!("  \"unix_time_s\": {now},\n"));
+        s.push_str(&format!("  \"threads\": {},\n", sonew::linalg::hw_threads()));
+        s.push_str(&format!("  \"smoke\": {smoke},\n"));
+        s.push_str("  \"results\": [\n");
+        for (i, r) in self.records.iter().enumerate() {
+            let comma = if i + 1 < self.records.len() { "," } else { "" };
+            s.push_str(&format!(
+                "    {{\"section\": \"{}\", \"name\": \"{}\", \"us_per_iter\": {:.3}, \
+                 \"min_us\": {:.3}, \"max_us\": {:.3}, \"iters\": {}}}{comma}\n",
+                r.section, r.name, r.us_per_iter, r.min_us, r.max_us, r.iters
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"derived\": [\n");
+        for (i, (name, v)) in self.derived.iter().enumerate() {
+            let comma = if i + 1 < self.derived.len() { "," } else { "" };
+            s.push_str(&format!("    {{\"name\": \"{name}\", \"value\": {v:.3}}}{comma}\n"));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+/// The pre-engine kernel (PR 2-era `matmul_into`): i-k-j streaming
+/// triple loop with the same row-chunk threading — the baseline the
+/// blocked engine's speedup is measured against.
+fn seed_matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let rows_kernel = |a_data: &[f32], b_data: &[f32], c_chunk: &mut [f32], lo: usize| {
+        let rows = c_chunk.len() / n;
+        for r in 0..rows {
+            let i = lo + r;
+            let arow = &a_data[i * k..(i + 1) * k];
+            let crow = &mut c_chunk[r * n..(r + 1) * n];
+            crow.iter_mut().for_each(|v| *v = 0.0);
+            for (kk, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b_data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
+    };
+    let threads = sonew::linalg::hw_threads().min(m.max(1));
+    if threads <= 1 {
+        rows_kernel(&a.data, &b.data, &mut c.data, 0);
+        return;
+    }
+    let chunk = m.div_ceil(threads);
+    let a_data = &a.data;
+    let b_data = &b.data;
+    let rk = &rows_kernel;
+    std::thread::scope(|s| {
+        for (t, c_chunk) in c.data.chunks_mut(chunk * n).enumerate() {
+            s.spawn(move || rk(a_data, b_data, c_chunk, t * chunk));
+        }
+    });
+}
+
 fn main() {
-    let filter = std::env::args().nth(1).unwrap_or_default();
-    let run = |name: &str| filter.is_empty() || name.contains(&filter) || filter == "--bench";
+    let mut filter = String::new();
+    let mut smoke = false;
+    for arg in std::env::args().skip(1) {
+        match arg.as_str() {
+            "--smoke" => smoke = true,
+            "--bench" => {}
+            other => filter = other.to_string(),
+        }
+    }
+    let run = |name: &str| filter.is_empty() || name.contains(&filter);
+    let mut rec = Recorder::default();
+    if smoke {
+        println!("(smoke mode: reduced sizes and iteration counts)");
+    }
+
+    if run("gemm") {
+        println!("== [gemm] blocked GEMM engine vs seed i-k-j kernel ==");
+        let sizes: &[usize] = if smoke { &[128, 256] } else { &[256, 512] };
+        let (iters, k) = if smoke { (4, 3) } else { (10, 5) };
+        for &sz in sizes {
+            let mut rng = Rng::new(1);
+            let a = Mat::from_rows(sz, sz, rng.normal_vec(sz * sz));
+            let b = Mat::from_rows(sz, sz, rng.normal_vec(sz * sz));
+            let mut c = Mat::zeros(sz, sz);
+            let r = bench(&format!("gemm {sz}x{sz}x{sz}"), iters, k, |kk| {
+                for _ in 0..kk {
+                    matmul_into(&a, &b, &mut c);
+                }
+            });
+            let gflops = 2.0 * (sz as f64).powi(3) / r.per_iter_ns();
+            println!("{}   {gflops:.2} GFLOP/s", r.report());
+            rec.add("gemm", &r);
+            let rs = bench(&format!("seed {sz}x{sz}x{sz}"), iters, k, |kk| {
+                for _ in 0..kk {
+                    seed_matmul_into(&a, &b, &mut c);
+                }
+            });
+            println!("{}", rs.report());
+            rec.add("gemm", &rs);
+            let speedup = rs.per_iter_ns() / r.per_iter_ns();
+            println!("    blocked engine speedup vs seed kernel: {speedup:.2}x");
+            rec.derive(format!("gemm_{sz}_speedup_vs_seed"), speedup);
+        }
+        // the backward-path transpose variants at the largest size
+        let sz = *sizes.last().unwrap();
+        let mut rng = Rng::new(2);
+        let a = Mat::from_rows(sz, sz, rng.normal_vec(sz * sz));
+        let b = Mat::from_rows(sz, sz, rng.normal_vec(sz * sz));
+        let r = bench(&format!("gemm_tn {sz}x{sz}x{sz}"), iters, k, |kk| {
+            for _ in 0..kk {
+                std::hint::black_box(matmul_tn(&a, &b));
+            }
+        });
+        println!("{}", r.report());
+        rec.add("gemm", &r);
+        let r = bench(&format!("gemm_nt {sz}x{sz}x{sz}"), iters, k, |kk| {
+            for _ in 0..kk {
+                std::hint::black_box(matmul_nt(&a, &b));
+            }
+        });
+        println!("{}", r.report());
+        rec.add("gemm", &r);
+    }
 
     if run("t1") {
         println!("== [t1] per-step optimizer cost vs layer size (Table 1) ==");
-        sonew::tables::t1_complexity::run(&[32, 64, 128, 256], 20).unwrap();
+        let (sizes, steps): (&[usize], u64) =
+            if smoke { (&[32, 64], 5) } else { (&[32, 64, 128, 256], 20) };
+        sonew::tables::t1_complexity::run(sizes, steps).unwrap();
     }
 
     if run("kernel") {
         println!("== [kernel] native SONew kernel throughput ==");
-        for n in [1 << 16, 1 << 20, 1 << 22] {
+        let sizes: &[usize] = if smoke { &[1 << 16] } else { &[1 << 16, 1 << 20, 1 << 22] };
+        for &n in sizes {
             let mut rng = Rng::new(1);
             let g = rng.normal_vec(n);
             let mut u = vec![0.0f32; n];
@@ -47,6 +225,7 @@ fn main() {
             // streams: read hd,ho,g + write hd,ho,u = 6 x 4B x n
             let gbs = 24.0 * n as f64 / r.per_iter_ns();
             println!("{}   {:.2} GB/s", r.report(), gbs);
+            rec.add("kernel", &r);
 
             let mut bs = BandedState::new(n, 4, None);
             let r = bench(&format!("band-4  step n={n}"), 4, 3, |k| {
@@ -55,18 +234,81 @@ fn main() {
                 }
             });
             println!("{}", r.report());
+            rec.add("kernel", &r);
             if n >= 1 << 22 {
                 break; // band-4 at 4M is ~seconds; one size is enough
             }
         }
+
+        // block-parallel multi-tensor scan vs pinned-sequential: the
+        // per-tensor edge masks make tensor blocks independent, so the
+        // solve scan fans out across them (bitwise-identically)
+        let tensors = 16usize;
+        let n = if smoke { 1 << 18 } else { 1 << 21 };
+        let ids: Vec<f32> = (0..n).map(|j| (j * tensors / n) as f32).collect();
+        let mut rng = Rng::new(9);
+        let g = rng.normal_vec(n);
+        let mut u = vec![0.0f32; n];
+        let (iters, kk) = if smoke { (4, 3) } else { (10, 5) };
+        let mut seq = TridiagState::new(n, Some(&ids));
+        seq.parallel = false;
+        let r_seq = bench(&format!("tridiag seq n={n} tensors={tensors}"), iters, kk, |k| {
+            for _ in 0..k {
+                seq.step(&g, &mut u, LambdaMode::Ema(0.95), 1e-6, 0.0, Precision::F32);
+            }
+        });
+        println!("{}", r_seq.report());
+        rec.add("kernel", &r_seq);
+        let mut par = TridiagState::new(n, Some(&ids));
+        let r_par = bench(&format!("tridiag par n={n} tensors={tensors}"), iters, kk, |k| {
+            for _ in 0..k {
+                par.step(&g, &mut u, LambdaMode::Ema(0.95), 1e-6, 0.0, Precision::F32);
+            }
+        });
+        println!("{}", r_par.report());
+        rec.add("kernel", &r_par);
+        let sp = r_seq.per_iter_ns() / r_par.per_iter_ns();
+        println!("    tridiag block-parallel speedup: {sp:.2}x");
+        rec.derive(format!("tridiag_block_parallel_speedup_n{n}"), sp);
+
+        let nb = if smoke { 1 << 16 } else { 1 << 19 };
+        let ids: Vec<f32> = (0..nb).map(|j| (j * tensors / nb) as f32).collect();
+        let g = rng.normal_vec(nb);
+        let mut u = vec![0.0f32; nb];
+        let (iters, kk) = if smoke { (2, 2) } else { (4, 3) };
+        let mut seq = BandedState::new(nb, 4, Some(&ids));
+        seq.parallel = false;
+        let r_seq = bench(&format!("band-4  seq n={nb} tensors={tensors}"), iters, kk, |k| {
+            for _ in 0..k {
+                seq.step(&g, &mut u, LambdaMode::Ema(0.95), 1e-6, 0.0, Precision::F32);
+            }
+        });
+        println!("{}", r_seq.report());
+        rec.add("kernel", &r_seq);
+        let mut par = BandedState::new(nb, 4, Some(&ids));
+        let r_par = bench(&format!("band-4  par n={nb} tensors={tensors}"), iters, kk, |k| {
+            for _ in 0..k {
+                par.step(&g, &mut u, LambdaMode::Ema(0.95), 1e-6, 0.0, Precision::F32);
+            }
+        });
+        println!("{}", r_par.report());
+        rec.add("kernel", &r_par);
+        let sp = r_seq.per_iter_ns() / r_par.per_iter_ns();
+        println!("    banded block-parallel speedup: {sp:.2}x");
+        rec.derive(format!("banded_block_parallel_speedup_n{nb}"), sp);
     }
 
     if run("step") {
         println!("== [step] full-AE optimizer step: tridiag-SONew vs Adam ==");
-        let mlp = sonew::models::Mlp::autoencoder();
+        let mlp = if smoke {
+            sonew::models::Mlp::autoencoder_small()
+        } else {
+            sonew::models::Mlp::autoencoder()
+        };
         let n = mlp.total;
         let mut rng = Rng::new(2);
         let g = rng.normal_vec(n);
+        let (iters, kk) = if smoke { (2, 2) } else { (5, 5) };
         for spec in ["adam", "diag-sonew", "tridiag-sonew", "band-sonew"] {
             let hp = HyperParams { grafting: false, beta1: 0.0, ..Default::default() };
             let mut opt = OptSpec::parse(spec)
@@ -74,12 +316,13 @@ fn main() {
                 .build(n, &mlp.blocks(), &mlp.mat_blocks(), &hp)
                 .unwrap();
             let mut params = vec![0.01f32; n];
-            let r = bench(&format!("{} step n={n}", opt.name()), 5, 5, |k| {
+            let r = bench(&format!("{} step n={n}", opt.name()), iters, kk, |k| {
                 for _ in 0..k {
                     opt.step(&mut params, &g, 1e-3);
                 }
             });
             println!("{}", r.report());
+            rec.add("step", &r);
         }
     }
 
@@ -90,7 +333,8 @@ fn main() {
         let mut rng = Rng::new(4);
         let params = mlp.init(&mut rng);
         let x = rng.uniform_vec(64 * mlp.dims[0], 0.0, 1.0);
-        let r = bench("native ae_small grads b64", 5, 5, |k| {
+        let (iters, kk) = if smoke { (2, 2) } else { (5, 5) };
+        let r = bench("native ae_small grads b64", iters, kk, |k| {
             for _ in 0..k {
                 backend
                     .loss_and_grad(
@@ -102,6 +346,7 @@ fn main() {
             }
         });
         println!("{}", r.report());
+        rec.add("backend", &r);
     }
 
     if run("lm") {
@@ -112,7 +357,8 @@ fn main() {
         let params = small.init(5);
         let mut corpus = sonew::data::LmCorpus::new(small.cfg.vocab, 6);
         let (toks, tgts) = corpus.batch(4, small.cfg.seq);
-        let r = bench("native lm_small grads b4", 5, 5, |k| {
+        let (iters, kk) = if smoke { (2, 2) } else { (5, 5) };
+        let r = bench("native lm_small grads b4", iters, kk, |k| {
             for _ in 0..k {
                 backend
                     .loss_and_grad(
@@ -124,29 +370,36 @@ fn main() {
             }
         });
         println!("{}", r.report());
-        // the Figure-3 model itself: the per-step grads cost that the
-        // tridiag-SONew optimizer step rides on top of
-        let full = Transformer::new(LmConfig::figure3());
-        let params = full.init(7);
-        let mut corpus = sonew::data::LmCorpus::new(full.cfg.vocab, 8);
-        let (toks, tgts) = corpus.batch(2, full.cfg.seq);
-        let r = bench(
-            &format!("native lm grads b2 s{} n={}", full.cfg.seq, full.total),
-            3,
-            2,
-            |k| {
-                for _ in 0..k {
-                    backend
-                        .loss_and_grad(
-                            "lm_grads",
-                            &params,
-                            vec![HostTensor::I32(toks.clone()), HostTensor::I32(tgts.clone())],
-                        )
-                        .unwrap();
-                }
-            },
-        );
-        println!("{}", r.report());
+        rec.add("lm", &r);
+        if !smoke {
+            // the Figure-3 model itself: the per-step grads cost that the
+            // tridiag-SONew optimizer step rides on top of
+            let full = Transformer::new(LmConfig::figure3());
+            let params = full.init(7);
+            let mut corpus = sonew::data::LmCorpus::new(full.cfg.vocab, 8);
+            let (toks, tgts) = corpus.batch(2, full.cfg.seq);
+            let r = bench(
+                &format!("native lm grads b2 s{} n={}", full.cfg.seq, full.total),
+                3,
+                2,
+                |k| {
+                    for _ in 0..k {
+                        backend
+                            .loss_and_grad(
+                                "lm_grads",
+                                &params,
+                                vec![
+                                    HostTensor::I32(toks.clone()),
+                                    HostTensor::I32(tgts.clone()),
+                                ],
+                            )
+                            .unwrap();
+                    }
+                },
+            );
+            println!("{}", r.report());
+            rec.add("lm", &r);
+        }
     }
 
     if run("hlo") {
@@ -181,6 +434,7 @@ fn main() {
                     }
                 });
                 println!("{}", r.report());
+                rec.add("hlo", &r);
             }
             if let Ok(spec) = man.artifact("ae_small_grads_b64") {
                 let np = spec.inputs[0].elements();
@@ -199,6 +453,7 @@ fn main() {
                     }
                 });
                 println!("{}", r.report());
+                rec.add("hlo", &r);
             }
         } else {
             println!(
@@ -208,6 +463,12 @@ fn main() {
             );
         }
         }
+    }
+
+    let out = std::env::var("SONEW_BENCH_OUT").unwrap_or_else(|_| "BENCH_latest.json".into());
+    match std::fs::write(&out, rec.to_json(smoke)) {
+        Ok(()) => println!("bench trajectory written to {out}"),
+        Err(e) => eprintln!("failed to write {out}: {e}"),
     }
     println!("bench done");
 }

@@ -57,11 +57,17 @@ impl Metrics {
         self.points.last().map(|p| p.loss)
     }
 
+    /// Best (lowest) recorded loss. Total order via `f32::total_cmp`, so
+    /// a diverged trial's NaN points cannot panic the comparator; NaN
+    /// sorts above every real loss and is only returned if a trajectory
+    /// recorded nothing else.
     pub fn best_loss(&self) -> Option<f32> {
         self.points
             .iter()
             .map(|p| p.loss)
-            .min_by(|a, b| a.partial_cmp(b).unwrap())
+            .filter(|v| !v.is_nan())
+            .min_by(f32::total_cmp)
+            .or_else(|| self.points.first().map(|p| p.loss))
     }
 
     /// Mean loss of the final `k` recorded points (robust to minibatch
@@ -115,6 +121,24 @@ mod tests {
         assert_eq!(m.steps_to_reach(5.5), Some(10));
         assert_eq!(m.steps_to_reach(1.0), None);
         assert!((m.tail_mean_loss(2).unwrap() - 5.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nan_trajectory_does_not_panic_best_loss() {
+        // a diverged trial records NaN losses; best_loss must not panic
+        // and must still report the best real loss seen before divergence
+        let mut m = Metrics::default();
+        m.record(0, 2.0, 0.1);
+        m.record(1, f32::NAN, 0.1);
+        m.record(2, 1.0, 0.1);
+        m.record(3, f32::NAN, 0.1);
+        assert_eq!(m.best_loss(), Some(1.0));
+        assert_eq!(m.steps_to_reach(1.5), Some(2));
+        // all-NaN trajectory: still no panic, NaN reported as recorded
+        let mut all_nan = Metrics::default();
+        all_nan.record(0, f32::NAN, 0.1);
+        assert!(all_nan.best_loss().unwrap().is_nan());
+        assert!(Metrics::default().best_loss().is_none());
     }
 
     #[test]

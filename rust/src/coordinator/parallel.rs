@@ -7,6 +7,14 @@
 //!   leader broadcasts params -> each worker computes (loss_w, grad_w) on
 //!   its own data shard -> gradients are pairwise tree-reduced
 //!   (lg W rounds) -> leader averages and takes the optimizer step.
+//!
+//! Every `step` carries a sequence number that workers echo back with
+//! their result. The leader accepts only results tagged with the current
+//! step and silently discards stale tags, and it always drains one
+//! result per worker before returning — even after a worker error — so a
+//! transient failure can never leave last step's gradients queued to be
+//! served as this step's (the stale-gradient desync this module once
+//! had).
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -24,19 +32,21 @@ pub trait GradProvider {
 }
 
 enum Cmd {
-    Step(Arc<Vec<f32>>),
+    Step(u64, Arc<Vec<f32>>),
     Stop,
 }
 
 struct Worker {
     cmd: mpsc::Sender<Cmd>,
-    out: mpsc::Receiver<Result<(f32, Vec<f32>)>>,
+    out: mpsc::Receiver<(u64, Result<(f32, Vec<f32>)>)>,
     handle: Option<JoinHandle<()>>,
 }
 
 /// Pool of data-parallel gradient workers.
 pub struct WorkerPool {
     workers: Vec<Worker>,
+    /// current step's sequence tag; results tagged older are stale
+    seq: u64,
 }
 
 impl WorkerPool {
@@ -57,9 +67,9 @@ impl WorkerPool {
                     .name(format!("grad-worker-{i}"))
                     .spawn(move || {
                         let mut provider = factory(i);
-                        while let Ok(Cmd::Step(params)) = cmd_rx.recv() {
+                        while let Ok(Cmd::Step(seq, params)) = cmd_rx.recv() {
                             let r = provider.next_loss_and_grad(&params);
-                            if out_tx.send(r).is_err() {
+                            if out_tx.send((seq, r)).is_err() {
                                 break;
                             }
                         }
@@ -68,7 +78,7 @@ impl WorkerPool {
                 Worker { cmd: cmd_tx, out: out_rx, handle: Some(handle) }
             })
             .collect();
-        Self { workers }
+        Self { workers, seq: 0 }
     }
 
     pub fn len(&self) -> usize {
@@ -81,17 +91,47 @@ impl WorkerPool {
 
     /// One synchronous data-parallel gradient step: broadcast, compute,
     /// tree-reduce. Returns (mean loss, mean grads).
+    ///
+    /// Error discipline: a worker error is reported only after every
+    /// worker's current-step result has been received (or its channel
+    /// found dead), and results from earlier aborted steps are discarded
+    /// by sequence tag — the next call always reduces gradients computed
+    /// at *its* parameters.
     pub fn step(&mut self, params: Arc<Vec<f32>>) -> Result<(f32, Vec<f32>)> {
+        self.seq += 1;
+        let seq = self.seq;
         for w in &self.workers {
             w.cmd
-                .send(Cmd::Step(Arc::clone(&params)))
+                .send(Cmd::Step(seq, Arc::clone(&params)))
                 .map_err(|_| anyhow::anyhow!("worker channel closed"))?;
         }
         let mut results: Vec<(f32, Vec<f32>)> = Vec::with_capacity(self.workers.len());
+        let mut first_err: Option<anyhow::Error> = None;
         for w in &self.workers {
-            results.push(w.out.recv().map_err(|_| anyhow::anyhow!("worker died"))??);
+            loop {
+                match w.out.recv() {
+                    // stale result from a step that aborted on another
+                    // worker's error: discard and keep waiting for ours
+                    Ok((tag, _)) if tag < seq => continue,
+                    Ok((_, Ok(r))) => {
+                        results.push(r);
+                        break;
+                    }
+                    Ok((_, Err(e))) => {
+                        first_err.get_or_insert(e);
+                        break;
+                    }
+                    Err(_) => {
+                        first_err.get_or_insert_with(|| anyhow::anyhow!("worker died"));
+                        break;
+                    }
+                }
+            }
         }
-        Ok(tree_reduce_mean(results))
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        tree_reduce_mean(results)
     }
 }
 
@@ -110,10 +150,23 @@ impl Drop for WorkerPool {
 
 /// Binary-tree pairwise reduction of (loss, grad) contributions followed
 /// by averaging — lg(W) reduction rounds, the collective shape a
-/// ring/tree all-reduce realizes on hardware.
-pub fn tree_reduce_mean(mut contribs: Vec<(f32, Vec<f32>)>) -> (f32, Vec<f32>) {
-    assert!(!contribs.is_empty());
+/// ring/tree all-reduce realizes on hardware. Contributions must agree
+/// on gradient length; a shard returning a mismatched vector (truncated
+/// file, wrong model) is a hard error, not a silent truncation.
+pub fn tree_reduce_mean(mut contribs: Vec<(f32, Vec<f32>)>) -> Result<(f32, Vec<f32>)> {
     let w = contribs.len();
+    if w == 0 {
+        anyhow::bail!("tree_reduce_mean: no contributions");
+    }
+    let dim = contribs[0].1.len();
+    for (i, (_, g)) in contribs.iter().enumerate() {
+        if g.len() != dim {
+            anyhow::bail!(
+                "tree_reduce_mean: worker {i} returned {} gradients, worker 0 returned {dim}",
+                g.len()
+            );
+        }
+    }
     let mut stride = 1;
     while stride < w {
         let mut i = 0;
@@ -135,7 +188,7 @@ pub fn tree_reduce_mean(mut contribs: Vec<(f32, Vec<f32>)>) -> (f32, Vec<f32>) {
     for g in &mut grad {
         *g *= inv;
     }
-    (loss, grad)
+    Ok((loss, grad))
 }
 
 #[cfg(test)]
@@ -159,12 +212,20 @@ mod tests {
             let contribs: Vec<(f32, Vec<f32>)> = (0..w)
                 .map(|i| (i as f32, vec![i as f32, 2.0 * i as f32]))
                 .collect();
-            let (loss, grad) = tree_reduce_mean(contribs);
+            let (loss, grad) = tree_reduce_mean(contribs).unwrap();
             let want = (0..w).map(|i| i as f32).sum::<f32>() / w as f32;
             assert!((loss - want).abs() < 1e-5, "w={w}");
             assert!((grad[0] - want).abs() < 1e-5, "w={w}");
             assert!((grad[1] - 2.0 * want).abs() < 1e-5, "w={w}");
         }
+    }
+
+    #[test]
+    fn tree_reduce_rejects_mismatched_lengths() {
+        let contribs = vec![(1.0, vec![1.0, 2.0]), (2.0, vec![3.0])];
+        let err = format!("{:#}", tree_reduce_mean(contribs).unwrap_err());
+        assert!(err.contains("worker 1 returned 1 gradients"), "{err}");
+        assert!(tree_reduce_mean(Vec::new()).is_err());
     }
 
     #[test]
@@ -201,5 +262,37 @@ mod tests {
         }
         let mut pool = WorkerPool::spawn(2, |_| Box::new(Fail));
         assert!(pool.step(Arc::new(vec![0.0])).is_err());
+    }
+
+    /// Regression for the stale-gradient desync: worker 0 fails once
+    /// while worker 1 succeeds. Before the sequence-tag + drain fix, the
+    /// failed step left worker 1's result queued and every later step
+    /// served gradients computed at the *previous* step's parameters,
+    /// one step skewed forever.
+    #[test]
+    fn step_after_transient_error_returns_current_gradients() {
+        struct FlakyEcho {
+            worker: usize,
+            calls: u64,
+        }
+        impl GradProvider for FlakyEcho {
+            fn next_loss_and_grad(&mut self, p: &[f32]) -> Result<(f32, Vec<f32>)> {
+                self.calls += 1;
+                if self.worker == 0 && self.calls == 1 {
+                    anyhow::bail!("transient shard failure")
+                }
+                Ok((p[0], p.to_vec()))
+            }
+        }
+        let mut pool = WorkerPool::spawn(2, |i| Box::new(FlakyEcho { worker: i, calls: 0 }));
+        assert!(pool.step(Arc::new(vec![1.0, 10.0])).is_err());
+        // the next step must reflect the *new* params, not step 1's
+        let (loss, grad) = pool.step(Arc::new(vec![2.0, 20.0])).unwrap();
+        assert_eq!(loss, 2.0, "stale loss served after transient error");
+        assert_eq!(grad, vec![2.0, 20.0], "stale gradients served after transient error");
+        // and the pool keeps working on subsequent steps
+        let (loss, grad) = pool.step(Arc::new(vec![3.0, 30.0])).unwrap();
+        assert_eq!(loss, 3.0);
+        assert_eq!(grad, vec![3.0, 30.0]);
     }
 }

@@ -1,14 +1,34 @@
-//! Dense row-major matrices and the matmul kernels used by the native
-//! gradient engine (`models/`) and the Kronecker-factored optimizers.
+//! Dense row-major matrices and the blocked GEMM engine used by the
+//! native gradient engine (`models/`) and the Kronecker-factored
+//! optimizers.
 //!
-//! The hot kernels are `matmul_into` and the transpose variants
-//! `matmul_tn` / `matmul_nt` (the layer-stack backward path: dW = x^T dz
-//! and dx = dz W^T): contiguous inner j-loops so rustc autovectorizes,
-//! plus std::thread row-chunked parallelism over the output matrix for
-//! large shapes (no rayon in the offline closure). The chunked workers
-//! keep every output element's accumulation order identical to the
-//! single-threaded kernels, so results are bitwise reproducible at any
-//! thread count.
+//! All three hot products — `C = A B`, `C = A^T B` (dW = x^T dz) and
+//! `C = A B^T` (dx = dz W^T on the layer-stack backward path) — route
+//! through one dispatcher, [`gemm_into`], instead of three hand-rolled
+//! kernels. The engine is cache-blocked and register-tiled:
+//!
+//! * the k dimension is processed in `KC`-row panels so the active slab
+//!   of B stays cache-resident while a row group sweeps it;
+//! * each `MR x NR` output tile accumulates in fixed-size `f32` lane
+//!   arrays (`[f32; NR]`), which rustc autovectorizes into packed SIMD
+//!   mul/adds, and every loaded B lane chunk is reused across the `MR`
+//!   rows of the tile;
+//! * transposed operands are packed into contiguous panels (`A^T` per
+//!   row group, `B^T` once up front), so the micro-kernel only ever
+//!   streams unit-stride data. We deliberately use separate mul + add
+//!   rather than `f32::mul_add`: on targets without a native FMA unit
+//!   `mul_add` lowers to a libm call, and fusing would also change the
+//!   documented accumulation contract below.
+//!
+//! Determinism contract: every output element accumulates its k-products
+//! strictly in ascending-k order no matter how the work is tiled or how
+//! many threads run (`util::par::run_chunked` splits C into contiguous
+//! row chunks), so results are **bitwise identical at any thread count**
+//! — asserted by `gemm_bitwise_identical_at_any_thread_count`. The
+//! worker-thread count itself comes from [`hw_threads`]: cached once,
+//! overridable with `SONEW_THREADS` for reproducible perf runs.
+
+use std::sync::OnceLock;
 
 /// Row-major dense matrix.
 #[derive(Debug, Clone, PartialEq)]
@@ -71,26 +91,292 @@ impl Mat {
     }
 }
 
-/// Number of worker threads for the parallel kernels (cached).
-pub fn hw_threads() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+static HW_THREADS: OnceLock<usize> = OnceLock::new();
+
+/// `SONEW_THREADS` parsing: any integer >= 1 pins the thread count;
+/// everything else falls through to hardware detection.
+fn thread_override(raw: Option<&str>) -> Option<usize> {
+    raw.and_then(|s| s.trim().parse::<usize>().ok()).filter(|&t| t > 0)
 }
 
-/// C = A @ B  (m x k) @ (k x n), single-threaded core over a row range.
-fn matmul_rows(a: &[f32], b: &[f32], c: &mut [f32], rows: std::ops::Range<usize>, k: usize, n: usize) {
-    for i in rows {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        crow.iter_mut().for_each(|v| *v = 0.0);
-        for (kk, &aik) in arow.iter().enumerate() {
-            if aik == 0.0 {
-                continue;
+/// Number of worker threads for the parallel kernels. Resolved once and
+/// cached in a `OnceLock`: the `SONEW_THREADS` environment variable
+/// overrides the detected hardware parallelism so perf runs and CI
+/// benches are reproducible.
+pub fn hw_threads() -> usize {
+    *HW_THREADS.get_or_init(|| {
+        let env = std::env::var("SONEW_THREADS").ok();
+        thread_override(env.as_deref()).unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4)
+        })
+    })
+}
+
+/// How an operand slice is read by the GEMM engine: as the matrix itself
+/// (`N`) or as its transpose (`T`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Trans {
+    N,
+    T,
+}
+
+/// Rows of C per register tile.
+const MR: usize = 4;
+/// f32 lanes of C per register tile (two SSE / one AVX vector per row).
+const NR: usize = 8;
+/// k-panel depth: the B slab a row group sweeps is `KC x n` floats.
+const KC: usize = 256;
+/// Below this flop count the thread fan-out costs more than it saves.
+const PAR_FLOPS: f64 = 2e6;
+
+/// C = op_a(A) @ op_b(B) over raw row-major slices, overwriting `c`.
+/// `dims = (m, k, n)` are the *effective* shapes: op_a(A) is `m x k`,
+/// op_b(B) is `k x n`, C is `m x n`. This is the single entry point
+/// behind [`matmul_into`], [`matmul_tn`] and [`matmul_nt`]; model code
+/// calls it directly with parameter sub-slices to avoid materializing
+/// weight matrices.
+pub fn gemm_into(
+    a: &[f32],
+    op_a: Trans,
+    b: &[f32],
+    op_b: Trans,
+    c: &mut [f32],
+    dims: (usize, usize, usize),
+) {
+    let (m, k, n) = dims;
+    assert_eq!(a.len(), m * k, "gemm: A has {} elements, dims say {m}x{k}", a.len());
+    assert_eq!(b.len(), k * n, "gemm: B has {} elements, dims say {k}x{n}", b.len());
+    assert_eq!(c.len(), m * n, "gemm: C has {} elements, dims say {m}x{n}", c.len());
+    gemm_threads(a, op_a, b, op_b, c, dims, hw_threads());
+}
+
+/// [`gemm_into`] with an explicit thread budget (determinism tests and
+/// the bench harness pin 1/2/max here).
+fn gemm_threads(
+    a: &[f32],
+    op_a: Trans,
+    b: &[f32],
+    op_b: Trans,
+    c: &mut [f32],
+    dims: (usize, usize, usize),
+    threads: usize,
+) {
+    let (m, k, n) = dims;
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        c.fill(0.0);
+        return;
+    }
+    // A transposed-B source is packed once into effective (k x n) layout
+    // so the micro-kernel always streams unit-stride B rows.
+    let packed;
+    let b_eff: &[f32] = match op_b {
+        Trans::N => b,
+        Trans::T => {
+            packed = pack_transposed(b, k, n);
+            &packed
+        }
+    };
+    let flops = 2.0 * m as f64 * k as f64 * n as f64;
+    let threads = threads.min(m).max(1);
+    if flops < PAR_FLOPS || threads <= 1 {
+        gemm_rows(a, op_a, b_eff, c, 0, dims);
+        return;
+    }
+    let chunk = m.div_ceil(threads);
+    let items: Vec<(usize, &mut [f32])> = c
+        .chunks_mut(chunk * n)
+        .enumerate()
+        .map(|(t, cc)| (t * chunk, cc))
+        .collect();
+    let groups = items.len();
+    crate::util::par::run_chunked(items, groups, |(lo, cc)| {
+        gemm_rows(a, op_a, b_eff, cc, lo, dims);
+    });
+}
+
+/// Pack a `n x k` row-major source into its effective `k x n` transpose
+/// (tiled so both sides stay cache-friendly).
+fn pack_transposed(b: &[f32], k: usize, n: usize) -> Vec<f32> {
+    const TB: usize = 32;
+    let mut out = vec![0.0f32; k * n];
+    let mut jj = 0;
+    while jj < n {
+        let je = (jj + TB).min(n);
+        let mut k0 = 0;
+        while k0 < k {
+            let ke = (k0 + TB).min(k);
+            for j in jj..je {
+                let src = &b[j * k + k0..j * k + ke];
+                for (dk, &v) in src.iter().enumerate() {
+                    out[(k0 + dk) * n + j] = v;
+                }
             }
-            let brow = &b[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                crow[j] += aik * brow[j];
+            k0 = ke;
+        }
+        jj = je;
+    }
+    out
+}
+
+/// Rows `lo..lo + c_chunk.len()/n` of C, written at offset 0 of
+/// `c_chunk`. `b` is already in effective (k x n) layout; A panels are
+/// packed per row group when `op_a == T`. Each output element
+/// accumulates panel-by-panel in strictly ascending k order.
+fn gemm_rows(
+    a: &[f32],
+    op_a: Trans,
+    b: &[f32],
+    c_chunk: &mut [f32],
+    lo: usize,
+    dims: (usize, usize, usize),
+) {
+    let (m, k, n) = dims;
+    if n == 0 {
+        return;
+    }
+    let rows = c_chunk.len() / n;
+    c_chunk.fill(0.0);
+    if rows == 0 || k == 0 {
+        return;
+    }
+    // A^T gather scratch — only the transposed layout reads it
+    let mut a_pack =
+        if op_a == Trans::T { vec![0.0f32; MR * KC.min(k)] } else { Vec::new() };
+    let mut kp = 0;
+    while kp < k {
+        let kc = KC.min(k - kp);
+        let bp = &b[kp * n..(kp + kc) * n];
+        let mut r0 = 0;
+        while r0 < rows {
+            let mr = MR.min(rows - r0);
+            if op_a == Trans::T {
+                // gather this row group's A^T panel into contiguous rows
+                // (source stride is m floats; adjacent rows are adjacent
+                // columns, so each gather line is one small cache chunk)
+                for r in 0..mr {
+                    let i = lo + r0 + r;
+                    let dst = &mut a_pack[r * kc..(r + 1) * kc];
+                    for (kk, v) in dst.iter_mut().enumerate() {
+                        *v = a[(kp + kk) * m + i];
+                    }
+                }
+            }
+            let mut rv: [&[f32]; MR] = [&[]; MR];
+            for (r, slot) in rv.iter_mut().enumerate().take(mr) {
+                *slot = match op_a {
+                    Trans::N => {
+                        let i = lo + r0 + r;
+                        &a[i * k + kp..i * k + kp + kc]
+                    }
+                    Trans::T => &a_pack[r * kc..(r + 1) * kc],
+                };
+            }
+            if mr == MR {
+                let c4 = &mut c_chunk[r0 * n..(r0 + MR) * n];
+                micro_4(rv[0], rv[1], rv[2], rv[3], bp, n, c4);
+            } else {
+                for (r, &arow) in rv.iter().enumerate().take(mr) {
+                    let crow = &mut c_chunk[(r0 + r) * n..(r0 + r + 1) * n];
+                    micro_1(arow, bp, n, crow);
+                }
+            }
+            r0 += mr;
+        }
+        kp += kc;
+    }
+}
+
+/// 4 x NR register-tile micro-kernel over one k-panel: `c` is 4 rows x n
+/// (chunk-local) and accumulates the panel's partial products on top of
+/// its current contents. Each loaded B lane chunk feeds all 4 rows; each
+/// C lane accumulates strictly in ascending kk order (the bitwise
+/// determinism contract).
+fn micro_4(a0: &[f32], a1: &[f32], a2: &[f32], a3: &[f32], bp: &[f32], n: usize, c: &mut [f32]) {
+    let mut j = 0;
+    while j < n {
+        let w = NR.min(n - j);
+        let mut acc0 = [0.0f32; NR];
+        let mut acc1 = [0.0f32; NR];
+        let mut acc2 = [0.0f32; NR];
+        let mut acc3 = [0.0f32; NR];
+        acc0[..w].copy_from_slice(&c[j..j + w]);
+        acc1[..w].copy_from_slice(&c[n + j..n + j + w]);
+        acc2[..w].copy_from_slice(&c[2 * n + j..2 * n + j + w]);
+        acc3[..w].copy_from_slice(&c[3 * n + j..3 * n + j + w]);
+        if w == NR {
+            for (kk, (((&v0, &v1), &v2), &v3)) in
+                a0.iter().zip(a1).zip(a2).zip(a3).enumerate()
+            {
+                let brow = &bp[kk * n + j..kk * n + j + NR];
+                for (x, &bv) in acc0.iter_mut().zip(brow) {
+                    *x += v0 * bv;
+                }
+                for (x, &bv) in acc1.iter_mut().zip(brow) {
+                    *x += v1 * bv;
+                }
+                for (x, &bv) in acc2.iter_mut().zip(brow) {
+                    *x += v2 * bv;
+                }
+                for (x, &bv) in acc3.iter_mut().zip(brow) {
+                    *x += v3 * bv;
+                }
+            }
+        } else {
+            for (kk, (((&v0, &v1), &v2), &v3)) in
+                a0.iter().zip(a1).zip(a2).zip(a3).enumerate()
+            {
+                let brow = &bp[kk * n + j..kk * n + j + w];
+                for (x, &bv) in acc0[..w].iter_mut().zip(brow) {
+                    *x += v0 * bv;
+                }
+                for (x, &bv) in acc1[..w].iter_mut().zip(brow) {
+                    *x += v1 * bv;
+                }
+                for (x, &bv) in acc2[..w].iter_mut().zip(brow) {
+                    *x += v2 * bv;
+                }
+                for (x, &bv) in acc3[..w].iter_mut().zip(brow) {
+                    *x += v3 * bv;
+                }
             }
         }
+        c[j..j + w].copy_from_slice(&acc0[..w]);
+        c[n + j..n + j + w].copy_from_slice(&acc1[..w]);
+        c[2 * n + j..2 * n + j + w].copy_from_slice(&acc2[..w]);
+        c[3 * n + j..3 * n + j + w].copy_from_slice(&acc3[..w]);
+        j += w;
+    }
+}
+
+/// Single-row remainder micro-kernel: identical per-element arithmetic
+/// (same ascending-kk order) as [`micro_4`], so row grouping — which
+/// shifts with the thread split — never changes any output bit.
+fn micro_1(arow: &[f32], bp: &[f32], n: usize, crow: &mut [f32]) {
+    let mut j = 0;
+    while j < n {
+        let w = NR.min(n - j);
+        let mut acc = [0.0f32; NR];
+        acc[..w].copy_from_slice(&crow[j..j + w]);
+        if w == NR {
+            for (kk, &av) in arow.iter().enumerate() {
+                let brow = &bp[kk * n + j..kk * n + j + NR];
+                for (x, &bv) in acc.iter_mut().zip(brow) {
+                    *x += av * bv;
+                }
+            }
+        } else {
+            for (kk, &av) in arow.iter().enumerate() {
+                let brow = &bp[kk * n + j..kk * n + j + w];
+                for (x, &bv) in acc[..w].iter_mut().zip(brow) {
+                    *x += av * bv;
+                }
+            }
+        }
+        crow[j..j + w].copy_from_slice(&acc[..w]);
+        j += w;
     }
 }
 
@@ -99,40 +385,7 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.rows, "matmul dims");
     assert_eq!(c.rows, a.rows);
     assert_eq!(c.cols, b.cols);
-    let (m, k, n) = (a.rows, a.cols, b.cols);
-    let flops = 2.0 * m as f64 * k as f64 * n as f64;
-    let threads = hw_threads().min(m.max(1));
-    if flops < 2e6 || threads <= 1 {
-        matmul_rows(&a.data, &b.data, &mut c.data, 0..m, k, n);
-        return;
-    }
-    let chunk = m.div_ceil(threads);
-    let a_data = &a.data;
-    let b_data = &b.data;
-    std::thread::scope(|s| {
-        for (t, c_chunk) in c.data.chunks_mut(chunk * n).enumerate() {
-            let lo = t * chunk;
-            let rows = c_chunk.len() / n;
-            s.spawn(move || {
-                // re-base: rows lo..lo+rows of C live at offset 0 of c_chunk
-                for r in 0..rows {
-                    let i = lo + r;
-                    let arow = &a_data[i * k..(i + 1) * k];
-                    let crow = &mut c_chunk[r * n..(r + 1) * n];
-                    crow.iter_mut().for_each(|v| *v = 0.0);
-                    for (kk, &aik) in arow.iter().enumerate() {
-                        if aik == 0.0 {
-                            continue;
-                        }
-                        let brow = &b_data[kk * n..(kk + 1) * n];
-                        for j in 0..n {
-                            crow[j] += aik * brow[j];
-                        }
-                    }
-                }
-            });
-        }
-    });
+    gemm_into(&a.data, Trans::N, &b.data, Trans::N, &mut c.data, (a.rows, a.cols, b.cols));
 }
 
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
@@ -141,99 +394,25 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
-/// Rows `lo..lo + c_chunk.len()/n` of C = A^T B, written at offset 0 of
-/// `c_chunk`. The kk-outer loop order accumulates each output element in
-/// the same order as the single-threaded kernel did, so the parallel
-/// split is bitwise-neutral.
-fn matmul_tn_rows(a: &[f32], b: &[f32], c_chunk: &mut [f32], lo: usize, k: usize, m: usize, n: usize) {
-    let rows = c_chunk.len() / n;
-    for kk in 0..k {
-        let arow = &a[kk * m..(kk + 1) * m];
-        let brow = &b[kk * n..(kk + 1) * n];
-        for r in 0..rows {
-            let aki = arow[lo + r];
-            if aki == 0.0 {
-                continue;
-            }
-            let crow = &mut c_chunk[r * n..(r + 1) * n];
-            for j in 0..n {
-                crow[j] += aki * brow[j];
-            }
-        }
-    }
-}
-
-/// C = A^T @ B  ((k x m)^T @ (k x n)) without materializing A^T, with the
-/// same row-chunked worker splitting as `matmul_into` (this is dW = x^T dz
-/// on the layer-stack backward hot path).
+/// C = A^T @ B  ((k x m)^T @ (k x n)): A^T is gathered panel-by-panel
+/// into L1-resident scratch, never fully materialized (this is
+/// dW = x^T dz on the layer-stack backward hot path).
 pub fn matmul_tn(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.rows, b.rows, "matmul_tn dims");
-    let (k, m, n) = (a.rows, a.cols, b.cols);
+    let (m, k, n) = (a.cols, a.rows, b.cols);
     let mut c = Mat::zeros(m, n);
-    if m == 0 || n == 0 {
-        return c;
-    }
-    let flops = 2.0 * m as f64 * k as f64 * n as f64;
-    let threads = hw_threads().min(m.max(1));
-    if flops < 2e6 || threads <= 1 {
-        matmul_tn_rows(&a.data, &b.data, &mut c.data, 0, k, m, n);
-        return c;
-    }
-    let chunk = m.div_ceil(threads);
-    let a_data = &a.data;
-    let b_data = &b.data;
-    std::thread::scope(|s| {
-        for (t, c_chunk) in c.data.chunks_mut(chunk * n).enumerate() {
-            let lo = t * chunk;
-            s.spawn(move || matmul_tn_rows(a_data, b_data, c_chunk, lo, k, m, n));
-        }
-    });
+    gemm_into(&a.data, Trans::T, &b.data, Trans::N, &mut c.data, (m, k, n));
     c
 }
 
-/// Rows `lo..lo + c_chunk.len()/n` of C = A B^T, written at offset 0 of
-/// `c_chunk` (each element is an independent dot product).
-fn matmul_nt_rows(a: &[f32], b: &[f32], c_chunk: &mut [f32], lo: usize, k: usize, n: usize) {
-    let rows = c_chunk.len() / n;
-    for r in 0..rows {
-        let arow = &a[(lo + r) * k..(lo + r + 1) * k];
-        let crow = &mut c_chunk[r * n..(r + 1) * n];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for kk in 0..k {
-                acc += arow[kk] * brow[kk];
-            }
-            crow[j] = acc;
-        }
-    }
-}
-
-/// C = A @ B^T  ((m x k) @ (n x k)^T) without materializing B^T, with the
-/// same row-chunked worker splitting as `matmul_into` (this is
-/// dx = dz W^T on the layer-stack backward hot path).
+/// C = A @ B^T  ((m x k) @ (n x k)^T): B^T is packed once into a
+/// contiguous (k x n) buffer so the micro-kernel streams unit-stride
+/// rows (this is dx = dz W^T on the layer-stack backward hot path).
 pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.cols, "matmul_nt dims");
     let (m, k, n) = (a.rows, a.cols, b.rows);
     let mut c = Mat::zeros(m, n);
-    if m == 0 || n == 0 {
-        return c;
-    }
-    let flops = 2.0 * m as f64 * k as f64 * n as f64;
-    let threads = hw_threads().min(m.max(1));
-    if flops < 2e6 || threads <= 1 {
-        matmul_nt_rows(&a.data, &b.data, &mut c.data, 0, k, n);
-        return c;
-    }
-    let chunk = m.div_ceil(threads);
-    let a_data = &a.data;
-    let b_data = &b.data;
-    std::thread::scope(|s| {
-        for (t, c_chunk) in c.data.chunks_mut(chunk * n).enumerate() {
-            let lo = t * chunk;
-            s.spawn(move || matmul_nt_rows(a_data, b_data, c_chunk, lo, k, n));
-        }
-    });
+    gemm_into(&a.data, Trans::N, &b.data, Trans::T, &mut c.data, (m, k, n));
     c
 }
 
@@ -336,23 +515,81 @@ mod tests {
     }
 
     #[test]
-    fn tn_parallel_split_is_bitwise_neutral() {
-        // the chunked workers must reproduce the sequential kernel
-        // exactly (same per-element accumulation order)
+    fn degenerate_and_boundary_shapes_match_naive() {
+        // m/k/n in {0, 1}, register-tile and k-panel boundary sizes, and
+        // tall-skinny shapes — every dispatch edge the engine has.
+        let mut rng = crate::util::Rng::new(9);
+        let shapes = [
+            (0usize, 3usize, 4usize),
+            (3, 0, 4),
+            (3, 4, 0),
+            (0, 0, 0),
+            (1, 1, 1),
+            (1, 7, 1),
+            (5, 1, 5),
+            (MR, 9, NR),
+            (MR + 1, 9, NR + 1),
+            (MR - 1, 9, NR - 1),
+            (2, KC, 3),
+            (2, KC + 1, 3),
+            (2, KC - 1, 3),
+            (400, 3, 2),
+            (2, 3, 400),
+        ];
+        for &(m, k, n) in &shapes {
+            let a = Mat::from_rows(m, k, rng.normal_vec(m * k));
+            let b = Mat::from_rows(k, n, rng.normal_vec(k * n));
+            let want = naive(&a, &b);
+            let label = format!("{m}x{k}x{n}");
+            assert_close(&matmul(&a, &b).data, &want.data, 1e-4, 1e-5, &label);
+            let at = a.transpose();
+            assert_close(&matmul_tn(&at, &b).data, &want.data, 1e-4, 1e-5, &label);
+            let bt = b.transpose();
+            assert_close(&matmul_nt(&a, &bt).data, &want.data, 1e-4, 1e-5, &label);
+        }
+    }
+
+    #[test]
+    fn matmul_into_overwrites_stale_output() {
+        let a = Mat::from_rows(2, 2, vec![1., 0., 0., 1.]);
+        let b = Mat::from_rows(2, 2, vec![5., 6., 7., 8.]);
+        let mut c = Mat::from_rows(2, 2, vec![9.; 4]);
+        matmul_into(&a, &b, &mut c);
+        assert_eq!(c.data, vec![5., 6., 7., 8.]);
+    }
+
+    #[test]
+    fn gemm_bitwise_identical_at_any_thread_count() {
+        // every operand layout, shapes past the parallel gate with odd
+        // row/lane/panel tails: 1, 2 and many threads must agree bitwise
         let mut rng = crate::util::Rng::new(7);
-        let (m, k, n) = (256, 120, 80);
-        let a = Mat::from_rows(k, m, rng.normal_vec(k * m));
-        let b = Mat::from_rows(k, n, rng.normal_vec(k * n));
-        let par = matmul_tn(&a, &b);
-        let mut seq = Mat::zeros(m, n);
-        matmul_tn_rows(&a.data, &b.data, &mut seq.data, 0, k, m, n);
-        assert_eq!(par.data, seq.data);
-        let a2 = Mat::from_rows(m, k, rng.normal_vec(m * k));
-        let b2 = Mat::from_rows(n, k, rng.normal_vec(n * k));
-        let par2 = matmul_nt(&a2, &b2);
-        let mut seq2 = Mat::zeros(m, n);
-        matmul_nt_rows(&a2.data, &b2.data, &mut seq2.data, 0, k, n);
-        assert_eq!(par2.data, seq2.data);
+        let shapes = [(256usize, 120usize, 80usize), (97, KC + 3, 41), (64, 300, 64)];
+        let ops = [(Trans::N, Trans::N), (Trans::T, Trans::N), (Trans::N, Trans::T)];
+        for &(m, k, n) in &shapes {
+            for &(op_a, op_b) in &ops {
+                let a = rng.normal_vec(m * k);
+                let b = rng.normal_vec(k * n);
+                let mut c1 = vec![0.0f32; m * n];
+                let mut c2 = vec![0.0f32; m * n];
+                let mut cx = vec![0.0f32; m * n];
+                gemm_threads(&a, op_a, &b, op_b, &mut c1, (m, k, n), 1);
+                gemm_threads(&a, op_a, &b, op_b, &mut c2, (m, k, n), 2);
+                gemm_threads(&a, op_a, &b, op_b, &mut cx, (m, k, n), hw_threads().max(4));
+                let b12 = c1.iter().zip(&c2).all(|(x, y)| x.to_bits() == y.to_bits());
+                let b1x = c1.iter().zip(&cx).all(|(x, y)| x.to_bits() == y.to_bits());
+                assert!(b12 && b1x, "{m}x{k}x{n} {op_a:?}{op_b:?} drifted across threads");
+            }
+        }
+    }
+
+    #[test]
+    fn thread_override_parses_strictly() {
+        assert_eq!(thread_override(Some("8")), Some(8));
+        assert_eq!(thread_override(Some(" 2 ")), Some(2));
+        assert_eq!(thread_override(Some("0")), None);
+        assert_eq!(thread_override(Some("-3")), None);
+        assert_eq!(thread_override(Some("many")), None);
+        assert_eq!(thread_override(None), None);
     }
 
     #[test]

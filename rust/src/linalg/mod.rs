@@ -9,6 +9,7 @@ pub mod eig;
 
 pub use chol::{cholesky_in_place, cholesky_solve_in_place, spd_solve};
 pub use dense::{
-    axpy, dot, hw_threads, matmul, matmul_into, matmul_nt, matmul_tn, matvec, norm2, Mat,
+    axpy, dot, gemm_into, hw_threads, matmul, matmul_into, matmul_nt, matmul_tn, matvec, norm2,
+    Mat, Trans,
 };
 pub use eig::{sym_eig, sym_pow};

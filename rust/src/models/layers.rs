@@ -14,7 +14,7 @@
 //!   the tape; `backward` pops in exact reverse order, accumulates (`+=`)
 //!   parameter gradients into its slice and returns the input gradient.
 
-use crate::linalg::{matmul, matmul_nt, matmul_tn, Mat};
+use crate::linalg::{gemm_into, matmul_tn, Mat, Trans};
 
 /// Stack of cached forward activations. Layers push during the forward
 /// pass and pop (in reverse) during backward; the strict stack discipline
@@ -103,10 +103,6 @@ impl Dense {
     pub fn new(d_in: usize, d_out: usize, bias: bool, act: Act) -> Self {
         Self { d_in, d_out, bias, act }
     }
-
-    fn weight(&self, p: &[f32]) -> Mat {
-        Mat::from_rows(self.d_in, self.d_out, p[..self.d_in * self.d_out].to_vec())
-    }
 }
 
 impl Layer for Dense {
@@ -116,8 +112,16 @@ impl Layer for Dense {
 
     fn forward(&self, p: &[f32], x: Mat, tape: &mut Tape) -> Mat {
         assert_eq!(x.cols, self.d_in, "dense input width");
-        let w = self.weight(p);
-        let mut z = matmul(&x, &w);
+        // z = x W straight off the parameter slice (no weight copy)
+        let mut z = Mat::zeros(x.rows, self.d_out);
+        gemm_into(
+            &x.data,
+            Trans::N,
+            &p[..self.d_in * self.d_out],
+            Trans::N,
+            &mut z.data,
+            (x.rows, self.d_in, self.d_out),
+        );
         if self.bias {
             let bias = &p[self.d_in * self.d_out..];
             for r in 0..z.rows {
@@ -185,8 +189,17 @@ impl Layer for Dense {
                 }
             }
         }
-        let w = self.weight(p);
-        matmul_nt(&dz, &w)
+        // dx = dz W^T straight off the parameter slice
+        let mut dx = Mat::zeros(dz.rows, self.d_in);
+        gemm_into(
+            &dz.data,
+            Trans::N,
+            &p[..self.d_in * self.d_out],
+            Trans::T,
+            &mut dx.data,
+            (dz.rows, self.d_out, self.d_in),
+        );
+        dx
     }
 }
 
@@ -338,8 +351,8 @@ impl Layer for CausalSelfAttention {
         let b = x.rows / s;
         let hd = d / nh;
         let scale = 1.0 / (hd as f32).sqrt();
-        let wqkv = Mat::from_rows(d, 3 * d, p[..3 * d * d].to_vec());
-        let qkv = matmul(&x, &wqkv); // rows x 3d, [q | k | v]
+        let mut qkv = Mat::zeros(x.rows, 3 * d); // rows x 3d, [q | k | v]
+        gemm_into(&x.data, Trans::N, &p[..3 * d * d], Trans::N, &mut qkv.data, (x.rows, d, 3 * d));
         let mut att = Mat::zeros(b * nh * s, s); // softmax(QK^T) rows, causal-zeroed
         let mut o = Mat::zeros(b * s, d);
         for bi in 0..b {
@@ -380,8 +393,8 @@ impl Layer for CausalSelfAttention {
                 }
             }
         }
-        let wout = Mat::from_rows(d, d, p[3 * d * d..].to_vec());
-        let y = matmul(&o, &wout);
+        let mut y = Mat::zeros(o.rows, d);
+        gemm_into(&o.data, Trans::N, &p[3 * d * d..], Trans::N, &mut y.data, (o.rows, d, d));
         tape.push(x);
         tape.push(qkv);
         tape.push(att);
@@ -399,12 +412,13 @@ impl Layer for CausalSelfAttention {
         let qkv = tape.pop();
         let x = tape.pop();
 
-        let wout = Mat::from_rows(d, d, p[3 * d * d..].to_vec());
         let dwout = matmul_tn(&o, &dy);
         for (gi, &v) in g[3 * d * d..].iter_mut().zip(&dwout.data) {
             *gi += v;
         }
-        let dmo = matmul_nt(&dy, &wout); // grad wrt o
+        // grad wrt o: dmo = dy W_out^T off the parameter slice
+        let mut dmo = Mat::zeros(dy.rows, d);
+        gemm_into(&dy.data, Trans::N, &p[3 * d * d..], Trans::T, &mut dmo.data, (dy.rows, d, d));
 
         let mut dqkv = Mat::zeros(b * s, 3 * d);
         let mut datt = vec![0.0f32; s];
@@ -448,8 +462,10 @@ impl Layer for CausalSelfAttention {
         for (gi, &v) in g[..3 * d * d].iter_mut().zip(&dwqkv.data) {
             *gi += v;
         }
-        let wqkv = Mat::from_rows(d, 3 * d, p[..3 * d * d].to_vec());
-        matmul_nt(&dqkv, &wqkv)
+        // dx = dqkv W_qkv^T off the parameter slice
+        let mut dx = Mat::zeros(dqkv.rows, d);
+        gemm_into(&dqkv.data, Trans::N, &p[..3 * d * d], Trans::T, &mut dx.data, (dqkv.rows, 3 * d, d));
+        dx
     }
 }
 

@@ -13,7 +13,7 @@
 //! artifact. The output head is tied to the token embedding
 //! (`logits = h @ embed^T`), as in the reference model.
 
-use crate::linalg::{matmul, matmul_nt, matmul_tn, Mat};
+use crate::linalg::{gemm_into, matmul_tn, Mat, Trans};
 use crate::runtime::{Layout, TensorSpec};
 
 use super::layers::{
@@ -158,9 +158,11 @@ impl Transformer {
             add_into(&mut h, &f);
         }
         let hf = ln.forward(&p[self.lnf_off..self.lnf_off + ln.n_params()], h, &mut tape);
-        // tied output head: logits = hf @ embed^T
-        let emb = Mat::from_rows(v, d, p[..v * d].to_vec());
-        let logits = matmul_nt(&hf, &emb);
+        // tied output head: logits = hf @ embed^T straight off the
+        // parameter slice (the engine packs embed^T internally into a
+        // cache-friendly layout; no Mat build here)
+        let mut logits = Mat::zeros(hf.rows, v);
+        gemm_into(&hf.data, Trans::N, &p[..v * d], Trans::T, &mut logits.data, (hf.rows, d, v));
         (tape, hf, logits)
     }
 
@@ -199,8 +201,8 @@ impl Transformer {
         for (gi, &dv) in g[..v * d].iter_mut().zip(&demb.data) {
             *gi += dv;
         }
-        let emb = Mat::from_rows(v, d, p[..v * d].to_vec());
-        let mut dh = matmul(&dlogits, &emb);
+        let mut dh = Mat::zeros(dlogits.rows, d);
+        gemm_into(&dlogits.data, Trans::N, &p[..v * d], Trans::N, &mut dh.data, (dlogits.rows, v, d));
 
         dh = ln.backward(
             &p[self.lnf_off..self.lnf_off + ln.n_params()],

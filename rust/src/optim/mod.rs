@@ -284,29 +284,17 @@ impl Opt {
             work.push((blk, p));
         }
 
+        // chunk blocks into at most `threads` contiguous groups via the
+        // shared fan-out (`util::par::run_chunked`, the same discipline
+        // as the GEMM row split and the SONew block scans): bounded
+        // fan-out, deterministic assignment, every group writes only its
+        // own slices — bitwise identical at any thread count
         let threads = crate::linalg::hw_threads();
-        if self.parallel && work.len() > 1 && threads > 1 && self.n >= PARALLEL_MIN_PARAMS {
-            // chunk blocks into at most `threads` contiguous groups — the
-            // matmul_into discipline: bounded fan-out, deterministic
-            // assignment, every group writes only its own slices
-            let per = work.len().div_ceil(threads);
-            std::thread::scope(|s| {
-                let mut work = work;
-                while !work.is_empty() {
-                    let take = per.min(work.len());
-                    let group: Vec<_> = work.drain(..take).collect();
-                    s.spawn(move || {
-                        for (blk, p) in group {
-                            blk.apply(p, g, cx);
-                        }
-                    });
-                }
-            });
-        } else {
-            for (blk, p) in work {
-                blk.apply(p, g, cx);
-            }
-        }
+        let par =
+            self.parallel && work.len() > 1 && threads > 1 && self.n >= PARALLEL_MIN_PARAMS;
+        crate::util::par::run_chunked(work, if par { threads } else { 1 }, |(blk, p)| {
+            blk.apply(p, g, cx)
+        });
     }
 
     /// Total optimizer-state floats (direction stats + momentum).

@@ -302,6 +302,11 @@ fn lm_program(
     }
 }
 
+/// The native `sonew_tridiag_*` program: one fused statistics + solve +
+/// direction step. The `tensor_ids` input both masks cross-tensor edges
+/// and hands the kernel its block decomposition, so on multi-tensor
+/// layouts the scan runs block-parallel (bitwise-identical to the
+/// sequential scan — see `sonew::TridiagState::step`).
 fn tridiag_step(program: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
     if inputs.len() != 4 {
         bail!(

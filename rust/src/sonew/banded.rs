@@ -1,13 +1,55 @@
 //! Banded-b SONew: Theorem 3.2 / Algorithm 2 — for every row j solve the
 //! b x b SPD system `H_{I_j I_j} L_{I_j j} = -H_{I_j j}` and form
 //! `D_jj = 1/(H_jj + H_{I_j j}^T L_{I_j j})`, then apply `u = L D L^T g`
-//! in a single forward scan with a ring buffer of the last `b` columns.
+//! in a forward scan with a ring buffer of the last `b` columns.
 //! O((b^3)(n-b+1)) flops, O(b n) memory — linear in n as the paper claims.
+//!
+//! The flat vector decomposes into per-tensor blocks (no kept edge
+//! crosses a boundary — see `sonew::split_blocks`), and the fused step
+//! runs block-parallel: each block scans only its own rows with its own
+//! ring-buffer scratch, so the threaded step is **bitwise identical** to
+//! the sequential one by construction.
 
 use crate::linalg::chol::{cholesky_in_place, cholesky_solve_in_place};
 use crate::util::Precision;
 
-use super::LambdaMode;
+use super::{LambdaMode, StepParams};
+
+/// Per-block solve scratch: ring buffers of the last `b` solved columns
+/// plus the b x b Cholesky workspace. One instance per tensor block so
+/// the block scans never share mutable state.
+#[derive(Debug, Clone)]
+struct BandScratch {
+    xs_ring: Vec<f32>,
+    s_ring: Vec<f32>,
+    hii: Vec<f32>,
+    rhs: Vec<f32>,
+    x_col: Vec<f32>,
+}
+
+impl BandScratch {
+    fn new(b: usize) -> Self {
+        Self {
+            xs_ring: vec![0.0; b * b],
+            s_ring: vec![0.0; b],
+            hii: vec![0.0; b * b],
+            rhs: vec![0.0; b],
+            x_col: vec![0.0; b],
+        }
+    }
+}
+
+/// One tensor block's disjoint views of the stacked diagonals, masks,
+/// gradient, direction and scratch — everything `banded_block_step`
+/// touches.
+struct BandBlock<'a> {
+    diags: Vec<&'a mut [f32]>,
+    edge: Vec<&'a [bool]>,
+    g: &'a [f32],
+    u: &'a mut [f32],
+    sc: &'a mut BandScratch,
+    dropped: &'a mut usize,
+}
 
 /// Banded statistics: `diags[k][j] = H[j+k][j]`, k = 0..=b.
 #[derive(Debug, Clone)]
@@ -17,35 +59,38 @@ pub struct BandedState {
     pub diags: Vec<Vec<f32>>,
     /// edge_masks[k-1][j]: keep H[j+k][j]? (k = 1..=b)
     pub edge: Vec<Vec<bool>>,
+    /// independent per-tensor blocks (offset, len): maximal runs no kept
+    /// edge crosses, the unit of parallelism for the fused step
+    blocks: Vec<(usize, usize)>,
+    /// thread the per-block scan when the model is large enough; exposed
+    /// so benches and bitwise-equality tests can pin either mode
+    pub parallel: bool,
     pub last_dropped: usize,
-    // preallocated per-step scratch (ring buffers + solve workspace)
-    xs_ring: Vec<f32>,
-    s_ring: Vec<f32>,
-    hii: Vec<f32>,
-    rhs: Vec<f32>,
-    x_col: Vec<f32>,
+    /// per-block preallocated solve scratch (ring buffers + workspace)
+    scratch: Vec<BandScratch>,
     t: u64,
 }
 
 impl BandedState {
     pub fn new(n: usize, b: usize, tensor_ids: Option<&[f32]>) -> Self {
         assert!(b >= 1, "use TridiagState::step_diag for b = 0");
-        let edge = (1..=b)
+        let edge: Vec<Vec<bool>> = (1..=b)
             .map(|k| match tensor_ids {
                 Some(ids) => super::edge_mask(ids, k),
                 None => (0..n).map(|j| j + k < n).collect(),
             })
             .collect();
+        let masks: Vec<&[bool]> = edge.iter().map(|e| e.as_slice()).collect();
+        let blocks = super::split_blocks(n, &masks);
+        let scratch = blocks.iter().map(|_| BandScratch::new(b)).collect();
         Self {
             b,
             diags: vec![vec![0.0; n]; b + 1],
             edge,
+            blocks,
+            parallel: true,
             last_dropped: 0,
-            xs_ring: vec![0.0; b * b],
-            s_ring: vec![0.0; b],
-            hii: vec![0.0; b * b],
-            rhs: vec![0.0; b],
-            x_col: vec![0.0; b],
+            scratch,
             t: 0,
         }
     }
@@ -73,7 +118,8 @@ impl BandedState {
         self.t = t;
     }
 
-    /// One fused banded SONew step (statistics + solve + direction).
+    /// One fused banded SONew step (statistics + solve + direction),
+    /// block-parallel across tensor boundaries.
     pub fn step(
         &mut self,
         g: &[f32],
@@ -92,115 +138,170 @@ impl BandedState {
         }
         self.t += 1;
         let (decay, inno) = mode.coeffs(self.t);
+        let p = StepParams { decay, inno, eps, gamma, precision };
 
-        // --- statistics update (eq. 10) ---
-        for j in 0..n {
-            let gj = g[j];
-            self.diags[0][j] = precision.quantize(decay * self.diags[0][j] + inno * gj * gj);
+        // defensive: a state assembled outside `new` (deserialization
+        // shells) rebuilds its per-block scratch; sizes are structural
+        if self.scratch.len() != self.blocks.len()
+            || self.scratch.first().is_some_and(|s| s.xs_ring.len() != b * b)
+        {
+            self.scratch = self.blocks.iter().map(|_| BandScratch::new(b)).collect();
         }
-        for k in 1..=b {
-            let (head, tail) = (&mut self.diags[k], &self.edge[k - 1]);
-            for j in 0..n {
-                head[j] = if tail[j] {
-                    precision.quantize(decay * head[j] + inno * g[j] * g[j + k])
-                } else {
-                    0.0
-                };
+
+        // disjoint per-block views of the (b+1) stacked diagonals
+        let nb = self.blocks.len();
+        let mut diag_views: Vec<Vec<&mut [f32]>> =
+            (0..nb).map(|_| Vec::with_capacity(b + 1)).collect();
+        for dvec in self.diags.iter_mut() {
+            let mut rest: &mut [f32] = dvec;
+            for (bi, &(_, len)) in self.blocks.iter().enumerate() {
+                let (head, tail) = std::mem::take(&mut rest).split_at_mut(len);
+                diag_views[bi].push(head);
+                rest = tail;
             }
         }
+        let edge_views: Vec<Vec<&[bool]>> = self
+            .blocks
+            .iter()
+            .map(|&(off, len)| self.edge.iter().map(|e| &e[off..off + len]).collect())
+            .collect();
 
-        // --- per-row solve + streaming direction ---
-        // Perf (EXPERIMENTS.md §Perf): all scratch is preallocated and
-        // reused — zero allocations per row; the b x b Cholesky runs on a
-        // flat stack buffer.
-        let mut dropped = 0usize;
-        if self.xs_ring.len() != b * b {
-            self.xs_ring = vec![0.0f32; b * b];
-            self.s_ring = vec![0.0f32; b];
-            self.hii = vec![0.0f32; b * b];
-            self.rhs = vec![0.0f32; b];
-            self.x_col = vec![0.0f32; b];
+        let mut dropped = vec![0usize; nb];
+        let mut items: Vec<BandBlock<'_>> = Vec::with_capacity(nb);
+        let mut g_rest: &[f32] = g;
+        let mut u_rest: &mut [f32] = u;
+        for (((dv, ev), sc), d) in diag_views
+            .into_iter()
+            .zip(edge_views)
+            .zip(self.scratch.iter_mut())
+            .zip(dropped.iter_mut())
+        {
+            let len = dv[0].len();
+            let (g_b, gr) = g_rest.split_at(len);
+            g_rest = gr;
+            let (u_b, ur) = std::mem::take(&mut u_rest).split_at_mut(len);
+            u_rest = ur;
+            items.push(BandBlock { diags: dv, edge: ev, g: g_b, u: u_b, sc, dropped: d });
         }
-        let xs_ring = &mut self.xs_ring;
-        let s_ring = &mut self.s_ring;
-        let hii = &mut self.hii;
-        let rhs = &mut self.rhs;
-        let x_col = &mut self.x_col;
-        xs_ring.fill(0.0);
-        s_ring.fill(0.0);
 
+        let threads = crate::linalg::hw_threads();
+        let par = self.parallel && items.len() > 1 && threads > 1 && n >= super::PAR_MIN_N;
+        crate::util::par::run_chunked(items, if par { threads } else { 1 }, |v| {
+            banded_block_step(v, b, p)
+        });
+        self.last_dropped = dropped.iter().sum();
+    }
+}
+
+/// The fused banded step over one tensor block: statistics update, per-
+/// row b x b solves and the streaming `u = L D L^T g` direction with the
+/// block's own ring buffers. Edges crossing the block end are masked
+/// zero by construction, so clipping the active band at the block
+/// boundary performs the same arithmetic as the old global scan.
+fn banded_block_step(v: BandBlock<'_>, b: usize, p: StepParams) {
+    let BandBlock { mut diags, edge, g, u, sc, dropped } = v;
+    let StepParams { decay, inno, eps, gamma, precision } = p;
+    let n = g.len();
+    *dropped = 0;
+    if n == 0 {
+        return;
+    }
+
+    // --- statistics update (eq. 10) ---
+    for j in 0..n {
+        let gj = g[j];
+        diags[0][j] = precision.quantize(decay * diags[0][j] + inno * gj * gj);
+    }
+    for k in 1..=b {
         for j in 0..n {
-            // active band width at row j (clipped at the vector end; tensor
-            // boundaries are handled by masked-zero entries making the
-            // corresponding solve components vanish)
-            let w = b.min(n - 1 - j);
-            let a_jj = self.diags[0][j] + eps;
-            x_col.fill(0.0);
-            let mut d_j;
-            if w > 0 {
-                // assemble H_{I_j I_j} (damped) and rhs = H_{I_j j}
-                for p in 0..w {
-                    for q in 0..w {
-                        let k = p.abs_diff(q);
-                        let row = j + 1 + p.min(q);
-                        let v = if k == 0 {
-                            self.diags[0][row] + eps
-                        } else {
-                            self.diags[k][row]
-                        };
-                        hii[p * w + q] = v;
-                    }
-                    rhs[p] = -self.diags[p + 1][j];
-                }
-                let ok = cholesky_in_place(&mut hii[..w * w], w);
-                if ok {
-                    cholesky_solve_in_place(&hii[..w * w], w, &mut rhs[..w]);
-                    // rhs now holds x = -H_II^{-1} H_Ij;
-                    // sv = H_jj + H_Ij^T x  (eq. 14)
-                    let mut sv = a_jj;
-                    for p in 0..w {
-                        sv += self.diags[p + 1][j] * rhs[p];
-                    }
-                    if sv > gamma {
-                        d_j = 1.0 / sv;
-                        x_col[..w].copy_from_slice(&rhs[..w]);
+            diags[k][j] = if edge[k - 1][j] {
+                precision.quantize(decay * diags[k][j] + inno * g[j] * g[j + k])
+            } else {
+                0.0
+            };
+        }
+    }
+
+    // --- per-row solve + streaming direction ---
+    // Perf (EXPERIMENTS.md §Perf): all scratch is preallocated per block
+    // and reused — zero allocations per row; the b x b Cholesky runs on
+    // a flat buffer.
+    let mut nd = 0usize;
+    let BandScratch { xs_ring, s_ring, hii, rhs, x_col } = sc;
+    xs_ring.fill(0.0);
+    s_ring.fill(0.0);
+
+    for j in 0..n {
+        // active band width at row j, clipped at the block end (edges
+        // crossing the boundary are masked-zero, so the components they
+        // would contribute vanish identically)
+        let w = b.min(n - 1 - j);
+        let a_jj = diags[0][j] + eps;
+        x_col.fill(0.0);
+        let mut d_j;
+        if w > 0 {
+            // assemble H_{I_j I_j} (damped) and rhs = H_{I_j j}
+            for pp in 0..w {
+                for q in 0..w {
+                    let k = pp.abs_diff(q);
+                    let row = j + 1 + pp.min(q);
+                    let hv = if k == 0 {
+                        diags[0][row] + eps
                     } else {
-                        // Algorithm 3: drop row j's forward edges
-                        dropped += 1;
-                        d_j = 1.0 / a_jj;
-                    }
+                        diags[k][row]
+                    };
+                    hii[pp * w + q] = hv;
+                }
+                rhs[pp] = -diags[pp + 1][j];
+            }
+            let ok = cholesky_in_place(&mut hii[..w * w], w);
+            if ok {
+                cholesky_solve_in_place(&hii[..w * w], w, &mut rhs[..w]);
+                // rhs now holds x = -H_II^{-1} H_Ij;
+                // sv = H_jj + H_Ij^T x  (eq. 14)
+                let mut sv = a_jj;
+                for pp in 0..w {
+                    sv += diags[pp + 1][j] * rhs[pp];
+                }
+                if sv > gamma {
+                    d_j = 1.0 / sv;
+                    x_col[..w].copy_from_slice(&rhs[..w]);
                 } else {
-                    dropped += 1;
+                    // Algorithm 3: drop row j's forward edges
+                    nd += 1;
                     d_j = 1.0 / a_jj;
                 }
             } else {
+                nd += 1;
                 d_j = 1.0 / a_jj;
             }
-            if !d_j.is_finite() {
-                d_j = 0.0;
-            }
-
-            // t_j = g_j + sum_p x_col[p] g_{j+1+p};  s_j = d_j t_j
-            let mut t_j = g[j];
-            for p in 0..w {
-                t_j += x_col[p] * g[j + 1 + p];
-            }
-            let s_j = d_j * t_j;
-
-            // u_j = s_j + sum_{m=1..b, j>=m} X[j-m][m-1] * s_{j-m}
-            let mut u_j = s_j;
-            for m in 1..=b.min(j) {
-                let slot = (j - m) % b;
-                u_j += xs_ring[slot * b + m - 1] * s_ring[slot];
-            }
-            u[j] = precision.quantize(u_j);
-
-            let slot = j % b;
-            xs_ring[slot * b..(slot + 1) * b].copy_from_slice(x_col);
-            s_ring[slot] = s_j;
+        } else {
+            d_j = 1.0 / a_jj;
         }
-        self.last_dropped = dropped;
+        if !d_j.is_finite() {
+            d_j = 0.0;
+        }
+
+        // t_j = g_j + sum_p x_col[p] g_{j+1+p};  s_j = d_j t_j
+        let mut t_j = g[j];
+        for pp in 0..w {
+            t_j += x_col[pp] * g[j + 1 + pp];
+        }
+        let s_j = d_j * t_j;
+
+        // u_j = s_j + sum_{m=1..b, j>=m} X[j-m][m-1] * s_{j-m}
+        let mut u_j = s_j;
+        for m in 1..=b.min(j) {
+            let slot = (j - m) % b;
+            u_j += xs_ring[slot * b + m - 1] * s_ring[slot];
+        }
+        u[j] = precision.quantize(u_j);
+
+        let slot = j % b;
+        xs_ring[slot * b..(slot + 1) * b].copy_from_slice(x_col);
+        s_ring[slot] = s_j;
     }
+    *dropped = nd;
 }
 
 #[cfg(test)]
@@ -402,6 +503,33 @@ mod tests {
             assert_close(&uj[..n1], &ua, 1e-4, 1e-5, "block a");
             assert_close(&uj[n1..], &ub, 1e-4, 1e-5, "block b");
         });
+    }
+
+    #[test]
+    fn block_parallel_step_is_bitwise_neutral() {
+        // multi-tensor state past the threading gate: the block-parallel
+        // scan must reproduce the sequential scan bit for bit.
+        let tensors = 8usize;
+        let n = crate::sonew::PAR_MIN_N * 2;
+        let b = 3usize;
+        let ids: Vec<f32> = (0..n).map(|j| (j * tensors / n) as f32).collect();
+        let mut par = BandedState::new(n, b, Some(&ids));
+        let mut seq = BandedState::new(n, b, Some(&ids));
+        seq.parallel = false;
+        assert!(par.parallel);
+        let mut up = vec![0.0; n];
+        let mut us = vec![0.0; n];
+        let mut rng = Rng::new(13);
+        for _ in 0..3 {
+            let g = rng.normal_vec(n);
+            par.step(&g, &mut up, LambdaMode::Ema(0.95), 1e-6, 1e-8, Precision::F32);
+            seq.step(&g, &mut us, LambdaMode::Ema(0.95), 1e-6, 1e-8, Precision::F32);
+        }
+        assert!(up.iter().zip(&us).all(|(a, b)| a.to_bits() == b.to_bits()));
+        for (dp, ds) in par.diags.iter().zip(&seq.diags) {
+            assert!(dp.iter().zip(ds).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+        assert_eq!(par.last_dropped, seq.last_dropped);
     }
 
     #[test]

@@ -53,6 +53,55 @@ pub fn edge_mask(tensor_ids: &[f32], k: usize) -> Vec<bool> {
         .collect()
 }
 
+/// Below this total parameter count the per-tensor-block thread fan-out
+/// in the solve kernels costs more than it saves.
+pub(crate) const PAR_MIN_N: usize = 1 << 13;
+
+/// Scalars shared by every block of one fused SONew step.
+#[derive(Clone, Copy)]
+pub(crate) struct StepParams {
+    pub(crate) decay: f32,
+    pub(crate) inno: f32,
+    pub(crate) eps: f32,
+    pub(crate) gamma: f32,
+    pub(crate) precision: crate::util::Precision,
+}
+
+/// Decompose `0..n` into the maximal row blocks no kept edge crosses:
+/// `masks[k-1][j]` says edge (j, j+k) is kept. Within a returned block
+/// every solve reads only that block's rows, so blocks are fully
+/// independent (the `boundaries_isolate_tensors` property) and the row
+/// scans in [`TridiagState::step`] / [`BandedState::step`] parallelize
+/// across them with bitwise-identical results at any thread count.
+pub(crate) fn split_blocks(n: usize, masks: &[&[bool]]) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    // cut[j]: a block boundary may sit before row j
+    let mut cut = vec![true; n + 1];
+    for (km1, mask) in masks.iter().enumerate() {
+        let k = km1 + 1;
+        for (i, &keep) in mask.iter().enumerate() {
+            if keep {
+                // edge (i, i+k) spans the boundaries i+1..=i+k
+                for c in &mut cut[i + 1..(i + k).min(n) + 1] {
+                    *c = false;
+                }
+            }
+        }
+    }
+    let mut blocks = Vec::new();
+    let mut start = 0usize;
+    for j in 1..n {
+        if cut[j] {
+            blocks.push((start, j - start));
+            start = j;
+        }
+    }
+    blocks.push((start, n - start));
+    blocks
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -71,5 +120,30 @@ mod tests {
         let ids = [0., 0., 0., 1., 1.];
         assert_eq!(edge_mask(&ids, 1), vec![true, true, false, true, false]);
         assert_eq!(edge_mask(&ids, 2), vec![true, false, false, false, false]);
+    }
+
+    #[test]
+    fn split_blocks_follows_tensor_boundaries() {
+        let ids = [0., 0., 0., 1., 1.];
+        let m1 = edge_mask(&ids, 1);
+        let m2 = edge_mask(&ids, 2);
+        assert_eq!(split_blocks(5, &[&m1]), vec![(0, 3), (3, 2)]);
+        assert_eq!(split_blocks(5, &[&m1, &m2]), vec![(0, 3), (3, 2)]);
+        // single chain: one block
+        let full = edge_mask(&[7.0f32; 6], 1);
+        assert_eq!(split_blocks(6, &[&full]), vec![(0, 6)]);
+        assert_eq!(split_blocks(0, &[]), Vec::<(usize, usize)>::new());
+    }
+
+    #[test]
+    fn split_blocks_never_cuts_a_kept_edge() {
+        // pathological ids (non-adjacent repeats): edge (0, 2) is kept at
+        // k = 2, so the whole range must stay one block even though ids
+        // change at every step
+        let ids = [0., 1., 0.];
+        let m1 = edge_mask(&ids, 1); // all false
+        let m2 = edge_mask(&ids, 2); // [true, false, false]
+        assert_eq!(split_blocks(3, &[&m1]), vec![(0, 1), (1, 1), (2, 1)]);
+        assert_eq!(split_blocks(3, &[&m1, &m2]), vec![(0, 3)]);
     }
 }

@@ -2,10 +2,17 @@
 //! of the LogDet subproblem, fused with the eq. (10) statistics update and
 //! the `u = L D L^T g` direction — the native mirror of the Pallas kernel
 //! in `python/compile/kernels/tridiag.py`.
+//!
+//! The flat vector decomposes into per-tensor blocks (no kept edge
+//! crosses a boundary — see `sonew::split_blocks`), so the whole fused
+//! step runs block-parallel on the shared thread pool: each block's scan
+//! touches only its own rows of `hd`/`ho`/`g`/`u` and its own scratch
+//! slice, making the threaded step **bitwise identical** to the
+//! sequential one by construction.
 
 use crate::util::Precision;
 
-use super::LambdaMode;
+use super::{LambdaMode, StepParams};
 
 /// Maintained statistics `H_t = P_G(X_t^{-1})` for the chain graph, plus
 /// the per-edge tensor-boundary mask.
@@ -17,14 +24,30 @@ pub struct TridiagState {
     pub ho: Vec<f32>,
     /// keep edge (j, j+1)? false at tensor boundaries and at n-1
     pub edge: Vec<bool>,
-    /// edge mask as f32 (1.0 keep / 0.0 cut): the SIMD-friendly twin of
-    /// `edge`, multiplied into the off-diagonal update (perf pass §Perf)
-    edge_f: Vec<f32>,
+    /// independent per-tensor blocks (offset, len): maximal runs no kept
+    /// edge crosses, the unit of parallelism for the fused step
+    blocks: Vec<(usize, usize)>,
+    /// thread the per-block scan when the model is large enough; exposed
+    /// so benches and bitwise-equality tests can pin either mode
+    pub parallel: bool,
     /// number of edges dropped by Algorithm 3 on the last step (diagnostic)
     pub last_dropped: usize,
     /// scratch: 1/(hd+eps), l, s — reused across steps (no hot-loop allocs)
     scratch: Vec<f32>,
     t: u64,
+}
+
+/// One tensor block's disjoint views of the state, gradient, direction
+/// and scratch — everything `tridiag_block_step` touches.
+struct TridiagBlock<'a> {
+    hd: &'a mut [f32],
+    ho: &'a mut [f32],
+    g: &'a [f32],
+    u: &'a mut [f32],
+    ia: &'a mut [f32],
+    l: &'a mut [f32],
+    s: &'a mut [f32],
+    dropped: &'a mut usize,
 }
 
 impl TridiagState {
@@ -38,12 +61,13 @@ impl TridiagState {
             }
             None => (0..n).map(|j| j + 1 < n).collect(),
         };
-        let edge_f = edge.iter().map(|&e| if e { 1.0 } else { 0.0 }).collect();
+        let blocks = super::split_blocks(n, &[&edge]);
         Self {
             hd: vec![0.0; n],
             ho: vec![0.0; n],
             edge,
-            edge_f,
+            blocks,
+            parallel: true,
             last_dropped: 0,
             scratch: vec![0.0; 3 * n],
             t: 0,
@@ -78,12 +102,13 @@ impl TridiagState {
     /// Algorithm-3 `gamma` tolerance, write the preconditioned direction
     /// into `u`. `precision` quantizes the stored statistics (bf16 sim).
     ///
-    /// Perf note (EXPERIMENTS.md §Perf): every sub-step is expressed as a
-    /// branch-free elementwise pass over (optionally shifted) slices so
-    /// LLVM autovectorizes; the two divisions per lane run as SIMD packed
-    /// divides. The "serial" u recurrence u_j = s_j + l_{j-1} s_{j-1} is
-    /// in fact just a shifted product — nothing in the chain-graph solve
-    /// is sequential, which is the paper's parallelizability claim.
+    /// Perf note (EXPERIMENTS.md §Perf): every sub-step is a branch-free
+    /// elementwise pass over (optionally shifted) slices so LLVM
+    /// autovectorizes, and the passes run block-parallel across tensor
+    /// boundaries — each block reads and writes only its own rows, so
+    /// the result is bitwise identical at any thread count. Nothing in
+    /// the chain-graph solve is sequential, which is the paper's
+    /// parallelizability claim.
     pub fn step(
         &mut self,
         g: &[f32],
@@ -101,66 +126,53 @@ impl TridiagState {
         }
         self.t += 1;
         let (decay, inno) = mode.coeffs(self.t);
-        let quantize = precision == crate::util::Precision::Bf16;
+        let p = StepParams { decay, inno, eps, gamma, precision };
 
-        let hd = &mut self.hd[..n];
-        let ho = &mut self.ho[..n];
-        let (inv_a, rest) = self.scratch.split_at_mut(n);
-        let (l, s) = rest.split_at_mut(n);
-        let inv_a = &mut inv_a[..n];
-        let l = &mut l[..n];
-        let s = &mut s[..n];
-        let edge_f = &self.edge_f[..n];
+        let (ia_all, rest) = self.scratch.split_at_mut(n);
+        let (l_all, s_all) = rest.split_at_mut(n);
 
-        // pass 1: hd' = decay*hd + inno*g^2 ; inv_a = 1/(hd'+eps)
-        for j in 0..n {
-            let v = decay * hd[j] + inno * g[j] * g[j];
-            hd[j] = v;
-            inv_a[j] = 1.0 / (v + eps);
-        }
-        // pass 2: ho' = (decay*ho + inno*g_j*g_{j+1}) * mask  (mask folds
-        // tensor boundaries and the final lane)
-        for j in 0..n - 1 {
-            ho[j] = (decay * ho[j] + inno * g[j] * g[j + 1]) * edge_f[j];
-        }
-        ho[n - 1] = 0.0;
-        if quantize {
-            precision.quantize_slice(hd);
-            precision.quantize_slice(ho);
-            for j in 0..n {
-                inv_a[j] = 1.0 / (hd[j] + eps);
-            }
+        let mut dropped = vec![0usize; self.blocks.len()];
+        let mut items: Vec<TridiagBlock<'_>> = Vec::with_capacity(self.blocks.len());
+        let mut hd_rest: &mut [f32] = &mut self.hd;
+        let mut ho_rest: &mut [f32] = &mut self.ho;
+        let mut u_rest: &mut [f32] = u;
+        let mut ia_rest: &mut [f32] = ia_all;
+        let mut l_rest: &mut [f32] = l_all;
+        let mut s_rest: &mut [f32] = s_all;
+        let mut g_rest: &[f32] = g;
+        for (&(_, len), d) in self.blocks.iter().zip(dropped.iter_mut()) {
+            let (hd_b, r) = std::mem::take(&mut hd_rest).split_at_mut(len);
+            hd_rest = r;
+            let (ho_b, r) = std::mem::take(&mut ho_rest).split_at_mut(len);
+            ho_rest = r;
+            let (u_b, r) = std::mem::take(&mut u_rest).split_at_mut(len);
+            u_rest = r;
+            let (ia_b, r) = std::mem::take(&mut ia_rest).split_at_mut(len);
+            ia_rest = r;
+            let (l_b, r) = std::mem::take(&mut l_rest).split_at_mut(len);
+            l_rest = r;
+            let (s_b, r) = std::mem::take(&mut s_rest).split_at_mut(len);
+            s_rest = r;
+            let (g_b, gr) = g_rest.split_at(len);
+            g_rest = gr;
+            items.push(TridiagBlock {
+                hd: hd_b,
+                ho: ho_b,
+                g: g_b,
+                u: u_b,
+                ia: ia_b,
+                l: l_b,
+                s: s_b,
+                dropped: d,
+            });
         }
 
-        // pass 3 (shifted elementwise): LDL factors + s = D L^T g.
-        //   l_j = keep ? -ho_j * inv_a_{j+1} : 0
-        //   d_j = keep ? 1/schur_j : inv_a_j,  schur = a_j - ho_j^2 inv_a_{j+1}
-        //   s_j = d_j * (g_j + l_j * g_{j+1})
-        let mut dropped = 0usize;
-        for j in 0..n - 1 {
-            let o = ho[j];
-            let ia_next = inv_a[j + 1];
-            let a_j = hd[j] + eps;
-            let schur = a_j - o * o * ia_next;
-            let keep = o != 0.0 && schur > gamma;
-            dropped += usize::from(o != 0.0 && schur <= gamma);
-            let lj = if keep { -o * ia_next } else { 0.0 };
-            let dj = if keep { 1.0 / schur } else { inv_a[j] };
-            l[j] = lj;
-            s[j] = dj * (g[j] + lj * g[j + 1]);
-        }
-        l[n - 1] = 0.0;
-        s[n - 1] = inv_a[n - 1] * g[n - 1];
-
-        // pass 4 (shifted elementwise): u_j = s_j + l_{j-1} s_{j-1}
-        u[0] = s[0];
-        for j in 1..n {
-            u[j] = s[j] + l[j - 1] * s[j - 1];
-        }
-        if quantize {
-            precision.quantize_slice(u);
-        }
-        self.last_dropped = dropped;
+        let threads = crate::linalg::hw_threads();
+        let par = self.parallel && items.len() > 1 && threads > 1 && n >= super::PAR_MIN_N;
+        crate::util::par::run_chunked(items, if par { threads } else { 1 }, |v| {
+            tridiag_block_step(v, p)
+        });
+        self.last_dropped = dropped.iter().sum();
     }
 
     /// Diagonal-only variant (diag-SONew): the b = 0 ablation of Table 3.
@@ -190,6 +202,70 @@ impl TridiagState {
             u[j] = precision.quantize(gj / (self.hd[j] + eps));
         }
     }
+}
+
+/// The fused step over one tensor block. Interior edges of a block are
+/// always kept (blocks are maximal unmasked runs), so the old edge-mask
+/// multiply is replaced by the block boundary itself: `ho` ends at 0 and
+/// the recurrences never read across the edge of the slices.
+fn tridiag_block_step(v: TridiagBlock<'_>, p: StepParams) {
+    let TridiagBlock { hd, ho, g, u, ia, l, s, dropped } = v;
+    let StepParams { decay, inno, eps, gamma, precision } = p;
+    let n = hd.len();
+    *dropped = 0;
+    if n == 0 {
+        return;
+    }
+    let quantize = precision == Precision::Bf16;
+
+    // pass 1: hd' = decay*hd + inno*g^2 ; ia = 1/(hd'+eps)
+    for j in 0..n {
+        let hv = decay * hd[j] + inno * g[j] * g[j];
+        hd[j] = hv;
+        ia[j] = 1.0 / (hv + eps);
+    }
+    // pass 2: ho' = decay*ho + inno*g_j*g_{j+1} on interior edges
+    for j in 0..n - 1 {
+        ho[j] = decay * ho[j] + inno * g[j] * g[j + 1];
+    }
+    ho[n - 1] = 0.0;
+    if quantize {
+        precision.quantize_slice(hd);
+        precision.quantize_slice(ho);
+        for j in 0..n {
+            ia[j] = 1.0 / (hd[j] + eps);
+        }
+    }
+
+    // pass 3 (shifted elementwise): LDL factors + s = D L^T g.
+    //   l_j = keep ? -ho_j * ia_{j+1} : 0
+    //   d_j = keep ? 1/schur_j : ia_j,  schur = a_j - ho_j^2 ia_{j+1}
+    //   s_j = d_j * (g_j + l_j * g_{j+1})
+    let mut nd = 0usize;
+    for j in 0..n - 1 {
+        let o = ho[j];
+        let ia_next = ia[j + 1];
+        let a_j = hd[j] + eps;
+        let schur = a_j - o * o * ia_next;
+        let keep = o != 0.0 && schur > gamma;
+        nd += usize::from(o != 0.0 && schur <= gamma);
+        let lj = if keep { -o * ia_next } else { 0.0 };
+        let dj = if keep { 1.0 / schur } else { ia[j] };
+        l[j] = lj;
+        s[j] = dj * (g[j] + lj * g[j + 1]);
+    }
+    l[n - 1] = 0.0;
+    s[n - 1] = ia[n - 1] * g[n - 1];
+
+    // pass 4 (shifted elementwise): u_j = s_j + l_{j-1} s_{j-1}
+    u[0] = s[0];
+    for j in 1..n {
+        u[j] = s[j] + l[j - 1] * s[j - 1];
+    }
+    if quantize {
+        precision.quantize_slice(u);
+    }
+    *dropped = nd;
 }
 
 #[cfg(test)]
@@ -278,6 +354,31 @@ mod tests {
             assert_close(&uj[..n1], &ua, 1e-5, 1e-6, "chain a");
             assert_close(&uj[n1..], &ub, 1e-5, 1e-6, "chain b");
         });
+    }
+
+    #[test]
+    fn block_parallel_step_is_bitwise_neutral() {
+        // multi-tensor state past the threading gate: the block-parallel
+        // scan must reproduce the sequential scan bit for bit.
+        let tensors = 8usize;
+        let n = crate::sonew::PAR_MIN_N * 2;
+        let ids: Vec<f32> = (0..n).map(|j| (j * tensors / n) as f32).collect();
+        let mut par = TridiagState::new(n, Some(&ids));
+        let mut seq = TridiagState::new(n, Some(&ids));
+        seq.parallel = false;
+        assert!(par.parallel);
+        let mut up = vec![0.0; n];
+        let mut us = vec![0.0; n];
+        let mut rng = Rng::new(11);
+        for _ in 0..3 {
+            let g = rng.normal_vec(n);
+            par.step(&g, &mut up, LambdaMode::Ema(0.95), 1e-6, 1e-8, Precision::F32);
+            seq.step(&g, &mut us, LambdaMode::Ema(0.95), 1e-6, 1e-8, Precision::F32);
+        }
+        assert!(up.iter().zip(&us).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(par.hd.iter().zip(&seq.hd).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(par.ho.iter().zip(&seq.ho).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert_eq!(par.last_dropped, seq.last_dropped);
     }
 
     #[test]

@@ -3,6 +3,7 @@
 
 pub mod bf16;
 pub mod io;
+pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod timer;

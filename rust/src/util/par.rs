@@ -1,0 +1,66 @@
+//! Deterministic scoped-thread fan-out shared by every parallel kernel
+//! in the crate: the GEMM row chunks (`linalg::gemm_into`), the SONew
+//! per-tensor block scans (`sonew::{TridiagState, BandedState}::step`)
+//! and the per-block optimizer step (`optim::Opt::step`).
+//!
+//! The discipline: split the work items into at most `threads`
+//! contiguous groups *in order* and run each group on its own scoped
+//! thread (inline when one group suffices). Grouping is a pure function
+//! of `(items.len(), threads)` — never of load or timing — so any
+//! per-item computation that is itself deterministic stays bitwise
+//! deterministic at every thread count: each item sees exactly the same
+//! inputs and performs exactly the same arithmetic regardless of which
+//! thread runs it.
+
+/// Run `f` over every item, fanned out across at most `threads` scoped
+/// threads in contiguous in-order groups. `threads <= 1` (or a single
+/// item) runs inline on the calling thread in item order.
+pub fn run_chunked<T: Send>(items: Vec<T>, threads: usize, f: impl Fn(T) + Sync) {
+    let threads = threads.max(1);
+    if threads == 1 || items.len() <= 1 {
+        for it in items {
+            f(it);
+        }
+        return;
+    }
+    let per = items.len().div_ceil(threads);
+    let f = &f;
+    std::thread::scope(|s| {
+        let mut items = items;
+        while !items.is_empty() {
+            let take = per.min(items.len());
+            let group: Vec<T> = items.drain(..take).collect();
+            s.spawn(move || {
+                for it in group {
+                    f(it);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn visits_every_item_exactly_once() {
+        for threads in [1usize, 2, 3, 16] {
+            let mut out = vec![0usize; 10];
+            let items: Vec<(usize, &mut usize)> = out.iter_mut().enumerate().collect();
+            run_chunked(items, threads, |(i, slot)| *slot = 2 * i + 1);
+            for (i, &v) in out.iter().enumerate() {
+                assert_eq!(v, 2 * i + 1, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_single_item_run_inline() {
+        run_chunked(Vec::<usize>::new(), 8, |_| panic!("no items, no calls"));
+        let mut hit = 0usize;
+        let items = vec![&mut hit];
+        run_chunked(items, 8, |h| *h += 1);
+        assert_eq!(hit, 1);
+    }
+}
