@@ -5,7 +5,7 @@
 //!     cargo run --release --example quickstart
 
 use sonew::coordinator::trainer::NativeAeProvider;
-use sonew::coordinator::{train_single, Schedule, TrainConfig};
+use sonew::coordinator::{Schedule, TrainConfig, TrainSession};
 use sonew::data::SynthImages;
 use sonew::models::Mlp;
 use sonew::optim::{HyperParams, OptSpec};
@@ -14,7 +14,7 @@ fn main() -> anyhow::Result<()> {
     // the scaled-down autoencoder (full 2.84M-param model: Mlp::autoencoder())
     let mlp = Mlp::autoencoder_small();
     let mut rng = sonew::util::Rng::new(0);
-    let mut params = mlp.init(&mut rng);
+    let params = mlp.init(&mut rng);
 
     // tridiag-SONew with Adam grafting, exactly the paper's §5 setup —
     // the spec string is the same one the CLI and sweeps consume
@@ -30,7 +30,11 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     let provider = NativeAeProvider { mlp: mlp.clone(), images: SynthImages::new(1), batch: 64 };
-    let metrics = train_single(&mut params, &mut opt, provider, &cfg)?;
+    // the one training engine (Execution API v1): every run — CLI,
+    // tables, sweeps — is a TrainSession; this one is ephemeral (no
+    // checkpointing), the serving shape adds --checkpoint/--resume
+    let (_params, metrics) =
+        TrainSession::ephemeral(&mut opt, params, provider, cfg.clone()).finish()?;
     println!(
         "quickstart done: loss {:.3} -> {:.3} in {:.1}s ({} per step opt time {:?})",
         metrics.points.first().unwrap().loss,

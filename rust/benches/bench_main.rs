@@ -2,6 +2,9 @@
 //! median-of-k timing via util::timer::bench).
 //!
 //! Sections map to the paper's evaluation:
+//!   [exec]  persistent-executor fan-out dispatch vs a per-call
+//!           scoped-thread spawn (the fixed cost `run_chunked` pays on
+//!           every parallel kernel call)
 //!   [gemm]  blocked GEMM engine vs the seed i-k-j kernel (speedup is
 //!           the headline hot-path number)
 //!   [t1]    per-step optimizer cost vs layer size (Table 1)
@@ -151,6 +154,47 @@ fn main() {
     let mut rec = Recorder::default();
     if smoke {
         println!("(smoke mode: reduced sizes and iteration counts)");
+    }
+
+    if run("exec") {
+        println!("== [exec] persistent-pool fan-out vs per-call scoped spawn ==");
+        let threads = sonew::linalg::hw_threads();
+        let n_items = 64usize;
+        let (iters, kk) = if smoke { (50, 3) } else { (400, 5) };
+        let r_pool = bench("run_chunked 64 jobs (persistent pool)", iters, kk, |k| {
+            for _ in 0..k {
+                let items: Vec<usize> = (0..n_items).collect();
+                sonew::util::par::run_chunked(items, threads, |i| {
+                    std::hint::black_box(i);
+                });
+            }
+        });
+        println!("{}", r_pool.report());
+        rec.add("exec", &r_pool);
+        // the pre-Execution-API shape: spawn + join scoped threads on
+        // every call, same contiguous grouping
+        let r_spawn = bench("scoped spawn 64 jobs (per-call threads)", iters, kk, |k| {
+            for _ in 0..k {
+                let mut items: Vec<usize> = (0..n_items).collect();
+                let per = n_items.div_ceil(threads);
+                std::thread::scope(|s| {
+                    while !items.is_empty() {
+                        let take = per.min(items.len());
+                        let group: Vec<usize> = items.drain(..take).collect();
+                        s.spawn(move || {
+                            for i in group {
+                                std::hint::black_box(i);
+                            }
+                        });
+                    }
+                });
+            }
+        });
+        println!("{}", r_spawn.report());
+        rec.add("exec", &r_spawn);
+        let sp = r_spawn.per_iter_ns() / r_pool.per_iter_ns();
+        println!("    persistent-pool dispatch speedup vs per-call spawn: {sp:.2}x");
+        rec.derive("exec_fanout_speedup_vs_spawn".to_string(), sp);
     }
 
     if run("gemm") {

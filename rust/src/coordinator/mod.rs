@@ -1,6 +1,7 @@
 //! L3 coordinator: the training framework — data-parallel worker pool
-//! with tree all-reduce, the training loop, LR schedules, checkpointing,
-//! metrics and the hyperparameter sweep harness.
+//! with tree all-reduce, the training engine, LR schedules,
+//! checkpointing, metrics and the hyperparameter sweep harness — behind
+//! one [`Driver`] surface (Execution API v1).
 
 pub mod checkpoint;
 pub mod metrics;
@@ -9,9 +10,70 @@ pub mod schedule;
 pub mod sweep;
 pub mod trainer;
 
+use anyhow::Result;
+
 pub use metrics::Metrics;
 pub use parallel::{GradProvider, WorkerPool};
 pub use schedule::Schedule;
+pub use sweep::{random_search, SearchSpace, SweepResult, SweepScheduler, Trial, TrialRecord};
 pub use trainer::{
-    train, train_single, SessionConfig, StatefulProvider, TrainConfig, TrainSession,
+    train, train_single, train_with, FnProvider, SessionConfig, StatefulProvider, TrainConfig,
+    TrainSession,
 };
+
+/// Execution API v1: the one driver over both workload shapes the
+/// coordinator serves. Training runs are [`TrainSession`]s — the single
+/// engine behind the `train`/`train_with`/`train_single` compat
+/// wrappers — and hyperparameter sweeps are [`SweepScheduler`] runs
+/// sharded across sweep workers. Kernel-level parallelism *inside* a
+/// run (GEMM rows, SONew block scans, `Opt::step` tensor blocks) rides
+/// the persistent [`crate::runtime::Executor`] pool; the driver only
+/// sets run-level parallelism, and every setting reproduces the serial
+/// result bit-for-bit.
+#[derive(Debug, Clone)]
+pub struct Driver {
+    /// sweep-trial worker threads (1 = the serial reference order; any
+    /// value reproduces it bit-for-bit)
+    pub sweep_workers: usize,
+}
+
+impl Default for Driver {
+    fn default() -> Self {
+        Self { sweep_workers: 1 }
+    }
+}
+
+impl Driver {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_sweep_workers(mut self, workers: usize) -> Self {
+        self.sweep_workers = workers.max(1);
+        self
+    }
+
+    /// Drive a training session to its configured step budget.
+    pub fn train<P, O>(&self, session: &mut TrainSession<P, O>) -> Result<Metrics>
+    where
+        P: StatefulProvider,
+        O: crate::optim::Optimizer,
+    {
+        session.run()
+    }
+
+    /// Run a §A.4.3 random-search sweep, sharded across
+    /// `sweep_workers` (deterministic: identical to the serial
+    /// [`random_search`] at any worker count).
+    pub fn sweep(
+        &self,
+        spec: &crate::optim::OptSpec,
+        space: &SearchSpace,
+        base: &crate::optim::HyperParams,
+        trials: usize,
+        seed: u64,
+        objective: impl Fn(&Trial) -> f32 + Sync,
+    ) -> Option<SweepResult> {
+        SweepScheduler::new(self.sweep_workers).run(spec, space, base, trials, seed, objective)
+    }
+}

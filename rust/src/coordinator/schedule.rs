@@ -2,7 +2,7 @@
 //! 2-10% linear warmup).
 
 /// A learning-rate schedule over `total` steps.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Schedule {
     Constant { lr: f32 },
     /// linear warmup for `warmup` steps then cosine decay to `final_frac*lr`
@@ -66,5 +66,26 @@ mod tests {
     fn past_total_clamps() {
         let s = Schedule::CosineWarmup { lr: 1.0, warmup: 0, total: 10, final_frac: 0.1 };
         assert!((s.at(10_000) - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn first_post_warmup_step_is_exactly_peak() {
+        // boundary at step == warmup: the cosine branch starts at t = 0,
+        // cos(0) = 1, so the first post-warmup step must *be* the peak
+        // lr — not skip past it
+        let s = Schedule::CosineWarmup { lr: 0.5, warmup: 10, total: 110, final_frac: 0.0 };
+        assert_eq!(s.at(10).to_bits(), 0.5f32.to_bits(), "peak skipped at warmup boundary");
+        // the ramp reaches peak on its last step, then decay begins
+        assert!((s.at(9) - 0.5).abs() < 1e-7);
+        assert!(s.at(11) < s.at(10));
+        assert_eq!(s.peak(), 0.5);
+    }
+
+    #[test]
+    fn schedules_compare_structurally() {
+        let a = Schedule::CosineWarmup { lr: 1.0, warmup: 5, total: 50, final_frac: 0.1 };
+        assert_eq!(a, Schedule::CosineWarmup { lr: 1.0, warmup: 5, total: 50, final_frac: 0.1 });
+        assert_ne!(a, Schedule::Constant { lr: 1.0 });
+        assert_ne!(a, Schedule::CosineWarmup { lr: 1.0, warmup: 6, total: 50, final_frac: 0.1 });
     }
 }

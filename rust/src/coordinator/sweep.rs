@@ -6,6 +6,15 @@
 //! drives it with a native-backend training run). Every trial carries
 //! the optimizer's [`OptSpec`], so a winning row is directly runnable
 //! (`Trial::build`) and reportable as a spec string.
+//!
+//! Execution API v1: trial `i`'s sampled point is a pure function of
+//! `(sweep seed, i)` — each trial draws from its own RNG stream split
+//! from the sweep seed — and the winner is the `(objective, index)`
+//! lexicographic minimum, a total order. Together these make the sweep
+//! embarrassingly shardable: [`SweepScheduler`] assigns trial `i` to
+//! worker `i % W` and tree-merges the shard results, reproducing the
+//! serial [`random_search`] bit-for-bit at any worker count — same best
+//! trial, same objective, same honest evaluated/discarded counts.
 
 use crate::optim::{Blocks, HyperParams, MatBlocks, Opt, OptSpec};
 use crate::util::Rng;
@@ -58,22 +67,174 @@ impl SearchSpace {
         };
         Trial { spec: spec.clone(), lr, hp }
     }
+
+    /// Sample trial `index` of the sweep seeded `seed`. Each trial owns
+    /// an RNG stream split from the sweep seed, so the sampled point is
+    /// a pure function of `(seed, index)` — independent of evaluation
+    /// order, worker count, or which worker draws it. This is what lets
+    /// the sharded scheduler reproduce the serial sweep bit-for-bit.
+    pub fn sample_at(&self, seed: u64, index: usize, spec: &OptSpec, base: &HyperParams) -> Trial {
+        let mut stream = Rng::new(seed).split(index as u64);
+        self.sample(&mut stream, spec, base)
+    }
 }
 
-/// Result of a sweep: best trial by objective (lower is better).
+/// Audit record for one evaluated trial: the sampled point, its
+/// objective and whether it diverged — Table-12 sweeps report every
+/// trial, not just the winner.
+#[derive(Debug, Clone)]
+pub struct TrialRecord {
+    pub index: usize,
+    pub spec: String,
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub objective: f32,
+    pub diverged: bool,
+}
+
+/// Result of a sweep: best trial by objective (lower is better) plus
+/// the full per-trial audit trail.
 pub struct SweepResult {
     pub best: Trial,
+    /// trial index of the winner (ties go to the earliest index, like
+    /// the serial loop)
+    pub best_index: usize,
     pub best_objective: f32,
     /// trials that produced a finite objective
     pub evaluated: usize,
     /// trials discarded for a non-finite objective (diverged runs)
     pub discarded: usize,
+    /// per-trial records in trial-index order (every trial, including
+    /// diverged ones)
+    pub trials: Vec<TrialRecord>,
 }
 
-/// Run `trials` random-search evaluations of `objective`. Non-finite
-/// objectives (diverged runs) are discarded, exactly as a practical
-/// tuner does; the summary reports finite evaluations and discards
-/// separately so "evaluated" is never inflated by diverged trials.
+impl SweepResult {
+    /// CSV export of the full sweep — one row per trial, auditable
+    /// against the winner (`sonew sweep` writes it next to the summary
+    /// table). The spec field is quoted: canonical multi-key specs
+    /// (`"tridiag-sonew:gamma=1e-4,graft=adam"`) contain commas.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("index,spec,lr,beta1,beta2,eps,objective,diverged\n");
+        for t in &self.trials {
+            out.push_str(&format!(
+                "{},\"{}\",{:e},{},{},{:e},{},{}\n",
+                t.index, t.spec, t.lr, t.beta1, t.beta2, t.eps, t.objective, t.diverged
+            ));
+        }
+        out
+    }
+}
+
+/// One shard's accumulated outcome (a whole serial sweep is the
+/// single-shard case).
+struct Shard {
+    records: Vec<TrialRecord>,
+    best: Option<(Trial, f32, usize)>,
+    evaluated: usize,
+    discarded: usize,
+}
+
+/// Strict `(objective, index)` lexicographic "better than current
+/// best": the serial loop keeps the earliest trial among equal
+/// objectives, and because this order is total over finite objectives,
+/// merging shards in any grouping reproduces the serial winner.
+fn better(obj: f32, idx: usize, best: Option<&(Trial, f32, usize)>) -> bool {
+    match best {
+        None => true,
+        Some(&(_, b, bi)) => obj < b || (obj == b && idx < bi),
+    }
+}
+
+/// Evaluate the given trial indices in order — the one engine under
+/// both the serial sweep and every scheduler worker.
+fn evaluate_indices(
+    spec: &OptSpec,
+    space: &SearchSpace,
+    base: &HyperParams,
+    indices: impl Iterator<Item = usize>,
+    seed: u64,
+    objective: &mut dyn FnMut(&Trial) -> f32,
+) -> Shard {
+    let mut shard = Shard { records: Vec::new(), best: None, evaluated: 0, discarded: 0 };
+    for i in indices {
+        let trial = space.sample_at(seed, i, spec, base);
+        let obj = objective(&trial);
+        let finite = obj.is_finite();
+        shard.records.push(TrialRecord {
+            index: i,
+            spec: trial.spec.canonical(),
+            lr: trial.lr,
+            beta1: trial.hp.beta1,
+            beta2: trial.hp.beta2,
+            eps: trial.hp.eps,
+            objective: obj,
+            diverged: !finite,
+        });
+        if !finite {
+            shard.discarded += 1;
+            continue;
+        }
+        shard.evaluated += 1;
+        if better(obj, i, shard.best.as_ref()) {
+            shard.best = Some((trial, obj, i));
+        }
+    }
+    shard
+}
+
+fn merge(mut a: Shard, b: Shard) -> Shard {
+    a.records.extend(b.records);
+    a.evaluated += b.evaluated;
+    a.discarded += b.discarded;
+    if let Some((t, o, i)) = b.best {
+        if better(o, i, a.best.as_ref()) {
+            a.best = Some((t, o, i));
+        }
+    }
+    a
+}
+
+/// Pairwise tree reduction of shard results — the same collective shape
+/// as `parallel::tree_reduce_mean`. `better`'s total order makes the
+/// merge associative and commutative, so the tree agrees with a serial
+/// fold exactly.
+fn tree_collect(mut shards: Vec<Shard>) -> Shard {
+    while shards.len() > 1 {
+        let mut next = Vec::with_capacity(shards.len().div_ceil(2));
+        let mut it = shards.into_iter();
+        while let Some(a) = it.next() {
+            match it.next() {
+                Some(b) => next.push(merge(a, b)),
+                None => next.push(a),
+            }
+        }
+        shards = next;
+    }
+    shards.pop().expect("tree_collect: at least one shard")
+}
+
+fn into_result(shard: Shard) -> Option<SweepResult> {
+    let Shard { mut records, best, evaluated, discarded } = shard;
+    records.sort_by_key(|r| r.index);
+    best.map(|(best, best_objective, best_index)| SweepResult {
+        best,
+        best_index,
+        best_objective,
+        evaluated,
+        discarded,
+        trials: records,
+    })
+}
+
+/// Run `trials` random-search evaluations of `objective`, serially on
+/// the calling thread — the reference order every sharded run must
+/// reproduce. Non-finite objectives (diverged runs) are discarded,
+/// exactly as a practical tuner does; the summary reports finite
+/// evaluations and discards separately so "evaluated" is never inflated
+/// by diverged trials.
 pub fn random_search(
     spec: &OptSpec,
     space: &SearchSpace,
@@ -82,28 +243,74 @@ pub fn random_search(
     seed: u64,
     mut objective: impl FnMut(&Trial) -> f32,
 ) -> Option<SweepResult> {
-    let mut rng = Rng::new(seed);
-    let mut best: Option<(Trial, f32)> = None;
-    let mut evaluated = 0usize;
-    let mut discarded = 0usize;
-    for _ in 0..trials {
-        let trial = space.sample(&mut rng, spec, base);
-        let obj = objective(&trial);
-        if !obj.is_finite() {
-            discarded += 1;
-            continue;
-        }
-        evaluated += 1;
-        if best.as_ref().map_or(true, |(_, b)| obj < *b) {
-            best = Some((trial, obj));
-        }
+    into_result(evaluate_indices(spec, space, base, 0..trials, seed, &mut objective))
+}
+
+/// Shards a sweep's trials across a pool of sweep workers (Execution
+/// API v1): trial `i` goes to worker `i % workers` — a pure function of
+/// the index — each worker evaluates its shard in index order with
+/// per-trial RNG streams split from the sweep seed, and shard results
+/// are tree-merged into the sweep summary. Any worker count reproduces
+/// serial [`random_search`] bit-for-bit: same best trial, same
+/// objective, same evaluated/discarded counts.
+#[derive(Debug, Clone)]
+pub struct SweepScheduler {
+    pub workers: usize,
+}
+
+impl SweepScheduler {
+    pub fn new(workers: usize) -> Self {
+        Self { workers: workers.max(1) }
     }
-    best.map(|(best, best_objective)| SweepResult {
-        best,
-        best_objective,
-        evaluated,
-        discarded,
-    })
+
+    /// Run the §A.4.3 protocol sharded across the scheduler's workers.
+    /// The objective must be deterministic per trial (every harness in
+    /// the repo is — fixed construction seeds, bitwise-deterministic
+    /// kernels at any thread count), which makes the parallel sweep's
+    /// output independent of scheduling.
+    pub fn run(
+        &self,
+        spec: &OptSpec,
+        space: &SearchSpace,
+        base: &HyperParams,
+        trials: usize,
+        seed: u64,
+        objective: impl Fn(&Trial) -> f32 + Sync,
+    ) -> Option<SweepResult> {
+        let workers = self.workers.min(trials.max(1));
+        if workers <= 1 {
+            // `&F: FnMut` when `F: Fn`, so a shared borrow of the
+            // objective is the mutable evaluator the engine wants
+            let mut obj = &objective;
+            return into_result(evaluate_indices(spec, space, base, 0..trials, seed, &mut obj));
+        }
+        let shards: Vec<Shard> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|w| {
+                    let objective = &objective;
+                    std::thread::Builder::new()
+                        .name(format!("sweep-worker-{w}"))
+                        .spawn_scoped(s, move || {
+                            let mut obj = objective;
+                            evaluate_indices(
+                                spec,
+                                space,
+                                base,
+                                (w..trials).step_by(workers),
+                                seed,
+                                &mut obj,
+                            )
+                        })
+                        .expect("spawn sweep worker")
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap_or_else(|p| std::panic::resume_unwind(p)))
+                .collect()
+        });
+        into_result(tree_collect(shards))
+    }
 }
 
 #[cfg(test)]
@@ -130,6 +337,23 @@ mod tests {
     }
 
     #[test]
+    fn per_trial_streams_are_order_independent() {
+        let space = SearchSpace::default();
+        let base = HyperParams::default();
+        let s = spec();
+        // drawing trial 5 first or last yields the same point
+        let a = space.sample_at(9, 5, &s, &base);
+        let _ = space.sample_at(9, 0, &s, &base);
+        let b = space.sample_at(9, 5, &s, &base);
+        assert_eq!(a.lr.to_bits(), b.lr.to_bits());
+        assert_eq!(a.hp.beta1.to_bits(), b.hp.beta1.to_bits());
+        assert_eq!(a.hp.eps.to_bits(), b.hp.eps.to_bits());
+        // and distinct trials draw distinct points
+        let c = space.sample_at(9, 6, &s, &base);
+        assert_ne!(a.lr.to_bits(), c.lr.to_bits());
+    }
+
+    #[test]
     fn finds_known_optimum() {
         // objective minimized at lr = 1e-3
         let space = SearchSpace::default();
@@ -141,6 +365,8 @@ mod tests {
         assert!(r.best.lr > 2e-4 && r.best.lr < 5e-3, "{}", r.best.lr);
         assert_eq!(r.evaluated, 300);
         assert_eq!(r.discarded, 0);
+        assert_eq!(r.trials.len(), 300);
+        assert_eq!(r.trials[r.best_index].objective.to_bits(), r.best_objective.to_bits());
     }
 
     #[test]
@@ -161,6 +387,9 @@ mod tests {
         // evaluated counts only the finite half; discarded the rest
         assert_eq!(r.evaluated, 25);
         assert_eq!(r.discarded, 25);
+        // every trial is on the audit trail, diverged ones flagged
+        assert_eq!(r.trials.len(), 50);
+        assert_eq!(r.trials.iter().filter(|t| t.diverged).count(), 25);
     }
 
     #[test]
@@ -179,5 +408,79 @@ mod tests {
         let t = space.sample(&mut rng, &s, &base);
         let opt = t.build(16, &vec![(0, 16)], &vec![(0, 16, 4, 4)]).unwrap();
         assert_eq!(opt.name(), "tridiag-sonew");
+    }
+
+    #[test]
+    fn scheduler_matches_serial_for_a_synthetic_objective() {
+        // pure-function objective (no training) so this stays unit-fast;
+        // the end-to-end AE version lives in tests/execution.rs
+        let space = SearchSpace::default();
+        let base = HyperParams::default();
+        let s = spec();
+        let objective = |t: &Trial| {
+            if t.hp.beta2 > 0.9 {
+                f32::NAN // deterministic divergence band
+            } else {
+                (t.lr.ln() - (3e-4f32).ln()).abs()
+            }
+        };
+        let serial = random_search(&s, &space, &base, 40, 11, objective).unwrap();
+        for workers in [1usize, 2, 3, 8, 40, 64] {
+            let par = SweepScheduler::new(workers)
+                .run(&s, &space, &base, 40, 11, objective)
+                .unwrap();
+            assert_eq!(par.best_index, serial.best_index, "workers={workers}");
+            assert_eq!(
+                par.best_objective.to_bits(),
+                serial.best_objective.to_bits(),
+                "workers={workers}"
+            );
+            assert_eq!(par.best.lr.to_bits(), serial.best.lr.to_bits(), "workers={workers}");
+            assert_eq!(par.evaluated, serial.evaluated, "workers={workers}");
+            assert_eq!(par.discarded, serial.discarded, "workers={workers}");
+            assert_eq!(par.trials.len(), serial.trials.len(), "workers={workers}");
+            for (a, b) in par.trials.iter().zip(&serial.trials) {
+                assert_eq!(a.index, b.index, "workers={workers}");
+                assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn csv_lists_every_trial() {
+        let space = SearchSpace::default();
+        let base = HyperParams::default();
+        let r = random_search(&spec(), &space, &base, 7, 5, |t| t.lr).unwrap();
+        let csv = r.to_csv();
+        assert!(csv.starts_with("index,spec,lr,beta1,beta2,eps,objective,diverged\n"));
+        assert_eq!(csv.lines().count(), 8, "{csv}");
+        for (i, line) in csv.lines().skip(1).enumerate() {
+            assert!(line.starts_with(&format!("{i},\"adam\",")), "{line}");
+        }
+    }
+
+    #[test]
+    fn csv_quotes_comma_bearing_specs() {
+        // canonical multi-key specs contain commas; the spec cell must
+        // be quoted or every downstream parse misaligns its columns
+        let space = SearchSpace::default();
+        let base = HyperParams::default();
+        let s = OptSpec::parse("tridiag-sonew:gamma=1e-4,graft=adam").unwrap();
+        let r = random_search(&s, &space, &base, 3, 6, |t| t.lr).unwrap();
+        let header_cols = 8;
+        for line in r.to_csv().lines().skip(1) {
+            // split outside quotes: the quoted spec keeps its commas
+            let mut cols = 0;
+            let mut in_quotes = false;
+            for c in line.chars() {
+                match c {
+                    '"' => in_quotes = !in_quotes,
+                    ',' if !in_quotes => cols += 1,
+                    _ => {}
+                }
+            }
+            assert_eq!(cols + 1, header_cols, "{line}");
+            assert!(line.contains("\"tridiag-sonew:gamma=1e-4,graft=adam\""), "{line}");
+        }
     }
 }

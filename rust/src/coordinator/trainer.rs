@@ -1,8 +1,11 @@
-//! The training loop: data-parallel gradients (through any runtime
+//! The training engine: data-parallel gradients (through any runtime
 //! `Backend` — native or AOT-HLO), global gradient clipping, optimizer
-//! step, LR schedule, metrics — the L3 runtime every experiment harness
-//! drives. [`TrainSession`] adds the serving shape: periodic v2
-//! checkpoints and exact (bitwise) resume.
+//! step, LR schedule, metrics, periodic v2 checkpoints and exact
+//! (bitwise) resume — all one loop, [`TrainSession`] (Execution API
+//! v1). The historical entry points `train`, `train_with` and
+//! `train_single` survive as thin compat wrappers that build an
+//! ephemeral session, so every training run in the repo — tables,
+//! examples, CLI, sweeps — goes through the same engine.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -10,7 +13,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::linalg::norm2;
-use crate::optim::{OptSpec, Optimizer};
+use crate::optim::{Opt, OptSpec, Optimizer};
 use crate::util::Precision;
 
 use super::checkpoint;
@@ -92,24 +95,75 @@ fn apply_step(
     Ok(())
 }
 
+/// Closure-backed provider adapter: the compat `train*` wrappers wrap
+/// their gradient closure in this so it can ride the [`TrainSession`]
+/// engine. The closure's data-stream position cannot be serialized, so
+/// checkpointing a session over a `FnProvider` is a hard error rather
+/// than a silently non-resumable checkpoint — use a real
+/// [`StatefulProvider`] for the serving shape. (The ephemeral sessions
+/// the wrappers build never checkpoint, so they never hit this.)
+pub struct FnProvider<F>(pub F);
+
+impl<F: FnMut(&[f32]) -> Result<(f32, Vec<f32>)>> GradProvider for FnProvider<F> {
+    fn next_loss_and_grad(&mut self, params: &[f32]) -> Result<(f32, Vec<f32>)> {
+        (self.0)(params)
+    }
+}
+
+impl<F: FnMut(&[f32]) -> Result<(f32, Vec<f32>)>> StatefulProvider for FnProvider<F> {
+    fn save_state(&self, _w: &mut dyn std::io::Write) -> std::io::Result<()> {
+        Err(std::io::Error::other(
+            "FnProvider cannot serialize its data-stream position; a checkpoint written \
+             here would not resume bitwise — use a StatefulProvider for checkpointable \
+             sessions",
+        ))
+    }
+    fn load_state(&mut self, _r: &mut dyn std::io::Read) -> std::io::Result<()> {
+        Err(std::io::Error::other(
+            "FnProvider has no serialized data-stream position to restore",
+        ))
+    }
+}
+
+/// Returns the session's params to the caller's `Vec` on every exit —
+/// `Ok`, `Err`, and panic unwind alike. The pre-session `train_with`
+/// mutated params in place, so even a caller catching a kernel panic
+/// saw the last valid parameter state; moving params into the session
+/// must not silently weaken that.
+struct ParamsBackstop<'a, P: StatefulProvider, O: Optimizer> {
+    session: Option<TrainSession<P, O>>,
+    params: &'a mut Vec<f32>,
+}
+
+impl<P: StatefulProvider, O: Optimizer> Drop for ParamsBackstop<'_, P, O> {
+    fn drop(&mut self) {
+        if let Some(s) = self.session.take() {
+            *self.params = s.params;
+        }
+    }
+}
+
 /// Core loop over an arbitrary gradient source.
+///
+/// Compat wrapper (pre-Execution-API surface): runs an ephemeral
+/// [`TrainSession`] over the closure. Prefer constructing the session
+/// directly (`TrainSession::ephemeral(...).finish()`); this shape stays
+/// for callers that keep ownership of params and optimizer.
 pub fn train_with(
     params: &mut Vec<f32>,
     opt: &mut dyn Optimizer,
     cfg: &TrainConfig,
-    mut grad_step: impl FnMut(&[f32]) -> Result<(f32, Vec<f32>)>,
+    grad_step: impl FnMut(&[f32]) -> Result<(f32, Vec<f32>)>,
 ) -> Result<Metrics> {
-    let mut metrics = Metrics::default();
-    for step in 0..cfg.steps {
-        let t_grad = std::time::Instant::now();
-        let (loss, grads) = grad_step(params)?;
-        metrics.grad_time += t_grad.elapsed();
-        apply_step(params, opt, cfg, step, loss, grads, &mut metrics)?;
-    }
-    Ok(metrics)
+    let session =
+        TrainSession::ephemeral(opt, std::mem::take(params), FnProvider(grad_step), cfg.clone());
+    let mut guard = ParamsBackstop { session: Some(session), params };
+    guard.session.as_mut().expect("session present until drop").run()
 }
 
 /// Train against a data-parallel worker pool (broadcast + tree reduce).
+///
+/// Compat wrapper over the [`TrainSession`] engine (see [`train_with`]).
 pub fn train(
     params: &mut Vec<f32>,
     opt: &mut dyn Optimizer,
@@ -127,6 +181,8 @@ pub fn train(
 /// Single-worker convenience (tests, quickstart): runs the provider
 /// inline on the calling thread — no Send requirement, so backend
 /// providers (thread-affine PJRT clients) work directly.
+///
+/// Compat wrapper over the [`TrainSession`] engine (see [`train_with`]).
 pub fn train_single(
     params: &mut Vec<f32>,
     opt: &mut dyn Optimizer,
@@ -162,14 +218,22 @@ pub struct SessionConfig {
     pub resume_from: Option<PathBuf>,
 }
 
-/// A long-running training session: the plain training loop plus v2
-/// checkpointing (`SONEWCK2`: params + optimizer state + data-stream
-/// RNG) and exact resume. A session checkpointed at step k and resumed
-/// in a fresh process reproduces the uninterrupted run bitwise — same
-/// params, same loss trajectory.
-pub struct TrainSession<P: StatefulProvider> {
-    pub spec: OptSpec,
-    pub opt: crate::optim::Opt,
+/// The single training engine (Execution API v1): the training loop
+/// plus v2 checkpointing (`SONEWCK2`: params + optimizer state +
+/// data-stream RNG) and exact resume. A session checkpointed at step k
+/// and resumed in a fresh process reproduces the uninterrupted run
+/// bitwise — same params, same loss trajectory.
+///
+/// Generic over how the optimizer is held: a session can own its
+/// [`Opt`] (the default, checkpointable shape built by
+/// [`TrainSession::new`]) or borrow any `&mut dyn Optimizer` (the
+/// ephemeral shape behind the `train*` compat wrappers, via
+/// [`TrainSession::ephemeral`]).
+pub struct TrainSession<P: StatefulProvider, O: Optimizer = Opt> {
+    /// spec labelling checkpoints; `None` for ephemeral sessions, which
+    /// cannot write checkpoints
+    pub spec: Option<OptSpec>,
+    pub opt: O,
     pub params: Vec<f32>,
     pub provider: P,
     /// next step to run (absolute, 0-based)
@@ -177,13 +241,13 @@ pub struct TrainSession<P: StatefulProvider> {
     pub cfg: SessionConfig,
 }
 
-impl<P: StatefulProvider> TrainSession<P> {
+impl<P: StatefulProvider, O: Optimizer> TrainSession<P, O> {
     /// Assemble a session; when `cfg.resume_from` is set the checkpoint
     /// is restored immediately (params, optimizer state, data stream,
     /// step clock).
     pub fn new(
         spec: OptSpec,
-        opt: crate::optim::Opt,
+        opt: O,
         params: Vec<f32>,
         provider: P,
         cfg: SessionConfig,
@@ -194,11 +258,26 @@ impl<P: StatefulProvider> TrainSession<P> {
              checkpoints would be silently skipped",
             cfg.checkpoint_every
         );
-        let mut s = Self { spec, opt, params, provider, step: 0, cfg };
+        let mut s = Self { spec: Some(spec), opt, params, provider, step: 0, cfg };
         if let Some(path) = s.cfg.resume_from.clone() {
             s.restore(&path)?;
         }
         Ok(s)
+    }
+
+    /// Ephemeral one-shot session: no spec, no checkpointing — the
+    /// engine shape behind the `train*` compat wrappers and the
+    /// `tables/*` / example harnesses. Run it with [`run`](Self::run)
+    /// or [`finish`](Self::finish).
+    pub fn ephemeral(opt: O, params: Vec<f32>, provider: P, train: TrainConfig) -> Self {
+        Self {
+            spec: None,
+            opt,
+            params,
+            provider,
+            step: 0,
+            cfg: SessionConfig { train, ..SessionConfig::default() },
+        }
     }
 
     /// Restore from a checkpoint file (v2 restores everything; v1 files
@@ -206,13 +285,15 @@ impl<P: StatefulProvider> TrainSession<P> {
     pub fn restore(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
         let path = path.as_ref();
         let ck = checkpoint::load_any(path)?;
-        if !ck.spec.is_empty() && ck.spec != self.spec.canonical() {
-            anyhow::bail!(
-                "checkpoint {} was written by optimizer `{}` but this session runs `{}`",
-                path.display(),
-                ck.spec,
-                self.spec.canonical()
-            );
+        if let Some(spec) = &self.spec {
+            if !ck.spec.is_empty() && ck.spec != spec.canonical() {
+                anyhow::bail!(
+                    "checkpoint {} was written by optimizer `{}` but this session runs `{}`",
+                    path.display(),
+                    ck.spec,
+                    spec.canonical()
+                );
+            }
         }
         anyhow::ensure!(
             ck.params.len() == self.params.len(),
@@ -232,8 +313,16 @@ impl<P: StatefulProvider> TrainSession<P> {
         Ok(())
     }
 
-    /// Write a v2 checkpoint of the complete session state.
+    /// Write a v2 checkpoint of the complete session state. Ephemeral
+    /// sessions (no spec) cannot checkpoint — construct with
+    /// [`TrainSession::new`] for the serving shape.
     pub fn checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let spec = self.spec.as_ref().ok_or_else(|| {
+            anyhow::anyhow!(
+                "ephemeral session has no optimizer spec to label a checkpoint; \
+                 build it with TrainSession::new"
+            )
+        })?;
         let mut opt_state = Vec::new();
         self.opt.save_state(&mut opt_state)?;
         let mut data_state = Vec::new();
@@ -241,7 +330,7 @@ impl<P: StatefulProvider> TrainSession<P> {
         checkpoint::save_v2(
             path,
             self.step,
-            &self.spec.canonical(),
+            &spec.canonical(),
             &self.params,
             &opt_state,
             &data_state,
@@ -285,6 +374,13 @@ impl<P: StatefulProvider> TrainSession<P> {
     /// Run to the configured total step count.
     pub fn run(&mut self) -> Result<Metrics> {
         self.run_steps(self.remaining())
+    }
+
+    /// Run to completion and hand back `(params, metrics)` — the
+    /// one-shot shape the tables and examples drive.
+    pub fn finish(mut self) -> Result<(Vec<f32>, Metrics)> {
+        let m = self.run()?;
+        Ok((self.params, m))
     }
 }
 
@@ -666,5 +762,56 @@ mod tests {
         assert_eq!(r.params, s.params);
         assert_eq!(r.opt.steps(), 4);
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn wrappers_ride_the_session_engine() {
+        // train_single (compat wrapper) and an explicit ephemeral
+        // session must produce bitwise-identical trajectories: same
+        // engine, two surfaces
+        let (mlp, p0) = small_ae_setup(21);
+        let hp = HyperParams::default();
+        let cfg = TrainConfig {
+            steps: 5,
+            schedule: Schedule::Constant { lr: 2e-3 },
+            ..Default::default()
+        };
+        let provider = || NativeAeProvider {
+            mlp: mlp.clone(),
+            images: crate::data::SynthImages::new(33),
+            batch: 4,
+        };
+        let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+
+        let mut opt_a = build("adam", &mlp, &hp);
+        let mut pa = p0.clone();
+        let ma = train_single(&mut pa, &mut opt_a, provider(), &cfg).unwrap();
+
+        let mut opt_b = build("adam", &mlp, &hp);
+        let (pb, mb) = TrainSession::ephemeral(&mut opt_b, p0, provider(), cfg.clone())
+            .finish()
+            .unwrap();
+
+        assert_eq!(bits(&pa), bits(&pb), "wrapper and session params diverged");
+        assert_eq!(ma.points.len(), mb.points.len());
+        for (x, y) in ma.points.iter().zip(&mb.points) {
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "step {}", x.step);
+            assert_eq!(x.lr.to_bits(), y.lr.to_bits(), "step {}", x.step);
+        }
+    }
+
+    #[test]
+    fn ephemeral_session_cannot_checkpoint() {
+        let (mlp, p0) = small_ae_setup(22);
+        let hp = HyperParams::default();
+        let opt = build("adam", &mlp, &hp);
+        let provider = NativeAeProvider {
+            mlp: mlp.clone(),
+            images: crate::data::SynthImages::new(34),
+            batch: 4,
+        };
+        let s = TrainSession::ephemeral(opt, p0, provider, TrainConfig::default());
+        let err = s.checkpoint(std::env::temp_dir().join("nope.ck")).unwrap_err();
+        assert!(format!("{err:#}").contains("ephemeral"), "{err:#}");
     }
 }

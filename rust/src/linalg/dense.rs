@@ -23,10 +23,12 @@
 //! Determinism contract: every output element accumulates its k-products
 //! strictly in ascending-k order no matter how the work is tiled or how
 //! many threads run (`util::par::run_chunked` splits C into contiguous
-//! row chunks), so results are **bitwise identical at any thread count**
-//! — asserted by `gemm_bitwise_identical_at_any_thread_count`. The
-//! worker-thread count itself comes from [`hw_threads`]: cached once,
-//! overridable with `SONEW_THREADS` for reproducible perf runs.
+//! row chunks and runs them on the persistent `runtime::Executor` pool —
+//! no per-call thread spawn), so results are **bitwise identical at any
+//! thread count** — asserted by
+//! `gemm_bitwise_identical_at_any_thread_count`. The worker-thread count
+//! itself comes from [`hw_threads`]: cached once, overridable with
+//! `SONEW_THREADS` for reproducible perf runs.
 
 use std::sync::OnceLock;
 

@@ -7,7 +7,8 @@
 //! sonew train --opt band-sonew:band=8,graft=adam --steps 100
 //! sonew train --opt tds --checkpoint run.ck --checkpoint-every 20
 //! sonew train --opt tds --resume run.ck      # exact (bitwise) resume
-//! sonew sweep --opt adam --trials 20         # Table 12 protocol
+//! sonew sweep --opt adam --trials 20         # Table 12 protocol (serial)
+//! sonew sweep --opt adam --trials 200 --workers 8   # sharded, bit-identical
 //! sonew opts                                 # optimizer spec registry
 //! sonew list                                 # artifact inventory
 //! ```
@@ -17,7 +18,7 @@
 
 use anyhow::Result;
 use sonew::cli::Args;
-use sonew::coordinator::sweep::{random_search, SearchSpace};
+use sonew::coordinator::sweep::SearchSpace;
 use sonew::coordinator::{Schedule, SessionConfig, TrainConfig, TrainSession};
 use sonew::optim::{spec::registry_help, HyperParams, OptSpec};
 use sonew::tables;
@@ -44,8 +45,19 @@ fn run() -> Result<()> {
         Some("list") => list(),
         _ => {
             println!(
-                "usage: sonew <table|lm|train|sweep|opts|list> [flags]\n\
-                 tables: t1 t6 t9 ae ae-band ae-batch ae-bf16 f1-vit f1-gnn f3\n\
+                "usage: sonew <command> [flags]\n\
+                 \n\
+                 commands:\n\
+                 \x20 table <which>   regenerate a paper artifact\n\
+                 \x20                 (t1 t6 t9 ae ae-band ae-batch ae-bf16 f1-vit f1-gnn f3)\n\
+                 \x20 lm              Figure-3 LM run, native transformer (--steps N)\n\
+                 \x20 train           train one optimizer; --checkpoint/--resume run a\n\
+                 \x20                 checkpointable session (`sonew train --help`)\n\
+                 \x20 sweep           Table-12 random search; --workers N shards trials\n\
+                 \x20                 deterministically (`sonew sweep --help`)\n\
+                 \x20 opts            optimizer spec registry\n\
+                 \x20 list            artifact inventory + active backend\n\
+                 \n\
                  `--opt` takes an optimizer spec (name[:key=value,...]);\n\
                  run `sonew opts` or `sonew train --help` for the registry.\n\
                  see README.md for the full flag reference"
@@ -258,7 +270,7 @@ fn train_session(args: &Args, spec: &OptSpec) -> Result<()> {
         );
         return Ok(());
     }
-    let m = session.run()?;
+    let m = sonew::coordinator::Driver::new().train(&mut session)?;
     if let Some(path) = &session.cfg.checkpoint_path {
         session.checkpoint(path)?;
         println!("[train] checkpointed step {} -> {}", session.step, path.display());
@@ -275,7 +287,13 @@ fn train_session(args: &Args, spec: &OptSpec) -> Result<()> {
 fn sweep(args: &Args) -> Result<()> {
     if args.has("help") {
         println!(
-            "usage: sonew sweep --opt <spec> [--trials N] [--steps K] [--seed S]\n\n{}",
+            "usage: sonew sweep --opt <spec> [--trials N] [--steps K] [--seed S] [--workers W]\n\
+             \n\
+             --workers W  shard trials across W sweep workers (trial i -> worker\n\
+             \x20            i mod W, per-trial RNG streams); any W reproduces the\n\
+             \x20            serial sweep bit-for-bit, including the chosen best\n\
+             \x20            trial and the evaluated/discarded counts.\n\
+             writes results/t12_sweep_<name>.md (summary) and .csv (every trial).\n\n{}",
             registry_help()
         );
         return Ok(());
@@ -283,13 +301,18 @@ fn sweep(args: &Args) -> Result<()> {
     let spec = OptSpec::parse(args.get_or("opt", "tridiag-sonew"))?;
     let trials = args.usize_or("trials", 20);
     let steps = args.u64_or("steps", 20);
+    let workers = args.usize_or("workers", 1);
     let space = SearchSpace::default();
     let base = HyperParams::default();
-    println!("[sweep] {spec}: {trials} trials x {steps} steps (small AE, native)");
-    let result = random_search(&spec, &space, &base, trials, args.u64_or("seed", 0), |trial| {
+    let driver = sonew::coordinator::Driver::new().with_sweep_workers(workers);
+    println!(
+        "[sweep] {spec}: {trials} trials x {steps} steps across {} worker(s) (small AE, native)",
+        driver.sweep_workers
+    );
+    let result = driver.sweep(&spec, &space, &base, trials, args.u64_or("seed", 0), |trial| {
         let mlp = sonew::models::Mlp::autoencoder_small();
         let mut rng = sonew::util::Rng::new(0);
-        let mut params = mlp.init(&mut rng);
+        let params = mlp.init(&mut rng);
         let mats = tables::autoencoder::cap_mat_blocks(&mlp.mat_blocks(), 128);
         let mut opt = match trial.build(mlp.total, &mlp.blocks(), &mats) {
             Ok(o) => o,
@@ -305,8 +328,8 @@ fn sweep(args: &Args) -> Result<()> {
             images: sonew::data::SynthImages::new(1),
             batch: 64,
         };
-        match sonew::coordinator::train_single(&mut params, &mut opt, provider, &tc) {
-            Ok(m) => m.tail_mean_loss(3).unwrap_or(f32::NAN),
+        match TrainSession::ephemeral(&mut opt, params, provider, tc).finish() {
+            Ok((_, m)) => m.tail_mean_loss(3).unwrap_or(f32::NAN),
             Err(_) => f32::NAN,
         }
     });
@@ -317,8 +340,9 @@ fn sweep(args: &Args) -> Result<()> {
             // never a sampled value that a pinned key shadowed
             let eff = r.best.spec.hyperparams(&r.best.hp)?;
             println!(
-                "[sweep] best {spec}: loss {:.4} @ lr={:.3e} beta1={:.3} beta2={:.3} eps={:.2e} \
-                 ({} finite, {} discarded)",
+                "[sweep] best {spec}: trial #{} loss {:.4} @ lr={:.3e} beta1={:.3} beta2={:.3} \
+                 eps={:.2e} ({} finite, {} discarded)",
+                r.best_index,
                 r.best_objective,
                 r.best.lr,
                 eff.beta1,
@@ -341,6 +365,11 @@ fn sweep(args: &Args) -> Result<()> {
                 r.discarded.to_string(),
             ]);
             t.write(format!("t12_sweep_{}.md", spec.name()))?;
+            // full audit trail: every trial's sampled point + objective
+            sonew::util::io::write_result_file(
+                format!("t12_sweep_{}.csv", spec.name()),
+                &r.to_csv(),
+            )?;
         }
         None => println!("[sweep] all trials diverged"),
     }

@@ -385,6 +385,33 @@ impl Optimizer for Opt {
     }
 }
 
+/// Mutable borrows are optimizers too, so the [`TrainSession`] engine
+/// (`coordinator::trainer`) can own either the optimizer itself or a
+/// caller's `&mut dyn Optimizer` — the compat `train*` wrappers build
+/// ephemeral sessions over exactly this impl.
+///
+/// [`TrainSession`]: crate::coordinator::TrainSession
+impl<O: Optimizer + ?Sized> Optimizer for &mut O {
+    fn name(&self) -> &str {
+        (**self).name()
+    }
+    fn step(&mut self, params: &mut [f32], g: &[f32], lr: f32) {
+        (**self).step(params, g, lr)
+    }
+    fn steps(&self) -> u64 {
+        (**self).steps()
+    }
+    fn memory_floats(&self) -> usize {
+        (**self).memory_floats()
+    }
+    fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
+        (**self).save_state(w)
+    }
+    fn load_state(&mut self, r: &mut dyn Read) -> std::io::Result<()> {
+        (**self).load_state(r)
+    }
+}
+
 /// Hyperparameters shared by the registry (config system / sweeps);
 /// spec-string keys override individual fields on top of this base.
 #[derive(Debug, Clone)]

@@ -1,0 +1,330 @@
+//! Persistent deterministic executor: the long-lived worker pool behind
+//! every per-call kernel fan-out in the crate (`util::par::run_chunked`
+//! — GEMM row chunks, SONew block scans, `Opt::step` tensor blocks).
+//!
+//! Before this module existed, every `run_chunked` call spawned and
+//! joined scoped threads — a measurable fixed cost on the hot path
+//! (the bench `[exec]` section tracks it). The executor keeps a pool of
+//! named worker threads (`sonew-exec-{i}`) alive for the life of the
+//! process and feeds them job batches over a shared channel-style
+//! queue. The determinism story is unchanged: the executor never
+//! decides *what* runs — callers submit pre-grouped jobs whose
+//! item-to-group assignment is a pure function of `(items, threads)` —
+//! it only decides *where* they run, and disjoint-write jobs are
+//! bitwise identical wherever they execute.
+//!
+//! Scheduling is help-first: a thread waiting on its batch executes
+//! queued jobs (its own or anyone else's) instead of parking, so nested
+//! fan-outs (an `Opt::step` block whose direction calls the parallel
+//! GEMM, a sweep worker training under the sharded scheduler) can never
+//! deadlock the pool — the submitter itself is always able to drain the
+//! jobs it queued.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// A boxed unit of work submitted to the pool.
+pub type Task<'s> = Box<dyn FnOnce() + Send + 's>;
+
+/// One queued job: a lifetime-erased task plus the batch it belongs to.
+struct Job {
+    run: Task<'static>,
+    batch: Arc<Batch>,
+}
+
+/// Completion state shared by the jobs of one [`Executor::scope`] call.
+struct Batch {
+    state: Mutex<BatchState>,
+    done: Condvar,
+}
+
+struct BatchState {
+    pending: usize,
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+impl Batch {
+    fn new(pending: usize) -> Self {
+        Self {
+            state: Mutex::new(BatchState { pending, panic: None }),
+            done: Condvar::new(),
+        }
+    }
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// A persistent pool of named worker threads executing job batches.
+///
+/// `scope` blocks until every submitted job has run, so jobs may borrow
+/// the caller's stack (the same contract `std::thread::scope` gives,
+/// without the per-call spawn/join). One process-wide instance lives
+/// behind [`global`]; tests construct private pools.
+pub struct Executor {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+/// Run one job and settle its batch accounting (last job out wakes the
+/// batch's waiters). Panics are captured — first payload wins — and
+/// re-raised by the waiting `scope` call, not on the worker.
+fn execute(job: Job) {
+    let Job { run, batch } = job;
+    let result = catch_unwind(AssertUnwindSafe(run));
+    let mut st = batch.state.lock().unwrap();
+    if let Err(payload) = result {
+        st.panic.get_or_insert(payload);
+    }
+    st.pending -= 1;
+    if st.pending == 0 {
+        batch.done.notify_all();
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break Some(j);
+                }
+                if shared.shutdown.load(Ordering::Acquire) {
+                    break None;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        match job {
+            Some(j) => execute(j),
+            None => return,
+        }
+    }
+}
+
+impl Executor {
+    /// Spawn a pool with `workers` threads. The calling thread
+    /// participates in every `scope`, so total parallelism is
+    /// `workers + 1` — and `workers = 0` is valid: the submitter simply
+    /// drains every batch itself.
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("sonew-exec-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn executor worker")
+            })
+            .collect();
+        Self { shared, handles }
+    }
+
+    /// Worker threads owned by the pool (excluding participating callers).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run a batch of jobs to completion. Blocks until every job has
+    /// executed — that blocking is what makes it sound for jobs to
+    /// borrow data from the caller's stack. While waiting, the caller
+    /// executes queued jobs itself (help-first), which both saves a
+    /// context switch and keeps nested scopes deadlock-free. If any job
+    /// panicked, the first panic is re-raised here after the whole
+    /// batch has settled.
+    pub fn scope<'s>(&self, jobs: Vec<Task<'s>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        let n_jobs = jobs.len();
+        let batch = Arc::new(Batch::new(n_jobs));
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for f in jobs {
+                // SAFETY: `Task<'s>` and `Task<'static>` have identical
+                // layout (a fat Box pointer); only the lifetime bound is
+                // erased. Every job queued here finishes before `scope`
+                // returns (the wait loop below blocks on the batch, and
+                // a panicking job still settles its accounting), so no
+                // job can outlive the `'s` borrows it captures.
+                let run = unsafe { std::mem::transmute::<Task<'s>, Task<'static>>(f) };
+                q.push_back(Job { run, batch: Arc::clone(&batch) });
+            }
+        }
+        // wake only as many workers as there are jobs to take: small
+        // batches on many-core hosts must not stampede the whole pool
+        for _ in 0..n_jobs.min(self.handles.len()) {
+            self.shared.available.notify_one();
+        }
+        // Help-first: drain queued jobs (ours or anyone's) until our
+        // batch settles or the queue runs dry.
+        loop {
+            if batch.state.lock().unwrap().pending == 0 {
+                break;
+            }
+            let job = self.shared.queue.lock().unwrap().pop_front();
+            match job {
+                Some(j) => execute(j),
+                None => break,
+            }
+        }
+        // Whatever remains of our batch is running on other threads;
+        // park until the last job signals completion.
+        let mut st = batch.state.lock().unwrap();
+        while st.pending > 0 {
+            st = batch.done.wait(st).unwrap();
+        }
+        if let Some(payload) = st.panic.take() {
+            drop(st);
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.available.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+static GLOBAL: OnceLock<Executor> = OnceLock::new();
+
+/// The process-wide pool backing `util::par::run_chunked`. Lazily sized
+/// on first use from [`crate::linalg::hw_threads`] (which honors the
+/// `SONEW_THREADS` override): `hw_threads - 1` workers, because the
+/// submitting thread always participates — at `SONEW_THREADS=1` the
+/// pool holds no worker threads at all and every explicit multi-group
+/// scope runs on its submitter.
+pub fn global() -> &'static Executor {
+    GLOBAL.get_or_init(|| Executor::new(crate::linalg::hw_threads().saturating_sub(1)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_every_job_once() {
+        let ex = Executor::new(3);
+        let hits = AtomicUsize::new(0);
+        let jobs: Vec<Task<'_>> = (0..17)
+            .map(|_| {
+                let hits = &hits;
+                Box::new(move || {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                }) as Task<'_>
+            })
+            .collect();
+        ex.scope(jobs);
+        assert_eq!(hits.load(Ordering::Relaxed), 17);
+    }
+
+    #[test]
+    fn jobs_borrow_the_callers_stack_mutably() {
+        let ex = Executor::new(2);
+        let mut out = vec![0usize; 8];
+        let jobs: Vec<Task<'_>> = out
+            .iter_mut()
+            .enumerate()
+            .map(|(i, slot)| Box::new(move || *slot = i + 1) as Task<'_>)
+            .collect();
+        ex.scope(jobs);
+        assert_eq!(out, vec![1, 2, 3, 4, 5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn nested_scopes_complete() {
+        // a job that itself fans out on the same (small) pool must not
+        // deadlock: waiting threads execute queued jobs instead of
+        // parking idle
+        let ex = Executor::new(2);
+        let total = AtomicUsize::new(0);
+        let outer: Vec<Task<'_>> = (0..4)
+            .map(|_| {
+                let (ex, total) = (&ex, &total);
+                Box::new(move || {
+                    let inner: Vec<Task<'_>> = (0..4)
+                        .map(|_| {
+                            Box::new(move || {
+                                total.fetch_add(1, Ordering::Relaxed);
+                            }) as Task<'_>
+                        })
+                        .collect();
+                    ex.scope(inner);
+                }) as Task<'_>
+            })
+            .collect();
+        ex.scope(outer);
+        assert_eq!(total.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn empty_batch_is_a_no_op() {
+        let ex = Executor::new(1);
+        ex.scope(Vec::new());
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_batches_on_the_submitter() {
+        // SONEW_THREADS=1 sizing: no pooled threads at all — the
+        // submitting thread drains the queue itself, nested scopes
+        // included
+        let ex = Executor::new(0);
+        assert_eq!(ex.workers(), 0);
+        let total = AtomicUsize::new(0);
+        let outer: Vec<Task<'_>> = (0..3)
+            .map(|_| {
+                let (ex, total) = (&ex, &total);
+                Box::new(move || {
+                    total.fetch_add(1, Ordering::Relaxed);
+                    ex.scope(vec![Box::new(move || {
+                        total.fetch_add(10, Ordering::Relaxed);
+                    }) as Task<'_>]);
+                }) as Task<'_>
+            })
+            .collect();
+        ex.scope(outer);
+        assert_eq!(total.load(Ordering::Relaxed), 33);
+    }
+
+    #[test]
+    fn panics_propagate_and_the_pool_survives() {
+        let ex = Executor::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            ex.scope(vec![
+                Box::new(|| panic!("boom")) as Task<'_>,
+                Box::new(|| {}) as Task<'_>,
+            ]);
+        }));
+        assert!(caught.is_err(), "job panic must reach the scope caller");
+        // the worker that caught the panic keeps serving jobs
+        let hits = AtomicUsize::new(0);
+        let jobs: Vec<Task<'_>> = (0..4)
+            .map(|_| {
+                let hits = &hits;
+                Box::new(move || {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                }) as Task<'_>
+            })
+            .collect();
+        ex.scope(jobs);
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+    }
+}

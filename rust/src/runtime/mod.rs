@@ -1,7 +1,9 @@
 //! Runtime layer: the pluggable [`Backend`] seam over named gradient /
 //! optimizer programs, with a pure-Rust [`NativeBackend`] (always built)
 //! and a PJRT engine for the AOT HLO artifacts produced by
-//! `python/compile/aot.py` (behind the `xla` cargo feature).
+//! `python/compile/aot.py` (behind the `xla` cargo feature); plus the
+//! persistent [`Executor`] worker pool every in-process kernel fan-out
+//! (`util::par::run_chunked`) rides on.
 //!
 //! Interchange on the PJRT side is HLO *text* (not serialized protos):
 //! jax >= 0.5 emits protos with 64-bit instruction ids that the pinned
@@ -11,12 +13,14 @@
 pub mod backend;
 #[cfg(feature = "xla")]
 pub mod engine;
+pub mod executor;
 pub mod manifest;
 
 pub use backend::{
     artifacts_available, default_artifacts_dir, open_backend, preferred_backend_name,
     Backend, HostTensor, NativeBackend,
 };
+pub use executor::Executor;
 #[cfg(feature = "xla")]
 pub use backend::PjrtBackend;
 #[cfg(feature = "xla")]

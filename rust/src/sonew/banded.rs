@@ -6,9 +6,11 @@
 //!
 //! The flat vector decomposes into per-tensor blocks (no kept edge
 //! crosses a boundary — see `sonew::split_blocks`), and the fused step
-//! runs block-parallel: each block scans only its own rows with its own
-//! ring-buffer scratch, so the threaded step is **bitwise identical** to
-//! the sequential one by construction.
+//! runs block-parallel on the persistent executor pool
+//! (`util::par::run_chunked` over `runtime::Executor`): each block
+//! scans only its own rows with its own ring-buffer scratch, so the
+//! threaded step is **bitwise identical** to the sequential one by
+//! construction.
 
 use crate::linalg::chol::{cholesky_in_place, cholesky_solve_in_place};
 use crate::util::Precision;

@@ -5,9 +5,10 @@
 //!
 //! The flat vector decomposes into per-tensor blocks (no kept edge
 //! crosses a boundary — see `sonew::split_blocks`), so the whole fused
-//! step runs block-parallel on the shared thread pool: each block's scan
-//! touches only its own rows of `hd`/`ho`/`g`/`u` and its own scratch
-//! slice, making the threaded step **bitwise identical** to the
+//! step runs block-parallel on the persistent executor pool
+//! (`util::par::run_chunked` over `runtime::Executor`): each block's
+//! scan touches only its own rows of `hd`/`ho`/`g`/`u` and its own
+//! scratch slice, making the threaded step **bitwise identical** to the
 //! sequential one by construction.
 
 use crate::util::Precision;

@@ -8,7 +8,7 @@
 //! by spec string (`OptSpec`), so ablation rows are plain specs like
 //! `band-sonew:band=10`.
 
-use crate::coordinator::{train_single, Metrics, Schedule, TrainConfig};
+use crate::coordinator::{Metrics, Schedule, TrainConfig, TrainSession};
 use crate::coordinator::trainer::{BackendAeProvider, NativeAeProvider};
 use crate::data::SynthImages;
 use crate::models::Mlp;
@@ -175,7 +175,7 @@ pub fn run_one(spec: &OptSpec, cfg: &AeBenchConfig) -> anyhow::Result<AeRow> {
     let mlp = if cfg.full { Mlp::autoencoder() } else { Mlp::autoencoder_small() };
     let (lr, hp) = tuned_hp(spec.name(), cfg.precision, cfg.gamma);
     let mut rng = crate::util::Rng::new(cfg.seed);
-    let mut params = mlp.init(&mut rng);
+    let params = mlp.init(&mut rng);
     let blocks = mlp.blocks();
     let mats = cap_mat_blocks(&mlp.mat_blocks(), 128);
     let mut opt = spec.build(mlp.total, &blocks, &mats, &hp)?;
@@ -218,14 +218,14 @@ pub fn run_one(spec: &OptSpec, cfg: &AeBenchConfig) -> anyhow::Result<AeRow> {
             images: SynthImages::new(cfg.seed + 1),
             batch: cfg.batch,
         };
-        train_single(&mut params, &mut opt, provider, &tc)?
+        TrainSession::ephemeral(&mut opt, params, provider, tc).finish()?.1
     } else {
         let provider = NativeAeProvider {
             mlp: mlp.clone(),
             images: SynthImages::new(cfg.seed + 1),
             batch: cfg.batch,
         };
-        train_single(&mut params, &mut opt, provider, &tc)?
+        TrainSession::ephemeral(&mut opt, params, provider, tc).finish()?.1
     };
 
     Ok(AeRow {

@@ -99,7 +99,7 @@ pub fn run_adafactor(cfg: &LmRunConfig) -> anyhow::Result<Metrics> {
     );
     let hp = HyperParams { beta1: 0.9, beta2: 0.99, eps: 1e-8, weight_decay: 1e-3, ..Default::default() };
     let mut opt = OptSpec::parse("adafactor")?.build(n, &blocks, &mats, &hp)?;
-    let mut params = init_lm_params(&layout, 0);
+    let params = init_lm_params(&layout, 0);
     let provider = BackendLmProvider {
         backend,
         program: "lm_grads".into(),
@@ -115,7 +115,9 @@ pub fn run_adafactor(cfg: &LmRunConfig) -> anyhow::Result<Metrics> {
         verbose: cfg.verbose,
         ..Default::default()
     };
-    crate::coordinator::train_single(&mut params, &mut opt, provider, &tc)
+    let (_, metrics) =
+        crate::coordinator::TrainSession::ephemeral(&mut opt, params, provider, tc).finish()?;
+    Ok(metrics)
 }
 
 /// Train the LM with tridiag-SONew; when `sonew_via_hlo` the

@@ -4,7 +4,7 @@
 //! headline (paper: ~10% fewer for ViT, ~30% fewer for GNN).
 
 use crate::coordinator::trainer::{NativeClassifierProvider, ProxyTask};
-use crate::coordinator::{train_single, Schedule, TrainConfig};
+use crate::coordinator::{Schedule, TrainConfig, TrainSession};
 use crate::data::{SynthGraphs, SynthImages};
 use crate::models::Mlp;
 use crate::optim::OptSpec;
@@ -90,7 +90,10 @@ pub fn run_one(
             schedule: Schedule::Constant { lr: tc.schedule.at(s * seg_steps) },
             ..tc.clone()
         };
-        let m = train_single(&mut params, &mut opt, provider, &seg_tc)?;
+        let (p, m) =
+            TrainSession::ephemeral(&mut opt, std::mem::take(&mut params), provider, seg_tc)
+                .finish()?;
+        params = p;
         last_train = m.tail_mean_loss(3).unwrap_or(f32::NAN);
         let ve = eval(proxy, &mlp, &params, 777);
         val_points.push(((s + 1) * seg_steps, ve));

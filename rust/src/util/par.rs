@@ -1,20 +1,26 @@
-//! Deterministic scoped-thread fan-out shared by every parallel kernel
-//! in the crate: the GEMM row chunks (`linalg::gemm_into`), the SONew
-//! per-tensor block scans (`sonew::{TridiagState, BandedState}::step`)
-//! and the per-block optimizer step (`optim::Opt::step`).
+//! Deterministic fan-out shared by every parallel kernel in the crate:
+//! the GEMM row chunks (`linalg::gemm_into`), the SONew per-tensor
+//! block scans (`sonew::{TridiagState, BandedState}::step`) and the
+//! per-block optimizer step (`optim::Opt::step`).
 //!
 //! The discipline: split the work items into at most `threads`
-//! contiguous groups *in order* and run each group on its own scoped
-//! thread (inline when one group suffices). Grouping is a pure function
-//! of `(items.len(), threads)` — never of load or timing — so any
-//! per-item computation that is itself deterministic stays bitwise
-//! deterministic at every thread count: each item sees exactly the same
-//! inputs and performs exactly the same arithmetic regardless of which
-//! thread runs it.
+//! contiguous groups *in order* and run each group as one job on the
+//! persistent pool (`runtime::executor`), inline when one group
+//! suffices. Grouping is a pure function of `(items.len(), threads)` —
+//! never of load, timing or pool size — so any per-item computation
+//! that is itself deterministic stays bitwise deterministic at every
+//! thread count: each item sees exactly the same inputs and performs
+//! exactly the same arithmetic regardless of which thread runs it.
+//!
+//! Execution rides the long-lived `runtime::Executor` workers; nothing
+//! on this path spawns or joins threads per call (the scoped-thread
+//! fan-out this module once was).
 
-/// Run `f` over every item, fanned out across at most `threads` scoped
-/// threads in contiguous in-order groups. `threads <= 1` (or a single
-/// item) runs inline on the calling thread in item order.
+use crate::runtime::executor::{self, Task};
+
+/// Run `f` over every item, fanned out across at most `threads`
+/// contiguous in-order groups on the persistent executor. `threads <= 1`
+/// (or a single item) runs inline on the calling thread in item order.
 pub fn run_chunked<T: Send>(items: Vec<T>, threads: usize, f: impl Fn(T) + Sync) {
     let threads = threads.max(1);
     if threads == 1 || items.len() <= 1 {
@@ -25,18 +31,18 @@ pub fn run_chunked<T: Send>(items: Vec<T>, threads: usize, f: impl Fn(T) + Sync)
     }
     let per = items.len().div_ceil(threads);
     let f = &f;
-    std::thread::scope(|s| {
-        let mut items = items;
-        while !items.is_empty() {
-            let take = per.min(items.len());
-            let group: Vec<T> = items.drain(..take).collect();
-            s.spawn(move || {
-                for it in group {
-                    f(it);
-                }
-            });
-        }
-    });
+    let mut items = items;
+    let mut jobs: Vec<Task<'_>> = Vec::with_capacity(threads);
+    while !items.is_empty() {
+        let take = per.min(items.len());
+        let group: Vec<T> = items.drain(..take).collect();
+        jobs.push(Box::new(move || {
+            for it in group {
+                f(it);
+            }
+        }));
+    }
+    executor::global().scope(jobs);
 }
 
 #[cfg(test)]
@@ -62,5 +68,27 @@ mod tests {
         let items = vec![&mut hit];
         run_chunked(items, 8, |h| *h += 1);
         assert_eq!(hit, 1);
+    }
+
+    #[test]
+    fn groups_execute_their_items_in_ascending_order() {
+        // the contiguous grouping contract: at (11 items, 3 threads) the
+        // groups are [0..4), [4..8), [8..11) and each group's items run
+        // in ascending order on one thread, whatever interleaving the
+        // pool produces across groups
+        use std::sync::Mutex;
+        let order = Mutex::new(Vec::<usize>::new());
+        run_chunked((0..11).collect(), 3, |i| order.lock().unwrap().push(i));
+        let order = order.into_inner().unwrap();
+        assert_eq!(order.len(), 11);
+        for group in [0usize..4, 4..8, 8..11] {
+            let pos: Vec<usize> = group
+                .map(|i| order.iter().position(|&x| x == i).unwrap())
+                .collect();
+            assert!(
+                pos.windows(2).all(|w| w[0] < w[1]),
+                "group items ran out of order: {order:?}"
+            );
+        }
     }
 }

@@ -1,0 +1,162 @@
+//! Execution API v1 acceptance tests.
+//!
+//! 1. Sweep sharding determinism: the parallel `SweepScheduler` at
+//!    1/2/max workers returns the identical best trial, objective and
+//!    evaluated/discarded counts as serial `random_search` with the
+//!    same seed — on a real (miniature) training objective.
+//! 2. Executor stress: `run_chunked` over the persistent pool matches
+//!    inline execution under concurrent mixed-size load, and the
+//!    GEMM / SONew kernels stay bitwise-deterministic while the pool
+//!    is shared and busy.
+
+use sonew::coordinator::sweep::{random_search, SearchSpace, SweepScheduler, Trial};
+use sonew::coordinator::{Schedule, TrainConfig, TrainSession};
+use sonew::optim::{HyperParams, OptSpec};
+
+/// Miniature of the CLI sweep objective: a fixed-seed small-AE training
+/// run — deterministic per trial by construction (fixed seeds, bitwise
+/// kernels at any thread count), with a deterministic divergence band
+/// so discard accounting is exercised.
+fn ae_objective(trial: &Trial) -> f32 {
+    // the band sits at the search box's log-median, so a 12-trial sweep
+    // all but surely samples both sides of it
+    if trial.lr > 1e-4 {
+        return f32::NAN;
+    }
+    let mlp = sonew::models::Mlp::new(&[49, 24, 49]);
+    let mut rng = sonew::util::Rng::new(0);
+    let params = mlp.init(&mut rng);
+    let mats = sonew::tables::autoencoder::cap_mat_blocks(&mlp.mat_blocks(), 128);
+    let mut opt = match trial.build(mlp.total, &mlp.blocks(), &mats) {
+        Ok(o) => o,
+        Err(_) => return f32::NAN,
+    };
+    let tc = TrainConfig {
+        steps: 4,
+        schedule: Schedule::Constant { lr: trial.lr },
+        ..Default::default()
+    };
+    let provider = sonew::coordinator::trainer::NativeAeProvider {
+        mlp: mlp.clone(),
+        images: sonew::data::SynthImages::new(1),
+        batch: 16,
+    };
+    match TrainSession::ephemeral(&mut opt, params, provider, tc).finish() {
+        Ok((_, m)) => m.tail_mean_loss(2).unwrap_or(f32::NAN),
+        Err(_) => f32::NAN,
+    }
+}
+
+#[test]
+fn sweep_sharding_reproduces_serial_bitwise() {
+    let spec = OptSpec::parse("adam").unwrap();
+    let space = SearchSpace::default();
+    let base = HyperParams::default();
+    let trials = 12;
+    let seed = 7;
+    let serial = random_search(&spec, &space, &base, trials, seed, ae_objective).unwrap();
+    assert!(serial.discarded > 0, "divergence band never hit; weak test");
+    assert!(serial.evaluated > 0);
+    let max = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(4);
+    for workers in [1usize, 2, max.max(3)] {
+        let par = SweepScheduler::new(workers)
+            .run(&spec, &space, &base, trials, seed, ae_objective)
+            .unwrap();
+        assert_eq!(par.best_index, serial.best_index, "workers={workers}");
+        assert_eq!(
+            par.best_objective.to_bits(),
+            serial.best_objective.to_bits(),
+            "workers={workers}"
+        );
+        assert_eq!(par.best.lr.to_bits(), serial.best.lr.to_bits(), "workers={workers}");
+        assert_eq!(
+            par.best.hp.beta1.to_bits(),
+            serial.best.hp.beta1.to_bits(),
+            "workers={workers}"
+        );
+        assert_eq!(
+            par.best.hp.beta2.to_bits(),
+            serial.best.hp.beta2.to_bits(),
+            "workers={workers}"
+        );
+        assert_eq!(par.best.hp.eps.to_bits(), serial.best.hp.eps.to_bits(), "workers={workers}");
+        assert_eq!(par.evaluated, serial.evaluated, "workers={workers}");
+        assert_eq!(par.discarded, serial.discarded, "workers={workers}");
+        assert_eq!(par.trials.len(), serial.trials.len(), "workers={workers}");
+        for (a, b) in par.trials.iter().zip(&serial.trials) {
+            assert_eq!(a.index, b.index, "workers={workers}");
+            assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "workers={workers}");
+            assert_eq!(a.diverged, b.diverged, "workers={workers}");
+        }
+    }
+}
+
+#[test]
+fn run_chunked_over_executor_matches_inline_under_stress() {
+    // hammer the persistent pool from several threads at once with
+    // mixed-size batches at mixed thread counts; every fan-out must
+    // produce exactly the inline (threads = 1) result
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            s.spawn(move || {
+                for round in 0..50usize {
+                    let n = 1 + (round * 7 + t as usize) % 97;
+                    let mut out = vec![0u64; n];
+                    let items: Vec<(usize, &mut u64)> = out.iter_mut().enumerate().collect();
+                    sonew::util::par::run_chunked(items, 1 + round % 8, |(i, slot)| {
+                        *slot = (t + 1) * (i as u64 + 1);
+                    });
+                    for (i, &v) in out.iter().enumerate() {
+                        assert_eq!(v, (t + 1) * (i as u64 + 1), "t={t} round={round} i={i}");
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn gemm_and_sonew_stay_bitwise_on_the_shared_pool() {
+    use sonew::linalg::{matmul, Mat};
+    use sonew::sonew::{LambdaMode, TridiagState};
+    use sonew::util::Precision;
+
+    // the same GEMM recomputed concurrently on the shared pool (past
+    // the 2e6-flop parallel gate) must return identical bits every time
+    let mut rng = sonew::util::Rng::new(3);
+    let a = Mat::from_rows(128, 128, rng.normal_vec(128 * 128));
+    let b = Mat::from_rows(128, 128, rng.normal_vec(128 * 128));
+    let want = matmul(&a, &b);
+    std::thread::scope(|s| {
+        for _ in 0..3 {
+            let (a, b, want) = (&a, &b, &want);
+            s.spawn(move || {
+                for _ in 0..20 {
+                    let c = matmul(a, b);
+                    assert!(
+                        c.data.iter().zip(&want.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+                        "GEMM drifted under concurrent pool load"
+                    );
+                }
+            });
+        }
+    });
+
+    // tridiag block-parallel step (pool path) equals pinned-sequential
+    let n = 16 * 1024;
+    let ids: Vec<f32> = (0..n).map(|j| (j * 8 / n) as f32).collect();
+    let g = sonew::util::Rng::new(4).normal_vec(n);
+    let mut u_seq = vec![0.0f32; n];
+    let mut u_par = vec![0.0f32; n];
+    let mut st_seq = TridiagState::new(n, Some(&ids));
+    st_seq.parallel = false;
+    let mut st_par = TridiagState::new(n, Some(&ids));
+    for _ in 0..3 {
+        st_seq.step(&g, &mut u_seq, LambdaMode::Ema(0.95), 1e-6, 0.0, Precision::F32);
+        st_par.step(&g, &mut u_par, LambdaMode::Ema(0.95), 1e-6, 0.0, Precision::F32);
+    }
+    assert!(
+        u_seq.iter().zip(&u_par).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "SONew block-parallel scan drifted from sequential on the pool"
+    );
+}
