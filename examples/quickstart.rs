@@ -29,7 +29,7 @@ fn main() -> anyhow::Result<()> {
         verbose: true,
         ..Default::default()
     };
-    let provider = NativeAeProvider { mlp: mlp.clone(), images: SynthImages::new(1), batch: 64 };
+    let provider = NativeAeProvider::new(mlp.clone(), SynthImages::new(1), 64);
     // the one training engine (Execution API v1): every run — CLI,
     // tables, sweeps — is a TrainSession; this one is ephemeral (no
     // checkpointing), the serving shape adds --checkpoint/--resume

@@ -19,6 +19,9 @@
 //!           kernel it feeds
 //!   [hlo]   PJRT execution overhead of the AOT artifacts (xla feature +
 //!           artifacts present; skipped otherwise)
+//!   [pipeline] staged TrainSession loop: overlapped (prefetch +
+//!           background checkpoint writer) vs strictly synchronous step
+//!           time on the LM workload, and the checkpoint-boundary stall
 //!
 //!     cargo bench                # all sections
 //!     cargo bench -- gemm        # one section
@@ -507,6 +510,74 @@ fn main() {
             );
         }
         }
+    }
+
+    if run("pipeline") {
+        println!("== [pipeline] staged train loop: overlapped vs synchronous ==");
+        // the LM workload from the [lm] section driven through the one
+        // training engine, pipeline on vs off — results are bitwise
+        // identical (tests/pipeline.rs), so the only difference is time.
+        // Sessions are stateful, so each mode is timed over one run
+        // rather than through bench()'s repeat harness.
+        let steps: u64 = if smoke { 8 } else { 40 };
+        let ck_every: u64 = 4;
+        let dir = std::env::temp_dir().join("sonew_bench_pipeline");
+        std::fs::remove_dir_all(&dir).ok();
+        let time_run = |pipeline: bool, checkpoint: bool| -> (f64, f64) {
+            let model = Transformer::new(LmConfig::small());
+            let params = model.init(5);
+            let blocks = sonew::optim::blocks_of(&model.layout);
+            let mats = sonew::optim::mat_blocks_of(&model.layout);
+            let spec = OptSpec::parse("adam").unwrap();
+            let opt = spec
+                .build(model.total, &blocks, &mats, &HyperParams::default())
+                .unwrap();
+            let provider = sonew::coordinator::trainer::BackendLmProvider::new(
+                Box::new(NativeBackend::new()),
+                "lm_small_grads",
+                sonew::data::LmCorpus::new(model.cfg.vocab, 6),
+                4,
+                model.cfg.seq,
+            );
+            let cfg = sonew::coordinator::SessionConfig {
+                train: sonew::coordinator::TrainConfig {
+                    steps,
+                    schedule: sonew::coordinator::Schedule::Constant { lr: 1e-3 },
+                    ..Default::default()
+                },
+                checkpoint_every: if checkpoint { ck_every } else { 0 },
+                checkpoint_path: checkpoint.then(|| dir.join(format!("bench_{pipeline}.ck"))),
+                resume_from: None,
+                pipeline,
+            };
+            let mut s = sonew::coordinator::TrainSession::new(spec, opt, params, provider, cfg)
+                .unwrap();
+            let t = std::time::Instant::now();
+            let m = s.run().unwrap();
+            let step_us = t.elapsed().as_nanos() as f64 / 1000.0 / steps as f64;
+            let boundaries = (steps / ck_every).max(1);
+            let stall_us = m.ckpt_time.as_nanos() as f64 / 1000.0 / boundaries as f64;
+            (step_us, stall_us)
+        };
+        // warm the executor + backend caches so neither mode pays
+        // first-touch costs
+        let _ = time_run(true, false);
+        let (sync_us, _) = time_run(false, false);
+        let (pipe_us, _) = time_run(true, false);
+        println!("    lm step synchronous : {sync_us:.1} us/step");
+        println!("    lm step overlapped  : {pipe_us:.1} us/step");
+        let sp = sync_us / pipe_us;
+        println!("    prefetch overlap speedup: {sp:.2}x");
+        rec.derive("pipeline_lm_step_us_sync".to_string(), sync_us);
+        rec.derive("pipeline_lm_step_us_overlapped".to_string(), pipe_us);
+        rec.derive("pipeline_overlap_speedup".to_string(), sp);
+        let (_, stall_sync) = time_run(false, true);
+        let (_, stall_pipe) = time_run(true, true);
+        println!("    checkpoint stall synchronous: {stall_sync:.1} us/boundary");
+        println!("    checkpoint stall overlapped : {stall_pipe:.1} us/boundary");
+        rec.derive("pipeline_ckpt_stall_us_sync".to_string(), stall_sync);
+        rec.derive("pipeline_ckpt_stall_us_overlapped".to_string(), stall_pipe);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     let out = std::env::var("SONEW_BENCH_OUT").unwrap_or_else(|_| "BENCH_latest.json".into());

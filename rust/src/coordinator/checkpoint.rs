@@ -37,16 +37,17 @@ pub struct Checkpoint {
     pub data_state: Vec<u8>,
 }
 
-/// Write a checkpoint atomically: stream into a sibling `.tmp` file,
-/// flush, then rename over the target. A crash mid-write (the exact
-/// failure checkpoints exist to survive) leaves the previous checkpoint
-/// intact instead of a truncated file — `TrainSession` overwrites the
-/// same path every `checkpoint_every` steps, so in-place truncate-then-
-/// write would put the only copy at risk on every save.
-fn write_atomic(
-    path: &Path,
-    body: impl FnOnce(&mut std::io::BufWriter<std::fs::File>) -> Result<()>,
-) -> Result<()> {
+/// Write pre-serialized checkpoint bytes atomically: stream into a
+/// sibling `.tmp` file, fsync, rename over the target, then fsync the
+/// parent directory. A crash mid-write (the exact failure checkpoints
+/// exist to survive) leaves the previous checkpoint intact instead of a
+/// truncated file — `TrainSession` overwrites the same path every
+/// `checkpoint_every` steps, so in-place truncate-then-write would put
+/// the only copy at risk on every save. Taking bytes rather than a
+/// writer callback is what lets the session serialize synchronously
+/// (the exact-resume snapshot) and ship the I/O to a background worker.
+pub fn write_atomic_bytes(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
+    let path = path.as_ref();
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent).ok();
     }
@@ -57,34 +58,122 @@ fn write_atomic(
     // pid-unique temp name: two processes checkpointing the same path
     // must not truncate each other's in-flight temp file
     let tmp = path.with_file_name(format!("{file_name}.{}.tmp", std::process::id()));
-    let f = std::fs::File::create(&tmp)
-        .with_context(|| format!("creating {}", tmp.display()))?;
-    let mut w = std::io::BufWriter::new(f);
-    let result = body(&mut w)
-        .and_then(|()| w.flush().map_err(Into::into))
-        // flush() only empties the BufWriter into the page cache; force
-        // the data to disk before the rename makes the new file visible,
-        // so a crash never replaces a good checkpoint with a hollow one
-        .and_then(|()| w.get_ref().sync_all().map_err(Into::into));
-    drop(w);
-    if let Err(e) = result {
+    let write = || -> Result<()> {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        // force the data to disk (not just the page cache) before the
+        // rename makes the new file visible, so a crash never replaces
+        // a good checkpoint with a hollow one
+        f.sync_all()
+            .with_context(|| format!("fsync {}", tmp.display()))?;
+        Ok(())
+    };
+    if let Err(e) = write() {
         std::fs::remove_file(&tmp).ok();
         return Err(e);
     }
     std::fs::rename(&tmp, path)
         .with_context(|| format!("replacing {}", path.display()))?;
+    // the rename is directory metadata: without syncing the directory
+    // itself, a power failure can forget the new entry and lose the
+    // checkpoint the data fsync above protected
+    #[cfg(unix)]
+    {
+        let dir = match path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p,
+            _ => Path::new("."),
+        };
+        std::fs::File::open(dir)
+            .and_then(|d| d.sync_all())
+            .with_context(|| format!("fsync directory {}", dir.display()))?;
+    }
     Ok(())
 }
 
-/// Write a v1 (params-only) checkpoint. Sections use the shared
+/// Remove stale `<file>.<pid>.tmp` siblings of `path` left behind by
+/// runs that crashed mid-checkpoint (the atomic protocol cleans up
+/// after itself on every non-crash path, so anything matching the
+/// pattern with a dead owner is garbage). Temp files whose owning pid
+/// is still alive — a concurrent run checkpointing the same path — are
+/// left alone, as is this process's own. Returns the number removed;
+/// I/O errors are swallowed (sweeping is best-effort hygiene).
+pub fn sweep_stale_tmps(path: impl AsRef<Path>) -> usize {
+    let path = path.as_ref();
+    let (Some(file_name), Some(parent)) = (path.file_name(), path.parent()) else {
+        return 0;
+    };
+    let parent = if parent.as_os_str().is_empty() { Path::new(".") } else { parent };
+    let prefix = format!("{}.", file_name.to_string_lossy());
+    let Ok(entries) = std::fs::read_dir(parent) else {
+        return 0;
+    };
+    let mut removed = 0;
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let Some(rest) = name.strip_prefix(&prefix) else {
+            continue;
+        };
+        let Some(pid_str) = rest.strip_suffix(".tmp") else {
+            continue;
+        };
+        let Ok(pid) = pid_str.parse::<u32>() else {
+            continue;
+        };
+        if pid == std::process::id() {
+            continue;
+        }
+        // a live owner means an in-flight write, not a crash leftover
+        #[cfg(target_os = "linux")]
+        if Path::new(&format!("/proc/{pid}")).exists() {
+            continue;
+        }
+        if std::fs::remove_file(entry.path()).is_ok() {
+            removed += 1;
+        }
+    }
+    removed
+}
+
+/// Serialize a v1 (params-only) checkpoint. Sections use the shared
 /// `optim::state` codec: little-endian per element, length-prefixed.
+fn encode_v1(step: u64, params: &[f32]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(8 + 8 + 8 + 4 * params.len());
+    buf.extend_from_slice(MAGIC_V1);
+    buf.extend_from_slice(&step.to_le_bytes());
+    codec::write_f32s(&mut buf, params).expect("writing to a Vec cannot fail");
+    buf
+}
+
+/// Serialize a v2 checkpoint (params + optimizer state + data-stream
+/// state) to bytes. Split from the file write so `TrainSession` can
+/// snapshot the bytes on the training thread and hand them to a
+/// background writer without racing later state mutations.
+pub fn encode_v2(
+    step: u64,
+    spec: &str,
+    params: &[f32],
+    opt_state: &[u8],
+    data_state: &[u8],
+) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(
+        8 + 8 + 4 * 8 + spec.len() + 4 * params.len() + opt_state.len() + data_state.len(),
+    );
+    buf.extend_from_slice(MAGIC_V2);
+    buf.extend_from_slice(&step.to_le_bytes());
+    let w = &mut buf;
+    codec::write_bytes(w, spec.as_bytes()).expect("writing to a Vec cannot fail");
+    codec::write_f32s(w, params).expect("writing to a Vec cannot fail");
+    codec::write_bytes(w, opt_state).expect("writing to a Vec cannot fail");
+    codec::write_bytes(w, data_state).expect("writing to a Vec cannot fail");
+    buf
+}
+
+/// Write a v1 (params-only) checkpoint atomically.
 pub fn save(path: impl AsRef<Path>, step: u64, params: &[f32]) -> Result<()> {
-    write_atomic(path.as_ref(), |f| {
-        f.write_all(MAGIC_V1)?;
-        f.write_all(&step.to_le_bytes())?;
-        codec::write_f32s(f, params)?;
-        Ok(())
-    })
+    write_atomic_bytes(path, &encode_v1(step, params))
 }
 
 /// Write a v2 checkpoint (params + optimizer state + data-stream state).
@@ -96,15 +185,7 @@ pub fn save_v2(
     opt_state: &[u8],
     data_state: &[u8],
 ) -> Result<()> {
-    write_atomic(path.as_ref(), |f| {
-        f.write_all(MAGIC_V2)?;
-        f.write_all(&step.to_le_bytes())?;
-        codec::write_bytes(f, spec.as_bytes())?;
-        codec::write_f32s(f, params)?;
-        codec::write_bytes(f, opt_state)?;
-        codec::write_bytes(f, data_state)?;
-        Ok(())
-    })
+    write_atomic_bytes(path, &encode_v2(step, spec, params, opt_state, data_state))
 }
 
 /// Bounded section reader for the `optim::state` on-disk conventions
@@ -293,6 +374,55 @@ mod tests {
             .collect();
         assert!(leftovers.is_empty(), "{leftovers:?}");
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn save_v2_bytes_match_encode_v2() {
+        // the async path writes encode_v2 bytes through a background
+        // writer; they must be exactly what the sync path puts on disk
+        let dir = std::env::temp_dir().join("sonew_ckpt_test_enc");
+        let path = dir.join("enc.ck");
+        let params = [0.25f32, -7.5, 3.0];
+        save_v2(&path, 11, "adam", &params, &[5, 6], &[7]).unwrap();
+        let on_disk = std::fs::read(&path).unwrap();
+        assert_eq!(on_disk, encode_v2(11, "adam", &params, &[5, 6], &[7]));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn sweep_removes_dead_pid_tmps_and_keeps_everything_else() {
+        let dir = std::env::temp_dir().join("sonew_ckpt_test_sweep");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.ck");
+        save(&path, 1, &[1.0]).unwrap();
+        // a crash leftover: tmp owned by a pid that cannot be alive
+        // (u32::MAX is far beyond any real pid_max)
+        let stale = dir.join(format!("run.ck.{}.tmp", u32::MAX));
+        std::fs::write(&stale, b"truncated garbage").unwrap();
+        // our own pid's tmp (an in-flight write) must survive
+        let own = dir.join(format!("run.ck.{}.tmp", std::process::id()));
+        std::fs::write(&own, b"in flight").unwrap();
+        // unrelated siblings must survive
+        let other = dir.join("other.ck");
+        std::fs::write(&other, b"different checkpoint").unwrap();
+        let odd = dir.join("run.ck.notapid.tmp");
+        std::fs::write(&odd, b"not ours to judge").unwrap();
+
+        assert_eq!(sweep_stale_tmps(&path), 1);
+        assert!(!stale.exists(), "dead-pid tmp must be swept");
+        assert!(own.exists());
+        assert!(other.exists());
+        assert!(odd.exists());
+        assert!(path.exists(), "the checkpoint itself is untouched");
+        // idempotent
+        assert_eq!(sweep_stale_tmps(&path), 0);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn sweep_of_a_missing_directory_is_a_no_op() {
+        let path = std::env::temp_dir().join("sonew_ckpt_no_such_dir").join("x.ck");
+        assert_eq!(sweep_stale_tmps(&path), 0);
     }
 
     #[test]

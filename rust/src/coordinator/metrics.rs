@@ -19,9 +19,16 @@ pub struct Point {
 pub struct Metrics {
     pub points: Vec<Point>,
     start: Instant,
+    /// batch preparation (the pipeline's data stage; wall time as the
+    /// training thread saw it — overlapped prefetch that finished before
+    /// the step needed its batch costs ~0 here)
+    pub data_time: Duration,
     pub grad_time: Duration,
     pub opt_time: Duration,
     pub allreduce_time: Duration,
+    /// checkpoint stalls on the training thread: state serialization
+    /// plus any wait for a background write still in flight
+    pub ckpt_time: Duration,
     /// extra named scalars recorded at the end (val accuracy etc.)
     pub finals: Vec<(String, f64)>,
 }
@@ -31,9 +38,11 @@ impl Default for Metrics {
         Self {
             points: vec![],
             start: Instant::now(),
+            data_time: Duration::ZERO,
             grad_time: Duration::ZERO,
             opt_time: Duration::ZERO,
             allreduce_time: Duration::ZERO,
+            ckpt_time: Duration::ZERO,
             finals: vec![],
         }
     }
@@ -82,6 +91,19 @@ impl Metrics {
 
     pub fn total_wall(&self) -> Duration {
         self.start.elapsed()
+    }
+
+    /// One-line per-stage wall-time attribution as seen by the training
+    /// thread — the session-summary view of where the steps went. An
+    /// effective pipeline shows near-zero data-prep and checkpoint-wait.
+    pub fn stage_summary(&self) -> String {
+        format!(
+            "stages: data-prep {:.3}s | forward/backward {:.3}s | opt-step {:.3}s | checkpoint-wait {:.3}s",
+            self.data_time.as_secs_f64(),
+            self.grad_time.as_secs_f64(),
+            self.opt_time.as_secs_f64(),
+            self.ckpt_time.as_secs_f64(),
+        )
     }
 
     /// First step at which the loss drops to `target` or below (the
@@ -139,6 +161,17 @@ mod tests {
         all_nan.record(0, f32::NAN, 0.1);
         assert!(all_nan.best_loss().unwrap().is_nan());
         assert!(Metrics::default().best_loss().is_none());
+    }
+
+    #[test]
+    fn stage_summary_names_every_stage() {
+        let mut m = Metrics::default();
+        m.data_time += Duration::from_millis(5);
+        m.ckpt_time += Duration::from_millis(2);
+        let s = m.stage_summary();
+        for stage in ["data-prep", "forward/backward", "opt-step", "checkpoint-wait"] {
+            assert!(s.contains(stage), "{s}");
+        }
     }
 
     #[test]

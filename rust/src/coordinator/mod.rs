@@ -13,7 +13,7 @@ pub mod trainer;
 use anyhow::Result;
 
 pub use metrics::Metrics;
-pub use parallel::{GradProvider, WorkerPool};
+pub use parallel::{Batch, GradProvider, Prefetch, WorkerPool};
 pub use schedule::Schedule;
 pub use sweep::{random_search, SearchSpace, SweepResult, SweepScheduler, Trial, TrialRecord};
 pub use trainer::{

@@ -20,15 +20,72 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
+
+use crate::linalg::Mat;
+use crate::runtime::HostTensor;
+
+/// One prepared gradient input: everything the compute stage needs that
+/// the data stage drew from the stream. Splitting a provider's
+/// `next_loss_and_grad` into `prepare -> Batch -> consume` is what lets
+/// `TrainSession` draw batch k+1 on a pipeline worker while batch k is
+/// still in the forward/backward pass.
+#[derive(Debug, Clone)]
+pub enum Batch {
+    /// Dense feature rows plus labels, the native-model shape (labels
+    /// are empty for reconstruction losses).
+    Dense { x: Mat, labels: Vec<usize> },
+    /// Positional host tensors for a backend gradient program.
+    Tensors(Vec<HostTensor>),
+}
+
+/// The thread-shareable data half of a pipelined provider. Implemented
+/// by the provider's *batch source* (its data stream behind a lock),
+/// not necessarily by the provider itself: the compute half — a PJRT
+/// client, a closure — is often not `Sync`, and the pipeline only ever
+/// moves the data half across threads.
+pub trait Prefetch: Sync {
+    /// Draw the next batch from the stream. Advances the stream
+    /// position exactly as [`GradProvider::prepare`] would.
+    fn prepare_batch(&self) -> Result<Batch>;
+}
 
 /// A per-worker gradient source: owns its data shard and (for the
 /// backend path) its runtime `Backend` handle. Not required to be
 /// `Send`: providers are constructed *inside* their worker thread (PJRT
 /// clients are thread-affine), so only the factory crosses threads.
+///
+/// A provider may implement just `next_loss_and_grad` (the one-shot
+/// shape — closures, tests) or the `prepare`/`consume` split, in which
+/// case the default `next_loss_and_grad` composes them. Providers whose
+/// data half is additionally `Sync` opt into pipelined prefetch by
+/// returning it from `as_prefetch`.
 pub trait GradProvider {
     /// Compute (loss, grads) for the next minibatch at `params`.
-    fn next_loss_and_grad(&mut self, params: &[f32]) -> Result<(f32, Vec<f32>)>;
+    fn next_loss_and_grad(&mut self, params: &[f32]) -> Result<(f32, Vec<f32>)> {
+        let batch = self.prepare()?;
+        self.consume(batch, params)
+    }
+
+    /// Stage 1: draw the next batch from the data stream. Cheap to call
+    /// off the critical path; the only provider state it may touch is
+    /// the stream position.
+    fn prepare(&self) -> Result<Batch> {
+        bail!("this GradProvider has no prepare/consume split")
+    }
+
+    /// Stage 2: compute (loss, grads) for a previously prepared batch
+    /// at `params`. Must not advance the data stream.
+    fn consume(&self, _batch: Batch, _params: &[f32]) -> Result<(f32, Vec<f32>)> {
+        bail!("this GradProvider has no prepare/consume split")
+    }
+
+    /// The `Sync` face of the data half, if this provider supports
+    /// prefetching its batches on a pipeline worker. `None` (the
+    /// default) keeps the provider on the strictly synchronous path.
+    fn as_prefetch(&self) -> Option<&dyn Prefetch> {
+        None
+    }
 }
 
 enum Cmd {

@@ -6,19 +6,40 @@
 //! `train_single` survive as thin compat wrappers that build an
 //! ephemeral session, so every training run in the repo — tables,
 //! examples, CLI, sweeps — goes through the same engine.
+//!
+//! The session loop is a *staged pipeline* on the persistent
+//! `runtime::Executor` (no per-step thread spawn/join):
+//!
+//! ```text
+//!  pipeline worker:   prepare(k+1)           [data-prep]
+//!  training thread:   consume(k) -> grads    [forward/backward]
+//!                     -> clip/quantize -> opt.step -> metrics
+//!  step boundary:     serialize state (sync, exact-resume snapshot)
+//!                     -> background writer: atomic tmp+fsync+rename
+//! ```
+//!
+//! Determinism contract: the prefetch lane draws exactly the batch the
+//! synchronous loop would have drawn next (one batch in flight, same
+//! stream order), and checkpoints snapshot the data-stream position
+//! *before* the prefetch advances it — so loss trajectories, RNG
+//! positions and checkpoint bytes are bitwise-identical with the
+//! pipeline on or off, at any `SONEW_THREADS` (asserted by
+//! `tests/pipeline.rs`).
 
 use std::path::PathBuf;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::linalg::norm2;
 use crate::optim::{Opt, OptSpec, Optimizer};
+use crate::runtime::executor::{self, JobHandle};
 use crate::util::Precision;
 
 use super::checkpoint;
 use super::metrics::Metrics;
-use super::parallel::{GradProvider, WorkerPool};
+use super::parallel::{Batch, GradProvider, Prefetch, WorkerPool};
 use super::schedule::Schedule;
 
 /// Training-loop configuration.
@@ -145,10 +166,12 @@ impl<P: StatefulProvider, O: Optimizer> Drop for ParamsBackstop<'_, P, O> {
 
 /// Core loop over an arbitrary gradient source.
 ///
-/// Compat wrapper (pre-Execution-API surface): runs an ephemeral
-/// [`TrainSession`] over the closure. Prefer constructing the session
-/// directly (`TrainSession::ephemeral(...).finish()`); this shape stays
-/// for callers that keep ownership of params and optimizer.
+/// **Deprecated surface** (pre-Execution-API; kept for callers that
+/// keep ownership of params and optimizer — not removed, but new code
+/// should construct the session directly:
+/// `TrainSession::ephemeral(...).finish()`). Runs an ephemeral
+/// [`TrainSession`] over the closure; closures cannot prefetch, so
+/// wrapper runs always take the strictly synchronous path.
 pub fn train_with(
     params: &mut Vec<f32>,
     opt: &mut dyn Optimizer,
@@ -163,7 +186,8 @@ pub fn train_with(
 
 /// Train against a data-parallel worker pool (broadcast + tree reduce).
 ///
-/// Compat wrapper over the [`TrainSession`] engine (see [`train_with`]).
+/// **Deprecated surface**: compat wrapper over the [`TrainSession`]
+/// engine — prefer sessions for new code (see [`train_with`]).
 pub fn train(
     params: &mut Vec<f32>,
     opt: &mut dyn Optimizer,
@@ -182,7 +206,10 @@ pub fn train(
 /// inline on the calling thread — no Send requirement, so backend
 /// providers (thread-affine PJRT clients) work directly.
 ///
-/// Compat wrapper over the [`TrainSession`] engine (see [`train_with`]).
+/// **Deprecated surface**: compat wrapper over the [`TrainSession`]
+/// engine — prefer sessions for new code (see [`train_with`]). The
+/// provider is driven through its one-shot `next_loss_and_grad` face,
+/// so wrapper runs never prefetch.
 pub fn train_single(
     params: &mut Vec<f32>,
     opt: &mut dyn Optimizer,
@@ -206,7 +233,7 @@ pub trait StatefulProvider: GradProvider {
 }
 
 /// Session configuration on top of the plain [`TrainConfig`].
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct SessionConfig {
     pub train: TrainConfig,
     /// write a v2 checkpoint every k completed steps (0 = only on
@@ -216,6 +243,24 @@ pub struct SessionConfig {
     pub checkpoint_path: Option<PathBuf>,
     /// restore from this checkpoint before the first step
     pub resume_from: Option<PathBuf>,
+    /// run the staged pipeline (default): prefetch the next batch on an
+    /// executor worker and hand periodic checkpoint writes to a
+    /// background writer. `false` forces the strictly synchronous loop.
+    /// Results are bitwise-identical either way — this knob trades
+    /// wall-clock for debuggability, never correctness.
+    pub pipeline: bool,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        Self {
+            train: TrainConfig::default(),
+            checkpoint_every: 0,
+            checkpoint_path: None,
+            resume_from: None,
+            pipeline: true,
+        }
+    }
 }
 
 /// The single training engine (Execution API v1): the training loop
@@ -258,6 +303,24 @@ impl<P: StatefulProvider, O: Optimizer> TrainSession<P, O> {
              checkpoints would be silently skipped",
             cfg.checkpoint_every
         );
+        if let Some(path) = &cfg.resume_from {
+            anyhow::ensure!(
+                path.is_file(),
+                "SessionConfig: no such checkpoint to resume from: {} — was the path \
+                 misspelled, or did the previous run never reach a checkpoint boundary?",
+                path.display()
+            );
+        }
+        // a run that crashed mid-write may have left `<name>.<pid>.tmp`
+        // siblings next to our checkpoint target; sweep them before the
+        // first write of this run so the directory only ever holds live
+        // temp files
+        if let Some(path) = &cfg.checkpoint_path {
+            let swept = checkpoint::sweep_stale_tmps(path);
+            if swept > 0 && cfg.train.verbose {
+                println!("  swept {swept} stale checkpoint temp file(s) near {}", path.display());
+            }
+        }
         let mut s = Self { spec: Some(spec), opt, params, provider, step: 0, cfg };
         if let Some(path) = s.cfg.resume_from.clone() {
             s.restore(&path)?;
@@ -284,6 +347,11 @@ impl<P: StatefulProvider, O: Optimizer> TrainSession<P, O> {
     /// restore params + step only, with a fresh optimizer state).
     pub fn restore(&mut self, path: impl AsRef<std::path::Path>) -> Result<()> {
         let path = path.as_ref();
+        anyhow::ensure!(
+            path.exists(),
+            "no such checkpoint: {}",
+            path.display()
+        );
         let ck = checkpoint::load_any(path)?;
         if let Some(spec) = &self.spec {
             if !ck.spec.is_empty() && ck.spec != spec.canonical() {
@@ -313,10 +381,12 @@ impl<P: StatefulProvider, O: Optimizer> TrainSession<P, O> {
         Ok(())
     }
 
-    /// Write a v2 checkpoint of the complete session state. Ephemeral
-    /// sessions (no spec) cannot checkpoint — construct with
-    /// [`TrainSession::new`] for the serving shape.
-    pub fn checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+    /// Serialize the complete session state to v2 checkpoint bytes.
+    /// `data_state` overrides the provider's live stream position when
+    /// given — the pipelined loop passes the position snapshotted
+    /// *before* the prefetch lane advanced it, keeping checkpoint bytes
+    /// identical to what the synchronous loop would write.
+    fn encode_checkpoint(&self, data_state: Option<&[u8]>) -> Result<Vec<u8>> {
         let spec = self.spec.as_ref().ok_or_else(|| {
             anyhow::anyhow!(
                 "ephemeral session has no optimizer spec to label a checkpoint; \
@@ -325,16 +395,33 @@ impl<P: StatefulProvider, O: Optimizer> TrainSession<P, O> {
         })?;
         let mut opt_state = Vec::new();
         self.opt.save_state(&mut opt_state)?;
-        let mut data_state = Vec::new();
-        self.provider.save_state(&mut data_state)?;
-        checkpoint::save_v2(
-            path,
+        let data_state = match data_state {
+            Some(d) => d.to_vec(),
+            None => {
+                let mut d = Vec::new();
+                self.provider.save_state(&mut d)?;
+                d
+            }
+        };
+        Ok(checkpoint::encode_v2(
             self.step,
             &spec.canonical(),
             &self.params,
             &opt_state,
             &data_state,
-        )
+        ))
+    }
+
+    /// Write a v2 checkpoint of the complete session state. Ephemeral
+    /// sessions (no spec) cannot checkpoint — construct with
+    /// [`TrainSession::new`] for the serving shape.
+    ///
+    /// This call is synchronous, and `run_steps`/`finish` drain any
+    /// background checkpoint write before returning — so after either,
+    /// no write is in flight and the file on disk is complete (the
+    /// `flush()` barrier of the async-checkpoint stage).
+    pub fn checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        checkpoint::write_atomic_bytes(path, &self.encode_checkpoint(None)?)
     }
 
     /// Steps remaining until `cfg.train.steps`.
@@ -344,29 +431,147 @@ impl<P: StatefulProvider, O: Optimizer> TrainSession<P, O> {
 
     /// Advance at most `k` steps (bounded by the configured total),
     /// writing periodic checkpoints per `checkpoint_every`.
+    ///
+    /// With `cfg.pipeline` (the default) this is the staged loop: while
+    /// step k runs its forward/backward on the calling thread, batch
+    /// k+1 is prepared on a persistent executor worker, and periodic
+    /// checkpoint writes happen on a background job (serialization
+    /// stays synchronous — the snapshot *is* the exact-resume state). A
+    /// background write error surfaces on the next step boundary, or at
+    /// the end-of-run barrier: `run_steps` never returns with a write
+    /// still in flight.
     pub fn run_steps(&mut self, k: u64) -> Result<Metrics> {
         let mut metrics = Metrics::default();
         let until = self.cfg.train.steps.min(self.step + k);
+        // at most one background checkpoint write in flight; the handle
+        // is local so any early return drains it (JobHandle's Drop is a
+        // completion barrier)
+        let mut ck_job: Option<JobHandle<Result<()>>> = None;
+        // the batch the pipeline prepared one step ahead
+        let mut prefetched: Option<Batch> = None;
+        // provider stream position after the *current* step's batch was
+        // drawn — what a checkpoint at this boundary must persist (the
+        // live provider may already be one batch ahead)
+        let mut stream_state: Option<Vec<u8>> = None;
+
         while self.step < until {
             let step = self.step;
-            let t_grad = std::time::Instant::now();
-            let (loss, grads) = self.provider.next_loss_and_grad(&self.params)?;
-            metrics.grad_time += t_grad.elapsed();
-            apply_step(
-                &mut self.params,
-                &mut self.opt,
-                &self.cfg.train,
-                step,
-                loss,
-                grads,
-                &mut metrics,
-            )?;
+            // reap a finished background write early so its error fails
+            // this step instead of hiding until the end-of-run barrier
+            if ck_job.as_ref().is_some_and(|j| j.is_done()) {
+                let reaped = ck_job.take().expect("checked is_some");
+                reaped.join().context("background checkpoint write failed")?;
+            }
+
+            let split = self.provider.as_prefetch().is_some();
+            if split {
+                // staged path: prepare -> (prefetch k+1 || consume k + step)
+                let batch = match prefetched.take() {
+                    Some(b) => b,
+                    None => {
+                        let t = Instant::now();
+                        let b = self.provider.prepare()?;
+                        metrics.data_time += t.elapsed();
+                        b
+                    }
+                };
+                // checkpointable sessions snapshot the stream position
+                // now, before the prefetch lane advances it past this
+                // step's boundary
+                if self.spec.is_some() && self.cfg.checkpoint_every > 0 {
+                    let mut buf = Vec::new();
+                    self.provider
+                        .save_state(&mut buf)
+                        .context("serializing data-stream state for checkpointing")?;
+                    stream_state = Some(buf);
+                }
+                let Self { provider, params, opt, cfg, .. } = self;
+                let provider: &P = provider;
+                let pf = if cfg.pipeline && step + 1 < until {
+                    provider.as_prefetch()
+                } else {
+                    None
+                };
+                let step_fg = || -> Result<()> {
+                    let t = Instant::now();
+                    let (loss, grads) = provider.consume(batch, params)?;
+                    metrics.grad_time += t.elapsed();
+                    apply_step(params, opt, &cfg.train, step, loss, grads, &mut metrics)
+                };
+                let (next, res) = match pf {
+                    Some(src) => {
+                        let (bg, fg) = executor::global().overlap(
+                            move || {
+                                let t = Instant::now();
+                                let b = src.prepare_batch();
+                                (b, t.elapsed())
+                            },
+                            step_fg,
+                        );
+                        let (b, spent) = bg;
+                        // data-prep cost as the training thread saw it:
+                        // the lane ran concurrently, so only the slice
+                        // not hidden behind the step would stall us —
+                        // but we attribute the full prepare time so the
+                        // stage summary stays meaningful at any overlap
+                        metrics.data_time += spent;
+                        (Some(b), fg)
+                    }
+                    None => (None, step_fg()),
+                };
+                res?;
+                if let Some(b) = next {
+                    prefetched = Some(b.context("prefetching the next batch failed")?);
+                }
+            } else {
+                // one-shot path (closures, custom providers): no split,
+                // no prefetch — identical to the historical loop
+                let t = Instant::now();
+                let (loss, grads) = self.provider.next_loss_and_grad(&self.params)?;
+                metrics.grad_time += t.elapsed();
+                apply_step(
+                    &mut self.params,
+                    &mut self.opt,
+                    &self.cfg.train,
+                    step,
+                    loss,
+                    grads,
+                    &mut metrics,
+                )?;
+                stream_state = None;
+            }
+
             self.step += 1;
             if self.cfg.checkpoint_every > 0 && self.step % self.cfg.checkpoint_every == 0 {
                 if let Some(path) = self.cfg.checkpoint_path.clone() {
-                    self.checkpoint(&path)?;
+                    let t = Instant::now();
+                    // the previous write is this write's barrier: at
+                    // most one in flight, completion in submission order
+                    if let Some(j) = ck_job.take() {
+                        j.join().context("background checkpoint write failed")?;
+                    }
+                    // serialize synchronously — the bytes are the
+                    // exact-resume snapshot at this boundary, immune to
+                    // whatever the next steps mutate
+                    let bytes = self.encode_checkpoint(stream_state.as_deref())?;
+                    if self.cfg.pipeline {
+                        ck_job = Some(
+                            executor::global()
+                                .submit(move || checkpoint::write_atomic_bytes(&path, &bytes)),
+                        );
+                    } else {
+                        checkpoint::write_atomic_bytes(&path, &bytes)?;
+                    }
+                    metrics.ckpt_time += t.elapsed();
                 }
             }
+        }
+        // flush barrier: never return with a write in flight, so the
+        // checkpoint on disk is complete once run_steps/finish returns
+        if let Some(j) = ck_job.take() {
+            let t = Instant::now();
+            j.join().context("background checkpoint write failed")?;
+            metrics.ckpt_time += t.elapsed();
         }
         Ok(metrics)
     }
@@ -388,33 +593,83 @@ impl<P: StatefulProvider, O: Optimizer> TrainSession<P, O> {
 // Providers
 // ---------------------------------------------------------------------------
 
+/// The `Sync` data half of the image-fed providers: the synthetic image
+/// stream behind a lock plus the batch geometry, so a pipeline worker
+/// can draw batch k+1 while the training thread consumes batch k. The
+/// lock is uncontended by construction — the session keeps at most one
+/// prepare in flight and never consumes concurrently with it.
+struct ImageSource {
+    images: Mutex<crate::data::SynthImages>,
+    batch: usize,
+    /// average-pool rows down to this many pixels (`None` = raw rows)
+    pool: Option<usize>,
+    /// emit one flat F32 tensor (backend programs) instead of Mat rows
+    flat: bool,
+}
+
+impl ImageSource {
+    fn save_state(&self, w: &mut dyn std::io::Write) -> std::io::Result<()> {
+        self.images.lock().unwrap().rng().save_state(w)
+    }
+    fn load_state(&self, r: &mut dyn std::io::Read) -> std::io::Result<()> {
+        self.images.lock().unwrap().rng_mut().load_state(r)
+    }
+}
+
+impl Prefetch for ImageSource {
+    fn prepare_batch(&self) -> Result<Batch> {
+        let mut images = self.images.lock().unwrap();
+        if self.flat {
+            let x = images.flat_batch(self.batch);
+            return Ok(Batch::Tensors(vec![crate::runtime::HostTensor::F32(x)]));
+        }
+        let (x, labels) = images.batch(self.batch);
+        let x = match self.pool {
+            Some(want) if want != x.cols => pool_to(&x, images.side, want),
+            _ => x,
+        };
+        Ok(Batch::Dense { x, labels })
+    }
+}
+
 /// Native autoencoder provider: synthetic MNIST batches through the
 /// pure-Rust MLP.
 pub struct NativeAeProvider {
-    pub mlp: crate::models::Mlp,
-    pub images: crate::data::SynthImages,
-    pub batch: usize,
+    mlp: crate::models::Mlp,
+    source: ImageSource,
+}
+
+impl NativeAeProvider {
+    pub fn new(mlp: crate::models::Mlp, images: crate::data::SynthImages, batch: usize) -> Self {
+        let pool = Some(mlp.dims[0]);
+        Self {
+            mlp,
+            source: ImageSource { images: Mutex::new(images), batch, pool, flat: false },
+        }
+    }
 }
 
 impl GradProvider for NativeAeProvider {
-    fn next_loss_and_grad(&mut self, params: &[f32]) -> Result<(f32, Vec<f32>)> {
-        let (x, _) = self.images.batch(self.batch);
-        let want = self.mlp.dims[0];
-        let x = if want == x.cols {
-            x
-        } else {
-            pool_to(&x, self.images.side, want)
+    fn prepare(&self) -> Result<Batch> {
+        self.source.prepare_batch()
+    }
+    fn consume(&self, batch: Batch, params: &[f32]) -> Result<(f32, Vec<f32>)> {
+        let Batch::Dense { x, .. } = batch else {
+            anyhow::bail!("NativeAeProvider expects a dense batch");
         };
         Ok(self.mlp.loss_and_grad(params, &x))
+    }
+    fn as_prefetch(&self) -> Option<&dyn Prefetch> {
+        Some(&self.source)
     }
 }
 
 impl StatefulProvider for NativeAeProvider {
     fn save_state(&self, w: &mut dyn std::io::Write) -> std::io::Result<()> {
-        self.images.rng().save_state(w)
+        self.source.save_state(w)
     }
     fn load_state(&mut self, r: &mut dyn std::io::Read) -> std::io::Result<()> {
-        self.images.rng_mut().load_state(r)
+        self.source.load_state(r)
     }
 }
 
@@ -446,32 +701,68 @@ fn pool_to(x: &crate::linalg::Mat, side: usize, want: usize) -> crate::linalg::M
 /// Backend autoencoder provider: batches executed through any runtime
 /// [`Backend`](crate::runtime::Backend) — the native model zoo or PJRT
 /// artifacts. The backend is owned by the provider (PJRT clients are
-/// thread-affine); workers construct their own backend inside their
-/// thread.
+/// thread-affine) and only its *data half* crosses threads: the
+/// pipeline prefetches image batches, never backend calls.
 pub struct BackendAeProvider {
-    pub backend: Box<dyn crate::runtime::Backend>,
-    pub program: String,
-    pub images: crate::data::SynthImages,
-    pub batch: usize,
+    backend: Box<dyn crate::runtime::Backend>,
+    program: String,
+    source: ImageSource,
+}
+
+impl BackendAeProvider {
+    pub fn new(
+        backend: Box<dyn crate::runtime::Backend>,
+        program: impl Into<String>,
+        images: crate::data::SynthImages,
+        batch: usize,
+    ) -> Self {
+        Self {
+            backend,
+            program: program.into(),
+            source: ImageSource { images: Mutex::new(images), batch, pool: None, flat: true },
+        }
+    }
 }
 
 impl GradProvider for BackendAeProvider {
-    fn next_loss_and_grad(&mut self, params: &[f32]) -> Result<(f32, Vec<f32>)> {
-        let x = self.images.flat_batch(self.batch);
-        self.backend.loss_and_grad(
-            &self.program,
-            params,
-            vec![crate::runtime::HostTensor::F32(x)],
-        )
+    fn prepare(&self) -> Result<Batch> {
+        self.source.prepare_batch()
+    }
+    fn consume(&self, batch: Batch, params: &[f32]) -> Result<(f32, Vec<f32>)> {
+        let Batch::Tensors(inputs) = batch else {
+            anyhow::bail!("BackendAeProvider expects a tensor batch");
+        };
+        self.backend.loss_and_grad(&self.program, params, inputs)
+    }
+    fn as_prefetch(&self) -> Option<&dyn Prefetch> {
+        Some(&self.source)
     }
 }
 
 impl StatefulProvider for BackendAeProvider {
     fn save_state(&self, w: &mut dyn std::io::Write) -> std::io::Result<()> {
-        self.images.rng().save_state(w)
+        self.source.save_state(w)
     }
     fn load_state(&mut self, r: &mut dyn std::io::Read) -> std::io::Result<()> {
-        self.images.rng_mut().load_state(r)
+        self.source.load_state(r)
+    }
+}
+
+/// The `Sync` data half of the LM provider: token batches from the
+/// synthetic corpus behind a lock.
+struct TokenSource {
+    corpus: Mutex<crate::data::LmCorpus>,
+    batch: usize,
+    seq: usize,
+}
+
+impl Prefetch for TokenSource {
+    fn prepare_batch(&self) -> Result<Batch> {
+        let (toks, tgts) = self.corpus.lock().unwrap().batch(self.batch, self.seq);
+        Ok(Batch::Tensors(vec![
+            crate::runtime::HostTensor::I32(toks),
+            crate::runtime::HostTensor::I32(tgts),
+        ]))
     }
 }
 
@@ -479,33 +770,48 @@ impl StatefulProvider for BackendAeProvider {
 /// from the synthetic corpus through any backend's `lm_grads` program —
 /// the native transformer (always available) or the AOT HLO artifact.
 pub struct BackendLmProvider {
-    pub backend: Box<dyn crate::runtime::Backend>,
-    pub program: String,
-    pub corpus: crate::data::LmCorpus,
-    pub batch: usize,
-    pub seq: usize,
+    backend: Box<dyn crate::runtime::Backend>,
+    program: String,
+    source: TokenSource,
+}
+
+impl BackendLmProvider {
+    pub fn new(
+        backend: Box<dyn crate::runtime::Backend>,
+        program: impl Into<String>,
+        corpus: crate::data::LmCorpus,
+        batch: usize,
+        seq: usize,
+    ) -> Self {
+        Self {
+            backend,
+            program: program.into(),
+            source: TokenSource { corpus: Mutex::new(corpus), batch, seq },
+        }
+    }
 }
 
 impl GradProvider for BackendLmProvider {
-    fn next_loss_and_grad(&mut self, params: &[f32]) -> Result<(f32, Vec<f32>)> {
-        let (toks, tgts) = self.corpus.batch(self.batch, self.seq);
-        self.backend.loss_and_grad(
-            &self.program,
-            params,
-            vec![
-                crate::runtime::HostTensor::I32(toks),
-                crate::runtime::HostTensor::I32(tgts),
-            ],
-        )
+    fn prepare(&self) -> Result<Batch> {
+        self.source.prepare_batch()
+    }
+    fn consume(&self, batch: Batch, params: &[f32]) -> Result<(f32, Vec<f32>)> {
+        let Batch::Tensors(inputs) = batch else {
+            anyhow::bail!("BackendLmProvider expects a tensor batch");
+        };
+        self.backend.loss_and_grad(&self.program, params, inputs)
+    }
+    fn as_prefetch(&self) -> Option<&dyn Prefetch> {
+        Some(&self.source)
     }
 }
 
 impl StatefulProvider for BackendLmProvider {
     fn save_state(&self, w: &mut dyn std::io::Write) -> std::io::Result<()> {
-        self.corpus.rng().save_state(w)
+        self.source.corpus.lock().unwrap().rng().save_state(w)
     }
     fn load_state(&mut self, r: &mut dyn std::io::Read) -> std::io::Result<()> {
-        self.corpus.rng_mut().load_state(r)
+        self.source.corpus.lock().unwrap().rng_mut().load_state(r)
     }
 }
 
@@ -515,31 +821,57 @@ pub enum ProxyTask {
     Graphs(crate::data::SynthGraphs),
 }
 
-pub struct NativeClassifierProvider {
-    pub mlp: crate::models::Mlp,
-    pub task: ProxyTask,
-    pub batch: usize,
+/// The `Sync` data half of the classifier provider.
+struct TaskSource {
+    task: Mutex<ProxyTask>,
+    batch: usize,
 }
 
-impl GradProvider for NativeClassifierProvider {
-    fn next_loss_and_grad(&mut self, params: &[f32]) -> Result<(f32, Vec<f32>)> {
-        let (x, labels) = match &mut self.task {
+impl Prefetch for TaskSource {
+    fn prepare_batch(&self) -> Result<Batch> {
+        let (x, labels) = match &mut *self.task.lock().unwrap() {
             ProxyTask::Images(s) => s.batch(self.batch),
             ProxyTask::Graphs(s) => s.batch(self.batch),
         };
+        Ok(Batch::Dense { x, labels })
+    }
+}
+
+pub struct NativeClassifierProvider {
+    mlp: crate::models::Mlp,
+    source: TaskSource,
+}
+
+impl NativeClassifierProvider {
+    pub fn new(mlp: crate::models::Mlp, task: ProxyTask, batch: usize) -> Self {
+        Self { mlp, source: TaskSource { task: Mutex::new(task), batch } }
+    }
+}
+
+impl GradProvider for NativeClassifierProvider {
+    fn prepare(&self) -> Result<Batch> {
+        self.source.prepare_batch()
+    }
+    fn consume(&self, batch: Batch, params: &[f32]) -> Result<(f32, Vec<f32>)> {
+        let Batch::Dense { x, labels } = batch else {
+            anyhow::bail!("NativeClassifierProvider expects a dense batch");
+        };
         Ok(self.mlp.loss_and_grad_softmax(params, &x, &labels))
+    }
+    fn as_prefetch(&self) -> Option<&dyn Prefetch> {
+        Some(&self.source)
     }
 }
 
 impl StatefulProvider for NativeClassifierProvider {
     fn save_state(&self, w: &mut dyn std::io::Write) -> std::io::Result<()> {
-        match &self.task {
+        match &*self.source.task.lock().unwrap() {
             ProxyTask::Images(s) => s.rng().save_state(w),
             ProxyTask::Graphs(s) => s.rng().save_state(w),
         }
     }
     fn load_state(&mut self, r: &mut dyn std::io::Read) -> std::io::Result<()> {
-        match &mut self.task {
+        match &mut *self.source.task.lock().unwrap() {
             ProxyTask::Images(s) => s.rng_mut().load_state(r),
             ProxyTask::Graphs(s) => s.rng_mut().load_state(r),
         }
@@ -614,13 +946,13 @@ mod tests {
             .unwrap()
             .build(model.total, &blocks, &mats, &hp)
             .unwrap();
-        let provider = BackendLmProvider {
-            backend: Box::new(crate::runtime::NativeBackend::new()),
-            program: "lm_small_grads".into(),
-            corpus: crate::data::LmCorpus::new(cfg_lm.vocab, 11),
-            batch: 2,
-            seq: cfg_lm.seq,
-        };
+        let provider = BackendLmProvider::new(
+            Box::new(crate::runtime::NativeBackend::new()),
+            "lm_small_grads",
+            crate::data::LmCorpus::new(cfg_lm.vocab, 11),
+            2,
+            cfg_lm.seq,
+        );
         let cfg = TrainConfig {
             steps: 3,
             schedule: Schedule::Constant { lr: 3e-3 },
@@ -734,11 +1066,7 @@ mod tests {
                 spec.clone(),
                 build("adam", &mlp, &hp),
                 p,
-                NativeAeProvider {
-                    mlp: mlp.clone(),
-                    images: crate::data::SynthImages::new(12),
-                    batch: 4,
-                },
+                NativeAeProvider::new(mlp.clone(), crate::data::SynthImages::new(12), 4),
                 SessionConfig {
                     train: TrainConfig {
                         steps: 6,
@@ -747,7 +1075,7 @@ mod tests {
                     },
                     checkpoint_every: 2,
                     checkpoint_path: Some(path.clone()),
-                    resume_from: None,
+                    ..Default::default()
                 },
             )
             .unwrap()
@@ -776,11 +1104,8 @@ mod tests {
             schedule: Schedule::Constant { lr: 2e-3 },
             ..Default::default()
         };
-        let provider = || NativeAeProvider {
-            mlp: mlp.clone(),
-            images: crate::data::SynthImages::new(33),
-            batch: 4,
-        };
+        let provider =
+            || NativeAeProvider::new(mlp.clone(), crate::data::SynthImages::new(33), 4);
         let bits = |xs: &[f32]| xs.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
 
         let mut opt_a = build("adam", &mlp, &hp);
@@ -805,11 +1130,7 @@ mod tests {
         let (mlp, p0) = small_ae_setup(22);
         let hp = HyperParams::default();
         let opt = build("adam", &mlp, &hp);
-        let provider = NativeAeProvider {
-            mlp: mlp.clone(),
-            images: crate::data::SynthImages::new(34),
-            batch: 4,
-        };
+        let provider = NativeAeProvider::new(mlp.clone(), crate::data::SynthImages::new(34), 4);
         let s = TrainSession::ephemeral(opt, p0, provider, TrainConfig::default());
         let err = s.checkpoint(std::env::temp_dir().join("nope.ck")).unwrap_err();
         assert!(format!("{err:#}").contains("ephemeral"), "{err:#}");

@@ -182,10 +182,13 @@ fn train(args: &Args) -> Result<()> {
         println!(
             "usage: sonew train --opt <spec> [--steps N] [--batch B] [--small] [--native]\n\
              \x20                 [--checkpoint PATH [--checkpoint-every K]] [--resume PATH]\n\
+             \x20                 [--no-pipeline]\n\
              \n\
              --checkpoint/--resume run a TrainSession with v2 checkpoints\n\
              (SONEWCK2: params + optimizer state + data RNG); a resumed run\n\
-             reproduces the uninterrupted trajectory bitwise.\n\n{}",
+             reproduces the uninterrupted trajectory bitwise.\n\
+             --no-pipeline disables batch prefetch + background checkpoint\n\
+             writes (bitwise-identical results either way).\n\n{}",
             registry_help()
         );
         return Ok(());
@@ -239,11 +242,11 @@ fn train_session(args: &Args, spec: &OptSpec) -> Result<()> {
     let mats = tables::autoencoder::cap_mat_blocks(&mlp.mat_blocks(), 128);
     let opt = spec.build(mlp.total, &mlp.blocks(), &mats, &hp)?;
     let steps = args.u64_or("steps", 100);
-    let provider = sonew::coordinator::trainer::NativeAeProvider {
-        mlp: mlp.clone(),
-        images: sonew::data::SynthImages::new(args.u64_or("seed", 0) + 1),
-        batch: args.usize_or("batch", 64),
-    };
+    let provider = sonew::coordinator::trainer::NativeAeProvider::new(
+        mlp.clone(),
+        sonew::data::SynthImages::new(args.u64_or("seed", 0) + 1),
+        args.usize_or("batch", 64),
+    );
     let cfg = SessionConfig {
         train: TrainConfig {
             steps,
@@ -257,6 +260,9 @@ fn train_session(args: &Args, spec: &OptSpec) -> Result<()> {
             .or_else(|| args.get("resume"))
             .map(Into::into),
         resume_from: args.get("resume").map(Into::into),
+        // --no-pipeline forces the strictly synchronous loop (results
+        // are bitwise-identical; this is a debugging/measurement knob)
+        pipeline: !args.has("no-pipeline"),
     };
     let mut session = TrainSession::new(spec.clone(), opt, params, provider, cfg)?;
     if session.step > 0 {
@@ -281,6 +287,7 @@ fn train_session(args: &Args, spec: &OptSpec) -> Result<()> {
         m.tail_mean_loss(5).unwrap_or(f32::NAN),
         session.step,
     );
+    println!("  {}", m.stage_summary());
     Ok(())
 }
 
@@ -323,11 +330,11 @@ fn sweep(args: &Args) -> Result<()> {
             schedule: Schedule::Constant { lr: trial.lr },
             ..Default::default()
         };
-        let provider = sonew::coordinator::trainer::NativeAeProvider {
-            mlp: mlp.clone(),
-            images: sonew::data::SynthImages::new(1),
-            batch: 64,
-        };
+        let provider = sonew::coordinator::trainer::NativeAeProvider::new(
+            mlp.clone(),
+            sonew::data::SynthImages::new(1),
+            64,
+        );
         match TrainSession::ephemeral(&mut opt, params, provider, tc).finish() {
             Ok((_, m)) => m.tail_mean_loss(3).unwrap_or(f32::NAN),
             Err(_) => f32::NAN,

@@ -168,27 +168,149 @@ impl Executor {
         for _ in 0..n_jobs.min(self.handles.len()) {
             self.shared.available.notify_one();
         }
-        // Help-first: drain queued jobs (ours or anyone's) until our
-        // batch settles or the queue runs dry.
-        loop {
-            if batch.state.lock().unwrap().pending == 0 {
-                break;
-            }
-            let job = self.shared.queue.lock().unwrap().pop_front();
-            match job {
-                Some(j) => execute(j),
-                None => break,
-            }
-        }
-        // Whatever remains of our batch is running on other threads;
-        // park until the last job signals completion.
-        let mut st = batch.state.lock().unwrap();
-        while st.pending > 0 {
-            st = batch.done.wait(st).unwrap();
-        }
-        if let Some(payload) = st.panic.take() {
-            drop(st);
+        wait_for(&self.shared, &batch);
+        if let Some(payload) = batch.state.lock().unwrap().panic.take() {
             resume_unwind(payload);
+        }
+    }
+
+    /// Run `bg` on a pool worker while `fg` runs on the calling thread;
+    /// return both results once both lanes have finished. This is the
+    /// two-lane pipeline primitive behind `TrainSession`'s batch
+    /// prefetch: the overlap is opportunistic (a zero-worker pool runs
+    /// `bg` on the submitter after `fg`, fully synchronous) and the
+    /// results are whatever the closures computed, so callers that keep
+    /// the lanes data-disjoint get bitwise-identical output at every
+    /// pool size. `bg` may borrow from the caller's stack — like
+    /// [`Executor::scope`], this call does not return (or unwind) until
+    /// the background lane has settled.
+    pub fn overlap<'s, A, B>(
+        &self,
+        bg: impl FnOnce() -> A + Send + 's,
+        fg: impl FnOnce() -> B,
+    ) -> (A, B)
+    where
+        A: Send + 's,
+    {
+        let batch = Arc::new(Batch::new(1));
+        let slot: Arc<Mutex<Option<std::thread::Result<A>>>> = Arc::new(Mutex::new(None));
+        {
+            let out = Arc::clone(&slot);
+            let task: Task<'s> = Box::new(move || {
+                *out.lock().unwrap() = Some(catch_unwind(AssertUnwindSafe(bg)));
+            });
+            // SAFETY: same lifetime erasure as `scope` — the wait below
+            // runs on every path out of this function (including an `fg`
+            // panic, which is caught and re-raised only after the
+            // background job settles), so the job cannot outlive the
+            // `'s` borrows it captures.
+            let run = unsafe { std::mem::transmute::<Task<'s>, Task<'static>>(task) };
+            self.shared.queue.lock().unwrap().push_back(Job { run, batch: Arc::clone(&batch) });
+        }
+        self.shared.available.notify_one();
+        let fg_result = catch_unwind(AssertUnwindSafe(fg));
+        wait_for(&self.shared, &batch);
+        let bg_result = slot
+            .lock()
+            .unwrap()
+            .take()
+            .expect("background lane settled without storing a result");
+        match (bg_result, fg_result) {
+            (Ok(a), Ok(b)) => (a, b),
+            (Err(payload), _) | (_, Err(payload)) => resume_unwind(payload),
+        }
+    }
+
+    /// Queue `f` on the pool and return immediately with a handle to
+    /// its eventual result. The fire-and-collect-later counterpart to
+    /// the blocking `scope`/`overlap`: `TrainSession` uses it to hand
+    /// serialized checkpoint bytes to a background writer. Restricted to
+    /// `'static` closures so the handle can outlive the submitting
+    /// stack frame; dropping the handle blocks until the job finishes
+    /// (discarding its result), so a submitted job never outlives the
+    /// pool's users silently.
+    pub fn submit<T, F>(&self, f: F) -> JobHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let batch = Arc::new(Batch::new(1));
+        let slot: Arc<Mutex<Option<std::thread::Result<T>>>> = Arc::new(Mutex::new(None));
+        {
+            let out = Arc::clone(&slot);
+            let run: Task<'static> = Box::new(move || {
+                *out.lock().unwrap() = Some(catch_unwind(AssertUnwindSafe(f)));
+            });
+            self.shared.queue.lock().unwrap().push_back(Job { run, batch: Arc::clone(&batch) });
+        }
+        self.shared.available.notify_one();
+        JobHandle { shared: Arc::clone(&self.shared), batch, slot, joined: false }
+    }
+}
+
+/// Help-first wait: drain queued jobs (the batch's own or anyone
+/// else's) until `batch` settles or the queue runs dry, then park on
+/// the batch's condvar. On a zero-worker pool this is where the
+/// submitter ends up executing its own jobs.
+fn wait_for(shared: &Shared, batch: &Batch) {
+    loop {
+        if batch.state.lock().unwrap().pending == 0 {
+            break;
+        }
+        let job = shared.queue.lock().unwrap().pop_front();
+        match job {
+            Some(j) => execute(j),
+            None => break,
+        }
+    }
+    let mut st = batch.state.lock().unwrap();
+    while st.pending > 0 {
+        st = batch.done.wait(st).unwrap();
+    }
+}
+
+/// The pending result of one [`Executor::submit`] job.
+///
+/// `join` waits (help-first, so a zero-worker pool still makes
+/// progress) and returns the job's result, re-raising its panic on the
+/// caller. Dropping an unjoined handle waits for the job but discards
+/// its outcome — including a panic payload — so callers that care about
+/// the result must `join`.
+pub struct JobHandle<T: Send> {
+    shared: Arc<Shared>,
+    batch: Arc<Batch>,
+    slot: Arc<Mutex<Option<std::thread::Result<T>>>>,
+    joined: bool,
+}
+
+impl<T: Send> JobHandle<T> {
+    /// True once the job has finished (successfully or by panic), i.e.
+    /// `join` would return without blocking.
+    pub fn is_done(&self) -> bool {
+        self.batch.state.lock().unwrap().pending == 0
+    }
+
+    /// Block until the job finishes and return its result.
+    pub fn join(mut self) -> T {
+        wait_for(&self.shared, &self.batch);
+        self.joined = true;
+        let result = self
+            .slot
+            .lock()
+            .unwrap()
+            .take()
+            .expect("submitted job settled without storing a result");
+        match result {
+            Ok(v) => v,
+            Err(payload) => resume_unwind(payload),
+        }
+    }
+}
+
+impl<T: Send> Drop for JobHandle<T> {
+    fn drop(&mut self) {
+        if !self.joined {
+            wait_for(&self.shared, &self.batch);
         }
     }
 }
@@ -302,6 +424,108 @@ mod tests {
             .collect();
         ex.scope(outer);
         assert_eq!(total.load(Ordering::Relaxed), 33);
+    }
+
+    #[test]
+    fn overlap_runs_both_lanes_and_returns_both_results() {
+        for workers in [0usize, 2] {
+            let ex = Executor::new(workers);
+            let mut fg_side = 0u64;
+            let data = vec![3u64; 4];
+            let (bg, fg) = ex.overlap(
+                || data.iter().sum::<u64>(),
+                || {
+                    fg_side = 7;
+                    "fg"
+                },
+            );
+            assert_eq!(bg, 12, "workers={workers}");
+            assert_eq!(fg, "fg");
+            assert_eq!(fg_side, 7);
+        }
+    }
+
+    #[test]
+    fn overlap_bg_may_borrow_the_callers_stack() {
+        let ex = Executor::new(1);
+        let xs = vec![1u32, 2, 3];
+        let (bg, fg) = ex.overlap(|| xs.len(), || xs.first().copied());
+        assert_eq!(bg, 3);
+        assert_eq!(fg, Some(1));
+    }
+
+    #[test]
+    fn overlap_propagates_bg_panics_after_settling() {
+        let ex = Executor::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            ex.overlap(|| panic!("bg boom"), || 1u8);
+        }));
+        assert!(caught.is_err());
+        // pool still serves work afterwards
+        let (a, b) = ex.overlap(|| 1, || 2);
+        assert_eq!((a, b), (1, 2));
+    }
+
+    #[test]
+    fn overlap_fg_panic_waits_for_bg_then_unwinds() {
+        // the soundness contract: a panicking foreground lane must not
+        // unwind past borrows the background lane still holds
+        let ex = Executor::new(2);
+        let flag = AtomicUsize::new(0);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            ex.overlap(
+                || {
+                    std::thread::sleep(std::time::Duration::from_millis(20));
+                    flag.fetch_add(1, Ordering::SeqCst);
+                },
+                || panic!("fg boom"),
+            );
+        }));
+        assert!(caught.is_err());
+        assert_eq!(flag.load(Ordering::SeqCst), 1, "bg settled before unwind");
+    }
+
+    #[test]
+    fn submit_join_roundtrip() {
+        for workers in [0usize, 3] {
+            let ex = Executor::new(workers);
+            let h = ex.submit(|| 40 + 2);
+            assert_eq!(h.join(), 42, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn submit_join_reraises_the_jobs_panic() {
+        let ex = Executor::new(1);
+        let h = ex.submit(|| -> u8 { panic!("job boom") });
+        let caught = catch_unwind(AssertUnwindSafe(move || h.join()));
+        assert!(caught.is_err());
+    }
+
+    #[test]
+    fn dropping_a_handle_waits_for_the_job() {
+        let ex = Executor::new(1);
+        let done = Arc::new(AtomicUsize::new(0));
+        let seen = Arc::clone(&done);
+        let h = ex.submit(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            seen.store(1, Ordering::SeqCst);
+        });
+        drop(h);
+        assert_eq!(done.load(Ordering::SeqCst), 1, "drop is a completion barrier");
+    }
+
+    #[test]
+    fn is_done_flips_after_completion() {
+        let ex = Executor::new(1);
+        let h = ex.submit(|| 5u8);
+        // join is the authoritative sync point; is_done merely reports
+        h.join();
+        let h2 = ex.submit(|| 6u8);
+        while !h2.is_done() {
+            std::thread::yield_now();
+        }
+        assert_eq!(h2.join(), 6);
     }
 
     #[test]

@@ -212,19 +212,12 @@ pub fn run_one(spec: &OptSpec, cfg: &AeBenchConfig) -> anyhow::Result<AeRow> {
         None
     };
     let metrics = if let Some(backend) = backend {
-        let provider = BackendAeProvider {
-            backend,
-            program,
-            images: SynthImages::new(cfg.seed + 1),
-            batch: cfg.batch,
-        };
+        let provider =
+            BackendAeProvider::new(backend, program, SynthImages::new(cfg.seed + 1), cfg.batch);
         TrainSession::ephemeral(&mut opt, params, provider, tc).finish()?.1
     } else {
-        let provider = NativeAeProvider {
-            mlp: mlp.clone(),
-            images: SynthImages::new(cfg.seed + 1),
-            batch: cfg.batch,
-        };
+        let provider =
+            NativeAeProvider::new(mlp.clone(), SynthImages::new(cfg.seed + 1), cfg.batch);
         TrainSession::ephemeral(&mut opt, params, provider, tc).finish()?.1
     };
 

@@ -100,13 +100,8 @@ pub fn run_adafactor(cfg: &LmRunConfig) -> anyhow::Result<Metrics> {
     let hp = HyperParams { beta1: 0.9, beta2: 0.99, eps: 1e-8, weight_decay: 1e-3, ..Default::default() };
     let mut opt = OptSpec::parse("adafactor")?.build(n, &blocks, &mats, &hp)?;
     let params = init_lm_params(&layout, 0);
-    let provider = BackendLmProvider {
-        backend,
-        program: "lm_grads".into(),
-        corpus: LmCorpus::new(vocab, 42),
-        batch,
-        seq,
-    };
+    let provider =
+        BackendLmProvider::new(backend, "lm_grads", LmCorpus::new(vocab, 42), batch, seq);
     let tc = TrainConfig {
         steps: cfg.steps,
         schedule: Schedule::CosineWarmup { lr: cfg.lr, warmup: cfg.steps / 10, total: cfg.steps, final_frac: 0.1 },

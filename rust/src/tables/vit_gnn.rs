@@ -84,7 +84,7 @@ pub fn run_one(
             Proxy::Vit => ProxyTask::Images(SynthImages::new(seed + 10 + s)),
             Proxy::Gnn => ProxyTask::Graphs(SynthGraphs::new(seed + 10 + s)),
         };
-        let provider = NativeClassifierProvider { mlp: mlp.clone(), task, batch };
+        let provider = NativeClassifierProvider::new(mlp.clone(), task, batch);
         let seg_tc = TrainConfig {
             steps: seg_steps,
             schedule: Schedule::Constant { lr: tc.schedule.at(s * seg_steps) },

@@ -36,11 +36,11 @@ fn ae_objective(trial: &Trial) -> f32 {
         schedule: Schedule::Constant { lr: trial.lr },
         ..Default::default()
     };
-    let provider = sonew::coordinator::trainer::NativeAeProvider {
-        mlp: mlp.clone(),
-        images: sonew::data::SynthImages::new(1),
-        batch: 16,
-    };
+    let provider = sonew::coordinator::trainer::NativeAeProvider::new(
+        mlp.clone(),
+        sonew::data::SynthImages::new(1),
+        16,
+    );
     match TrainSession::ephemeral(&mut opt, params, provider, tc).finish() {
         Ok((_, m)) => m.tail_mean_loss(2).unwrap_or(f32::NAN),
         Err(_) => f32::NAN,

@@ -107,12 +107,8 @@ fn backend_provider_trains_through_coordinator() {
         schedule: Schedule::Constant { lr: 1e-3 },
         ..Default::default()
     };
-    let provider = BackendAeProvider {
-        backend,
-        program,
-        images: sonew::data::SynthImages::new(32),
-        batch: 4,
-    };
+    let provider =
+        BackendAeProvider::new(backend, program, sonew::data::SynthImages::new(32), 4);
     let m = train_single(&mut params, &mut opt, provider, &cfg).unwrap();
     assert_eq!(m.points.len(), 2);
     assert!(m.points.iter().all(|p| p.loss.is_finite()));

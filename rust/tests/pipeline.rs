@@ -1,0 +1,279 @@
+//! Staged-pipeline acceptance tests: the determinism contract.
+//!
+//! `TrainSession` with `cfg.pipeline = true` (prefetch + background
+//! checkpoint writer) must be **bitwise identical** to the strictly
+//! synchronous loop: same loss trajectory, same final params, same
+//! checkpoint bytes on disk. CI runs this suite under both
+//! `SONEW_THREADS=1` (zero executor workers — the submitter self-drains)
+//! and `SONEW_THREADS=4`, so the contract is exercised at both ends.
+//!
+//! Also covered: crash-mid-checkpoint recovery — a truncated temp file
+//! left by a dead writer is swept on session construction, the last
+//! complete checkpoint still loads, and no `.tmp` residue survives.
+
+use std::path::PathBuf;
+
+use sonew::coordinator::trainer::{BackendLmProvider, FnProvider, NativeAeProvider};
+use sonew::coordinator::{Schedule, SessionConfig, TrainConfig, TrainSession};
+use sonew::data::{LmCorpus, SynthImages};
+use sonew::models::Mlp;
+use sonew::optim::{HyperParams, OptSpec};
+use sonew::util::Rng;
+
+const STEPS: u64 = 10;
+const CK_EVERY: u64 = 4;
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Build a checkpointable AE session from nothing but the spec, with the
+/// pipeline toggled explicitly.
+fn fresh_ae_session(
+    spec: &OptSpec,
+    pipeline: bool,
+    checkpoint_path: Option<PathBuf>,
+    resume_from: Option<PathBuf>,
+) -> TrainSession<NativeAeProvider> {
+    let mlp = Mlp::new(&[49, 24, 12, 24, 49]);
+    let mut rng = Rng::new(7);
+    let params = mlp.init(&mut rng);
+    let hp = HyperParams { gamma: 1e-8, ..Default::default() };
+    let opt = spec
+        .build(mlp.total, &mlp.blocks(), &mlp.mat_blocks(), &hp)
+        .unwrap();
+    let provider = NativeAeProvider::new(mlp.clone(), SynthImages::new(5), 8);
+    TrainSession::new(
+        spec.clone(),
+        opt,
+        params,
+        provider,
+        SessionConfig {
+            train: TrainConfig {
+                steps: STEPS,
+                schedule: Schedule::CosineWarmup {
+                    lr: 2e-3,
+                    warmup: 2,
+                    total: STEPS,
+                    final_frac: 0.1,
+                },
+                log_every: 1,
+                ..Default::default()
+            },
+            checkpoint_every: if checkpoint_path.is_some() { CK_EVERY } else { 0 },
+            checkpoint_path,
+            resume_from,
+            pipeline,
+        },
+    )
+    .unwrap()
+}
+
+/// The contract itself: pipeline on vs off must agree bitwise on the
+/// loss trajectory, the learning-rate schedule, the final parameters,
+/// and the periodic checkpoint bytes on disk.
+fn assert_pipeline_equivalence(spec_str: &str) {
+    let spec = OptSpec::parse(spec_str).unwrap();
+    let dir = std::env::temp_dir().join(format!("sonew_pipeline_{}", spec.name()));
+    std::fs::remove_dir_all(&dir).ok();
+    let ck_sync = dir.join("sync.ck");
+    let ck_async = dir.join("async.ck");
+
+    let mut sync = fresh_ae_session(&spec, false, Some(ck_sync.clone()), None);
+    let m_sync = sync.run().unwrap();
+
+    let mut pipe = fresh_ae_session(&spec, true, Some(ck_async.clone()), None);
+    let m_pipe = pipe.run().unwrap();
+
+    assert_eq!(m_sync.points.len(), m_pipe.points.len(), "{spec_str}");
+    for (a, b) in m_sync.points.iter().zip(&m_pipe.points) {
+        assert_eq!(a.step, b.step, "{spec_str}");
+        assert_eq!(
+            a.loss.to_bits(),
+            b.loss.to_bits(),
+            "{spec_str}: pipelined loss diverged at step {}",
+            a.step
+        );
+        assert_eq!(a.lr.to_bits(), b.lr.to_bits(), "{spec_str}: lr diverged at step {}", a.step);
+    }
+    assert_eq!(
+        bits(&sync.params),
+        bits(&pipe.params),
+        "{spec_str}: pipelined params differ from the synchronous loop"
+    );
+
+    // run_steps is a flush barrier — both files are complete here, and
+    // the background writer must have produced byte-identical state
+    let a = std::fs::read(&ck_sync).unwrap();
+    let b = std::fs::read(&ck_async).unwrap();
+    assert_eq!(a, b, "{spec_str}: checkpoint bytes differ between pipeline on/off");
+
+    // and both resume to the same place
+    let resumed = fresh_ae_session(&spec, true, None, Some(ck_async.clone()));
+    assert_eq!(resumed.step, STEPS - STEPS % CK_EVERY, "{spec_str}");
+
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn tridiag_sonew_pipeline_is_bitwise_equivalent() {
+    assert_pipeline_equivalence("tridiag-sonew");
+}
+
+#[test]
+fn adam_pipeline_is_bitwise_equivalent() {
+    assert_pipeline_equivalence("adam");
+}
+
+/// The tensor lane (backend LM provider) honors the same contract: the
+/// prefetch worker draws token batches, the training thread keeps the
+/// backend — results match the synchronous loop bitwise.
+#[test]
+fn backend_lm_pipeline_matches_sync_bitwise() {
+    let run = |pipeline: bool| {
+        let model = sonew::models::Transformer::new(sonew::models::LmConfig::small());
+        let cfg_lm = model.cfg;
+        let params = model.init(3);
+        let hp = HyperParams::default();
+        let blocks = sonew::optim::blocks_of(&model.layout);
+        let mats = sonew::optim::mat_blocks_of(&model.layout);
+        let opt = OptSpec::parse("adam")
+            .unwrap()
+            .build(model.total, &blocks, &mats, &hp)
+            .unwrap();
+        let provider = BackendLmProvider::new(
+            Box::new(sonew::runtime::NativeBackend::new()),
+            "lm_small_grads",
+            LmCorpus::new(cfg_lm.vocab, 11),
+            2,
+            cfg_lm.seq,
+        );
+        let mut s = TrainSession::ephemeral(
+            opt,
+            params,
+            provider,
+            TrainConfig {
+                steps: 4,
+                schedule: Schedule::Constant { lr: 3e-3 },
+                ..Default::default()
+            },
+        );
+        s.cfg.pipeline = pipeline;
+        let m = s.run().unwrap();
+        (bits(&s.params), m.points.iter().map(|p| p.loss.to_bits()).collect::<Vec<_>>())
+    };
+    let (p_sync, l_sync) = run(false);
+    let (p_pipe, l_pipe) = run(true);
+    assert_eq!(l_sync, l_pipe, "LM loss trajectory diverged under the pipeline");
+    assert_eq!(p_sync, p_pipe, "LM params diverged under the pipeline");
+}
+
+/// Providers without a prepare/consume split (closures) fall back to the
+/// one-shot path regardless of the pipeline flag — identical results,
+/// no prefetch attempted.
+#[test]
+fn fn_provider_falls_back_to_the_one_shot_path() {
+    let run = |pipeline: bool| {
+        let mut rng = Rng::new(9);
+        let provider = FnProvider(move |p: &[f32]| -> anyhow::Result<(f32, Vec<f32>)> {
+            // deterministic noisy quadratic: grad = p + noise
+            let noise = rng.normal_vec(p.len());
+            let loss = p.iter().map(|x| 0.5 * x * x).sum::<f32>();
+            let grads = p.iter().zip(&noise).map(|(x, n)| x + 0.01 * n).collect();
+            Ok((loss, grads))
+        });
+        let spec = OptSpec::parse("adam").unwrap();
+        let opt = spec
+            .build(16, &vec![(0, 16)], &sonew::optim::MatBlocks::new(), &HyperParams::default())
+            .unwrap();
+        let mut s = TrainSession::ephemeral(
+            opt,
+            vec![1.0f32; 16],
+            provider,
+            TrainConfig {
+                steps: 6,
+                schedule: Schedule::Constant { lr: 1e-2 },
+                ..Default::default()
+            },
+        );
+        s.cfg.pipeline = pipeline;
+        let m = s.run().unwrap();
+        (bits(&s.params), m.points.iter().map(|p| p.loss.to_bits()).collect::<Vec<_>>())
+    };
+    assert_eq!(run(false), run(true), "FnProvider results depend on the pipeline flag");
+}
+
+/// Crash-mid-checkpoint: a writer that died after `write()` but before
+/// `rename()` leaves `<name>.<pid>.tmp` garbage. A fresh session must
+/// sweep it, load the last *complete* checkpoint, and leave no `.tmp`
+/// residue behind.
+#[test]
+fn truncated_checkpoint_write_is_swept_and_old_checkpoint_loads() {
+    let spec = OptSpec::parse("tridiag-sonew").unwrap();
+    let dir = std::env::temp_dir().join("sonew_pipeline_crash");
+    std::fs::remove_dir_all(&dir).ok();
+    let path = dir.join("run.ck");
+
+    // a run that reached the step-8 checkpoint boundary...
+    let mut straight = fresh_ae_session(&spec, true, Some(path.clone()), None);
+    let m_straight = straight.run().unwrap();
+
+    // ...then a later writer crashed mid-write: truncated bytes under a
+    // temp name whose pid can no longer be alive (u32::MAX)
+    let stale = dir.join(format!("run.ck.{}.tmp", u32::MAX));
+    std::fs::write(&stale, b"SONEWCK2\x00trunc").unwrap();
+
+    // fresh process: construction sweeps the stale temp, resume loads
+    // the complete checkpoint
+    let mut resumed = fresh_ae_session(&spec, true, Some(path.clone()), Some(path.clone()));
+    assert!(!stale.exists(), "stale checkpoint temp file survived the sweep");
+    assert_eq!(resumed.step, STEPS - STEPS % CK_EVERY);
+    let m_resumed = resumed.run().unwrap();
+
+    // post-resume trajectory matches the uninterrupted run bitwise
+    let boundary = STEPS - STEPS % CK_EVERY;
+    let tail: Vec<_> = m_straight.points.iter().filter(|p| p.step >= boundary).collect();
+    assert_eq!(m_resumed.points.len(), tail.len());
+    for (a, b) in m_resumed.points.iter().zip(tail) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "diverged at step {}", a.step);
+    }
+    assert_eq!(bits(&resumed.params), bits(&straight.params));
+
+    // no temp residue of any kind left in the checkpoint directory
+    let residue: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.ends_with(".tmp"))
+        .collect();
+    assert!(residue.is_empty(), "temp files left behind: {residue:?}");
+
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Satellite: resuming from a path that does not exist fails at session
+/// construction with an error naming the missing file.
+#[test]
+fn resume_from_missing_file_names_the_path() {
+    let spec = OptSpec::parse("adam").unwrap();
+    let bogus = std::env::temp_dir().join("sonew_pipeline_nope").join("never-written.ck");
+    let mlp = Mlp::new(&[49, 24, 12, 24, 49]);
+    let mut rng = Rng::new(7);
+    let params = mlp.init(&mut rng);
+    let opt = spec
+        .build(mlp.total, &mlp.blocks(), &mlp.mat_blocks(), &HyperParams::default())
+        .unwrap();
+    let provider = NativeAeProvider::new(mlp.clone(), SynthImages::new(5), 8);
+    let err = TrainSession::new(
+        spec.clone(),
+        opt,
+        params,
+        provider,
+        SessionConfig { resume_from: Some(bogus.clone()), ..Default::default() },
+    )
+    .err()
+    .expect("constructing a session over a missing checkpoint must fail");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("no such checkpoint"), "{msg}");
+    assert!(msg.contains("never-written.ck"), "error does not name the path: {msg}");
+}

@@ -28,11 +28,7 @@ fn fresh_session(
     let opt = spec
         .build(mlp.total, &mlp.blocks(), &mlp.mat_blocks(), &hp)
         .unwrap();
-    let provider = NativeAeProvider {
-        mlp: mlp.clone(),
-        images: SynthImages::new(5),
-        batch: 8,
-    };
+    let provider = NativeAeProvider::new(mlp.clone(), SynthImages::new(5), 8);
     TrainSession::new(
         spec.clone(),
         opt,
@@ -50,9 +46,8 @@ fn fresh_session(
                 log_every: 1,
                 ..Default::default()
             },
-            checkpoint_every: 0,
-            checkpoint_path: None,
             resume_from,
+            ..Default::default()
         },
     )
     .unwrap()
