@@ -55,6 +55,10 @@ struct Rec {
 struct Recorder {
     records: Vec<Rec>,
     derived: Vec<(String, f64)>,
+    /// environment strings for the `"gemm"` object (dispatched kernel,
+    /// CPU features) so a trajectory point is attributable to the code
+    /// path that produced it
+    notes: Vec<(String, String)>,
 }
 
 impl Recorder {
@@ -73,6 +77,10 @@ impl Recorder {
         self.derived.push((name, value));
     }
 
+    fn note(&mut self, name: &str, value: String) {
+        self.notes.push((name.to_string(), value));
+    }
+
     fn to_json(&self, smoke: bool) -> String {
         let now = std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
@@ -84,6 +92,12 @@ impl Recorder {
         s.push_str(&format!("  \"unix_time_s\": {now},\n"));
         s.push_str(&format!("  \"threads\": {},\n", sonew::linalg::hw_threads()));
         s.push_str(&format!("  \"smoke\": {smoke},\n"));
+        s.push_str("  \"gemm\": {\n");
+        for (i, (name, v)) in self.notes.iter().enumerate() {
+            let comma = if i + 1 < self.notes.len() { "," } else { "" };
+            s.push_str(&format!("    \"{name}\": \"{v}\"{comma}\n"));
+        }
+        s.push_str("  },\n");
         s.push_str("  \"results\": [\n");
         for (i, r) in self.records.iter().enumerate() {
             let comma = if i + 1 < self.records.len() { "," } else { "" };
@@ -202,6 +216,15 @@ fn main() {
 
     if run("gemm") {
         println!("== [gemm] blocked GEMM engine vs seed i-k-j kernel ==");
+        let active = sonew::linalg::kernels::active();
+        let feats = sonew::linalg::kernels::cpu_features();
+        let avail: Vec<&str> =
+            sonew::linalg::kernels::available().iter().map(|kk| kk.name).collect();
+        println!("    micro-kernel: {} (cpu: {feats}; available: {})", active.name,
+            avail.join(","));
+        rec.note("kernel", active.name.to_string());
+        rec.note("cpu_features", feats);
+        rec.note("kernels_available", avail.join(","));
         let sizes: &[usize] = if smoke { &[128, 256] } else { &[256, 512] };
         let (iters, k) = if smoke { (4, 3) } else { (10, 5) };
         for &sz in sizes {
@@ -247,6 +270,41 @@ fn main() {
         });
         println!("{}", r.report());
         rec.add("gemm", &r);
+
+        // every micro-kernel this CPU offers, pinned to the same thread
+        // budget, so the trajectory isolates the dispatch layer's gain
+        use sonew::linalg::{gemm_with, Trans};
+        let threads = sonew::linalg::hw_threads();
+        let mut c = Mat::zeros(sz, sz);
+        let mut per_kernel: Vec<(&str, f64)> = Vec::new();
+        for kern in sonew::linalg::kernels::available() {
+            let r = bench(&format!("gemm {sz} kernel={}", kern.name), iters, k, |kk| {
+                for _ in 0..kk {
+                    gemm_with(
+                        &a.data,
+                        Trans::N,
+                        &b.data,
+                        Trans::N,
+                        &mut c.data,
+                        (sz, sz, sz),
+                        threads,
+                        kern,
+                    );
+                }
+            });
+            println!("{}", r.report());
+            rec.add("gemm", &r);
+            per_kernel.push((kern.name, r.per_iter_ns()));
+        }
+        if let Some(&(_, base)) = per_kernel.iter().find(|&&(nm, _)| nm == "portable") {
+            for &(nm, ns) in &per_kernel {
+                if nm != "portable" {
+                    let sp = base / ns;
+                    println!("    kernel {nm} speedup vs portable: {sp:.2}x");
+                    rec.derive(format!("gemm_{sz}_{nm}_speedup_vs_portable"), sp);
+                }
+            }
+        }
     }
 
     if run("t1") {

@@ -9,16 +9,19 @@
 //!
 //! * the k dimension is processed in `KC`-row panels so the active slab
 //!   of B stays cache-resident while a row group sweeps it;
-//! * each `MR x NR` output tile accumulates in fixed-size `f32` lane
-//!   arrays (`[f32; NR]`), which rustc autovectorizes into packed SIMD
-//!   mul/adds, and every loaded B lane chunk is reused across the `MR`
-//!   rows of the tile;
+//! * each `MR x NR` output tile is updated by a micro-kernel from
+//!   [`super::kernels`]: explicit AVX2/NEON `std::arch` implementations
+//!   selected once at startup by CPU feature detection (`SONEW_KERNEL`
+//!   overrides), with the portable `[f32; NR]` lane-array tile — which
+//!   rustc autovectorizes — as the universal fallback. Every loaded B
+//!   lane chunk is reused across the `MR` rows of the tile;
 //! * transposed operands are packed into contiguous panels (`A^T` per
 //!   row group, `B^T` once up front), so the micro-kernel only ever
-//!   streams unit-stride data. We deliberately use separate mul + add
-//!   rather than `f32::mul_add`: on targets without a native FMA unit
-//!   `mul_add` lowers to a libm call, and fusing would also change the
-//!   documented accumulation contract below.
+//!   streams unit-stride data. Every deterministic kernel uses separate
+//!   mul + add rather than fused multiply-add: on targets without a
+//!   native FMA unit `f32::mul_add` lowers to a libm call, and fusing
+//!   would also change the documented accumulation contract below (the
+//!   opt-in `avx2-fma` kernel trades that contract for throughput).
 //!
 //! Determinism contract: every output element accumulates its k-products
 //! strictly in ascending-k order no matter how the work is tiled or how
@@ -26,10 +29,12 @@
 //! row chunks and runs them on the persistent `runtime::Executor` pool —
 //! no per-call thread spawn), so results are **bitwise identical at any
 //! thread count** — asserted by
-//! `gemm_bitwise_identical_at_any_thread_count`. The worker-thread count
-//! itself comes from [`hw_threads`]: cached once, overridable with
+//! `gemm_bitwise_identical_at_any_thread_count` and, across every
+//! available SIMD kernel, by `kernel_parity_bitwise`. The worker-thread
+//! count itself comes from [`hw_threads`]: cached once, overridable with
 //! `SONEW_THREADS` for reproducible perf runs.
 
+use super::kernels::{self, Microkernel, MR, NR};
 use std::sync::OnceLock;
 
 /// Row-major dense matrix.
@@ -122,10 +127,6 @@ pub enum Trans {
     T,
 }
 
-/// Rows of C per register tile.
-const MR: usize = 4;
-/// f32 lanes of C per register tile (two SSE / one AVX vector per row).
-const NR: usize = 8;
 /// k-panel depth: the B slab a row group sweeps is `KC x n` floats.
 const KC: usize = 256;
 /// Below this flop count the thread fan-out costs more than it saves.
@@ -145,15 +146,30 @@ pub fn gemm_into(
     c: &mut [f32],
     dims: (usize, usize, usize),
 ) {
+    gemm_with(a, op_a, b, op_b, c, dims, hw_threads(), kernels::active());
+}
+
+/// [`gemm_into`] with an explicit thread budget and micro-kernel. The
+/// env-driven defaults (`SONEW_THREADS`, `SONEW_KERNEL`) are cached in
+/// process-wide `OnceLock`s, so parity tests and the bench harness pin
+/// both here instead of mutating the environment.
+pub fn gemm_with(
+    a: &[f32],
+    op_a: Trans,
+    b: &[f32],
+    op_b: Trans,
+    c: &mut [f32],
+    dims: (usize, usize, usize),
+    threads: usize,
+    kern: &Microkernel,
+) {
     let (m, k, n) = dims;
     assert_eq!(a.len(), m * k, "gemm: A has {} elements, dims say {m}x{k}", a.len());
     assert_eq!(b.len(), k * n, "gemm: B has {} elements, dims say {k}x{n}", b.len());
     assert_eq!(c.len(), m * n, "gemm: C has {} elements, dims say {m}x{n}", c.len());
-    gemm_threads(a, op_a, b, op_b, c, dims, hw_threads());
+    gemm_threads(a, op_a, b, op_b, c, dims, threads, kern);
 }
 
-/// [`gemm_into`] with an explicit thread budget (determinism tests and
-/// the bench harness pin 1/2/max here).
 fn gemm_threads(
     a: &[f32],
     op_a: Trans,
@@ -162,6 +178,7 @@ fn gemm_threads(
     c: &mut [f32],
     dims: (usize, usize, usize),
     threads: usize,
+    kern: &Microkernel,
 ) {
     let (m, k, n) = dims;
     if m == 0 || n == 0 {
@@ -184,7 +201,7 @@ fn gemm_threads(
     let flops = 2.0 * m as f64 * k as f64 * n as f64;
     let threads = threads.min(m).max(1);
     if flops < PAR_FLOPS || threads <= 1 {
-        gemm_rows(a, op_a, b_eff, c, 0, dims);
+        gemm_rows(a, op_a, b_eff, c, 0, dims, kern);
         return;
     }
     let chunk = m.div_ceil(threads);
@@ -195,7 +212,7 @@ fn gemm_threads(
         .collect();
     let groups = items.len();
     crate::util::par::run_chunked(items, groups, |(lo, cc)| {
-        gemm_rows(a, op_a, b_eff, cc, lo, dims);
+        gemm_rows(a, op_a, b_eff, cc, lo, dims, kern);
     });
 }
 
@@ -234,6 +251,7 @@ fn gemm_rows(
     c_chunk: &mut [f32],
     lo: usize,
     dims: (usize, usize, usize),
+    kern: &Microkernel,
 ) {
     let (m, k, n) = dims;
     if n == 0 {
@@ -276,109 +294,23 @@ fn gemm_rows(
                     Trans::T => &a_pack[r * kc..(r + 1) * kc],
                 };
             }
+            // SAFETY: `kern` comes from `kernels::available()`-gated
+            // selection, so its CPU features are present, and the slice
+            // invariants the kernel contract asks for hold here: every
+            // `rv` row is `kc` long, `bp` is `kc * n`, the C slices are
+            // `MR * n` / `n`.
             if mr == MR {
                 let c4 = &mut c_chunk[r0 * n..(r0 + MR) * n];
-                micro_4(rv[0], rv[1], rv[2], rv[3], bp, n, c4);
+                unsafe { (kern.micro_4)([rv[0], rv[1], rv[2], rv[3]], bp, n, c4) };
             } else {
                 for (r, &arow) in rv.iter().enumerate().take(mr) {
                     let crow = &mut c_chunk[(r0 + r) * n..(r0 + r + 1) * n];
-                    micro_1(arow, bp, n, crow);
+                    unsafe { (kern.micro_1)(arow, bp, n, crow) };
                 }
             }
             r0 += mr;
         }
         kp += kc;
-    }
-}
-
-/// 4 x NR register-tile micro-kernel over one k-panel: `c` is 4 rows x n
-/// (chunk-local) and accumulates the panel's partial products on top of
-/// its current contents. Each loaded B lane chunk feeds all 4 rows; each
-/// C lane accumulates strictly in ascending kk order (the bitwise
-/// determinism contract).
-fn micro_4(a0: &[f32], a1: &[f32], a2: &[f32], a3: &[f32], bp: &[f32], n: usize, c: &mut [f32]) {
-    let mut j = 0;
-    while j < n {
-        let w = NR.min(n - j);
-        let mut acc0 = [0.0f32; NR];
-        let mut acc1 = [0.0f32; NR];
-        let mut acc2 = [0.0f32; NR];
-        let mut acc3 = [0.0f32; NR];
-        acc0[..w].copy_from_slice(&c[j..j + w]);
-        acc1[..w].copy_from_slice(&c[n + j..n + j + w]);
-        acc2[..w].copy_from_slice(&c[2 * n + j..2 * n + j + w]);
-        acc3[..w].copy_from_slice(&c[3 * n + j..3 * n + j + w]);
-        if w == NR {
-            for (kk, (((&v0, &v1), &v2), &v3)) in
-                a0.iter().zip(a1).zip(a2).zip(a3).enumerate()
-            {
-                let brow = &bp[kk * n + j..kk * n + j + NR];
-                for (x, &bv) in acc0.iter_mut().zip(brow) {
-                    *x += v0 * bv;
-                }
-                for (x, &bv) in acc1.iter_mut().zip(brow) {
-                    *x += v1 * bv;
-                }
-                for (x, &bv) in acc2.iter_mut().zip(brow) {
-                    *x += v2 * bv;
-                }
-                for (x, &bv) in acc3.iter_mut().zip(brow) {
-                    *x += v3 * bv;
-                }
-            }
-        } else {
-            for (kk, (((&v0, &v1), &v2), &v3)) in
-                a0.iter().zip(a1).zip(a2).zip(a3).enumerate()
-            {
-                let brow = &bp[kk * n + j..kk * n + j + w];
-                for (x, &bv) in acc0[..w].iter_mut().zip(brow) {
-                    *x += v0 * bv;
-                }
-                for (x, &bv) in acc1[..w].iter_mut().zip(brow) {
-                    *x += v1 * bv;
-                }
-                for (x, &bv) in acc2[..w].iter_mut().zip(brow) {
-                    *x += v2 * bv;
-                }
-                for (x, &bv) in acc3[..w].iter_mut().zip(brow) {
-                    *x += v3 * bv;
-                }
-            }
-        }
-        c[j..j + w].copy_from_slice(&acc0[..w]);
-        c[n + j..n + j + w].copy_from_slice(&acc1[..w]);
-        c[2 * n + j..2 * n + j + w].copy_from_slice(&acc2[..w]);
-        c[3 * n + j..3 * n + j + w].copy_from_slice(&acc3[..w]);
-        j += w;
-    }
-}
-
-/// Single-row remainder micro-kernel: identical per-element arithmetic
-/// (same ascending-kk order) as [`micro_4`], so row grouping — which
-/// shifts with the thread split — never changes any output bit.
-fn micro_1(arow: &[f32], bp: &[f32], n: usize, crow: &mut [f32]) {
-    let mut j = 0;
-    while j < n {
-        let w = NR.min(n - j);
-        let mut acc = [0.0f32; NR];
-        acc[..w].copy_from_slice(&crow[j..j + w]);
-        if w == NR {
-            for (kk, &av) in arow.iter().enumerate() {
-                let brow = &bp[kk * n + j..kk * n + j + NR];
-                for (x, &bv) in acc.iter_mut().zip(brow) {
-                    *x += av * bv;
-                }
-            }
-        } else {
-            for (kk, &av) in arow.iter().enumerate() {
-                let brow = &bp[kk * n + j..kk * n + j + w];
-                for (x, &bv) in acc[..w].iter_mut().zip(brow) {
-                    *x += av * bv;
-                }
-            }
-        }
-        crow[j..j + w].copy_from_slice(&acc[..w]);
-        j += w;
     }
 }
 
@@ -574,13 +506,82 @@ mod tests {
                 let mut c1 = vec![0.0f32; m * n];
                 let mut c2 = vec![0.0f32; m * n];
                 let mut cx = vec![0.0f32; m * n];
-                gemm_threads(&a, op_a, &b, op_b, &mut c1, (m, k, n), 1);
-                gemm_threads(&a, op_a, &b, op_b, &mut c2, (m, k, n), 2);
-                gemm_threads(&a, op_a, &b, op_b, &mut cx, (m, k, n), hw_threads().max(4));
+                let kern = kernels::active();
+                gemm_with(&a, op_a, &b, op_b, &mut c1, (m, k, n), 1, kern);
+                gemm_with(&a, op_a, &b, op_b, &mut c2, (m, k, n), 2, kern);
+                gemm_with(&a, op_a, &b, op_b, &mut cx, (m, k, n), hw_threads().max(4), kern);
                 let b12 = c1.iter().zip(&c2).all(|(x, y)| x.to_bits() == y.to_bits());
                 let b1x = c1.iter().zip(&cx).all(|(x, y)| x.to_bits() == y.to_bits());
                 assert!(b12 && b1x, "{m}x{k}x{n} {op_a:?}{op_b:?} drifted across threads");
             }
+        }
+    }
+
+    #[test]
+    fn kernel_parity_bitwise() {
+        // every *deterministic* kernel this CPU offers must reproduce
+        // the portable tile bit-for-bit — on random shapes, degenerate
+        // shapes, register-tile / lane / k-panel boundaries, and at both
+        // 1 and 4 threads (the row grouping the thread split produces).
+        // FMA variants are opt-in precisely because they break this.
+        let portable = kernels::by_name("portable").expect("portable kernel always available");
+        let mut rng = crate::util::Rng::new(11);
+        let mut shapes = vec![
+            (1usize, 1usize, 1usize),
+            (MR, 9, NR),
+            (MR + 1, 10, NR + 1),
+            (MR - 1, 3, NR - 1),
+            (3, KC + 1, 5),
+            (2, KC - 1, NR * 3),
+            (97, KC + 3, 41),
+            (256, 120, 80),
+            (5, 7, 400),
+            (400, 3, 2),
+        ];
+        for _ in 0..6 {
+            shapes.push((1 + rng.below(60), 1 + rng.below(300), 1 + rng.below(60)));
+        }
+        let ops = [(Trans::N, Trans::N), (Trans::T, Trans::N), (Trans::N, Trans::T)];
+        for &(m, k, n) in &shapes {
+            for &(op_a, op_b) in &ops {
+                let a = rng.normal_vec(m * k);
+                let b = rng.normal_vec(k * n);
+                let mut want = vec![0.0f32; m * n];
+                gemm_with(&a, op_a, &b, op_b, &mut want, (m, k, n), 1, portable);
+                for kern in kernels::available() {
+                    if !kern.deterministic {
+                        continue;
+                    }
+                    for threads in [1usize, 4] {
+                        let mut got = vec![0.0f32; m * n];
+                        gemm_with(&a, op_a, &b, op_b, &mut got, (m, k, n), threads, kern);
+                        let same =
+                            want.iter().zip(&got).all(|(x, y)| x.to_bits() == y.to_bits());
+                        assert!(
+                            same,
+                            "kernel {} t={threads} differs from portable on \
+                             {m}x{k}x{n} {op_a:?}{op_b:?}",
+                            kern.name
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fma_kernel_close_to_portable_when_available() {
+        // the FMA kernel is outside the bitwise contract but must still
+        // be numerically correct (single-rounding differences only)
+        if let Some(fma) = kernels::by_name("avx2-fma") {
+            let mut rng = crate::util::Rng::new(12);
+            let (m, k, n) = (33, 70, 29);
+            let a = Mat::from_rows(m, k, rng.normal_vec(m * k));
+            let b = Mat::from_rows(k, n, rng.normal_vec(k * n));
+            let want = naive(&a, &b);
+            let mut got = vec![0.0f32; m * n];
+            gemm_with(&a.data, Trans::N, &b.data, Trans::N, &mut got, (m, k, n), 1, fma);
+            assert_close(&got, &want.data, 1e-4, 1e-5, "fma");
         }
     }
 

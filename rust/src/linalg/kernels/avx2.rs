@@ -1,0 +1,133 @@
+//! AVX2 micro-kernels (x86-64). One 8-lane `__m256` vector covers a full
+//! `NR` column chunk, so the portable tile's `[f32; 8]` accumulators map
+//! 1:1 onto vector registers.
+//!
+//! Determinism: the `micro_4`/`micro_1` pair uses separate
+//! `_mm256_mul_ps` + `_mm256_add_ps` — per lane that is exactly the
+//! scalar IEEE `a * b` followed by `acc + p`, and LLVM never contracts
+//! distinct vector intrinsics into FMA without fast-math — in the same
+//! ascending-kk order as portable, so outputs are bitwise identical.
+//! The `*_fma` pair swaps in `_mm256_fmadd_ps` (single rounding): faster
+//! on FMA hardware but outside the determinism contract, reachable only
+//! via `SONEW_KERNEL=avx2-fma`.
+
+use super::{portable, NR};
+use std::arch::x86_64::{
+    _mm256_add_ps, _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_mul_ps, _mm256_set1_ps,
+    _mm256_storeu_ps,
+};
+
+// Shared bounds contract (see `super::Micro4`): a[0..4] all have length
+// kc, bp has kc * n, c has 4 * n. Full NR-wide chunks run on intrinsics;
+// the ragged tail (w < NR) delegates to the portable scalar body so tail
+// arithmetic is shared with the reference kernel.
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn micro_4(a: [&[f32]; 4], bp: &[f32], n: usize, c: &mut [f32]) {
+    let [a0, a1, a2, a3] = a;
+    let kc = a0.len();
+    debug_assert!(a1.len() == kc && a2.len() == kc && a3.len() == kc);
+    debug_assert_eq!(bp.len(), kc * n);
+    debug_assert_eq!(c.len(), 4 * n);
+    let bptr = bp.as_ptr();
+    let cptr = c.as_mut_ptr();
+    let mut j = 0usize;
+    while j + NR <= n {
+        let mut acc0 = _mm256_loadu_ps(cptr.add(j));
+        let mut acc1 = _mm256_loadu_ps(cptr.add(n + j));
+        let mut acc2 = _mm256_loadu_ps(cptr.add(2 * n + j));
+        let mut acc3 = _mm256_loadu_ps(cptr.add(3 * n + j));
+        for kk in 0..kc {
+            let bv = _mm256_loadu_ps(bptr.add(kk * n + j));
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(_mm256_set1_ps(*a0.get_unchecked(kk)), bv));
+            acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(_mm256_set1_ps(*a1.get_unchecked(kk)), bv));
+            acc2 = _mm256_add_ps(acc2, _mm256_mul_ps(_mm256_set1_ps(*a2.get_unchecked(kk)), bv));
+            acc3 = _mm256_add_ps(acc3, _mm256_mul_ps(_mm256_set1_ps(*a3.get_unchecked(kk)), bv));
+        }
+        _mm256_storeu_ps(cptr.add(j), acc0);
+        _mm256_storeu_ps(cptr.add(n + j), acc1);
+        _mm256_storeu_ps(cptr.add(2 * n + j), acc2);
+        _mm256_storeu_ps(cptr.add(3 * n + j), acc3);
+        j += NR;
+    }
+    if j < n {
+        portable::micro_4_cols([a0, a1, a2, a3], bp, n, j, c);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn micro_1(arow: &[f32], bp: &[f32], n: usize, crow: &mut [f32]) {
+    let kc = arow.len();
+    debug_assert_eq!(bp.len(), kc * n);
+    debug_assert_eq!(crow.len(), n);
+    let bptr = bp.as_ptr();
+    let cptr = crow.as_mut_ptr();
+    let mut j = 0usize;
+    while j + NR <= n {
+        let mut acc = _mm256_loadu_ps(cptr.add(j));
+        for kk in 0..kc {
+            let bv = _mm256_loadu_ps(bptr.add(kk * n + j));
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_set1_ps(*arow.get_unchecked(kk)), bv));
+        }
+        _mm256_storeu_ps(cptr.add(j), acc);
+        j += NR;
+    }
+    if j < n {
+        portable::micro_1_cols(arow, bp, n, j, crow);
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn micro_4_fma(a: [&[f32]; 4], bp: &[f32], n: usize, c: &mut [f32]) {
+    let [a0, a1, a2, a3] = a;
+    let kc = a0.len();
+    debug_assert!(a1.len() == kc && a2.len() == kc && a3.len() == kc);
+    debug_assert_eq!(bp.len(), kc * n);
+    debug_assert_eq!(c.len(), 4 * n);
+    let bptr = bp.as_ptr();
+    let cptr = c.as_mut_ptr();
+    let mut j = 0usize;
+    while j + NR <= n {
+        let mut acc0 = _mm256_loadu_ps(cptr.add(j));
+        let mut acc1 = _mm256_loadu_ps(cptr.add(n + j));
+        let mut acc2 = _mm256_loadu_ps(cptr.add(2 * n + j));
+        let mut acc3 = _mm256_loadu_ps(cptr.add(3 * n + j));
+        for kk in 0..kc {
+            let bv = _mm256_loadu_ps(bptr.add(kk * n + j));
+            acc0 = _mm256_fmadd_ps(_mm256_set1_ps(*a0.get_unchecked(kk)), bv, acc0);
+            acc1 = _mm256_fmadd_ps(_mm256_set1_ps(*a1.get_unchecked(kk)), bv, acc1);
+            acc2 = _mm256_fmadd_ps(_mm256_set1_ps(*a2.get_unchecked(kk)), bv, acc2);
+            acc3 = _mm256_fmadd_ps(_mm256_set1_ps(*a3.get_unchecked(kk)), bv, acc3);
+        }
+        _mm256_storeu_ps(cptr.add(j), acc0);
+        _mm256_storeu_ps(cptr.add(n + j), acc1);
+        _mm256_storeu_ps(cptr.add(2 * n + j), acc2);
+        _mm256_storeu_ps(cptr.add(3 * n + j), acc3);
+        j += NR;
+    }
+    if j < n {
+        portable::micro_4_cols([a0, a1, a2, a3], bp, n, j, c);
+    }
+}
+
+#[target_feature(enable = "avx2,fma")]
+pub(super) unsafe fn micro_1_fma(arow: &[f32], bp: &[f32], n: usize, crow: &mut [f32]) {
+    let kc = arow.len();
+    debug_assert_eq!(bp.len(), kc * n);
+    debug_assert_eq!(crow.len(), n);
+    let bptr = bp.as_ptr();
+    let cptr = crow.as_mut_ptr();
+    let mut j = 0usize;
+    while j + NR <= n {
+        let mut acc = _mm256_loadu_ps(cptr.add(j));
+        for kk in 0..kc {
+            let bv = _mm256_loadu_ps(bptr.add(kk * n + j));
+            acc = _mm256_fmadd_ps(_mm256_set1_ps(*arow.get_unchecked(kk)), bv, acc);
+        }
+        _mm256_storeu_ps(cptr.add(j), acc);
+        j += NR;
+    }
+    if j < n {
+        portable::micro_1_cols(arow, bp, n, j, crow);
+    }
+}

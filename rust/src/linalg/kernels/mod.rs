@@ -1,0 +1,220 @@
+//! Runtime-dispatched micro-kernels behind the GEMM engine.
+//!
+//! [`super::dense`] tiles C into `MR x NR` register blocks and sweeps
+//! `KC`-deep k-panels; the innermost tile update is delegated to one of
+//! the implementations here, selected **once per process**:
+//!
+//! 1. `SONEW_KERNEL=<name>` pins a kernel by name (`portable`, `avx2`,
+//!    `avx2-fma`, `neon`); an unavailable name warns and falls back to
+//!    `portable`.
+//! 2. `SONEW_KERNEL=auto` (or unset) picks the most specific
+//!    *deterministic* kernel the CPU supports: `avx2` on x86-64 with
+//!    AVX2, `neon` on aarch64, `portable` everywhere else.
+//!
+//! Determinism contract: every kernel marked [`Microkernel::deterministic`]
+//! performs plain IEEE mul + add per output lane in strictly ascending-k
+//! order — the per-lane arithmetic of `_mm256_mul_ps`/`_mm256_add_ps`
+//! (and `vmulq_n_f32`/`vaddq_f32`) is exactly the scalar `a * b` then
+//! `acc + p`, and separate intrinsics are never contracted into FMA — so
+//! its output is **bitwise identical** to `portable` for every shape at
+//! every thread count (asserted by the kernel-parity tests in
+//! `linalg/dense.rs`). FMA variants fuse the multiply-add (one rounding
+//! instead of two), which changes low bits; they are *never* chosen by
+//! `auto` and sit outside the determinism contract — opt in explicitly
+//! with `SONEW_KERNEL=avx2-fma` for throughput experiments only.
+//!
+//! SIMD kernels process full `NR`-lane column chunks with intrinsics and
+//! delegate the ragged tail (fewer than `NR` columns) to the portable
+//! scalar code, so tails use identical arithmetic by construction.
+
+pub(crate) mod portable;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+
+use std::sync::OnceLock;
+
+/// Rows of C per register tile.
+pub(crate) const MR: usize = 4;
+/// f32 lanes of C per register tile (one AVX vector / two NEON vectors).
+pub(crate) const NR: usize = 8;
+
+/// Full `MR`-row tile update over one k-panel: `a` holds the 4 packed
+/// A rows (equal length `kc`), `bp` is the `kc x n` B panel, `c` is the
+/// 4 x n chunk-local output accumulated in place.
+///
+/// Safety contract for implementations: callable only when the kernel's
+/// CPU features are present (guaranteed by [`available`]-gated
+/// selection), with `a[1..4]` the same length as `a[0]`,
+/// `bp.len() == a[0].len() * n` and `c.len() == 4 * n`.
+pub type Micro4 = unsafe fn([&[f32]; 4], &[f32], usize, &mut [f32]);
+
+/// Single-row remainder update with the same panel layout
+/// (`crow.len() == n`) and the same safety contract.
+pub type Micro1 = unsafe fn(&[f32], &[f32], usize, &mut [f32]);
+
+/// One micro-kernel implementation the engine can dispatch to.
+pub struct Microkernel {
+    pub name: &'static str,
+    /// Bitwise-identical to `portable` (plain mul + add, ascending k).
+    /// `false` marks fused-multiply-add variants that trade the
+    /// determinism contract for throughput; `auto` never selects them.
+    pub deterministic: bool,
+    pub micro_4: Micro4,
+    pub micro_1: Micro1,
+}
+
+static PORTABLE: Microkernel = Microkernel {
+    name: "portable",
+    deterministic: true,
+    micro_4: portable::micro_4,
+    micro_1: portable::micro_1,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: Microkernel = Microkernel {
+    name: "avx2",
+    deterministic: true,
+    micro_4: avx2::micro_4,
+    micro_1: avx2::micro_1,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2_FMA: Microkernel = Microkernel {
+    name: "avx2-fma",
+    deterministic: false,
+    micro_4: avx2::micro_4_fma,
+    micro_1: avx2::micro_1_fma,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON: Microkernel = Microkernel {
+    name: "neon",
+    deterministic: true,
+    micro_4: neon::micro_4,
+    micro_1: neon::micro_1,
+};
+
+/// Every kernel whose CPU requirements this machine meets, most portable
+/// first, most specific last.
+#[allow(unused_mut)]
+pub fn available() -> Vec<&'static Microkernel> {
+    let mut v: Vec<&'static Microkernel> = vec![&PORTABLE];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            v.push(&AVX2);
+            if is_x86_feature_detected!("fma") {
+                v.push(&AVX2_FMA);
+            }
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        v.push(&NEON);
+    }
+    v
+}
+
+/// Look up an *available* kernel by name.
+pub fn by_name(name: &str) -> Option<&'static Microkernel> {
+    available().into_iter().find(|k| k.name == name)
+}
+
+/// Human-readable summary of the detected SIMD features, recorded in the
+/// `BENCH_*.json` trajectory so numbers are comparable across machines.
+#[allow(unused_mut)]
+pub fn cpu_features() -> String {
+    let mut feats: Vec<&str> = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx") {
+            feats.push("avx");
+        }
+        if is_x86_feature_detected!("avx2") {
+            feats.push("avx2");
+        }
+        if is_x86_feature_detected!("fma") {
+            feats.push("fma");
+        }
+        if is_x86_feature_detected!("avx512f") {
+            feats.push("avx512f");
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        feats.push("neon");
+    }
+    if feats.is_empty() {
+        std::env::consts::ARCH.to_string()
+    } else {
+        format!("{}:{}", std::env::consts::ARCH, feats.join("+"))
+    }
+}
+
+static ACTIVE: OnceLock<&'static Microkernel> = OnceLock::new();
+
+/// The kernel [`super::dense::gemm_into`] dispatches to, resolved once
+/// per process from `SONEW_KERNEL` (see module docs for the order).
+pub fn active() -> &'static Microkernel {
+    ACTIVE.get_or_init(|| {
+        let req = std::env::var("SONEW_KERNEL").ok();
+        choose(req.as_deref())
+    })
+}
+
+fn choose(req: Option<&str>) -> &'static Microkernel {
+    match req.map(str::trim) {
+        None | Some("") | Some("auto") => best_deterministic(),
+        Some(name) => by_name(name).unwrap_or_else(|| {
+            eprintln!(
+                "[sonew] SONEW_KERNEL={name} is not available on this CPU \
+                 (choices: auto, {}); using portable",
+                available().iter().map(|k| k.name).collect::<Vec<_>>().join(", ")
+            );
+            &PORTABLE
+        }),
+    }
+}
+
+fn best_deterministic() -> &'static Microkernel {
+    available().into_iter().rev().find(|k| k.deterministic).unwrap_or(&PORTABLE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn portable_always_available_and_names_unique() {
+        let av = available();
+        assert_eq!(av[0].name, "portable");
+        let mut names: Vec<_> = av.iter().map(|k| k.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), av.len(), "duplicate kernel names");
+    }
+
+    #[test]
+    fn auto_never_picks_a_non_deterministic_kernel() {
+        assert!(choose(None).deterministic);
+        assert!(choose(Some("auto")).deterministic);
+        assert!(choose(Some("  auto ")).deterministic);
+        assert!(choose(Some("")).deterministic);
+    }
+
+    #[test]
+    fn explicit_requests_resolve_or_fall_back_to_portable() {
+        for k in available() {
+            assert_eq!(choose(Some(k.name)).name, k.name);
+        }
+        assert_eq!(choose(Some("not-a-kernel")).name, "portable");
+    }
+
+    #[test]
+    fn cpu_features_names_the_arch() {
+        assert!(cpu_features().contains(std::env::consts::ARCH));
+    }
+}

@@ -1,0 +1,92 @@
+//! NEON micro-kernels (aarch64). Two 4-lane `float32x4_t` vectors cover
+//! one `NR = 8` column chunk.
+//!
+//! Determinism: `vmulq_n_f32` + `vaddq_f32` lower to separate
+//! `fmul`/`fadd` instructions (never contracted into `fmla` without
+//! fast-math), each lane exactly the scalar IEEE mul then add in the
+//! same ascending-kk order as portable — so outputs are bitwise
+//! identical to the portable tile.
+
+use super::{portable, NR};
+use std::arch::aarch64::{vaddq_f32, vld1q_f32, vmulq_n_f32, vst1q_f32};
+
+// Shared bounds contract (see `super::Micro4`): a[0..4] all have length
+// kc, bp has kc * n, c has 4 * n. Full NR-wide chunks run on intrinsics;
+// the ragged tail delegates to the portable scalar body.
+
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn micro_4(a: [&[f32]; 4], bp: &[f32], n: usize, c: &mut [f32]) {
+    let [a0, a1, a2, a3] = a;
+    let kc = a0.len();
+    debug_assert!(a1.len() == kc && a2.len() == kc && a3.len() == kc);
+    debug_assert_eq!(bp.len(), kc * n);
+    debug_assert_eq!(c.len(), 4 * n);
+    let bptr = bp.as_ptr();
+    let cptr = c.as_mut_ptr();
+    let mut j = 0usize;
+    while j + NR <= n {
+        let mut acc0l = vld1q_f32(cptr.add(j));
+        let mut acc0h = vld1q_f32(cptr.add(j + 4));
+        let mut acc1l = vld1q_f32(cptr.add(n + j));
+        let mut acc1h = vld1q_f32(cptr.add(n + j + 4));
+        let mut acc2l = vld1q_f32(cptr.add(2 * n + j));
+        let mut acc2h = vld1q_f32(cptr.add(2 * n + j + 4));
+        let mut acc3l = vld1q_f32(cptr.add(3 * n + j));
+        let mut acc3h = vld1q_f32(cptr.add(3 * n + j + 4));
+        for kk in 0..kc {
+            let bl = vld1q_f32(bptr.add(kk * n + j));
+            let bh = vld1q_f32(bptr.add(kk * n + j + 4));
+            let v0 = *a0.get_unchecked(kk);
+            acc0l = vaddq_f32(acc0l, vmulq_n_f32(bl, v0));
+            acc0h = vaddq_f32(acc0h, vmulq_n_f32(bh, v0));
+            let v1 = *a1.get_unchecked(kk);
+            acc1l = vaddq_f32(acc1l, vmulq_n_f32(bl, v1));
+            acc1h = vaddq_f32(acc1h, vmulq_n_f32(bh, v1));
+            let v2 = *a2.get_unchecked(kk);
+            acc2l = vaddq_f32(acc2l, vmulq_n_f32(bl, v2));
+            acc2h = vaddq_f32(acc2h, vmulq_n_f32(bh, v2));
+            let v3 = *a3.get_unchecked(kk);
+            acc3l = vaddq_f32(acc3l, vmulq_n_f32(bl, v3));
+            acc3h = vaddq_f32(acc3h, vmulq_n_f32(bh, v3));
+        }
+        vst1q_f32(cptr.add(j), acc0l);
+        vst1q_f32(cptr.add(j + 4), acc0h);
+        vst1q_f32(cptr.add(n + j), acc1l);
+        vst1q_f32(cptr.add(n + j + 4), acc1h);
+        vst1q_f32(cptr.add(2 * n + j), acc2l);
+        vst1q_f32(cptr.add(2 * n + j + 4), acc2h);
+        vst1q_f32(cptr.add(3 * n + j), acc3l);
+        vst1q_f32(cptr.add(3 * n + j + 4), acc3h);
+        j += NR;
+    }
+    if j < n {
+        portable::micro_4_cols([a0, a1, a2, a3], bp, n, j, c);
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn micro_1(arow: &[f32], bp: &[f32], n: usize, crow: &mut [f32]) {
+    let kc = arow.len();
+    debug_assert_eq!(bp.len(), kc * n);
+    debug_assert_eq!(crow.len(), n);
+    let bptr = bp.as_ptr();
+    let cptr = crow.as_mut_ptr();
+    let mut j = 0usize;
+    while j + NR <= n {
+        let mut accl = vld1q_f32(cptr.add(j));
+        let mut acch = vld1q_f32(cptr.add(j + 4));
+        for kk in 0..kc {
+            let bl = vld1q_f32(bptr.add(kk * n + j));
+            let bh = vld1q_f32(bptr.add(kk * n + j + 4));
+            let av = *arow.get_unchecked(kk);
+            accl = vaddq_f32(accl, vmulq_n_f32(bl, av));
+            acch = vaddq_f32(acch, vmulq_n_f32(bh, av));
+        }
+        vst1q_f32(cptr.add(j), accl);
+        vst1q_f32(cptr.add(j + 4), acch);
+        j += NR;
+    }
+    if j < n {
+        portable::micro_1_cols(arow, bp, n, j, crow);
+    }
+}

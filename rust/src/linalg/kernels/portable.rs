@@ -1,0 +1,113 @@
+//! Portable lane-array micro-kernels: fixed `[f32; NR]` accumulator
+//! tiles that rustc autovectorizes on any target. This is the universal
+//! fallback *and* the reference semantics every deterministic SIMD
+//! kernel must reproduce bit-for-bit — the `*_cols` bodies are also
+//! called directly by the SIMD kernels for ragged column tails, so tail
+//! arithmetic is shared, not duplicated.
+
+use super::NR;
+
+/// 4 x NR register-tile update over one k-panel, starting at column
+/// `j0`: `c` is 4 rows x n (chunk-local) and accumulates the panel's
+/// partial products on top of its current contents. Each loaded B lane
+/// chunk feeds all 4 rows; each C lane accumulates strictly in ascending
+/// kk order (the bitwise determinism contract).
+pub(crate) fn micro_4_cols(a: [&[f32]; 4], bp: &[f32], n: usize, j0: usize, c: &mut [f32]) {
+    let [a0, a1, a2, a3] = a;
+    let mut j = j0;
+    while j < n {
+        let w = NR.min(n - j);
+        let mut acc0 = [0.0f32; NR];
+        let mut acc1 = [0.0f32; NR];
+        let mut acc2 = [0.0f32; NR];
+        let mut acc3 = [0.0f32; NR];
+        acc0[..w].copy_from_slice(&c[j..j + w]);
+        acc1[..w].copy_from_slice(&c[n + j..n + j + w]);
+        acc2[..w].copy_from_slice(&c[2 * n + j..2 * n + j + w]);
+        acc3[..w].copy_from_slice(&c[3 * n + j..3 * n + j + w]);
+        if w == NR {
+            for (kk, (((&v0, &v1), &v2), &v3)) in
+                a0.iter().zip(a1).zip(a2).zip(a3).enumerate()
+            {
+                let brow = &bp[kk * n + j..kk * n + j + NR];
+                for (x, &bv) in acc0.iter_mut().zip(brow) {
+                    *x += v0 * bv;
+                }
+                for (x, &bv) in acc1.iter_mut().zip(brow) {
+                    *x += v1 * bv;
+                }
+                for (x, &bv) in acc2.iter_mut().zip(brow) {
+                    *x += v2 * bv;
+                }
+                for (x, &bv) in acc3.iter_mut().zip(brow) {
+                    *x += v3 * bv;
+                }
+            }
+        } else {
+            for (kk, (((&v0, &v1), &v2), &v3)) in
+                a0.iter().zip(a1).zip(a2).zip(a3).enumerate()
+            {
+                let brow = &bp[kk * n + j..kk * n + j + w];
+                for (x, &bv) in acc0[..w].iter_mut().zip(brow) {
+                    *x += v0 * bv;
+                }
+                for (x, &bv) in acc1[..w].iter_mut().zip(brow) {
+                    *x += v1 * bv;
+                }
+                for (x, &bv) in acc2[..w].iter_mut().zip(brow) {
+                    *x += v2 * bv;
+                }
+                for (x, &bv) in acc3[..w].iter_mut().zip(brow) {
+                    *x += v3 * bv;
+                }
+            }
+        }
+        c[j..j + w].copy_from_slice(&acc0[..w]);
+        c[n + j..n + j + w].copy_from_slice(&acc1[..w]);
+        c[2 * n + j..2 * n + j + w].copy_from_slice(&acc2[..w]);
+        c[3 * n + j..3 * n + j + w].copy_from_slice(&acc3[..w]);
+        j += w;
+    }
+}
+
+/// Single-row remainder update starting at column `j0`: identical
+/// per-element arithmetic (same ascending-kk order) as
+/// [`micro_4_cols`], so row grouping — which shifts with the thread
+/// split — never changes any output bit.
+pub(crate) fn micro_1_cols(arow: &[f32], bp: &[f32], n: usize, j0: usize, crow: &mut [f32]) {
+    let mut j = j0;
+    while j < n {
+        let w = NR.min(n - j);
+        let mut acc = [0.0f32; NR];
+        acc[..w].copy_from_slice(&crow[j..j + w]);
+        if w == NR {
+            for (kk, &av) in arow.iter().enumerate() {
+                let brow = &bp[kk * n + j..kk * n + j + NR];
+                for (x, &bv) in acc.iter_mut().zip(brow) {
+                    *x += av * bv;
+                }
+            }
+        } else {
+            for (kk, &av) in arow.iter().enumerate() {
+                let brow = &bp[kk * n + j..kk * n + j + w];
+                for (x, &bv) in acc[..w].iter_mut().zip(brow) {
+                    *x += av * bv;
+                }
+            }
+        }
+        crow[j..j + w].copy_from_slice(&acc[..w]);
+        j += w;
+    }
+}
+
+// Dispatch-table entries: the bodies are entirely safe; the `unsafe fn`
+// signature only exists so these coerce to the same pointer types as
+// the `#[target_feature]` SIMD kernels.
+
+pub(super) unsafe fn micro_4(a: [&[f32]; 4], bp: &[f32], n: usize, c: &mut [f32]) {
+    micro_4_cols(a, bp, n, 0, c);
+}
+
+pub(super) unsafe fn micro_1(arow: &[f32], bp: &[f32], n: usize, crow: &mut [f32]) {
+    micro_1_cols(arow, bp, n, 0, crow);
+}

@@ -6,10 +6,11 @@
 pub mod chol;
 pub mod dense;
 pub mod eig;
+pub mod kernels;
 
 pub use chol::{cholesky_in_place, cholesky_solve_in_place, spd_solve};
 pub use dense::{
-    axpy, dot, gemm_into, hw_threads, matmul, matmul_into, matmul_nt, matmul_tn, matvec, norm2,
-    Mat, Trans,
+    axpy, dot, gemm_into, gemm_with, hw_threads, matmul, matmul_into, matmul_nt, matmul_tn,
+    matvec, norm2, Mat, Trans,
 };
 pub use eig::{sym_eig, sym_pow};

@@ -11,6 +11,7 @@
 use std::io::{Read, Write};
 
 use super::{state, Blocks, Direction};
+use crate::util::{bf16_decode, bf16_store, Precision, StateVec};
 
 pub struct AdaFactor {
     beta2: f32,
@@ -19,7 +20,7 @@ pub struct AdaFactor {
     eps2: f32,
     /// update-clipping threshold d
     clip: f32,
-    v: Vec<f32>,
+    v: StateVec,
     blocks: Blocks,
     t: u64,
     /// most recent parameter snapshot for parameter scaling (set by the
@@ -35,11 +36,18 @@ impl AdaFactor {
             eps,
             eps2: 1e-3,
             clip: 1.0,
-            v: vec![0.0; n],
+            v: StateVec::zeros(n, Precision::F32),
             blocks,
             t: 0,
             param_rms: vec![1.0; nb],
         }
+    }
+
+    /// Re-home the (still all-zero) second-moment accumulator in `p`
+    /// storage. `param_rms` is one float per tensor — it stays f32.
+    pub fn with_storage(mut self, p: Precision) -> Self {
+        self.v = StateVec::zeros(self.v.len(), p);
+        self
     }
 
     /// Trainer hook: record per-tensor parameter RMS for relative step
@@ -64,9 +72,20 @@ impl Direction for AdaFactor {
         // configured beta2 so sweeps can still control it.
         let b2 = (1.0 - (self.t as f32).powf(-0.8)).min(self.beta2);
         let c2 = 1.0 / (1.0 - b2.powi(self.t as i32)).max(1e-12);
-        for ((v, &gi), ui) in self.v.iter_mut().zip(g).zip(u.iter_mut()) {
-            *v = b2 * *v + (1.0 - b2) * gi * gi;
-            *ui = gi / ((*v * c2).sqrt() + self.eps);
+        let eps = self.eps;
+        match &mut self.v {
+            StateVec::F32(v) => {
+                for ((vi, &gi), ui) in v.iter_mut().zip(g).zip(u.iter_mut()) {
+                    *vi = b2 * *vi + (1.0 - b2) * gi * gi;
+                    *ui = gi / ((*vi * c2).sqrt() + eps);
+                }
+            }
+            StateVec::Bf16(v) => {
+                for ((h, &gi), ui) in v.bits_mut().iter_mut().zip(g).zip(u.iter_mut()) {
+                    let vi = bf16_store(h, b2 * bf16_decode(*h) + (1.0 - b2) * gi * gi);
+                    *ui = gi / ((vi * c2).sqrt() + eps);
+                }
+            }
         }
         // per-tensor update clipping + parameter scaling
         for (b, &(off, len)) in self.blocks.iter().enumerate() {
@@ -86,17 +105,21 @@ impl Direction for AdaFactor {
         self.v.len() + self.param_rms.len()
     }
 
+    fn memory_bytes(&self) -> usize {
+        self.v.bytes() + 4 * self.param_rms.len()
+    }
+
     fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
         state::write_tag(w, b"ADAF")?;
         state::write_u64(w, self.t)?;
-        state::write_f32s(w, &self.v)?;
+        state::write_state_vec(w, &self.v)?;
         state::write_f32s(w, &self.param_rms)
     }
 
     fn load_state(&mut self, r: &mut dyn Read) -> std::io::Result<()> {
         state::expect_tag(r, b"ADAF", "adafactor")?;
         self.t = state::read_u64(r)?;
-        state::read_f32s_into(r, &mut self.v, "adafactor.v")?;
+        state::read_state_vec_into(r, &mut self.v, "adafactor.v")?;
         state::read_f32s_into(r, &mut self.param_rms, "adafactor.param_rms")
     }
 }
@@ -109,6 +132,26 @@ mod tests {
     fn reduces_quadratic() {
         let n = 10;
         let mut af = AdaFactor::new(n, vec![(0, n)], 0.99, 1e-30);
+        let mut x = vec![1.0f32; n];
+        let mut u = vec![0.0f32; n];
+        for _ in 0..100 {
+            af.observe_params(&x);
+            let g: Vec<f32> = x.iter().map(|v| 2.0 * v).collect();
+            af.compute(&g, &mut u);
+            for (xi, &ui) in x.iter_mut().zip(&u) {
+                *xi -= 0.05 * ui;
+            }
+        }
+        let f: f32 = x.iter().map(|v| v * v).sum();
+        assert!(f < 0.1, "{f}");
+    }
+
+    #[test]
+    fn packed_storage_halves_accumulator_bytes_and_still_optimizes() {
+        let n = 10;
+        let full = AdaFactor::new(n, vec![(0, n)], 0.99, 1e-30);
+        let mut af = AdaFactor::new(n, vec![(0, n)], 0.99, 1e-30).with_storage(Precision::Bf16);
+        assert_eq!(af.v.bytes() * 2, full.v.bytes());
         let mut x = vec![1.0f32; n];
         let mut u = vec![0.0f32; n];
         for _ in 0..100 {

@@ -1,21 +1,35 @@
 //! First-order baselines from §5.1: Nesterov, Adagrad, RMSProp, Adam.
 //! (SGD is `Identity`; Momentum is `Identity` + the core's beta1.)
+//!
+//! All statistics live in [`StateVec`] buffers: f32 by default, packed
+//! bf16 (`u16` per element, half the bytes) when built with
+//! `.with_storage(Precision::Bf16)`. The f32 arms keep the exact
+//! pre-packing arithmetic so default-precision runs are bitwise
+//! unchanged; the bf16 arms quantize on store, so the resident state
+//! is the value every later step reads.
 
 use std::io::{Read, Write};
 
 use super::state;
 use super::Direction;
+use crate::util::{bf16_decode, bf16_store, Precision, StateVec};
 
 /// Nesterov accelerated gradient as a direction provider:
 /// `m <- beta1 m + g; u = g + beta1 m` (the standard "lookahead" form).
 pub struct Nesterov {
     beta1: f32,
-    m: Vec<f32>,
+    m: StateVec,
 }
 
 impl Nesterov {
     pub fn new(n: usize, beta1: f32) -> Self {
-        Self { beta1, m: vec![0.0; n] }
+        Self { beta1, m: StateVec::zeros(n, Precision::F32) }
+    }
+
+    /// Re-home the (still all-zero) statistics in `p` storage.
+    pub fn with_storage(mut self, p: Precision) -> Self {
+        self.m = StateVec::zeros(self.m.len(), p);
+        self
     }
 }
 
@@ -25,21 +39,34 @@ impl Direction for Nesterov {
     }
     fn compute(&mut self, g: &[f32], u: &mut [f32]) {
         let b = self.beta1;
-        for ((mi, &gi), ui) in self.m.iter_mut().zip(g).zip(u.iter_mut()) {
-            *mi = b * *mi + gi;
-            *ui = gi + b * *mi;
+        match &mut self.m {
+            StateVec::F32(m) => {
+                for ((mi, &gi), ui) in m.iter_mut().zip(g).zip(u.iter_mut()) {
+                    *mi = b * *mi + gi;
+                    *ui = gi + b * *mi;
+                }
+            }
+            StateVec::Bf16(m) => {
+                for ((h, &gi), ui) in m.bits_mut().iter_mut().zip(g).zip(u.iter_mut()) {
+                    let mi = bf16_store(h, b * bf16_decode(*h) + gi);
+                    *ui = gi + b * mi;
+                }
+            }
         }
     }
     fn memory_floats(&self) -> usize {
         self.m.len()
     }
+    fn memory_bytes(&self) -> usize {
+        self.m.bytes()
+    }
     fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
         state::write_tag(w, b"NSTR")?;
-        state::write_f32s(w, &self.m)
+        state::write_state_vec(w, &self.m)
     }
     fn load_state(&mut self, r: &mut dyn Read) -> std::io::Result<()> {
         state::expect_tag(r, b"NSTR", "nesterov")?;
-        state::read_f32s_into(r, &mut self.m, "nesterov.m")
+        state::read_state_vec_into(r, &mut self.m, "nesterov.m")
     }
 }
 
@@ -47,12 +74,18 @@ impl Direction for Nesterov {
 /// the inverse square root.
 pub struct Adagrad {
     eps: f32,
-    acc: Vec<f32>,
+    acc: StateVec,
 }
 
 impl Adagrad {
     pub fn new(n: usize, eps: f32) -> Self {
-        Self { eps, acc: vec![0.0; n] }
+        Self { eps, acc: StateVec::zeros(n, Precision::F32) }
+    }
+
+    /// Re-home the (still all-zero) statistics in `p` storage.
+    pub fn with_storage(mut self, p: Precision) -> Self {
+        self.acc = StateVec::zeros(self.acc.len(), p);
+        self
     }
 }
 
@@ -61,21 +94,34 @@ impl Direction for Adagrad {
         "adagrad".into()
     }
     fn compute(&mut self, g: &[f32], u: &mut [f32]) {
-        for ((a, &gi), ui) in self.acc.iter_mut().zip(g).zip(u.iter_mut()) {
-            *a += gi * gi;
-            *ui = gi / (a.sqrt() + self.eps);
+        match &mut self.acc {
+            StateVec::F32(acc) => {
+                for ((a, &gi), ui) in acc.iter_mut().zip(g).zip(u.iter_mut()) {
+                    *a += gi * gi;
+                    *ui = gi / (a.sqrt() + self.eps);
+                }
+            }
+            StateVec::Bf16(acc) => {
+                for ((h, &gi), ui) in acc.bits_mut().iter_mut().zip(g).zip(u.iter_mut()) {
+                    let a = bf16_store(h, bf16_decode(*h) + gi * gi);
+                    *ui = gi / (a.sqrt() + self.eps);
+                }
+            }
         }
     }
     fn memory_floats(&self) -> usize {
         self.acc.len()
     }
+    fn memory_bytes(&self) -> usize {
+        self.acc.bytes()
+    }
     fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
         state::write_tag(w, b"ADGR")?;
-        state::write_f32s(w, &self.acc)
+        state::write_state_vec(w, &self.acc)
     }
     fn load_state(&mut self, r: &mut dyn Read) -> std::io::Result<()> {
         state::expect_tag(r, b"ADGR", "adagrad")?;
-        state::read_f32s_into(r, &mut self.acc, "adagrad.acc")
+        state::read_state_vec_into(r, &mut self.acc, "adagrad.acc")
     }
 }
 
@@ -83,12 +129,18 @@ impl Direction for Adagrad {
 pub struct RmsProp {
     beta2: f32,
     eps: f32,
-    v: Vec<f32>,
+    v: StateVec,
 }
 
 impl RmsProp {
     pub fn new(n: usize, beta2: f32, eps: f32) -> Self {
-        Self { beta2, eps, v: vec![0.0; n] }
+        Self { beta2, eps, v: StateVec::zeros(n, Precision::F32) }
+    }
+
+    /// Re-home the (still all-zero) statistics in `p` storage.
+    pub fn with_storage(mut self, p: Precision) -> Self {
+        self.v = StateVec::zeros(self.v.len(), p);
+        self
     }
 }
 
@@ -98,21 +150,34 @@ impl Direction for RmsProp {
     }
     fn compute(&mut self, g: &[f32], u: &mut [f32]) {
         let b2 = self.beta2;
-        for ((v, &gi), ui) in self.v.iter_mut().zip(g).zip(u.iter_mut()) {
-            *v = b2 * *v + (1.0 - b2) * gi * gi;
-            *ui = gi / (v.sqrt() + self.eps);
+        match &mut self.v {
+            StateVec::F32(v) => {
+                for ((vi, &gi), ui) in v.iter_mut().zip(g).zip(u.iter_mut()) {
+                    *vi = b2 * *vi + (1.0 - b2) * gi * gi;
+                    *ui = gi / (vi.sqrt() + self.eps);
+                }
+            }
+            StateVec::Bf16(v) => {
+                for ((h, &gi), ui) in v.bits_mut().iter_mut().zip(g).zip(u.iter_mut()) {
+                    let vi = bf16_store(h, b2 * bf16_decode(*h) + (1.0 - b2) * gi * gi);
+                    *ui = gi / (vi.sqrt() + self.eps);
+                }
+            }
         }
     }
     fn memory_floats(&self) -> usize {
         self.v.len()
     }
+    fn memory_bytes(&self) -> usize {
+        self.v.bytes()
+    }
     fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
         state::write_tag(w, b"RMSP")?;
-        state::write_f32s(w, &self.v)
+        state::write_state_vec(w, &self.v)
     }
     fn load_state(&mut self, r: &mut dyn Read) -> std::io::Result<()> {
         state::expect_tag(r, b"RMSP", "rmsprop")?;
-        state::read_f32s_into(r, &mut self.v, "rmsprop.v")
+        state::read_state_vec_into(r, &mut self.v, "rmsprop.v")
     }
 }
 
@@ -122,14 +187,28 @@ pub struct Adam {
     beta1: f32,
     beta2: f32,
     eps: f32,
-    m: Vec<f32>,
-    v: Vec<f32>,
+    m: StateVec,
+    v: StateVec,
     t: u64,
 }
 
 impl Adam {
     pub fn new(n: usize, beta1: f32, beta2: f32, eps: f32) -> Self {
-        Self { beta1, beta2, eps, m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+        Self {
+            beta1,
+            beta2,
+            eps,
+            m: StateVec::zeros(n, Precision::F32),
+            v: StateVec::zeros(n, Precision::F32),
+            t: 0,
+        }
+    }
+
+    /// Re-home the (still all-zero) statistics in `p` storage.
+    pub fn with_storage(mut self, p: Precision) -> Self {
+        self.m = StateVec::zeros(self.m.len(), p);
+        self.v = StateVec::zeros(self.v.len(), p);
+        self
     }
 }
 
@@ -142,32 +221,50 @@ impl Direction for Adam {
         let (b1, b2) = (self.beta1, self.beta2);
         let c1 = 1.0 / (1.0 - b1.powi(self.t as i32));
         let c2 = 1.0 / (1.0 - b2.powi(self.t as i32));
-        for (((m, v), &gi), ui) in self
-            .m
-            .iter_mut()
-            .zip(self.v.iter_mut())
-            .zip(g)
-            .zip(u.iter_mut())
-        {
-            *m = b1 * *m + (1.0 - b1) * gi;
-            *v = b2 * *v + (1.0 - b2) * gi * gi;
-            *ui = (*m * c1) / ((*v * c2).sqrt() + self.eps);
+        let eps = self.eps;
+        match (&mut self.m, &mut self.v) {
+            (StateVec::F32(m), StateVec::F32(v)) => {
+                for (((m, v), &gi), ui) in m.iter_mut().zip(v.iter_mut()).zip(g).zip(u.iter_mut())
+                {
+                    *m = b1 * *m + (1.0 - b1) * gi;
+                    *v = b2 * *v + (1.0 - b2) * gi * gi;
+                    *ui = (*m * c1) / ((*v * c2).sqrt() + eps);
+                }
+            }
+            (StateVec::Bf16(m), StateVec::Bf16(v)) => {
+                for (((hm, hv), &gi), ui) in m
+                    .bits_mut()
+                    .iter_mut()
+                    .zip(v.bits_mut().iter_mut())
+                    .zip(g)
+                    .zip(u.iter_mut())
+                {
+                    let mi = bf16_store(hm, b1 * bf16_decode(*hm) + (1.0 - b1) * gi);
+                    let vi = bf16_store(hv, b2 * bf16_decode(*hv) + (1.0 - b2) * gi * gi);
+                    *ui = (mi * c1) / ((vi * c2).sqrt() + eps);
+                }
+            }
+            // with_storage re-homes both buffers together
+            _ => unreachable!("adam: m and v always share storage precision"),
         }
     }
     fn memory_floats(&self) -> usize {
         self.m.len() + self.v.len()
     }
+    fn memory_bytes(&self) -> usize {
+        self.m.bytes() + self.v.bytes()
+    }
     fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
         state::write_tag(w, b"ADAM")?;
         state::write_u64(w, self.t)?;
-        state::write_f32s(w, &self.m)?;
-        state::write_f32s(w, &self.v)
+        state::write_state_vec(w, &self.m)?;
+        state::write_state_vec(w, &self.v)
     }
     fn load_state(&mut self, r: &mut dyn Read) -> std::io::Result<()> {
         state::expect_tag(r, b"ADAM", "adam")?;
         self.t = state::read_u64(r)?;
-        state::read_f32s_into(r, &mut self.m, "adam.m")?;
-        state::read_f32s_into(r, &mut self.v, "adam.v")
+        state::read_state_vec_into(r, &mut self.m, "adam.m")?;
+        state::read_state_vec_into(r, &mut self.v, "adam.v")
     }
 }
 
@@ -200,6 +297,47 @@ mod tests {
     }
 
     #[test]
+    fn packed_storage_halves_bytes_and_still_optimizes() {
+        let n = 16;
+        for p in [Precision::F32, Precision::Bf16] {
+            assert!(run(&mut Nesterov::new(n, 0.9).with_storage(p), 50, 0.02, n) < 0.1);
+            assert!(run(&mut Adagrad::new(n, 1e-8).with_storage(p), 80, 0.5, n) < 0.5);
+            assert!(run(&mut RmsProp::new(n, 0.9, 1e-8).with_storage(p), 80, 0.05, n) < 0.2);
+            assert!(run(&mut Adam::new(n, 0.9, 0.999, 1e-8).with_storage(p), 80, 0.1, n) < 0.2);
+        }
+        let full = Adam::new(n, 0.9, 0.999, 1e-8);
+        let packed = Adam::new(n, 0.9, 0.999, 1e-8).with_storage(Precision::Bf16);
+        assert_eq!(packed.memory_bytes() * 2, full.memory_bytes());
+        assert_eq!(packed.memory_floats(), full.memory_floats());
+    }
+
+    #[test]
+    fn packed_state_roundtrips_through_save_load() {
+        let n = 8;
+        let mut a = Adam::new(n, 0.9, 0.999, 1e-8).with_storage(Precision::Bf16);
+        let g: Vec<f32> = (0..n).map(|i| (i as f32 - 3.5) * 0.25).collect();
+        let mut u = vec![0.0f32; n];
+        for _ in 0..5 {
+            a.compute(&g, &mut u);
+        }
+        let mut blob = Vec::new();
+        a.save_state(&mut blob).unwrap();
+        let mut b = Adam::new(n, 0.9, 0.999, 1e-8).with_storage(Precision::Bf16);
+        b.load_state(&mut &blob[..]).unwrap();
+        let (mut ua, mut ub) = (vec![0.0f32; n], vec![0.0f32; n]);
+        a.compute(&g, &mut ua);
+        b.compute(&g, &mut ub);
+        assert_eq!(
+            ua.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            ub.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+
+        // and mismatched storage is refused, not silently widened
+        let mut wrong = Adam::new(n, 0.9, 0.999, 1e-8);
+        assert!(wrong.load_state(&mut &blob[..]).is_err());
+    }
+
+    #[test]
     fn adam_first_step_is_sign_of_gradient() {
         // with bias correction, step 1 gives m̂ = g, v̂ = g², u = sign-ish
         let mut adam = Adam::new(3, 0.9, 0.999, 0.0);
@@ -216,9 +354,10 @@ mod tests {
         let mut a = Adagrad::new(2, 1e-8);
         let mut u = vec![0.0; 2];
         a.compute(&[1.0, 1.0], &mut u);
-        let acc1 = a.acc.clone();
+        let acc1 = a.acc.to_f32_vec();
         a.compute(&[1.0, 1.0], &mut u);
-        assert!(a.acc.iter().zip(&acc1).all(|(now, before)| now >= before));
+        let acc2 = a.acc.to_f32_vec();
+        assert!(acc2.iter().zip(&acc1).all(|(now, before)| now >= before));
     }
 
     #[test]

@@ -49,6 +49,10 @@ impl Direction for Graft {
         self.dir.memory_floats() + self.mag.memory_floats()
     }
 
+    fn memory_bytes(&self) -> usize {
+        self.dir.memory_bytes() + self.mag.memory_bytes()
+    }
+
     /// Composite state: direction stats then magnitude stats (the
     /// `mag_buf` scratch is recomputed, not persisted).
     fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {

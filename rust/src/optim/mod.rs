@@ -38,7 +38,7 @@ pub mod state;
 
 use std::io::{Read, Write};
 
-use crate::util::Precision;
+use crate::util::{bf16_decode, bf16_store, Precision, StateVec};
 
 pub use spec::{registry, OptEntry, OptSpec};
 
@@ -81,6 +81,13 @@ pub trait Direction: Send {
     fn compute(&mut self, g: &[f32], u: &mut [f32]);
     /// Optimizer-statistics floats held (Table 1 / Table 6 accounting).
     fn memory_floats(&self) -> usize;
+    /// Resident statistics bytes. The default assumes full f32 storage;
+    /// directions that pack state (bf16 `StateVec`s) override this with
+    /// their actual buffer sizes, which is what the Table-6 memory
+    /// report compares across precisions.
+    fn memory_bytes(&self) -> usize {
+        4 * self.memory_floats()
+    }
     /// Serialize the statistics (little-endian, length-prefixed).
     fn save_state(&self, _w: &mut dyn Write) -> std::io::Result<()> {
         Ok(())
@@ -118,6 +125,10 @@ pub trait Optimizer: Send {
     fn steps(&self) -> u64;
     /// Total optimizer-state floats (direction stats + momentum).
     fn memory_floats(&self) -> usize;
+    /// Total resident optimizer-state bytes (packed-precision aware).
+    fn memory_bytes(&self) -> usize {
+        4 * self.memory_floats()
+    }
     /// Serialize the complete mutable state (step counter, momentum,
     /// every direction's statistics) — little-endian, self-describing.
     fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()>;
@@ -132,7 +143,9 @@ struct OptBlock {
     off: usize,
     len: usize,
     dir: Box<dyn Direction>,
-    momentum: Option<Vec<f32>>,
+    /// Stored at the optimizer's precision: packed bf16 under
+    /// `Precision::Bf16`, plain f32 otherwise.
+    momentum: Option<StateVec>,
     u: Vec<f32>,
 }
 
@@ -157,13 +170,23 @@ impl OptBlock {
         precision.quantize_slice(&mut self.u);
         if let Some(m) = &mut self.momentum {
             // EMA momentum with bias correction so early steps are not
-            // under-scaled (matches Adam-style conventions).
+            // under-scaled (matches Adam-style conventions). The packed
+            // arm stores bf16 — the same values the quantized-f32 path
+            // produced, at half the resident bytes.
             let corr = 1.0 / (1.0 - beta1.powi(t as i32));
-            for (mi, &ui) in m.iter_mut().zip(self.u.iter()) {
-                *mi = precision.quantize(beta1 * *mi + (1.0 - beta1) * ui);
-            }
-            for (ui, &mi) in self.u.iter_mut().zip(m.iter()) {
-                *ui = mi * corr;
+            match m {
+                StateVec::F32(mv) => {
+                    for (mi, ui) in mv.iter_mut().zip(self.u.iter_mut()) {
+                        *mi = precision.quantize(beta1 * *mi + (1.0 - beta1) * *ui);
+                        *ui = *mi * corr;
+                    }
+                }
+                StateVec::Bf16(mv) => {
+                    for (h, ui) in mv.bits_mut().iter_mut().zip(self.u.iter_mut()) {
+                        let mi = bf16_store(h, beta1 * bf16_decode(*h) + (1.0 - beta1) * *ui);
+                        *ui = mi * corr;
+                    }
+                }
             }
         }
         for (pi, &ui) in p.iter_mut().zip(self.u.iter()) {
@@ -229,10 +252,14 @@ impl Opt {
         Self::from_blocks(label, vec![(0, n, dir)])
     }
 
+    /// Enable heavy-ball momentum. Buffers adopt the optimizer's current
+    /// precision (registry builds apply `with_precision` first), so
+    /// under `Precision::Bf16` momentum lives in packed `u16` storage.
     pub fn with_momentum(mut self, beta1: f32) -> Self {
         self.beta1 = beta1;
         for b in &mut self.blocks {
-            b.momentum = if beta1 > 0.0 { Some(vec![0.0; b.len]) } else { None };
+            b.momentum =
+                if beta1 > 0.0 { Some(StateVec::zeros(b.len, self.precision)) } else { None };
         }
         self
     }
@@ -305,6 +332,15 @@ impl Opt {
             .sum()
     }
 
+    /// Total resident optimizer-state bytes from the actual buffers —
+    /// half of `4 * memory_floats()` for fully-packed bf16 state.
+    pub fn memory_bytes(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|b| b.dir.memory_bytes() + b.momentum.as_ref().map_or(0, |m| m.bytes()))
+            .sum()
+    }
+
     pub fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
         state::write_tag(w, b"OPTC")?;
         state::write_u64(w, self.t)?;
@@ -316,7 +352,7 @@ impl Opt {
             match &b.momentum {
                 Some(m) => {
                     state::write_u8(w, 1)?;
-                    state::write_f32s(w, m)?;
+                    state::write_state_vec(w, m)?;
                 }
                 None => state::write_u8(w, 0)?,
             }
@@ -349,7 +385,7 @@ impl Opt {
             }
             let has_m = state::read_u8(r)? != 0;
             match (&mut b.momentum, has_m) {
-                (Some(m), true) => state::read_f32s_into(r, m, "momentum")?,
+                (Some(m), true) => state::read_state_vec_into(r, m, "momentum")?,
                 (None, false) => {}
                 _ => {
                     return Err(state::bad_state(format!(
@@ -377,6 +413,9 @@ impl Optimizer for Opt {
     fn memory_floats(&self) -> usize {
         Opt::memory_floats(self)
     }
+    fn memory_bytes(&self) -> usize {
+        Opt::memory_bytes(self)
+    }
     fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
         Opt::save_state(self, w)
     }
@@ -403,6 +442,9 @@ impl<O: Optimizer + ?Sized> Optimizer for &mut O {
     }
     fn memory_floats(&self) -> usize {
         (**self).memory_floats()
+    }
+    fn memory_bytes(&self) -> usize {
+        (**self).memory_bytes()
     }
     fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
         (**self).save_state(w)
@@ -617,6 +659,87 @@ mod tests {
             }
             let same = x.iter().zip(&y).all(|(a, b)| a.to_bits() == b.to_bits());
             assert!(same, "{spec}: resumed trajectory diverged");
+        }
+    }
+
+    #[test]
+    fn bf16_registry_builds_pack_state_to_half_bytes() {
+        // End-to-end Table-6 claim: a `precision=bf16` registry build
+        // holds every statistics buffer (direction stats, grafting
+        // magnitude, heavy-ball momentum) in packed u16, so the resident
+        // bytes are exactly half the f32 build's.
+        let n = 64;
+        let blocks = vec![(0, 32), (32, 32)];
+        let mats = vec![(0, 32, 8, 4), (32, 32, 4, 8)];
+        let hp32 = HyperParams::default();
+        let hp16 = HyperParams { precision: Precision::Bf16, ..Default::default() };
+        for spec in [
+            "momentum",
+            "nesterov",
+            "adagrad",
+            "rmsprop",
+            "adam",
+            "diag-sonew",
+            "tridiag-sonew",
+            "band-sonew",
+            "shampoo",
+        ] {
+            let full = build(spec, n, &blocks, &mats, &hp32);
+            let packed = build(spec, n, &blocks, &mats, &hp16);
+            assert_eq!(full.memory_floats(), packed.memory_floats(), "{spec}");
+            assert_eq!(full.memory_bytes(), 4 * full.memory_floats(), "{spec}");
+            assert_eq!(
+                packed.memory_bytes() * 2,
+                full.memory_bytes(),
+                "{spec}: packed build is not half the resident bytes"
+            );
+        }
+        // AdaFactor keeps its per-block RMS scalars in f32 by design, so
+        // its ratio is close to — but not exactly — one half.
+        let full = build("adafactor", n, &blocks, &mats, &hp32);
+        let packed = build("adafactor", n, &blocks, &mats, &hp16);
+        assert!(packed.memory_bytes() < full.memory_bytes());
+        assert!(packed.memory_bytes() * 2 <= full.memory_bytes() + 4 * 2 * blocks.len());
+    }
+
+    #[test]
+    fn bf16_save_load_roundtrip_restores_trajectory() {
+        // Packed-state runs must resume bitwise, same as f32 runs: the
+        // checkpoint carries the raw u16 payload, so replaying from the
+        // snapshot reproduces the exact parameter trajectory.
+        let n = 64;
+        let blocks = vec![(0, 32), (32, 32)];
+        let mats = vec![(0, 32, 8, 4), (32, 32, 4, 8)];
+        let hp = HyperParams {
+            gamma: 1e-6,
+            precision: Precision::Bf16,
+            ..Default::default()
+        };
+        for spec in ["adam", "tridiag-sonew", "band-sonew", "shampoo", "adafactor"] {
+            let mut opt = build(spec, n, &blocks, &mats, &hp);
+            let mut rng = crate::util::Rng::new(23);
+            let gs: Vec<Vec<f32>> = (0..10).map(|_| rng.normal_vec(n)).collect();
+            let mut x = vec![1.0f32; n];
+            for g in &gs[..5] {
+                opt.step(&mut x, g, 1e-2);
+            }
+            let mut blob = Vec::new();
+            opt.save_state(&mut blob).unwrap();
+            let x_mid = x.clone();
+            for g in &gs[5..] {
+                opt.step(&mut x, g, 1e-2);
+            }
+            let mut fresh = build(spec, n, &blocks, &mats, &hp);
+            fresh.load_state(&mut &blob[..]).unwrap();
+            let mut y = x_mid;
+            for g in &gs[5..] {
+                fresh.step(&mut y, g, 1e-2);
+            }
+            let same = x.iter().zip(&y).all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "{spec}: bf16 resumed trajectory diverged");
+            // and a precision-mismatched optimizer must refuse the blob
+            let mut wrong = build(spec, n, &blocks, &mats, &HyperParams::default());
+            assert!(wrong.load_state(&mut &blob[..]).is_err(), "{spec}");
         }
     }
 

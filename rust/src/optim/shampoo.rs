@@ -10,18 +10,23 @@
 use std::io::{Read, Write};
 
 use crate::linalg::{matmul, matmul_nt, matmul_tn, sym_pow, Mat};
+use crate::util::{bf16_decode, bf16_store, StateVec};
 
 use super::{state, Direction, HyperParams, MatBlocks};
 
+/// Kronecker factors and cached roots in [`StateVec`] storage (flat
+/// row-major). Under `Precision::Bf16` all four buffers pack to u16 —
+/// the dense solves widen transiently to `Mat`, so the resident state is
+/// half the bytes while the arithmetic still runs in f32.
 struct BlockState {
     off: usize,
     len: usize,
     d1: usize,
     d2: usize,
-    l: Mat,
-    r: Mat,
-    l_root: Mat,
-    r_root: Mat,
+    l: StateVec,
+    r: StateVec,
+    l_root: StateVec,
+    r_root: StateVec,
 }
 
 pub struct Shampoo {
@@ -34,17 +39,26 @@ pub struct Shampoo {
 
 impl Shampoo {
     pub fn new(_n: usize, mats: MatBlocks, hp: &HyperParams) -> Self {
+        // statistics storage follows the run's precision: bf16 runs hold
+        // packed factors, f32 runs are bitwise-unchanged
+        let p = hp.precision;
         let blocks = mats
             .into_iter()
-            .map(|(off, len, d1, d2)| BlockState {
-                off,
-                len,
-                d1,
-                d2,
-                l: Mat::zeros(d1, d1),
-                r: Mat::zeros(d2, d2),
-                l_root: Mat::eye(d1),
-                r_root: Mat::eye(d2),
+            .map(|(off, len, d1, d2)| {
+                let mut l_root = StateVec::zeros(d1 * d1, p);
+                let mut r_root = StateVec::zeros(d2 * d2, p);
+                l_root.copy_from_f32(&Mat::eye(d1).data);
+                r_root.copy_from_f32(&Mat::eye(d2).data);
+                BlockState {
+                    off,
+                    len,
+                    d1,
+                    d2,
+                    l: StateVec::zeros(d1 * d1, p),
+                    r: StateVec::zeros(d2 * d2, p),
+                    l_root,
+                    r_root,
+                }
             })
             .collect();
         Self { blocks, beta2: hp.beta2, eps: hp.eps, interval: hp.interval.max(1), t: 0 }
@@ -58,6 +72,23 @@ impl Shampoo {
             .iter()
             .map(|b| 2 * (b.d1 * b.d1 + b.d2 * b.d2))
             .sum()
+    }
+}
+
+/// `dst <- b2 dst + (1-b2) x`, elementwise in whatever storage `dst`
+/// uses (quantize-on-store for packed bf16).
+fn ema_update(dst: &mut StateVec, x: &[f32], b2: f32) {
+    match dst {
+        StateVec::F32(d) => {
+            for (l, &xi) in d.iter_mut().zip(x) {
+                *l = b2 * *l + (1.0 - b2) * xi;
+            }
+        }
+        StateVec::Bf16(d) => {
+            for (h, &xi) in d.bits_mut().iter_mut().zip(x) {
+                bf16_store(h, b2 * bf16_decode(*h) + (1.0 - b2) * xi);
+            }
+        }
     }
 }
 
@@ -78,32 +109,39 @@ impl Direction for Shampoo {
             // L <- b2 L + (1-b2) G G^T ; R <- b2 R + (1-b2) G^T G
             let ggt = matmul_nt(&gm, &gm);
             let gtg = matmul_tn(&gm, &gm);
-            for (l, &x) in blk.l.data.iter_mut().zip(&ggt.data) {
-                *l = b2 * *l + (1.0 - b2) * x;
-            }
-            for (r, &x) in blk.r.data.iter_mut().zip(&gtg.data) {
-                *r = b2 * *r + (1.0 - b2) * x;
-            }
+            ema_update(&mut blk.l, &ggt.data, b2);
+            ema_update(&mut blk.r, &gtg.data, b2);
             if refresh {
-                // damped inverse fourth roots
-                let mut ld = blk.l.clone();
-                let mut rd = blk.r.clone();
+                // damped inverse fourth roots, widened from stored values
+                let mut ld = Mat::from_rows(d1, d1, blk.l.to_f32_vec());
+                let mut rd = Mat::from_rows(d2, d2, blk.r.to_f32_vec());
                 for i in 0..d1 {
                     *ld.at_mut(i, i) += self.eps;
                 }
                 for i in 0..d2 {
                     *rd.at_mut(i, i) += self.eps;
                 }
-                blk.l_root = sym_pow(&ld, -0.25, self.eps.max(1e-12));
-                blk.r_root = sym_pow(&rd, -0.25, self.eps.max(1e-12));
+                blk.l_root.copy_from_f32(&sym_pow(&ld, -0.25, self.eps.max(1e-12)).data);
+                blk.r_root.copy_from_f32(&sym_pow(&rd, -0.25, self.eps.max(1e-12)).data);
             }
-            let pre = matmul(&matmul(&blk.l_root, &gm), &blk.r_root);
+            // transient widen of the cached roots for the dense apply —
+            // for f32 storage this is a copy of the exact same values
+            let lr = Mat::from_rows(d1, d1, blk.l_root.to_f32_vec());
+            let rr = Mat::from_rows(d2, d2, blk.r_root.to_f32_vec());
+            let pre = matmul(&matmul(&lr, &gm), &rr);
             u[blk.off..blk.off + blk.len].copy_from_slice(&pre.data[..blk.len]);
         }
     }
 
     fn memory_floats(&self) -> usize {
         self.stat_floats()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.blocks
+            .iter()
+            .map(|b| b.l.bytes() + b.r.bytes() + b.l_root.bytes() + b.r_root.bytes())
+            .sum()
     }
 
     /// Statistics + the cached roots + the refresh clock — the roots are
@@ -114,10 +152,10 @@ impl Direction for Shampoo {
         state::write_u64(w, self.t)?;
         state::write_u64(w, self.blocks.len() as u64)?;
         for b in &self.blocks {
-            state::write_f32s(w, &b.l.data)?;
-            state::write_f32s(w, &b.r.data)?;
-            state::write_f32s(w, &b.l_root.data)?;
-            state::write_f32s(w, &b.r_root.data)?;
+            state::write_state_vec(w, &b.l)?;
+            state::write_state_vec(w, &b.r)?;
+            state::write_state_vec(w, &b.l_root)?;
+            state::write_state_vec(w, &b.r_root)?;
         }
         Ok(())
     }
@@ -133,10 +171,10 @@ impl Direction for Shampoo {
             )));
         }
         for b in &mut self.blocks {
-            state::read_f32s_into(r, &mut b.l.data, "shampoo.l")?;
-            state::read_f32s_into(r, &mut b.r.data, "shampoo.r")?;
-            state::read_f32s_into(r, &mut b.l_root.data, "shampoo.l_root")?;
-            state::read_f32s_into(r, &mut b.r_root.data, "shampoo.r_root")?;
+            state::read_state_vec_into(r, &mut b.l, "shampoo.l")?;
+            state::read_state_vec_into(r, &mut b.r, "shampoo.r")?;
+            state::read_state_vec_into(r, &mut b.l_root, "shampoo.l_root")?;
+            state::read_state_vec_into(r, &mut b.r_root, "shampoo.r_root")?;
         }
         Ok(())
     }
@@ -218,8 +256,26 @@ mod tests {
         let mut rng = Rng::new(2);
         let mut u = vec![0.0; 4];
         sh.compute(&rng.normal_vec(4), &mut u);
-        let root_after_1 = sh.blocks[0].l_root.data.clone();
+        let root_after_1 = sh.blocks[0].l_root.to_f32_vec();
         sh.compute(&rng.normal_vec(4), &mut u);
-        assert_eq!(sh.blocks[0].l_root.data, root_after_1);
+        assert_eq!(sh.blocks[0].l_root.to_f32_vec(), root_after_1);
+    }
+
+    #[test]
+    fn packed_storage_halves_factor_bytes() {
+        use crate::util::Precision;
+        let hp = HyperParams::default();
+        let full = Shampoo::new(12, vec![(0, 12, 3, 4)], &hp);
+        let hp16 = HyperParams { precision: Precision::Bf16, ..Default::default() };
+        let mut packed = Shampoo::new(12, vec![(0, 12, 3, 4)], &hp16);
+        assert_eq!(packed.memory_bytes() * 2, full.memory_bytes());
+        assert_eq!(packed.memory_floats(), full.memory_floats());
+        // and the packed factors still precondition without blowing up
+        let mut rng = Rng::new(5);
+        let mut u = vec![0.0; 12];
+        for _ in 0..8 {
+            packed.compute(&rng.normal_vec(12), &mut u);
+            assert!(u.iter().all(|v| v.is_finite()));
+        }
     }
 }

@@ -37,7 +37,7 @@ fn tensor_ids(n: usize, blocks: &Blocks) -> Vec<f32> {
 impl SonewDir {
     pub fn diag(n: usize, _blocks: &Blocks, hp: &HyperParams) -> Self {
         Self {
-            state: State::Diag(TridiagState::new(n, None)),
+            state: State::Diag(TridiagState::new(n, None).with_storage(hp.precision)),
             mode: LambdaMode::Ema(hp.beta2),
             eps: hp.eps,
             gamma: hp.gamma,
@@ -49,7 +49,7 @@ impl SonewDir {
     pub fn tridiag(n: usize, blocks: &Blocks, hp: &HyperParams) -> Self {
         let ids = tensor_ids(n, blocks);
         Self {
-            state: State::Tridiag(TridiagState::new(n, Some(&ids))),
+            state: State::Tridiag(TridiagState::new(n, Some(&ids)).with_storage(hp.precision)),
             mode: LambdaMode::Ema(hp.beta2),
             eps: hp.eps,
             gamma: hp.gamma,
@@ -61,7 +61,9 @@ impl SonewDir {
     pub fn banded(n: usize, blocks: &Blocks, hp: &HyperParams) -> Self {
         let ids = tensor_ids(n, blocks);
         Self {
-            state: State::Banded(BandedState::new(n, hp.band.max(1), Some(&ids))),
+            state: State::Banded(
+                BandedState::new(n, hp.band.max(1), Some(&ids)).with_storage(hp.precision),
+            ),
             mode: LambdaMode::Ema(hp.beta2),
             eps: hp.eps,
             gamma: hp.gamma,
@@ -119,6 +121,15 @@ impl Direction for SonewDir {
         }
     }
 
+    fn memory_bytes(&self) -> usize {
+        match &self.state {
+            // diag-SONew stores only hd
+            State::Diag(s) => s.hd.bytes(),
+            State::Tridiag(s) => s.memory_bytes(),
+            State::Banded(s) => s.memory_bytes(),
+        }
+    }
+
     /// Statistics (`hd`/`ho` or the stacked band diagonals) plus the
     /// step clock; edge masks are structural and rebuilt from the spec.
     fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
@@ -126,14 +137,14 @@ impl Direction for SonewDir {
         match &self.state {
             State::Diag(s) | State::Tridiag(s) => {
                 state::write_u64(w, s.step_count())?;
-                state::write_f32s(w, &s.hd)?;
-                state::write_f32s(w, &s.ho)?;
+                state::write_state_vec(w, &s.hd)?;
+                state::write_state_vec(w, &s.ho)?;
             }
             State::Banded(s) => {
                 state::write_u64(w, s.step_count())?;
                 state::write_u64(w, s.diags.len() as u64)?;
                 for d in &s.diags {
-                    state::write_f32s(w, d)?;
+                    state::write_state_vec(w, d)?;
                 }
             }
         }
@@ -146,8 +157,8 @@ impl Direction for SonewDir {
             State::Diag(s) | State::Tridiag(s) => {
                 let t = state::read_u64(r)?;
                 s.set_step_count(t);
-                state::read_f32s_into(r, &mut s.hd, "sonew.hd")?;
-                state::read_f32s_into(r, &mut s.ho, "sonew.ho")?;
+                state::read_state_vec_into(r, &mut s.hd, "sonew.hd")?;
+                state::read_state_vec_into(r, &mut s.ho, "sonew.ho")?;
             }
             State::Banded(s) => {
                 let t = state::read_u64(r)?;
@@ -161,7 +172,7 @@ impl Direction for SonewDir {
                     )));
                 }
                 for d in &mut s.diags {
-                    state::read_f32s_into(r, d, "sonew.diags")?;
+                    state::read_state_vec_into(r, d, "sonew.diags")?;
                 }
             }
         }
@@ -213,7 +224,7 @@ mod tests {
             if band == 0 {
                 let mut st = TridiagState::new(n, None);
                 for j in 0..n {
-                    st.hd[j] = sigma.at(j, j);
+                    st.hd.set(j, sigma.at(j, j));
                 }
                 st.step_diag(&g, &mut u, LambdaMode::Ema(1.0), 0.0, Precision::F32);
             } else {
@@ -221,7 +232,7 @@ mod tests {
                 for k in 0..=band {
                     for j in 0..n {
                         if j + k < n {
-                            st.diags[k][j] = sigma.at(j + k, j);
+                            st.diags[k].set(j, sigma.at(j + k, j));
                         }
                     }
                 }

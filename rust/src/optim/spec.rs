@@ -495,8 +495,13 @@ fn maybe_graft(
     };
     let mag: Box<dyn Direction> = match sel {
         GraftSel::None => return dir,
-        GraftSel::Adam => Box::new(fo::Adam::new(len, cx.hp.beta1, cx.hp.beta2, cx.hp.eps)),
-        GraftSel::RmsProp => Box::new(fo::RmsProp::new(len, cx.hp.beta2, cx.hp.eps)),
+        GraftSel::Adam => Box::new(
+            fo::Adam::new(len, cx.hp.beta1, cx.hp.beta2, cx.hp.eps)
+                .with_storage(cx.hp.precision),
+        ),
+        GraftSel::RmsProp => Box::new(
+            fo::RmsProp::new(len, cx.hp.beta2, cx.hp.eps).with_storage(cx.hp.precision),
+        ),
         // resolved above: Default collapses to the entry's paper default
         GraftSel::Default => unreachable!("GraftSel::Default resolved before dispatch"),
     };
@@ -519,32 +524,49 @@ fn ctor_momentum(cx: &BuildCtx) -> Opt {
 }
 
 fn ctor_nesterov(cx: &BuildCtx) -> Opt {
-    let b1 = cx.hp.beta1;
-    base(cx, "nesterov".into(), per_block(cx, |len| Box::new(fo::Nesterov::new(len, b1))))
+    let (b1, p) = (cx.hp.beta1, cx.hp.precision);
+    base(
+        cx,
+        "nesterov".into(),
+        per_block(cx, |len| Box::new(fo::Nesterov::new(len, b1).with_storage(p))),
+    )
 }
 
 fn ctor_adagrad(cx: &BuildCtx) -> Opt {
-    let eps = cx.hp.eps;
-    base(cx, "adagrad".into(), per_block(cx, |len| Box::new(fo::Adagrad::new(len, eps))))
+    let (eps, p) = (cx.hp.eps, cx.hp.precision);
+    base(
+        cx,
+        "adagrad".into(),
+        per_block(cx, |len| Box::new(fo::Adagrad::new(len, eps).with_storage(p))),
+    )
 }
 
 fn ctor_rmsprop(cx: &BuildCtx) -> Opt {
-    let (b2, eps) = (cx.hp.beta2, cx.hp.eps);
-    base(cx, "rmsprop".into(), per_block(cx, |len| Box::new(fo::RmsProp::new(len, b2, eps))))
+    let (b2, eps, p) = (cx.hp.beta2, cx.hp.eps, cx.hp.precision);
+    base(
+        cx,
+        "rmsprop".into(),
+        per_block(cx, |len| Box::new(fo::RmsProp::new(len, b2, eps).with_storage(p))),
+    )
 }
 
 fn ctor_adam(cx: &BuildCtx) -> Opt {
     let (b1, b2, eps) = (cx.hp.beta1, cx.hp.beta2, cx.hp.eps);
-    base(cx, "adam".into(), per_block(cx, |len| Box::new(fo::Adam::new(len, b1, b2, eps))))
+    let p = cx.hp.precision;
+    base(
+        cx,
+        "adam".into(),
+        per_block(cx, |len| Box::new(fo::Adam::new(len, b1, b2, eps).with_storage(p))),
+    )
 }
 
 fn ctor_adafactor(cx: &BuildCtx) -> Opt {
-    let (b2, eps) = (cx.hp.beta2, cx.hp.eps);
+    let (b2, eps, p) = (cx.hp.beta2, cx.hp.eps, cx.hp.precision);
     base(
         cx,
         "adafactor".into(),
         per_block(cx, |len| {
-            Box::new(adafactor::AdaFactor::new(len, vec![(0, len)], b2, eps))
+            Box::new(adafactor::AdaFactor::new(len, vec![(0, len)], b2, eps).with_storage(p))
         }),
     )
     .with_momentum(cx.hp.beta1)

@@ -7,6 +7,7 @@
 //! whose shape no longer matches the freshly-constructed optimizer
 //! (checkpoints never silently truncate or pad statistics).
 
+use crate::util::StateVec;
 use std::io::{self, Read, Write};
 
 /// `InvalidData` error with context — the uniform failure mode for
@@ -88,6 +89,68 @@ pub fn read_f32s_into(r: &mut dyn Read, dst: &mut [f32], what: &str) -> io::Resu
     Ok(())
 }
 
+/// Precision-tagged state vector: one storage-tag byte (0 = f32,
+/// 1 = packed bf16) followed by the length-prefixed payload — f32
+/// sections reuse the [`write_f32s`] layout, bf16 sections store the
+/// raw `u16` bits little-endian (half the bytes, exact round-trip).
+pub fn write_state_vec(w: &mut dyn Write, v: &StateVec) -> io::Result<()> {
+    match v {
+        StateVec::F32(xs) => {
+            write_u8(w, 0)?;
+            write_f32s(w, xs)
+        }
+        StateVec::Bf16(xs) => {
+            write_u8(w, 1)?;
+            write_u64(w, xs.len() as u64)?;
+            let mut buf = Vec::with_capacity(xs.len() * 2);
+            for &h in xs.bits() {
+                buf.extend_from_slice(&h.to_le_bytes());
+            }
+            w.write_all(&buf)
+        }
+    }
+}
+
+/// Read a [`write_state_vec`] section into an existing vector. The
+/// stored precision must match the vector's storage — a checkpoint
+/// saved under one `precision` cannot silently resume under another
+/// (that would change every subsequent quantization).
+pub fn read_state_vec_into(r: &mut dyn Read, dst: &mut StateVec, what: &str) -> io::Result<()> {
+    let tag = read_u8(r)?;
+    match tag {
+        0 => match dst {
+            StateVec::F32(xs) => read_f32s_into(r, xs, what),
+            StateVec::Bf16(_) => Err(bad_state(format!(
+                "{what}: checkpoint stores f32 state but the optimizer was built \
+                 with packed-bf16 storage — precision must match the saved run"
+            ))),
+        },
+        1 => match dst {
+            StateVec::Bf16(xs) => {
+                let n = read_u64(r)? as usize;
+                if n != xs.len() {
+                    return Err(bad_state(format!(
+                        "{what}: state holds {n} bf16 elements but the optimizer \
+                         expects {}",
+                        xs.len()
+                    )));
+                }
+                let mut bytes = vec![0u8; n * 2];
+                r.read_exact(&mut bytes)?;
+                for (h, chunk) in xs.bits_mut().iter_mut().zip(bytes.chunks_exact(2)) {
+                    *h = u16::from_le_bytes(chunk.try_into().unwrap());
+                }
+                Ok(())
+            }
+            StateVec::F32(_) => Err(bad_state(format!(
+                "{what}: checkpoint stores packed-bf16 state but the optimizer was \
+                 built with f32 storage — precision must match the saved run"
+            ))),
+        },
+        other => Err(bad_state(format!("{what}: unknown state storage tag {other}"))),
+    }
+}
+
 /// 4-byte section tag, checked on read — catches blobs produced by a
 /// different optimizer stack early with a readable error.
 pub fn write_tag(w: &mut dyn Write, tag: &[u8; 4]) -> io::Result<()> {
@@ -144,5 +207,44 @@ mod tests {
         write_tag(&mut buf, b"ADAM").unwrap();
         let mut r: &[u8] = &buf;
         assert!(expect_tag(&mut r, b"SHMP", "shampoo").is_err());
+    }
+
+    #[test]
+    fn state_vec_roundtrips_in_both_precisions() {
+        use crate::util::Precision;
+        let xs = [1.0f32, -2.5, 0.125, 3.1415926, -1e-3];
+        for prec in [Precision::F32, Precision::Bf16] {
+            let mut v = StateVec::zeros(xs.len(), prec);
+            v.copy_from_f32(&xs);
+            let mut buf = Vec::new();
+            write_state_vec(&mut buf, &v).unwrap();
+            if prec == Precision::Bf16 {
+                // packed payload: tag + u64 len + 2 bytes per element
+                assert_eq!(buf.len(), 1 + 8 + 2 * xs.len());
+            }
+            let mut back = StateVec::zeros(xs.len(), prec);
+            let mut r: &[u8] = &buf;
+            read_state_vec_into(&mut r, &mut back, "v").unwrap();
+            assert_eq!(back, v);
+        }
+    }
+
+    #[test]
+    fn state_vec_precision_mismatch_is_an_error() {
+        use crate::util::Precision;
+        let v = StateVec::zeros(4, Precision::Bf16);
+        let mut buf = Vec::new();
+        write_state_vec(&mut buf, &v).unwrap();
+        let mut wrong = StateVec::zeros(4, Precision::F32);
+        let mut r: &[u8] = &buf;
+        let err = read_state_vec_into(&mut r, &mut wrong, "v").unwrap_err();
+        assert!(format!("{err}").contains("precision"), "{err}");
+
+        let v32 = StateVec::zeros(4, Precision::F32);
+        let mut buf = Vec::new();
+        write_state_vec(&mut buf, &v32).unwrap();
+        let mut wrong = StateVec::zeros(4, Precision::Bf16);
+        let mut r: &[u8] = &buf;
+        assert!(read_state_vec_into(&mut r, &mut wrong, "v").is_err());
     }
 }

@@ -328,8 +328,8 @@ fn tridiag_step(program: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>
         );
     }
     let mut st = TridiagState::new(n, Some(tids));
-    st.hd.copy_from_slice(hd);
-    st.ho.copy_from_slice(ho);
+    st.hd.copy_from_f32(hd);
+    st.ho.copy_from_f32(ho);
     let mut u = vec![0.0f32; n];
     st.step(
         g,
@@ -340,8 +340,8 @@ fn tridiag_step(program: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>>
         Precision::F32,
     );
     Ok(vec![
-        HostTensor::F32(st.hd),
-        HostTensor::F32(st.ho),
+        HostTensor::F32(st.hd.into_f32_vec()),
+        HostTensor::F32(st.ho.into_f32_vec()),
         HostTensor::F32(u),
     ])
 }
@@ -628,8 +628,8 @@ mod tests {
         assert_eq!(out.len(), 3);
 
         let mut st = TridiagState::new(n, Some(&tids));
-        st.hd.copy_from_slice(&hd);
-        st.ho.copy_from_slice(&ho_full);
+        st.hd.copy_from_f32(&hd);
+        st.ho.copy_from_f32(&ho_full);
         let mut u = vec![0.0f32; n];
         st.step(
             &g,
@@ -639,8 +639,8 @@ mod tests {
             0.0,
             Precision::F32,
         );
-        assert_eq!(out[0].as_f32().unwrap(), &st.hd[..]);
-        assert_eq!(out[1].as_f32().unwrap(), &st.ho[..]);
+        assert_eq!(out[0].as_f32().unwrap(), &st.hd.to_f32_vec()[..]);
+        assert_eq!(out[1].as_f32().unwrap(), &st.ho.to_f32_vec()[..]);
         assert_eq!(out[2].as_f32().unwrap(), &u[..]);
     }
 

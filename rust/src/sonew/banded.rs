@@ -13,7 +13,7 @@
 //! construction.
 
 use crate::linalg::chol::{cholesky_in_place, cholesky_solve_in_place};
-use crate::util::Precision;
+use crate::util::{Precision, StateElem, StateVec};
 
 use super::{LambdaMode, StepParams};
 
@@ -43,9 +43,10 @@ impl BandScratch {
 
 /// One tensor block's disjoint views of the stacked diagonals, masks,
 /// gradient, direction and scratch — everything `banded_block_step`
-/// touches.
-struct BandBlock<'a> {
-    diags: Vec<&'a mut [f32]>,
+/// touches. Generic over the statistics element (`f32` or packed-bf16
+/// `u16`).
+struct BandBlock<'a, E> {
+    diags: Vec<&'a mut [E]>,
     edge: Vec<&'a [bool]>,
     g: &'a [f32],
     u: &'a mut [f32],
@@ -53,12 +54,14 @@ struct BandBlock<'a> {
     dropped: &'a mut usize,
 }
 
-/// Banded statistics: `diags[k][j] = H[j+k][j]`, k = 0..=b.
+/// Banded statistics: `diags[k][j] = H[j+k][j]`, k = 0..=b. Diagonals
+/// live in [`StateVec`] storage — f32 by default, packed bf16 (half the
+/// resident bytes) via `.with_storage(Precision::Bf16)`.
 #[derive(Debug, Clone)]
 pub struct BandedState {
     pub b: usize,
     /// (b+1) stacked diagonals, each of length n
-    pub diags: Vec<Vec<f32>>,
+    pub diags: Vec<StateVec>,
     /// edge_masks[k-1][j]: keep H[j+k][j]? (k = 1..=b)
     pub edge: Vec<Vec<bool>>,
     /// independent per-tensor blocks (offset, len): maximal runs no kept
@@ -87,7 +90,7 @@ impl BandedState {
         let scratch = blocks.iter().map(|_| BandScratch::new(b)).collect();
         Self {
             b,
-            diags: vec![vec![0.0; n]; b + 1],
+            diags: (0..=b).map(|_| StateVec::zeros(n, Precision::F32)).collect(),
             edge,
             blocks,
             parallel: true,
@@ -95,6 +98,14 @@ impl BandedState {
             scratch,
             t: 0,
         }
+    }
+
+    /// Re-home the (still all-zero) diagonals in `p` storage: packed
+    /// bf16 halves the resident statistics bytes.
+    pub fn with_storage(mut self, p: Precision) -> Self {
+        let n = self.len();
+        self.diags = (0..self.diags.len()).map(|_| StateVec::zeros(n, p)).collect();
+        self
     }
 
     pub fn len(&self) -> usize {
@@ -108,6 +119,11 @@ impl BandedState {
     /// Paper Table 1: band-b SONew stores (b+1) * n statistics floats.
     pub fn memory_floats(&self) -> usize {
         (self.b + 1) * self.len()
+    }
+
+    /// Resident statistics bytes (precision-aware, Table-6 memory rows).
+    pub fn memory_bytes(&self) -> usize {
+        self.diags.iter().map(|d| d.bytes()).sum()
     }
 
     /// Steps taken so far (checkpoint serialization).
@@ -150,49 +166,110 @@ impl BandedState {
             self.scratch = self.blocks.iter().map(|_| BandScratch::new(b)).collect();
         }
 
-        // disjoint per-block views of the (b+1) stacked diagonals
-        let nb = self.blocks.len();
-        let mut diag_views: Vec<Vec<&mut [f32]>> =
-            (0..nb).map(|_| Vec::with_capacity(b + 1)).collect();
-        for dvec in self.diags.iter_mut() {
-            let mut rest: &mut [f32] = dvec;
-            for (bi, &(_, len)) in self.blocks.iter().enumerate() {
-                let (head, tail) = std::mem::take(&mut rest).split_at_mut(len);
-                diag_views[bi].push(head);
-                rest = tail;
-            }
-        }
-        let edge_views: Vec<Vec<&[bool]>> = self
-            .blocks
-            .iter()
-            .map(|&(off, len)| self.edge.iter().map(|e| &e[off..off + len]).collect())
-            .collect();
-
-        let mut dropped = vec![0usize; nb];
-        let mut items: Vec<BandBlock<'_>> = Vec::with_capacity(nb);
-        let mut g_rest: &[f32] = g;
-        let mut u_rest: &mut [f32] = u;
-        for (((dv, ev), sc), d) in diag_views
-            .into_iter()
-            .zip(edge_views)
-            .zip(self.scratch.iter_mut())
-            .zip(dropped.iter_mut())
-        {
-            let len = dv[0].len();
-            let (g_b, gr) = g_rest.split_at(len);
-            g_rest = gr;
-            let (u_b, ur) = std::mem::take(&mut u_rest).split_at_mut(len);
-            u_rest = ur;
-            items.push(BandBlock { diags: dv, edge: ev, g: g_b, u: u_b, sc, dropped: d });
-        }
-
         let threads = crate::linalg::hw_threads();
-        let par = self.parallel && items.len() > 1 && threads > 1 && n >= super::PAR_MIN_N;
-        crate::util::par::run_chunked(items, if par { threads } else { 1 }, |v| {
-            banded_block_step(v, b, p)
-        });
+        let par = self.parallel && self.blocks.len() > 1 && threads > 1 && n >= super::PAR_MIN_N;
+        let threads = if par { threads } else { 1 };
+        let mut dropped = vec![0usize; self.blocks.len()];
+        match self.diags.first() {
+            Some(StateVec::F32(_)) => {
+                let dv: Vec<&mut [f32]> = self
+                    .diags
+                    .iter_mut()
+                    .map(|d| match d {
+                        StateVec::F32(x) => x.as_mut_slice(),
+                        _ => unreachable!("banded: diagonals always share storage precision"),
+                    })
+                    .collect();
+                run_banded_blocks(
+                    dv,
+                    &self.edge,
+                    g,
+                    u,
+                    &self.blocks,
+                    &mut self.scratch,
+                    &mut dropped,
+                    threads,
+                    b,
+                    p,
+                );
+            }
+            Some(StateVec::Bf16(_)) => {
+                let dv: Vec<&mut [u16]> = self
+                    .diags
+                    .iter_mut()
+                    .map(|d| match d {
+                        StateVec::Bf16(x) => x.bits_mut(),
+                        _ => unreachable!("banded: diagonals always share storage precision"),
+                    })
+                    .collect();
+                run_banded_blocks(
+                    dv,
+                    &self.edge,
+                    g,
+                    u,
+                    &self.blocks,
+                    &mut self.scratch,
+                    &mut dropped,
+                    threads,
+                    b,
+                    p,
+                );
+            }
+            None => unreachable!("b >= 1 means at least two diagonals"),
+        }
         self.last_dropped = dropped.iter().sum();
     }
+}
+
+/// Split the diagonals/gradient/direction/scratch into per-tensor block
+/// views and fan the fused step across the executor pool. Generic over
+/// the statistics element so f32 and packed-bf16 share one scan.
+#[allow(clippy::too_many_arguments)]
+fn run_banded_blocks<E: StateElem>(
+    diags: Vec<&mut [E]>,
+    edge: &[Vec<bool>],
+    g: &[f32],
+    u: &mut [f32],
+    blocks: &[(usize, usize)],
+    scratch: &mut [BandScratch],
+    dropped: &mut [usize],
+    threads: usize,
+    b: usize,
+    p: StepParams,
+) {
+    // disjoint per-block views of the (b+1) stacked diagonals
+    let nb = blocks.len();
+    let mut diag_views: Vec<Vec<&mut [E]>> = (0..nb).map(|_| Vec::with_capacity(b + 1)).collect();
+    for mut rest in diags {
+        for (bi, &(_, len)) in blocks.iter().enumerate() {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(len);
+            diag_views[bi].push(head);
+            rest = tail;
+        }
+    }
+    let edge_views: Vec<Vec<&[bool]>> = blocks
+        .iter()
+        .map(|&(off, len)| edge.iter().map(|e| &e[off..off + len]).collect())
+        .collect();
+
+    let mut items: Vec<BandBlock<'_, E>> = Vec::with_capacity(nb);
+    let mut g_rest: &[f32] = g;
+    let mut u_rest: &mut [f32] = u;
+    for (((dv, ev), sc), d) in diag_views
+        .into_iter()
+        .zip(edge_views)
+        .zip(scratch.iter_mut())
+        .zip(dropped.iter_mut())
+    {
+        let len = dv[0].len();
+        let (g_b, gr) = g_rest.split_at(len);
+        g_rest = gr;
+        let (u_b, ur) = std::mem::take(&mut u_rest).split_at_mut(len);
+        u_rest = ur;
+        items.push(BandBlock { diags: dv, edge: ev, g: g_b, u: u_b, sc, dropped: d });
+    }
+
+    crate::util::par::run_chunked(items, threads, |v| banded_block_step(v, b, p));
 }
 
 /// The fused banded step over one tensor block: statistics update, per-
@@ -200,7 +277,13 @@ impl BandedState {
 /// block's own ring buffers. Edges crossing the block end are masked
 /// zero by construction, so clipping the active band at the block
 /// boundary performs the same arithmetic as the old global scan.
-fn banded_block_step(v: BandBlock<'_>, b: usize, p: StepParams) {
+///
+/// Statistics quantize on store (`E::store`); every later read goes
+/// through the stored value, so packed bf16 is value-identical to the
+/// old quantize-after-update f32 simulation and f32 storage is the
+/// bitwise-unchanged identity. The `precision` step argument only
+/// governs the direction `u`.
+fn banded_block_step<E: StateElem>(v: BandBlock<'_, E>, b: usize, p: StepParams) {
     let BandBlock { mut diags, edge, g, u, sc, dropped } = v;
     let StepParams { decay, inno, eps, gamma, precision } = p;
     let n = g.len();
@@ -212,14 +295,14 @@ fn banded_block_step(v: BandBlock<'_>, b: usize, p: StepParams) {
     // --- statistics update (eq. 10) ---
     for j in 0..n {
         let gj = g[j];
-        diags[0][j] = precision.quantize(decay * diags[0][j] + inno * gj * gj);
+        diags[0][j] = E::store(decay * diags[0][j].load() + inno * gj * gj);
     }
     for k in 1..=b {
         for j in 0..n {
             diags[k][j] = if edge[k - 1][j] {
-                precision.quantize(decay * diags[k][j] + inno * g[j] * g[j + k])
+                E::store(decay * diags[k][j].load() + inno * g[j] * g[j + k])
             } else {
-                0.0
+                E::store(0.0)
             };
         }
     }
@@ -238,7 +321,7 @@ fn banded_block_step(v: BandBlock<'_>, b: usize, p: StepParams) {
         // crossing the boundary are masked-zero, so the components they
         // would contribute vanish identically)
         let w = b.min(n - 1 - j);
-        let a_jj = diags[0][j] + eps;
+        let a_jj = diags[0][j].load() + eps;
         x_col.fill(0.0);
         let mut d_j;
         if w > 0 {
@@ -248,13 +331,13 @@ fn banded_block_step(v: BandBlock<'_>, b: usize, p: StepParams) {
                     let k = pp.abs_diff(q);
                     let row = j + 1 + pp.min(q);
                     let hv = if k == 0 {
-                        diags[0][row] + eps
+                        diags[0][row].load() + eps
                     } else {
-                        diags[k][row]
+                        diags[k][row].load()
                     };
                     hii[pp * w + q] = hv;
                 }
-                rhs[pp] = -diags[pp + 1][j];
+                rhs[pp] = -diags[pp + 1][j].load();
             }
             let ok = cholesky_in_place(&mut hii[..w * w], w);
             if ok {
@@ -263,7 +346,7 @@ fn banded_block_step(v: BandBlock<'_>, b: usize, p: StepParams) {
                 // sv = H_jj + H_Ij^T x  (eq. 14)
                 let mut sv = a_jj;
                 for pp in 0..w {
-                    sv += diags[pp + 1][j] * rhs[pp];
+                    sv += diags[pp + 1][j].load() * rhs[pp];
                 }
                 if sv > gamma {
                     d_j = 1.0 / sv;
@@ -434,7 +517,7 @@ mod tests {
             let mut st2 = st.clone();
             st2.step(&g, &mut u, LambdaMode::Ema(0.9), 1e-3, 0.0, Precision::F32);
             // manual update then oracle
-            let mut diags = st.diags.clone();
+            let mut diags: Vec<Vec<f32>> = st.diags.iter().map(|d| d.to_f32_vec()).collect();
             for j in 0..n {
                 diags[0][j] = 0.9 * diags[0][j] + 0.1 * g[j] * g[j];
             }
@@ -529,7 +612,8 @@ mod tests {
         }
         assert!(up.iter().zip(&us).all(|(a, b)| a.to_bits() == b.to_bits()));
         for (dp, ds) in par.diags.iter().zip(&seq.diags) {
-            assert!(dp.iter().zip(ds).all(|(a, b)| a.to_bits() == b.to_bits()));
+            let (dp, ds) = (dp.to_f32_vec(), ds.to_f32_vec());
+            assert!(dp.iter().zip(&ds).all(|(a, b)| a.to_bits() == b.to_bits()));
         }
         assert_eq!(par.last_dropped, seq.last_dropped);
     }
@@ -538,5 +622,24 @@ mod tests {
     fn memory_matches_table1() {
         let st = BandedState::new(1000, 4, None);
         assert_eq!(st.memory_floats(), 5000); // 5 * d1*d2 per Table 1
+    }
+
+    #[test]
+    fn packed_storage_halves_state_bytes_and_tracks_f32() {
+        let n = 48;
+        let b = 3;
+        let full = BandedState::new(n, b, None);
+        let mut st = BandedState::new(n, b, None).with_storage(Precision::Bf16);
+        assert_eq!(st.memory_bytes() * 2, full.memory_bytes());
+        let mut f = full;
+        let (mut up, mut uf) = (vec![0.0; n], vec![0.0; n]);
+        let mut rng = Rng::new(17);
+        for _ in 0..5 {
+            let g = rng.normal_vec(n);
+            st.step(&g, &mut up, LambdaMode::Ema(0.9), 1e-3, 0.0, Precision::Bf16);
+            f.step(&g, &mut uf, LambdaMode::Ema(0.9), 1e-3, 0.0, Precision::F32);
+        }
+        // bf16 keeps ~8 mantissa bits: directions agree to ~1% relative
+        assert_close(&up, &uf, 2e-2, 1e-3, "bf16 vs f32 direction");
     }
 }

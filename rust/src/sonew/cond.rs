@@ -19,12 +19,14 @@ pub fn beta(hd: &[f32], ho: &[f32], i: usize) -> f32 {
     }
 }
 
-/// max_i |beta_i| over kept edges (Lemma A.4's beta).
+/// max_i |beta_i| over kept edges (Lemma A.4's beta). Diagnostics path:
+/// widens packed statistics to f32 (allocation is fine off the hot loop).
 pub fn beta_max(st: &TridiagState) -> f32 {
-    let n = st.hd.len();
+    let (hd, ho) = (st.hd.to_f32_vec(), st.ho.to_f32_vec());
+    let n = hd.len();
     (0..n.saturating_sub(1))
-        .filter(|&i| st.edge[i] && st.ho[i] != 0.0)
-        .map(|i| beta(&st.hd, &st.ho, i).abs())
+        .filter(|&i| st.edge[i] && ho[i] != 0.0)
+        .map(|i| beta(&hd, &ho, i).abs())
         .fold(0.0, f32::max)
 }
 
@@ -99,9 +101,10 @@ mod tests {
                 st.step(&g, &mut u, LambdaMode::Ema(0.95), 0.0, 0.0, Precision::F32);
             }
             let gamma = 1e-3f32;
-            let before = cond_bound_tridiag(&st.hd, &st.ho, &st.edge);
-            let keep = algorithm3_keep(&st.hd, &st.ho, &st.edge, 0.0, gamma);
-            let after = cond_bound_tridiag(&st.hd, &st.ho, &keep);
+            let (hd, ho) = (st.hd.to_f32_vec(), st.ho.to_f32_vec());
+            let before = cond_bound_tridiag(&hd, &ho, &st.edge);
+            let keep = algorithm3_keep(&hd, &ho, &st.edge, 0.0, gamma);
+            let after = cond_bound_tridiag(&hd, &ho, &keep);
             assert!(
                 after <= before || (after.is_finite() && before.is_infinite()),
                 "bound grew: {before} -> {after}"

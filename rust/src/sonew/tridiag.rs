@@ -11,18 +11,22 @@
 //! scratch slice, making the threaded step **bitwise identical** to the
 //! sequential one by construction.
 
-use crate::util::Precision;
+use crate::util::{bf16_decode, bf16_store, Precision, StateElem, StateVec};
 
 use super::{LambdaMode, StepParams};
 
 /// Maintained statistics `H_t = P_G(X_t^{-1})` for the chain graph, plus
-/// the per-edge tensor-boundary mask.
+/// the per-edge tensor-boundary mask. Statistics live in [`StateVec`]
+/// storage: f32 by default, packed bf16 (half the resident bytes) when
+/// built with `.with_storage(Precision::Bf16)` — the packed step stores
+/// quantized values directly, which is value-identical to the old
+/// quantize-after-update f32 simulation.
 #[derive(Debug, Clone)]
 pub struct TridiagState {
     /// diagonal `H[j][j]`
-    pub hd: Vec<f32>,
+    pub hd: StateVec,
     /// sub-diagonal `H[j+1][j]`; `ho[n-1] == 0`
-    pub ho: Vec<f32>,
+    pub ho: StateVec,
     /// keep edge (j, j+1)? false at tensor boundaries and at n-1
     pub edge: Vec<bool>,
     /// independent per-tensor blocks (offset, len): maximal runs no kept
@@ -39,10 +43,11 @@ pub struct TridiagState {
 }
 
 /// One tensor block's disjoint views of the state, gradient, direction
-/// and scratch — everything `tridiag_block_step` touches.
-struct TridiagBlock<'a> {
-    hd: &'a mut [f32],
-    ho: &'a mut [f32],
+/// and scratch — everything `tridiag_block_step` touches. Generic over
+/// the statistics element (`f32` or packed-bf16 `u16`).
+struct TridiagBlock<'a, E> {
+    hd: &'a mut [E],
+    ho: &'a mut [E],
     g: &'a [f32],
     u: &'a mut [f32],
     ia: &'a mut [f32],
@@ -64,8 +69,8 @@ impl TridiagState {
         };
         let blocks = super::split_blocks(n, &[&edge]);
         Self {
-            hd: vec![0.0; n],
-            ho: vec![0.0; n],
+            hd: StateVec::zeros(n, Precision::F32),
+            ho: StateVec::zeros(n, Precision::F32),
             edge,
             blocks,
             parallel: true,
@@ -73,6 +78,14 @@ impl TridiagState {
             scratch: vec![0.0; 3 * n],
             t: 0,
         }
+    }
+
+    /// Re-home the (still all-zero) statistics in `p` storage: packed
+    /// bf16 halves the resident `hd`/`ho` bytes.
+    pub fn with_storage(mut self, p: Precision) -> Self {
+        self.hd = StateVec::zeros(self.hd.len(), p);
+        self.ho = StateVec::zeros(self.ho.len(), p);
+        self
     }
 
     pub fn len(&self) -> usize {
@@ -86,6 +99,11 @@ impl TridiagState {
     /// Optimizer-state floats held (the paper's "2x #params statistics").
     pub fn memory_floats(&self) -> usize {
         2 * self.hd.len()
+    }
+
+    /// Resident statistics bytes (precision-aware, Table-6 memory rows).
+    pub fn memory_bytes(&self) -> usize {
+        self.hd.bytes() + self.ho.bytes()
     }
 
     /// Steps taken so far (checkpoint serialization).
@@ -129,50 +147,36 @@ impl TridiagState {
         let (decay, inno) = mode.coeffs(self.t);
         let p = StepParams { decay, inno, eps, gamma, precision };
 
-        let (ia_all, rest) = self.scratch.split_at_mut(n);
-        let (l_all, s_all) = rest.split_at_mut(n);
-
-        let mut dropped = vec![0usize; self.blocks.len()];
-        let mut items: Vec<TridiagBlock<'_>> = Vec::with_capacity(self.blocks.len());
-        let mut hd_rest: &mut [f32] = &mut self.hd;
-        let mut ho_rest: &mut [f32] = &mut self.ho;
-        let mut u_rest: &mut [f32] = u;
-        let mut ia_rest: &mut [f32] = ia_all;
-        let mut l_rest: &mut [f32] = l_all;
-        let mut s_rest: &mut [f32] = s_all;
-        let mut g_rest: &[f32] = g;
-        for (&(_, len), d) in self.blocks.iter().zip(dropped.iter_mut()) {
-            let (hd_b, r) = std::mem::take(&mut hd_rest).split_at_mut(len);
-            hd_rest = r;
-            let (ho_b, r) = std::mem::take(&mut ho_rest).split_at_mut(len);
-            ho_rest = r;
-            let (u_b, r) = std::mem::take(&mut u_rest).split_at_mut(len);
-            u_rest = r;
-            let (ia_b, r) = std::mem::take(&mut ia_rest).split_at_mut(len);
-            ia_rest = r;
-            let (l_b, r) = std::mem::take(&mut l_rest).split_at_mut(len);
-            l_rest = r;
-            let (s_b, r) = std::mem::take(&mut s_rest).split_at_mut(len);
-            s_rest = r;
-            let (g_b, gr) = g_rest.split_at(len);
-            g_rest = gr;
-            items.push(TridiagBlock {
-                hd: hd_b,
-                ho: ho_b,
-                g: g_b,
-                u: u_b,
-                ia: ia_b,
-                l: l_b,
-                s: s_b,
-                dropped: d,
-            });
-        }
-
         let threads = crate::linalg::hw_threads();
-        let par = self.parallel && items.len() > 1 && threads > 1 && n >= super::PAR_MIN_N;
-        crate::util::par::run_chunked(items, if par { threads } else { 1 }, |v| {
-            tridiag_block_step(v, p)
-        });
+        let par = self.parallel && self.blocks.len() > 1 && threads > 1 && n >= super::PAR_MIN_N;
+        let threads = if par { threads } else { 1 };
+        let mut dropped = vec![0usize; self.blocks.len()];
+        match (&mut self.hd, &mut self.ho) {
+            (StateVec::F32(hd), StateVec::F32(ho)) => run_tridiag_blocks(
+                hd,
+                ho,
+                g,
+                u,
+                &mut self.scratch,
+                &self.blocks,
+                &mut dropped,
+                threads,
+                p,
+            ),
+            (StateVec::Bf16(hd), StateVec::Bf16(ho)) => run_tridiag_blocks(
+                hd.bits_mut(),
+                ho.bits_mut(),
+                g,
+                u,
+                &mut self.scratch,
+                &self.blocks,
+                &mut dropped,
+                threads,
+                p,
+            ),
+            // with_storage re-homes both buffers together
+            _ => unreachable!("tridiag: hd and ho always share storage precision"),
+        }
         self.last_dropped = dropped.iter().sum();
     }
 
@@ -197,19 +201,93 @@ impl TridiagState {
         }
         self.t += 1;
         let (decay, inno) = mode.coeffs(self.t);
-        for j in 0..n {
-            let gj = g[j];
-            self.hd[j] = precision.quantize(decay * self.hd[j] + inno * gj * gj);
-            u[j] = precision.quantize(gj / (self.hd[j] + eps));
+        match &mut self.hd {
+            StateVec::F32(hd) => {
+                for j in 0..n {
+                    let gj = g[j];
+                    hd[j] = precision.quantize(decay * hd[j] + inno * gj * gj);
+                    u[j] = precision.quantize(gj / (hd[j] + eps));
+                }
+            }
+            StateVec::Bf16(hd) => {
+                for (j, h) in hd.bits_mut().iter_mut().enumerate() {
+                    let gj = g[j];
+                    let hv = bf16_store(h, decay * bf16_decode(*h) + inno * gj * gj);
+                    u[j] = precision.quantize(gj / (hv + eps));
+                }
+            }
         }
     }
+}
+
+/// Split the state/gradient/direction/scratch into per-tensor block views
+/// and fan the fused step across the executor pool. Generic over the
+/// statistics element so the f32 and packed-bf16 paths share one scan.
+#[allow(clippy::too_many_arguments)]
+fn run_tridiag_blocks<E: StateElem>(
+    hd: &mut [E],
+    ho: &mut [E],
+    g: &[f32],
+    u: &mut [f32],
+    scratch: &mut [f32],
+    blocks: &[(usize, usize)],
+    dropped: &mut [usize],
+    threads: usize,
+    p: StepParams,
+) {
+    let n = hd.len();
+    let (ia_all, rest) = scratch.split_at_mut(n);
+    let (l_all, s_all) = rest.split_at_mut(n);
+
+    let mut items: Vec<TridiagBlock<'_, E>> = Vec::with_capacity(blocks.len());
+    let mut hd_rest: &mut [E] = hd;
+    let mut ho_rest: &mut [E] = ho;
+    let mut u_rest: &mut [f32] = u;
+    let mut ia_rest: &mut [f32] = ia_all;
+    let mut l_rest: &mut [f32] = l_all;
+    let mut s_rest: &mut [f32] = s_all;
+    let mut g_rest: &[f32] = g;
+    for (&(_, len), d) in blocks.iter().zip(dropped.iter_mut()) {
+        let (hd_b, r) = std::mem::take(&mut hd_rest).split_at_mut(len);
+        hd_rest = r;
+        let (ho_b, r) = std::mem::take(&mut ho_rest).split_at_mut(len);
+        ho_rest = r;
+        let (u_b, r) = std::mem::take(&mut u_rest).split_at_mut(len);
+        u_rest = r;
+        let (ia_b, r) = std::mem::take(&mut ia_rest).split_at_mut(len);
+        ia_rest = r;
+        let (l_b, r) = std::mem::take(&mut l_rest).split_at_mut(len);
+        l_rest = r;
+        let (s_b, r) = std::mem::take(&mut s_rest).split_at_mut(len);
+        s_rest = r;
+        let (g_b, gr) = g_rest.split_at(len);
+        g_rest = gr;
+        items.push(TridiagBlock {
+            hd: hd_b,
+            ho: ho_b,
+            g: g_b,
+            u: u_b,
+            ia: ia_b,
+            l: l_b,
+            s: s_b,
+            dropped: d,
+        });
+    }
+
+    crate::util::par::run_chunked(items, threads, |v| tridiag_block_step(v, p));
 }
 
 /// The fused step over one tensor block. Interior edges of a block are
 /// always kept (blocks are maximal unmasked runs), so the old edge-mask
 /// multiply is replaced by the block boundary itself: `ho` ends at 0 and
 /// the recurrences never read across the edge of the slices.
-fn tridiag_block_step(v: TridiagBlock<'_>, p: StepParams) {
+///
+/// Statistics quantize *on store* (`E::store`), and every later read
+/// goes through the stored value — for packed bf16 this is
+/// value-identical to the old quantize-after-update f32 simulation, and
+/// for f32 storage it is the identity (bitwise-unchanged path). The
+/// `precision` step argument only governs the direction `u`.
+fn tridiag_block_step<E: StateElem>(v: TridiagBlock<'_, E>, p: StepParams) {
     let TridiagBlock { hd, ho, g, u, ia, l, s, dropped } = v;
     let StepParams { decay, inno, eps, gamma, precision } = p;
     let n = hd.len();
@@ -217,26 +295,18 @@ fn tridiag_block_step(v: TridiagBlock<'_>, p: StepParams) {
     if n == 0 {
         return;
     }
-    let quantize = precision == Precision::Bf16;
 
     // pass 1: hd' = decay*hd + inno*g^2 ; ia = 1/(hd'+eps)
     for j in 0..n {
-        let hv = decay * hd[j] + inno * g[j] * g[j];
+        let hv = E::store(decay * hd[j].load() + inno * g[j] * g[j]);
         hd[j] = hv;
-        ia[j] = 1.0 / (hv + eps);
+        ia[j] = 1.0 / (hv.load() + eps);
     }
     // pass 2: ho' = decay*ho + inno*g_j*g_{j+1} on interior edges
     for j in 0..n - 1 {
-        ho[j] = decay * ho[j] + inno * g[j] * g[j + 1];
+        ho[j] = E::store(decay * ho[j].load() + inno * g[j] * g[j + 1]);
     }
-    ho[n - 1] = 0.0;
-    if quantize {
-        precision.quantize_slice(hd);
-        precision.quantize_slice(ho);
-        for j in 0..n {
-            ia[j] = 1.0 / (hd[j] + eps);
-        }
-    }
+    ho[n - 1] = E::store(0.0);
 
     // pass 3 (shifted elementwise): LDL factors + s = D L^T g.
     //   l_j = keep ? -ho_j * ia_{j+1} : 0
@@ -244,9 +314,9 @@ fn tridiag_block_step(v: TridiagBlock<'_>, p: StepParams) {
     //   s_j = d_j * (g_j + l_j * g_{j+1})
     let mut nd = 0usize;
     for j in 0..n - 1 {
-        let o = ho[j];
+        let o = ho[j].load();
         let ia_next = ia[j + 1];
-        let a_j = hd[j] + eps;
+        let a_j = hd[j].load() + eps;
         let schur = a_j - o * o * ia_next;
         let keep = o != 0.0 && schur > gamma;
         nd += usize::from(o != 0.0 && schur <= gamma);
@@ -263,7 +333,7 @@ fn tridiag_block_step(v: TridiagBlock<'_>, p: StepParams) {
     for j in 1..n {
         u[j] = s[j] + l[j - 1] * s[j - 1];
     }
-    if quantize {
+    if precision == Precision::Bf16 {
         precision.quantize_slice(u);
     }
     *dropped = nd;
@@ -320,8 +390,8 @@ mod tests {
             let mut st2 = st.clone();
             st2.step(&g, &mut u, LambdaMode::Ema(0.9), 1e-6, 0.0, Precision::F32);
             // reproduce by hand: update stats then call oracle
-            let mut hd = st.hd.clone();
-            let mut ho = st.ho.clone();
+            let mut hd = st.hd.to_f32_vec();
+            let mut ho = st.ho.to_f32_vec();
             for j in 0..n {
                 hd[j] = 0.9 * hd[j] + 0.1 * g[j] * g[j];
             }
@@ -377,8 +447,10 @@ mod tests {
             seq.step(&g, &mut us, LambdaMode::Ema(0.95), 1e-6, 1e-8, Precision::F32);
         }
         assert!(up.iter().zip(&us).all(|(a, b)| a.to_bits() == b.to_bits()));
-        assert!(par.hd.iter().zip(&seq.hd).all(|(a, b)| a.to_bits() == b.to_bits()));
-        assert!(par.ho.iter().zip(&seq.ho).all(|(a, b)| a.to_bits() == b.to_bits()));
+        let (phd, shd) = (par.hd.to_f32_vec(), seq.hd.to_f32_vec());
+        let (pho, sho) = (par.ho.to_f32_vec(), seq.ho.to_f32_vec());
+        assert!(phd.iter().zip(&shd).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(pho.iter().zip(&sho).all(|(a, b)| a.to_bits() == b.to_bits()));
         assert_eq!(par.last_dropped, seq.last_dropped);
     }
 
@@ -409,10 +481,10 @@ mod tests {
         let g = vec![1.0f32; n];
         let mode = LambdaMode::SqrtT { g_inf: 1.0 };
         st.step(&g, &mut u, mode, 1e-6, 0.0, Precision::F32);
-        let h1 = st.hd[0];
+        let h1 = st.hd.get(0);
         st.step(&g, &mut u, mode, 1e-6, 0.0, Precision::F32);
         // H grows: h2 = h1 + 1/sqrt(2)
-        assert!((st.hd[0] - (h1 + 1.0 / 2f32.sqrt())).abs() < 1e-6);
+        assert!((st.hd.get(0) - (h1 + 1.0 / 2f32.sqrt())).abs() < 1e-6);
     }
 
     #[test]
@@ -478,13 +550,35 @@ mod tests {
     #[test]
     fn bf16_quantizes_state() {
         let n = 16;
-        let mut st = TridiagState::new(n, None);
+        let mut st = TridiagState::new(n, None).with_storage(Precision::Bf16);
         let mut u = vec![0.0; n];
         let mut rng = Rng::new(5);
         let g = rng.normal_vec(n);
         st.step(&g, &mut u, LambdaMode::Ema(0.9), 1e-6, 0.0, Precision::Bf16);
-        for &v in &st.hd {
+        for v in st.hd.to_f32_vec() {
             assert_eq!(v, crate::util::bf16_round(v));
         }
+        for v in &u {
+            assert_eq!(*v, crate::util::bf16_round(*v));
+        }
+    }
+
+    #[test]
+    fn packed_storage_halves_state_bytes_and_tracks_f32() {
+        let n = 64;
+        let full = TridiagState::new(n, None);
+        let mut st = TridiagState::new(n, None).with_storage(Precision::Bf16);
+        assert_eq!(st.memory_bytes() * 2, full.memory_bytes());
+        assert_eq!(st.memory_floats(), full.memory_floats());
+        let mut f = full;
+        let (mut up, mut uf) = (vec![0.0; n], vec![0.0; n]);
+        let mut rng = Rng::new(9);
+        for _ in 0..5 {
+            let g = rng.normal_vec(n);
+            st.step(&g, &mut up, LambdaMode::Ema(0.9), 1e-6, 0.0, Precision::Bf16);
+            f.step(&g, &mut uf, LambdaMode::Ema(0.9), 1e-6, 0.0, Precision::F32);
+        }
+        // bf16 keeps ~8 mantissa bits: directions agree to ~1% relative
+        assert_close(&up, &uf, 2e-2, 1e-3, "bf16 vs f32 direction");
     }
 }

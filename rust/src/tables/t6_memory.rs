@@ -1,10 +1,14 @@
 //! Table 6: optimizer memory requirements across the four benchmarks,
 //! computed analytically from each model's tensor shapes (in units of
-//! n = #params, as the paper reports).
+//! n = #params, as the paper reports) — plus a measured companion table
+//! of *actual resident bytes* from built optimizers in f32 vs packed
+//! bf16 storage (the §6 mixed-precision memory claim).
 
 use crate::models::{LmConfig, Mlp, Transformer};
 use crate::optim::memory::state_in_params;
+use crate::optim::{HyperParams, OptSpec};
 use crate::util::io::MdTable;
+use crate::util::Precision;
 
 pub struct Benchmark {
     pub name: &'static str,
@@ -90,6 +94,39 @@ pub fn run() -> anyhow::Result<Vec<(String, Vec<f64>)>> {
         out.push((b.name.to_string(), vals));
     }
     table.write("t6_memory.md")?;
+    run_packed()?;
+    Ok(out)
+}
+
+/// Measured companion to the analytic table: build each optimizer on the
+/// Autoencoder's real layout in both precisions and report the actual
+/// resident state bytes (`Optimizer::memory_bytes`, i.e. the summed
+/// `StateVec`/`Bf16Vec` buffer sizes). Writes `t6_memory_packed.md` and
+/// returns `(spec, f32_bytes, bf16_bytes)` rows.
+pub fn run_packed() -> anyhow::Result<Vec<(String, usize, usize)>> {
+    let mats = Mlp::autoencoder().mat_blocks();
+    let n: usize = mats.iter().map(|&(_, len, _, _)| len).sum();
+    let blocks: Vec<(usize, usize)> = mats.iter().map(|&(off, len, _, _)| (off, len)).collect();
+    let mut table = MdTable::new(&["optimizer", "f32 state", "bf16 state", "ratio"]);
+    let mut out = Vec::new();
+    for spec in ["momentum", "adam", "diag-sonew", "tridiag-sonew", "band-sonew", "shampoo"] {
+        let parsed = OptSpec::parse(spec)?;
+        let hp32 = HyperParams::default();
+        let hp16 = HyperParams { precision: Precision::Bf16, ..Default::default() };
+        let full = parsed.build(n, &blocks, &mats, &hp32)?;
+        let packed = parsed.build(n, &blocks, &mats, &hp16)?;
+        let (fb, pb) = (full.memory_bytes(), packed.memory_bytes());
+        let mb = |b: usize| b as f64 / (1 << 20) as f64;
+        table.row(vec![
+            spec.to_string(),
+            format!("{:.2} MiB", mb(fb)),
+            format!("{:.2} MiB", mb(pb)),
+            format!("{:.2}", pb as f64 / fb as f64),
+        ]);
+        println!("[t6] packed {spec}: {:.2} MiB -> {:.2} MiB", mb(fb), mb(pb));
+        out.push((spec.to_string(), fb, pb));
+    }
+    table.write("t6_memory_packed.md")?;
     Ok(out)
 }
 
@@ -113,6 +150,22 @@ mod tests {
             assert!(eva <= 1.0, "{name}: eva {eva}");
             // the paper's headline: Shampoo's statistics dominate SONew's
             assert!(shampoo > tds, "{name}");
+        }
+    }
+
+    #[test]
+    fn packed_rows_measure_half_the_f32_bytes() {
+        // the measured table must show the ≈2x packed-bf16 saving from
+        // the actual Bf16Vec buffer sizes, not an analytic estimate
+        let dir = std::env::temp_dir().join("sonew_t6_packed_test");
+        std::env::set_var("SONEW_RESULTS", &dir);
+        let rows = run_packed().unwrap();
+        std::env::remove_var("SONEW_RESULTS");
+        std::fs::remove_dir_all(dir).ok();
+        assert!(!rows.is_empty());
+        for (spec, fb, pb) in &rows {
+            assert!(*fb > 0, "{spec}");
+            assert_eq!(pb * 2, *fb, "{spec}: packed bytes are not half of f32 bytes");
         }
     }
 }

@@ -1,16 +1,39 @@
-//! Software bfloat16 simulation (DESIGN.md §5).
+//! Software bfloat16: value rounding plus real packed `u16` storage.
 //!
 //! The paper's Table 5/8 experiments run optimizer state and updates in
-//! bfloat16 to stress numerical stability (motivating Algorithm 3). This
-//! environment has no bf16 hardware; we reproduce the *precision loss
-//! mechanism* exactly by rounding every f32 to the nearest bfloat16
-//! (round-to-nearest-even on the top 16 bits) at the same program points
-//! where a bf16 training stack would store values.
+//! bfloat16 to stress numerical stability (motivating Algorithm 3), and
+//! its 1B-parameter runs keep SONew statistics in bf16 to halve resident
+//! optimizer memory. This environment has no bf16 hardware; we reproduce
+//! both effects in software:
+//!
+//! * [`bf16_round`] / [`Precision::quantize`] — the *precision loss
+//!   mechanism*: round an f32 to the nearest bfloat16
+//!   (round-to-nearest-even on the top 16 bits) at the same program
+//!   points where a bf16 training stack would store values.
+//! * [`Bf16Vec`] / [`StateVec`] — the *memory saving*: packed 2-byte
+//!   buffers that optimizer directions adopt under [`Precision::Bf16`],
+//!   halving resident state. Because [`bf16_round`] always clears the
+//!   low 16 bits, packing a rounded value into a `u16`
+//!   ([`bf16_encode`]) and widening it back ([`bf16_decode`]) is
+//!   lossless — the packed representation is bitwise-equivalent to the
+//!   old quantized-f32 simulation, just half the bytes.
 
 /// Round one f32 to the nearest bfloat16, returned widened back to f32.
+///
+/// NaN and ±Inf are handled before the rounding add: the carry from
+/// `bits + 0x7FFF + lsb` would otherwise propagate a NaN payload through
+/// the exponent field into the sign bit (e.g. `0x7FFF_FFFF` → `-0.0`).
+/// Infinities pass through exactly; NaNs stay NaN with the quiet bit
+/// forced so truncation cannot zero the mantissa into an Inf pattern.
 #[inline]
 pub fn bf16_round(x: f32) -> f32 {
     let bits = x.to_bits();
+    if (bits & 0x7FFF_FFFF) >= 0x7F80_0000 {
+        if (bits & 0x7FFF_FFFF) == 0x7F80_0000 {
+            return x; // ±Inf is exactly representable
+        }
+        return f32::from_bits((bits | 0x0040_0000) & 0xFFFF_0000);
+    }
     // round-to-nearest-even on bit 16
     let lsb = (bits >> 16) & 1;
     let rounded = bits.wrapping_add(0x7FFF + lsb);
@@ -24,12 +47,229 @@ pub fn bf16_round_slice(xs: &mut [f32]) {
     }
 }
 
+/// Round and pack one f32 into its 16 stored bfloat16 bits.
+#[inline]
+pub fn bf16_encode(x: f32) -> u16 {
+    (bf16_round(x).to_bits() >> 16) as u16
+}
+
+/// Widen 16 stored bfloat16 bits back to f32 (exact).
+#[inline]
+pub fn bf16_decode(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Round `x` into one packed slot, returning the value actually stored
+/// (the quantize-on-store primitive the packed optimizer loops use).
+#[inline]
+pub fn bf16_store(h: &mut u16, x: f32) -> f32 {
+    let r = bf16_round(x);
+    *h = (r.to_bits() >> 16) as u16;
+    r
+}
+
+/// Packed bfloat16 buffer: one `u16` per element, widened/narrowed at
+/// the boundaries. Values read back are exactly `bf16_round` of what was
+/// stored, so swapping a quantized `Vec<f32>` for a `Bf16Vec` changes no
+/// arithmetic — only the resident bytes (2 per element instead of 4).
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Bf16Vec {
+    bits: Vec<u16>,
+}
+
+impl Bf16Vec {
+    pub fn zeros(n: usize) -> Self {
+        Self { bits: vec![0; n] }
+    }
+
+    pub fn from_f32(xs: &[f32]) -> Self {
+        Self { bits: xs.iter().map(|&x| bf16_encode(x)).collect() }
+    }
+
+    pub fn from_bits(bits: Vec<u16>) -> Self {
+        Self { bits }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.bits.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.bits.is_empty()
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> f32 {
+        bf16_decode(self.bits[i])
+    }
+
+    /// Quantize-on-store; returns the value actually stored.
+    #[inline]
+    pub fn set(&mut self, i: usize, v: f32) -> f32 {
+        let r = bf16_round(v);
+        self.bits[i] = (r.to_bits() >> 16) as u16;
+        r
+    }
+
+    pub fn bits(&self) -> &[u16] {
+        &self.bits
+    }
+
+    pub fn bits_mut(&mut self) -> &mut [u16] {
+        &mut self.bits
+    }
+
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        self.bits.iter().map(|&h| bf16_decode(h)).collect()
+    }
+
+    pub fn copy_from_f32(&mut self, xs: &[f32]) {
+        assert_eq!(xs.len(), self.bits.len(), "Bf16Vec::copy_from_f32 length mismatch");
+        for (h, &x) in self.bits.iter_mut().zip(xs) {
+            *h = bf16_encode(x);
+        }
+    }
+}
+
+/// One element of packed optimizer state: loads widen to f32, stores
+/// quantize back down. Generic SONew block kernels run over `[E]` so the
+/// f32 and packed-bf16 storage paths share one body; the f32 instance is
+/// a no-op on both edges (bitwise-identical to the pre-packing code).
+pub trait StateElem: Copy + Send + Sync {
+    fn load(self) -> f32;
+    fn store(v: f32) -> Self;
+}
+
+impl StateElem for f32 {
+    #[inline]
+    fn load(self) -> f32 {
+        self
+    }
+
+    #[inline]
+    fn store(v: f32) -> Self {
+        v
+    }
+}
+
+impl StateElem for u16 {
+    #[inline]
+    fn load(self) -> f32 {
+        bf16_decode(self)
+    }
+
+    #[inline]
+    fn store(v: f32) -> Self {
+        bf16_encode(v)
+    }
+}
+
+/// Precision-tagged optimizer-state vector: full f32 or packed bf16.
+/// The storage mode is fixed at construction (it is a property of the
+/// buffer, not of any one step), and element stores quantize to the
+/// buffer's precision.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StateVec {
+    F32(Vec<f32>),
+    Bf16(Bf16Vec),
+}
+
+impl StateVec {
+    pub fn zeros(n: usize, precision: Precision) -> Self {
+        match precision {
+            Precision::F32 => StateVec::F32(vec![0.0; n]),
+            Precision::Bf16 => StateVec::Bf16(Bf16Vec::zeros(n)),
+        }
+    }
+
+    pub fn precision(&self) -> Precision {
+        match self {
+            StateVec::F32(_) => Precision::F32,
+            StateVec::Bf16(_) => Precision::Bf16,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            StateVec::F32(v) => v.len(),
+            StateVec::Bf16(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident bytes of the backing buffer (the Table-6 quantity).
+    pub fn bytes(&self) -> usize {
+        match self {
+            StateVec::F32(v) => 4 * v.len(),
+            StateVec::Bf16(v) => 2 * v.len(),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> f32 {
+        match self {
+            StateVec::F32(v) => v[i],
+            StateVec::Bf16(v) => v.get(i),
+        }
+    }
+
+    /// Quantize-on-store; returns the value actually stored.
+    #[inline]
+    pub fn set(&mut self, i: usize, x: f32) -> f32 {
+        match self {
+            StateVec::F32(v) => {
+                v[i] = x;
+                x
+            }
+            StateVec::Bf16(v) => v.set(i, x),
+        }
+    }
+
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        match self {
+            StateVec::F32(v) => v.clone(),
+            StateVec::Bf16(v) => v.to_f32_vec(),
+        }
+    }
+
+    pub fn into_f32_vec(self) -> Vec<f32> {
+        match self {
+            StateVec::F32(v) => v,
+            StateVec::Bf16(v) => v.to_f32_vec(),
+        }
+    }
+
+    /// Overwrite from f32 values, quantizing to the storage precision.
+    pub fn copy_from_f32(&mut self, xs: &[f32]) {
+        match self {
+            StateVec::F32(v) => {
+                assert_eq!(xs.len(), v.len(), "StateVec::copy_from_f32 length mismatch");
+                v.copy_from_slice(xs);
+            }
+            StateVec::Bf16(v) => v.copy_from_f32(xs),
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            StateVec::F32(v) => Some(v),
+            StateVec::Bf16(_) => None,
+        }
+    }
+}
+
 /// Precision mode threaded through optimizers and trainers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Precision {
     #[default]
     F32,
-    /// Simulated bfloat16: statistics and updates are bf16-rounded.
+    /// bfloat16: statistics live in packed `u16` storage and updates are
+    /// bf16-rounded.
     Bf16,
 }
 
@@ -45,6 +285,14 @@ impl Precision {
     pub fn quantize_slice(self, xs: &mut [f32]) {
         if self == Precision::Bf16 {
             bf16_round_slice(xs);
+        }
+    }
+
+    /// Bytes per stored state element under this precision.
+    pub fn state_bytes_per_elem(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::Bf16 => 2,
         }
     }
 
@@ -89,6 +337,64 @@ mod tests {
     }
 
     #[test]
+    fn nan_and_inf_survive_rounding() {
+        // regression: the carry in bits + 0x7FFF + lsb used to push a
+        // full-payload NaN (0x7FFF_FFFF) through the exponent into the
+        // sign bit, masking to -0.0
+        let payload_nan = f32::from_bits(0x7FFF_FFFF);
+        assert!(bf16_round(payload_nan).is_nan());
+        let neg_payload_nan = f32::from_bits(0xFFFF_FFFF);
+        assert!(bf16_round(neg_payload_nan).is_nan());
+        assert!(bf16_round(f32::NAN).is_nan());
+        // a signaling NaN whose payload lives only in the low mantissa
+        // bits must not truncate to the Inf bit pattern
+        let low_payload_nan = f32::from_bits(0x7F80_0001);
+        assert!(bf16_round(low_payload_nan).is_nan());
+        // infinities are exactly representable and keep their sign
+        assert_eq!(bf16_round(f32::INFINITY), f32::INFINITY);
+        assert_eq!(bf16_round(f32::NEG_INFINITY), f32::NEG_INFINITY);
+        // finite overflow still rounds up to Inf (RNE at the top of the
+        // f32 range), as real bf16 hardware does
+        assert_eq!(bf16_round(f32::MAX), f32::INFINITY);
+        assert_eq!(bf16_round(f32::MIN), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn subnormals_round_like_any_other_value() {
+        // RNE on bit 16 is uniform across the exponent boundary: the
+        // smallest positive f32 rounds to +0.0, a subnormal just above a
+        // representable bf16 subnormal rounds to it
+        let tiny = f32::from_bits(1); // 2^-149
+        assert_eq!(bf16_round(tiny), 0.0);
+        assert_eq!(bf16_round(-tiny), -0.0);
+        assert!(bf16_round(-tiny).is_sign_negative());
+        // bf16-representable subnormal: low 16 bits zero → exact
+        let sub = f32::from_bits(0x0001_0000);
+        assert_eq!(bf16_round(sub), sub);
+        // halfway between two representable subnormals ties to even
+        let half = f32::from_bits(0x0001_8000);
+        assert_eq!(bf16_round(half).to_bits(), 0x0002_0000);
+        let just_below = f32::from_bits(0x0001_7FFF);
+        assert_eq!(bf16_round(just_below).to_bits(), 0x0001_0000);
+    }
+
+    #[test]
+    fn tie_boundary_0x7fff() {
+        // low half 0x7FFF is just below the tie: always rounds down;
+        // 0x8000 is the exact tie: rounds to even; 0x8001 rounds up
+        for hi in [0x3F80_0000u32, 0x4049_0000, 0xC170_0000] {
+            let down = f32::from_bits(hi | 0x7FFF);
+            assert_eq!(bf16_round(down).to_bits(), hi);
+            let tie = f32::from_bits(hi | 0x8000);
+            let lsb = (hi >> 16) & 1;
+            let want = if lsb == 0 { hi } else { hi.wrapping_add(0x1_0000) };
+            assert_eq!(bf16_round(tie).to_bits(), want);
+            let up = f32::from_bits(hi | 0x8001);
+            assert_eq!(bf16_round(up).to_bits(), hi.wrapping_add(0x1_0000));
+        }
+    }
+
+    #[test]
     fn relative_error_bounded() {
         let mut r = crate::util::rng::Rng::new(5);
         for _ in 0..10_000 {
@@ -107,6 +413,63 @@ mod tests {
         for _ in 0..1000 {
             let x = r.normal_f32() * 3.0;
             assert_eq!(bf16_round(bf16_round(x)), bf16_round(x));
+        }
+    }
+
+    #[test]
+    fn encode_decode_is_lossless_for_rounded_values() {
+        let mut r = crate::util::rng::Rng::new(7);
+        for _ in 0..1000 {
+            let x = r.normal_f32() * 10.0;
+            let rounded = bf16_round(x);
+            assert_eq!(bf16_decode(bf16_encode(x)).to_bits(), rounded.to_bits());
+        }
+        assert_eq!(bf16_decode(bf16_encode(f32::INFINITY)), f32::INFINITY);
+        assert!(bf16_decode(bf16_encode(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn bf16vec_stores_quantized_at_half_the_bytes() {
+        let mut r = crate::util::rng::Rng::new(8);
+        let xs: Vec<f32> = (0..257).map(|_| r.normal_f32() * 5.0).collect();
+        let v = Bf16Vec::from_f32(&xs);
+        assert_eq!(v.len(), xs.len());
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(v.get(i).to_bits(), bf16_round(x).to_bits());
+        }
+        let mut sv = StateVec::zeros(xs.len(), Precision::Bf16);
+        sv.copy_from_f32(&xs);
+        assert_eq!(sv.bytes() * 2, StateVec::zeros(xs.len(), Precision::F32).bytes());
+        assert_eq!(sv.to_f32_vec(), v.to_f32_vec());
+        // set returns the value actually stored
+        let mut v2 = Bf16Vec::zeros(1);
+        let stored = v2.set(0, 1.0 + 2f32.powi(-9));
+        assert_eq!(stored, v2.get(0));
+        assert_eq!(stored, bf16_round(1.0 + 2f32.powi(-9)));
+    }
+
+    #[test]
+    fn statevec_f32_is_bit_transparent() {
+        let mut r = crate::util::rng::Rng::new(9);
+        let xs: Vec<f32> = (0..100).map(|_| r.normal_f32()).collect();
+        let mut sv = StateVec::zeros(xs.len(), Precision::F32);
+        sv.copy_from_f32(&xs);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(sv.get(i).to_bits(), x.to_bits());
+            assert_eq!(sv.set(i, x).to_bits(), x.to_bits());
+        }
+        assert_eq!(sv.as_f32().unwrap(), &xs[..]);
+        assert_eq!(sv.into_f32_vec(), xs);
+    }
+
+    #[test]
+    fn state_elem_matches_quantize() {
+        let mut r = crate::util::rng::Rng::new(10);
+        for _ in 0..200 {
+            let x = r.normal_f32() * 4.0;
+            let via_elem = <u16 as StateElem>::store(x).load();
+            assert_eq!(via_elem.to_bits(), Precision::Bf16.quantize(x).to_bits());
+            assert_eq!(<f32 as StateElem>::store(x).load().to_bits(), x.to_bits());
         }
     }
 }

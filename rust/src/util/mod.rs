@@ -8,5 +8,7 @@ pub mod prop;
 pub mod rng;
 pub mod timer;
 
-pub use bf16::{bf16_round, Precision};
+pub use bf16::{
+    bf16_decode, bf16_encode, bf16_round, bf16_store, Bf16Vec, Precision, StateElem, StateVec,
+};
 pub use rng::Rng;
