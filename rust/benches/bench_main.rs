@@ -22,6 +22,9 @@
 //!   [pipeline] staged TrainSession loop: overlapped (prefetch +
 //!           background checkpoint writer) vs strictly synchronous step
 //!           time on the LM workload, and the checkpoint-boundary stall
+//!   [serve] online predict-then-update: per-request update latency
+//!           (p50/p99) and sharded replay throughput, tridiag-SONew vs
+//!           sparse-ONS vs Adam on a synthetic request stream
 //!
 //!     cargo bench                # all sections
 //!     cargo bench -- gemm        # one section
@@ -636,6 +639,47 @@ fn main() {
         rec.derive("pipeline_ckpt_stall_us_sync".to_string(), stall_sync);
         rec.derive("pipeline_ckpt_stall_us_overlapped".to_string(), stall_pipe);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    if run("serve") {
+        println!("== [serve] online predict-then-update: latency + throughput ==");
+        use sonew::serving::{replay, ModelStore, StoreConfig};
+        let (requests, dim, nnz) = if smoke { (400usize, 256, 8) } else { (3000, 512, 16) };
+        for spec in ["sparse-ons", "tridiag-sonew", "adam"] {
+            let mk_cfg = || StoreConfig {
+                dir: None,
+                dim,
+                lr: if spec == "sparse-ons" { 1.0 } else { 0.05 },
+                spec: OptSpec::parse(spec).unwrap(),
+                base: HyperParams { eps: 1.0, ..Default::default() },
+                checkpoint_every: 0,
+            };
+            let log = sonew::data::SynthRequests::new(31, 8, dim, nnz).take(requests);
+            // per-request latency on one shard, sequentially — measures
+            // the predict + update path itself, no queueing noise
+            let mut store = ModelStore::open(mk_cfg(), 1).unwrap();
+            let mut lat_ns: Vec<f64> = Vec::with_capacity(requests);
+            for req in &log {
+                let t = std::time::Instant::now();
+                store.process(&req.model, &req.feats, req.label).unwrap();
+                lat_ns.push(t.elapsed().as_nanos() as f64);
+            }
+            lat_ns.sort_by(|a, b| a.total_cmp(b));
+            let p50 = lat_ns[lat_ns.len() / 2] / 1000.0;
+            let p99 = lat_ns[(lat_ns.len() * 99 / 100).min(lat_ns.len() - 1)] / 1000.0;
+            // end-to-end throughput through the sharded batcher
+            let mut sharded = ModelStore::open(mk_cfg(), 4).unwrap();
+            let t = std::time::Instant::now();
+            replay(&mut sharded, &log, requests).unwrap();
+            let rps = requests as f64 / t.elapsed().as_secs_f64().max(1e-9);
+            println!(
+                "    {spec:<14} update p50 {p50:>7.1} us  p99 {p99:>7.1} us  \
+                 replay {rps:>8.0} req/s (4 shards)"
+            );
+            rec.derive(format!("serve_p50_us_{spec}"), p50);
+            rec.derive(format!("serve_p99_us_{spec}"), p99);
+            rec.derive(format!("serve_rps_{spec}"), rps);
+        }
     }
 
     let out = std::env::var("SONEW_BENCH_OUT").unwrap_or_else(|_| "BENCH_latest.json".into());

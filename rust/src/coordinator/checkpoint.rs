@@ -122,12 +122,53 @@ pub fn sweep_stale_tmps(path: impl AsRef<Path>) -> usize {
         let Ok(pid) = pid_str.parse::<u32>() else {
             continue;
         };
-        if pid == std::process::id() {
+        if !tmp_owner_is_dead(pid) {
             continue;
         }
-        // a live owner means an in-flight write, not a crash leftover
-        #[cfg(target_os = "linux")]
-        if Path::new(&format!("/proc/{pid}")).exists() {
+        if std::fs::remove_file(entry.path()).is_ok() {
+            removed += 1;
+        }
+    }
+    removed
+}
+
+/// Whether a `.{pid}.tmp` owner is provably gone. Our own pid (an
+/// in-flight write) and any live `/proc/{pid}` are not.
+fn tmp_owner_is_dead(pid: u32) -> bool {
+    if pid == std::process::id() {
+        return false;
+    }
+    // a live owner means an in-flight write, not a crash leftover
+    #[cfg(target_os = "linux")]
+    if Path::new(&format!("/proc/{pid}")).exists() {
+        return false;
+    }
+    true
+}
+
+/// Directory-wide variant of [`sweep_stale_tmps`] for the serving model
+/// store, where the checkpoint set (`<model-id>.ck` per model) is not
+/// known up front: any `*.<pid>.tmp` entry with a dead owner is a crash
+/// leftover from the atomic protocol, whatever file it was shadowing.
+/// Same liveness rules, same best-effort error handling.
+pub fn sweep_stale_tmps_in_dir(dir: impl AsRef<Path>) -> usize {
+    let Ok(entries) = std::fs::read_dir(dir.as_ref()) else {
+        return 0;
+    };
+    let mut removed = 0;
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let Some(stem) = name.strip_suffix(".tmp") else {
+            continue;
+        };
+        let Some((_, pid_str)) = stem.rsplit_once('.') else {
+            continue;
+        };
+        let Ok(pid) = pid_str.parse::<u32>() else {
+            continue;
+        };
+        if !tmp_owner_is_dead(pid) {
             continue;
         }
         if std::fs::remove_file(entry.path()).is_ok() {
@@ -423,6 +464,32 @@ mod tests {
     fn sweep_of_a_missing_directory_is_a_no_op() {
         let path = std::env::temp_dir().join("sonew_ckpt_no_such_dir").join("x.ck");
         assert_eq!(sweep_stale_tmps(&path), 0);
+        assert_eq!(sweep_stale_tmps_in_dir(path.parent().unwrap()), 0);
+    }
+
+    #[test]
+    fn dir_sweep_removes_dead_pid_tmps_for_any_file() {
+        let dir = std::env::temp_dir()
+            .join(format!("sonew_ckpt_dirsweep_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // crash leftovers shadowing two different model checkpoints
+        let stale_a = dir.join(format!("model-a.ck.{}.tmp", u32::MAX));
+        let stale_b = dir.join(format!("model-b.ck.{}.tmp", u32::MAX - 1));
+        std::fs::write(&stale_a, b"garbage").unwrap();
+        std::fs::write(&stale_b, b"garbage").unwrap();
+        // survivors: real checkpoints, our own in-flight tmp, non-pid tmp
+        let keep = dir.join("model-a.ck");
+        std::fs::write(&keep, b"real").unwrap();
+        let own = dir.join(format!("model-a.ck.{}.tmp", std::process::id()));
+        std::fs::write(&own, b"in flight").unwrap();
+        let odd = dir.join("model-a.ck.notapid.tmp");
+        std::fs::write(&odd, b"not ours to judge").unwrap();
+
+        assert_eq!(sweep_stale_tmps_in_dir(&dir), 2);
+        assert!(!stale_a.exists() && !stale_b.exists());
+        assert!(keep.exists() && own.exists() && odd.exists());
+        assert_eq!(sweep_stale_tmps_in_dir(&dir), 0);
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

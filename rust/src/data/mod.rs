@@ -4,7 +4,9 @@
 pub mod convex;
 pub mod images;
 pub mod lm_corpus;
+pub mod requests;
 
 pub use convex::convex_suite;
 pub use images::{SynthImages, SynthGraphs};
 pub use lm_corpus::LmCorpus;
+pub use requests::{Request, SynthRequests};

@@ -1,0 +1,262 @@
+//! Request-log sources for the online serving path (`sonew serve`).
+//!
+//! A request log is a sequence of labeled sparse examples, each routed
+//! to a named model. Two sources produce the same `Request` record:
+//!
+//! - [`read_log`] parses a text log, one request per line:
+//!
+//!   ```text
+//!   # comments and blank lines are skipped
+//!   <model-id> <label> <feat>:<val> <feat>:<val> ...
+//!   user-17 1 3:0.5 901:1.0 country=se:1.0
+//!   ```
+//!
+//!   Numeric feature keys are used verbatim (and must be `< dim`);
+//!   anything else is hashed into the `dim`-sized space with FNV-1a —
+//!   the standard hashing trick for unbounded categorical vocabularies.
+//!
+//! - [`SynthRequests`] generates a deterministic synthetic stream of
+//!   linearly separable examples over a fleet of models, for tests,
+//!   benches and `serve --synth`.
+//!
+//! Feature lists are canonicalized (sorted by id, duplicate ids merged
+//! by summing) so a request's in-memory form is independent of token
+//! order and of hash collisions in the source text.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Rng;
+
+/// FNV-1a 64-bit — a stable, seedless hash. `std`'s `DefaultHasher` is
+/// randomly seeded per process, which would break the contract that a
+/// replayed log reproduces model state across processes.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    h
+}
+
+/// One labeled example routed to a named model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    /// target model id (shard routing key)
+    pub model: String,
+    /// binary label in {0, 1}
+    pub label: f32,
+    /// sparse features, sorted by id, ids unique
+    pub feats: Vec<(u32, f32)>,
+}
+
+/// Sort by feature id and merge duplicates (hash collisions included)
+/// by summing their values.
+fn canonicalize(feats: &mut Vec<(u32, f32)>) {
+    feats.sort_by_key(|&(i, _)| i);
+    feats.dedup_by(|b, a| {
+        if a.0 == b.0 {
+            a.1 += b.1;
+            true
+        } else {
+            false
+        }
+    });
+}
+
+fn valid_model_id(id: &str) -> bool {
+    !id.is_empty()
+        && id.len() <= 128
+        && id.bytes().all(|b| b.is_ascii_alphanumeric() || matches!(b, b'.' | b'_' | b'-'))
+}
+
+/// Parse one non-comment log line. `dim` bounds the hashed feature
+/// space: numeric ids must already be `< dim`, text ids are hashed into
+/// `0..dim`.
+pub fn parse_line(line: &str, dim: usize) -> Result<Request> {
+    let mut toks = line.split_whitespace();
+    let model = toks.next().context("empty request line")?;
+    if !valid_model_id(model) {
+        bail!("bad model id `{model}` (allowed: [A-Za-z0-9._-], at most 128 bytes)");
+    }
+    let label: f32 = toks
+        .next()
+        .context("missing label")?
+        .parse()
+        .context("label must be a number")?;
+    if label != 0.0 && label != 1.0 {
+        bail!("label must be 0 or 1, got {label}");
+    }
+    let mut feats = Vec::new();
+    for t in toks {
+        let (key, val) = t.split_once(':').with_context(|| format!("bad feature `{t}`"))?;
+        let v: f32 = val.parse().with_context(|| format!("bad value in `{t}`"))?;
+        if !v.is_finite() {
+            bail!("non-finite value in `{t}`");
+        }
+        let id = match key.parse::<u64>() {
+            Ok(i) if (i as usize) < dim => i as u32,
+            Ok(i) => bail!("feature index {i} out of range (dim {dim})"),
+            // hashing trick: text keys land anywhere in 0..dim
+            Err(_) => (fnv1a64(key.as_bytes()) % dim as u64) as u32,
+        };
+        feats.push((id, v));
+    }
+    canonicalize(&mut feats);
+    Ok(Request { model: model.to_string(), label, feats })
+}
+
+/// Read a whole request log into memory, in line order.
+pub fn read_log(path: &Path, dim: usize) -> Result<Vec<Request>> {
+    let file =
+        File::open(path).with_context(|| format!("open request log {}", path.display()))?;
+    let mut out = Vec::new();
+    for (ln, line) in BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let s = line.trim();
+        if s.is_empty() || s.starts_with('#') {
+            continue;
+        }
+        out.push(
+            parse_line(s, dim).with_context(|| format!("{}:{}", path.display(), ln + 1))?,
+        );
+    }
+    Ok(out)
+}
+
+/// Deterministic synthetic request stream: `models` independent
+/// logistic tasks over a `dim`-sized hashed space, `nnz` active
+/// features per request, labels from each model's hidden weights
+/// (strongly separable, so progressive validation visibly improves).
+pub struct SynthRequests {
+    dim: usize,
+    nnz: usize,
+    /// hidden true weights, one per model
+    truth: Vec<Vec<f32>>,
+    rng: Rng,
+}
+
+impl SynthRequests {
+    pub fn new(seed: u64, models: usize, dim: usize, nnz: usize) -> Self {
+        let models = models.max(1);
+        let dim = dim.max(1);
+        let nnz = nnz.clamp(1, dim);
+        let mut rng = Rng::new(seed);
+        let truth = (0..models)
+            .map(|m| {
+                let mut r = rng.split(m as u64);
+                (0..dim).map(|_| r.normal_f32()).collect()
+            })
+            .collect();
+        Self { dim, nnz, truth, rng: rng.split(u64::MAX) }
+    }
+
+    pub fn models(&self) -> usize {
+        self.truth.len()
+    }
+
+    /// Model ids cycle round-robin so every shard sees traffic; feature
+    /// draws come from one stream, so the log is a pure function of the
+    /// seed.
+    pub fn take(&mut self, n: usize) -> Vec<Request> {
+        (0..n)
+            .map(|i| {
+                let m = i % self.truth.len();
+                let mut feats: Vec<(u32, f32)> = Vec::with_capacity(self.nnz);
+                while feats.len() < self.nnz {
+                    let id = self.rng.below(self.dim) as u32;
+                    if !feats.iter().any(|&(j, _)| j == id) {
+                        feats.push((id, self.rng.normal_f32()));
+                    }
+                }
+                canonicalize(&mut feats);
+                let z: f32 =
+                    feats.iter().map(|&(j, v)| self.truth[m][j as usize] * v).sum();
+                Request {
+                    model: format!("model-{m}"),
+                    label: if z >= 0.0 { 1.0 } else { 0.0 },
+                    feats,
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_numeric_and_hashed_features() {
+        let r = parse_line("user-1 1 3:0.5 7:1.0 country=se:2.0", 64).unwrap();
+        assert_eq!(r.model, "user-1");
+        assert_eq!(r.label, 1.0);
+        assert_eq!(r.feats.len(), 3);
+        // sorted, unique, in range
+        for w in r.feats.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+        assert!(r.feats.iter().all(|&(i, _)| (i as usize) < 64));
+        assert!(r.feats.contains(&(3, 0.5)));
+        assert!(r.feats.contains(&(7, 1.0)));
+    }
+
+    #[test]
+    fn duplicate_ids_merge_by_summing() {
+        let r = parse_line("m 0 5:1.0 5:2.5", 16).unwrap();
+        assert_eq!(r.feats, vec![(5, 3.5)]);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse_line("", 16).is_err());
+        assert!(parse_line("m", 16).is_err());
+        assert!(parse_line("m 2 1:1.0", 16).is_err()); // label not 0/1
+        assert!(parse_line("m 1 99:1.0", 16).is_err()); // index >= dim
+        assert!(parse_line("m 1 3=1.0", 16).is_err()); // no colon
+        assert!(parse_line("bad/id 1 3:1.0", 16).is_err()); // model charset
+        assert!(parse_line("m 1 3:inf", 16).is_err());
+    }
+
+    #[test]
+    fn synth_stream_is_deterministic_and_separable() {
+        let mut a = SynthRequests::new(7, 3, 32, 4);
+        let mut b = SynthRequests::new(7, 3, 32, 4);
+        let (la, lb) = (a.take(50), b.take(50));
+        assert_eq!(la, lb, "same seed must give the same log");
+        // round-robin routing covers every model
+        for m in 0..3 {
+            assert!(la.iter().any(|r| r.model == format!("model-{m}")));
+        }
+        // labels are not degenerate
+        let ones = la.iter().filter(|r| r.label == 1.0).count();
+        assert!(ones > 5 && ones < 45, "{ones}");
+        let mut c = SynthRequests::new(8, 3, 32, 4);
+        assert_ne!(la, c.take(50), "different seed must differ");
+    }
+
+    #[test]
+    fn log_roundtrips_through_text() {
+        let mut synth = SynthRequests::new(3, 2, 24, 3);
+        let log = synth.take(10);
+        let mut text = String::from("# canned log\n\n");
+        for r in &log {
+            text.push_str(&format!("{} {}", r.model, r.label));
+            for (i, v) in &r.feats {
+                text.push_str(&format!(" {i}:{v}"));
+            }
+            text.push('\n');
+        }
+        let dir = std::env::temp_dir().join(format!("sonew-reqlog-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("log.txt");
+        std::fs::write(&path, text).unwrap();
+        let back = read_log(&path, 24).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+        assert_eq!(back, log);
+    }
+}

@@ -18,6 +18,7 @@ pub mod data;
 pub mod linalg;
 pub mod models;
 pub mod optim;
+pub mod serving;
 pub mod sonew;
 pub mod runtime;
 pub mod tables;

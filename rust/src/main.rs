@@ -9,6 +9,8 @@
 //! sonew train --opt tds --resume run.ck      # exact (bitwise) resume
 //! sonew sweep --opt adam --trials 20         # Table 12 protocol (serial)
 //! sonew sweep --opt adam --trials 200 --workers 8   # sharded, bit-identical
+//! sonew serve --synth 3000 --shards 4        # online predict-then-update
+//! sonew serve --replay req.log --store ckpts # replay a request log, durable
 //! sonew opts                                 # optimizer spec registry
 //! sonew list                                 # artifact inventory
 //! ```
@@ -38,6 +40,7 @@ fn run() -> Result<()> {
         Some("lm") => lm(&args),
         Some("train") => train(&args),
         Some("sweep") => sweep(&args),
+        Some("serve") => serve(&args),
         Some("opts") => {
             print!("{}", registry_help());
             Ok(())
@@ -55,6 +58,8 @@ fn run() -> Result<()> {
                  \x20                 checkpointable session (`sonew train --help`)\n\
                  \x20 sweep           Table-12 random search; --workers N shards trials\n\
                  \x20                 deterministically (`sonew sweep --help`)\n\
+                 \x20 serve           online serving: sharded model store, per-request\n\
+                 \x20                 predict-then-update (`sonew serve --help`)\n\
                  \x20 opts            optimizer spec registry\n\
                  \x20 list            artifact inventory + active backend\n\
                  \n\
@@ -380,6 +385,103 @@ fn sweep(args: &Args) -> Result<()> {
         }
         None => println!("[sweep] all trials diverged"),
     }
+    Ok(())
+}
+
+/// Online serving: replay a request log (or a synthetic stream) through
+/// the sharded model store with per-request predict-then-update.
+/// `[pv]` lines (progressive validation + per-model param checksums)
+/// are deterministic — bitwise identical for any `--shards` and
+/// `SONEW_THREADS` — while `[serve]` lines carry wall-clock numbers.
+fn serve(args: &Args) -> Result<()> {
+    if args.has("help") {
+        println!(
+            "usage: sonew serve (--replay <log> | --synth N) [--shards N] [--opt <spec>]\n\
+             \x20                 [--dim D] [--lr LR] [--eval-every K]\n\
+             \x20                 [--store DIR [--checkpoint-every K]]\n\
+             \x20                 [--models M] [--nnz K] [--seed S]\n\
+             \n\
+             --replay <log>  request log, one request per line:\n\
+             \x20              <model-id> <label 0|1> <feat>:<val> ...\n\
+             \x20              (numeric feats index directly, text feats are hashed)\n\
+             --synth N       N synthetic requests over --models M linear tasks\n\
+             --shards N      shard models by fnv1a(id) mod N; any N gives bitwise-\n\
+             \x20              identical [pv] output (default 4)\n\
+             --store DIR     durable per-model SONEWCK2 checkpoints; reopening\n\
+             \x20              resumes every model exactly\n\
+             \n\
+             default --opt is sparse-ons (Sherman-Morrison over seen features,\n\
+             O(nnz + k^2) per request); any registry spec works.\n\n{}",
+            registry_help()
+        );
+        return Ok(());
+    }
+    let dim = args.usize_or("dim", 1024);
+    let shards = args.usize_or("shards", 4);
+    let spec = OptSpec::parse(args.get_or("opt", "sparse-ons"))?;
+    let log = if let Some(path) = args.get("replay") {
+        sonew::data::requests::read_log(std::path::Path::new(path), dim)?
+    } else if args.has("synth") {
+        let mut synth = sonew::data::SynthRequests::new(
+            args.u64_or("seed", 0),
+            args.usize_or("models", 8),
+            dim,
+            args.usize_or("nnz", 16),
+        );
+        synth.take(args.usize_or("synth", 1000))
+    } else {
+        anyhow::bail!("serve needs a workload: --replay <log> or --synth N (see serve --help)");
+    };
+    let cfg = sonew::serving::StoreConfig {
+        dir: args.get("store").map(Into::into),
+        dim,
+        lr: args.f32_or("lr", 1.0),
+        spec: spec.clone(),
+        // eps=1.0 is the sensible online prior (the optimizer eps, not
+        // Adam's 1e-6 denominator guard); spec keys still override
+        base: HyperParams { eps: 1.0, ..Default::default() },
+        checkpoint_every: args.u64_or("checkpoint-every", 0),
+    };
+    let mut store = sonew::serving::ModelStore::open(cfg, shards)?;
+    if !store.is_empty() {
+        println!("[serve] resumed {} model(s) from the store", store.len());
+    }
+    let t0 = std::time::Instant::now();
+    let report = sonew::serving::replay(&mut store, &log, args.usize_or("eval-every", 100))?;
+    let wall = t0.elapsed();
+    store.flush()?;
+    for p in &report.curve {
+        println!("[pv] seen={} loss={:.6} acc={:.6}", p.seen, p.mean_loss, p.accuracy);
+    }
+    let s = report.summary;
+    println!(
+        "[pv] final requests={} models={} loss={:.6} acc={:.6}",
+        s.requests,
+        store.len(),
+        s.mean_loss,
+        s.accuracy
+    );
+    // per-model fingerprints: updates + FNV over the exact param bits —
+    // the cross-shard-count determinism surface CI diffs
+    for id in store.model_ids() {
+        let m = store.model(&id).expect("listed id");
+        let mut bytes = Vec::with_capacity(4 * m.params().len());
+        for w in m.params() {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        println!(
+            "[pv] model {id} updates={} params=0x{:016x}",
+            m.updates(),
+            sonew::data::requests::fnv1a64(&bytes)
+        );
+    }
+    println!(
+        "[serve] spec={spec} shards={} requests={} wall={:.2}s rps={:.0}",
+        store.shards(),
+        log.len(),
+        wall.as_secs_f64(),
+        log.len() as f64 / wall.as_secs_f64().max(1e-9)
+    );
     Ok(())
 }
 

@@ -471,6 +471,9 @@ pub struct HyperParams {
     pub rank: usize,
     /// preconditioner refresh interval for Shampoo(t) / KFAC
     pub interval: usize,
+    /// tracked-feature cap for sparse-ons (overflow features fall back
+    /// to the diagonal prior)
+    pub cap: usize,
     pub precision: Precision,
     /// apply Adam-norm grafting to second-order directions (paper §5)
     pub grafting: bool,
@@ -488,6 +491,7 @@ impl Default for HyperParams {
             band: 4,
             rank: 4,
             interval: 20,
+            cap: 4096,
             precision: Precision::F32,
             grafting: true,
         }
@@ -636,7 +640,8 @@ mod tests {
         let blocks = vec![(0, 32), (32, 32)];
         let mats = vec![(0, 32, 8, 4), (32, 32, 4, 8)];
         let hp = HyperParams { gamma: 1e-6, ..Default::default() };
-        for spec in ["adam", "tridiag-sonew", "shampoo", "rfdson", "adafactor"] {
+        for spec in ["adam", "tridiag-sonew", "shampoo", "rfdson", "adafactor", "ons", "sparse-ons"]
+        {
             let mut opt = build(spec, n, &blocks, &mats, &hp);
             let mut rng = crate::util::Rng::new(9);
             let gs: Vec<Vec<f32>> = (0..10).map(|_| rng.normal_vec(n)).collect();

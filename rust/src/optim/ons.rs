@@ -2,7 +2,17 @@
 //! method SONew sparsifies. Kept exact via Sherman–Morrison on the
 //! inverse; usable only for small n (convex experiments, regret tests)
 //! which is precisely the paper's point.
+//!
+//! [`SparseOns`] is the sparse-feature sibling built for the online
+//! serving workload (`serving/`): gradients there are supported on a
+//! handful of hashed feature indices per request, so instead of an
+//! n x n inverse over the full hashed dimension it maintains the exact
+//! Sherman–Morrison inverse over only the features *seen so far* —
+//! the same lazy-expansion trick as river's dict-backed `Newton`
+//! optimizer, with a dense growing submatrix instead of a dict of
+//! (i, j) entries.
 
+use std::collections::BTreeMap;
 use std::io::{Read, Write};
 
 use super::{state, Direction};
@@ -76,6 +86,201 @@ impl Direction for FullOns {
     }
 }
 
+/// Sparse-feature Online Newton Step: exact Sherman–Morrison rank-1
+/// inverse updates over the features seen so far.
+///
+/// The inverse statistics matrix is dense over *tracked* features only
+/// (k x k for k distinct feature indices observed), never over the full
+/// hashed dimension: an unseen feature contributes exactly its
+/// `(1/eps)` diagonal prior until its first gradient arrives, at which
+/// point it is assigned the next slot and the inverse grows by one
+/// row/column. Beyond `cap` tracked features, new indices fall back to
+/// the diagonal prior permanently — the memory guard for adversarial
+/// vocabularies (hash floods).
+///
+/// Slot assignment is first-seen order, so for one model the statistics
+/// are a pure function of its gradient sequence — the property the
+/// serving replay-determinism contract leans on.
+pub struct SparseOns {
+    eps: f32,
+    cap: usize,
+    /// feature id -> slot in `ainv`
+    slots: BTreeMap<u32, usize>,
+    /// slot -> feature id (serialization order)
+    ids: Vec<u32>,
+    /// k x k row-major inverse over tracked slots, A = eps I + sum g g^T
+    ainv: Vec<f32>,
+    /// `A^{-1} g` scratch (dense over tracked slots)
+    ag: Vec<f32>,
+}
+
+impl SparseOns {
+    pub fn new(eps: f32, cap: usize) -> Self {
+        Self {
+            eps: eps.max(1e-8),
+            cap: cap.max(1),
+            slots: BTreeMap::new(),
+            ids: Vec::new(),
+            ainv: Vec::new(),
+            ag: Vec::new(),
+        }
+    }
+
+    /// Distinct features tracked so far (resident inverse is k x k).
+    pub fn tracked(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Slot for `id`, growing the inverse by one row/column on first
+    /// sight; `None` once the tracked set is at `cap`.
+    fn ensure_slot(&mut self, id: u32) -> Option<usize> {
+        if let Some(&s) = self.slots.get(&id) {
+            return Some(s);
+        }
+        let k = self.ids.len();
+        if k >= self.cap {
+            return None;
+        }
+        // grow k x k -> (k+1) x (k+1): old rows keep their values, the
+        // new row/column is the eps-diagonal prior
+        let mut next = vec![0.0f32; (k + 1) * (k + 1)];
+        for i in 0..k {
+            next[i * (k + 1)..i * (k + 1) + k].copy_from_slice(&self.ainv[i * k..(i + 1) * k]);
+        }
+        next[k * (k + 1) + k] = 1.0 / self.eps;
+        self.ainv = next;
+        self.slots.insert(id, k);
+        self.ids.push(id);
+        Some(k)
+    }
+
+    /// The serving fast path: gradient as sorted-unique `(feature id,
+    /// value)` pairs, direction written into `out` as `(feature id,
+    /// value)` pairs (cleared first). Tracked features receive the exact
+    /// ONS direction `A^{-1} g` — dense over the k tracked slots, since
+    /// the inverse couples every seen feature — while untracked features
+    /// (beyond `cap`) get the diagonal-prior direction `g_i / eps`.
+    pub fn compute_sparse(&mut self, g: &[(u32, f32)], out: &mut Vec<(u32, f32)>) {
+        out.clear();
+        let mut sg: Vec<(usize, f32)> = Vec::with_capacity(g.len());
+        for &(id, v) in g {
+            match self.ensure_slot(id) {
+                Some(s) => sg.push((s, v)),
+                None => out.push((id, v / self.eps)),
+            }
+        }
+        let k = self.ids.len();
+        if k == 0 || sg.is_empty() {
+            return;
+        }
+        // Sherman–Morrison on the tracked submatrix, exploiting the
+        // sparse right-hand side: ag = A^{-1} g costs O(k * nnz)
+        self.ag.clear();
+        self.ag.resize(k, 0.0);
+        for i in 0..k {
+            let row = &self.ainv[i * k..(i + 1) * k];
+            let mut acc = 0.0f32;
+            for &(s, v) in &sg {
+                acc += row[s] * v;
+            }
+            self.ag[i] = acc;
+        }
+        let mut denom = 1.0f32;
+        for &(s, v) in &sg {
+            denom += v * self.ag[s];
+        }
+        let inv_denom = 1.0 / denom.max(1e-12);
+        for i in 0..k {
+            let agi = self.ag[i] * inv_denom;
+            let row = &mut self.ainv[i * k..(i + 1) * k];
+            for (rj, &aj) in row.iter_mut().zip(self.ag.iter()) {
+                *rj -= agi * aj;
+            }
+        }
+        // u = A^{-1} g with the updated inverse (matches FullOns)
+        for i in 0..k {
+            let row = &self.ainv[i * k..(i + 1) * k];
+            let mut acc = 0.0f32;
+            for &(s, v) in &sg {
+                acc += row[s] * v;
+            }
+            out.push((self.ids[i], acc));
+        }
+    }
+}
+
+impl Direction for SparseOns {
+    fn name(&self) -> String {
+        "sparse-ons".into()
+    }
+
+    /// Dense-slice adapter for the registry/`Opt` surface: nonzero
+    /// gradient entries are the sparse features. On a fully dense
+    /// stream with `cap >= n` this reduces to `FullOns` (slot == index).
+    fn compute(&mut self, g: &[f32], u: &mut [f32]) {
+        let sg: Vec<(u32, f32)> = g
+            .iter()
+            .enumerate()
+            .filter(|&(_, &v)| v != 0.0)
+            .map(|(i, &v)| (i as u32, v))
+            .collect();
+        let mut out = Vec::with_capacity(self.ids.len() + sg.len());
+        self.compute_sparse(&sg, &mut out);
+        u.fill(0.0);
+        for (id, v) in out {
+            u[id as usize] = v;
+        }
+    }
+
+    fn memory_floats(&self) -> usize {
+        self.ainv.len()
+    }
+
+    fn save_state(&self, w: &mut dyn Write) -> std::io::Result<()> {
+        state::write_tag(w, b"SONS")?;
+        state::write_u64(w, self.cap as u64)?;
+        state::write_u64(w, self.ids.len() as u64)?;
+        for &id in &self.ids {
+            state::write_u64(w, id as u64)?;
+        }
+        state::write_f32s(w, &self.ainv)
+    }
+
+    fn load_state(&mut self, r: &mut dyn Read) -> std::io::Result<()> {
+        state::expect_tag(r, b"SONS", "sparse-ons")?;
+        let cap = state::read_u64(r)? as usize;
+        if cap != self.cap {
+            return Err(state::bad_state(format!(
+                "sparse-ons: checkpoint cap {cap} vs configured cap {}",
+                self.cap
+            )));
+        }
+        let k = state::read_u64(r)? as usize;
+        if k > cap {
+            return Err(state::bad_state(format!(
+                "sparse-ons: {k} tracked features exceed cap {cap}"
+            )));
+        }
+        // the tracked set is dynamic state: rebuild it from the blob
+        // rather than requiring the fresh direction to match shapes
+        self.slots.clear();
+        self.ids.clear();
+        for slot in 0..k {
+            let id = state::read_u64(r)?;
+            let id = u32::try_from(id)
+                .map_err(|_| state::bad_state(format!("sparse-ons: feature id {id} overflows")))?;
+            if self.slots.insert(id, slot).is_some() {
+                return Err(state::bad_state(format!(
+                    "sparse-ons: duplicate feature id {id} in checkpoint"
+                )));
+            }
+            self.ids.push(id);
+        }
+        self.ainv = vec![0.0; k * k];
+        state::read_f32s_into(r, &mut self.ainv, "sparse-ons.ainv")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -133,5 +338,96 @@ mod tests {
     #[test]
     fn memory_is_quadratic() {
         assert_eq!(FullOns::new(50, 1.0).memory_floats(), 2500);
+    }
+
+    #[test]
+    fn sparse_matches_full_on_dense_streams() {
+        // with cap >= n and fully dense gradients, the lazily-grown
+        // inverse is the full inverse: both variants track the same
+        // statistics (summation order differs, so compare with tolerance)
+        check("sparse ONS == full ONS (dense)", 16, |rng| {
+            let n = 1 + rng.below(8);
+            let mut full = FullOns::new(n, 0.5);
+            let mut sparse = SparseOns::new(0.5, 64);
+            let mut uf = vec![0.0; n];
+            let mut us = vec![0.0; n];
+            for _ in 0..6 {
+                let g = rng.normal_vec(n);
+                full.compute(&g, &mut uf);
+                sparse.compute(&g, &mut us);
+                assert_close(&us, &uf, 2e-2, 1e-3, "sparse-vs-full");
+            }
+            assert_eq!(sparse.tracked(), n);
+            assert_eq!(sparse.memory_floats(), n * n);
+        });
+    }
+
+    #[test]
+    fn memory_tracks_seen_features_not_the_hash_dimension() {
+        // three requests over a 2^20 hashed space touching 5 distinct
+        // features: the inverse is 5x5, not 2^40
+        let mut ons = SparseOns::new(1.0, 1 << 16);
+        let mut out = Vec::new();
+        ons.compute_sparse(&[(7, 1.0), (900_001, -2.0)], &mut out);
+        ons.compute_sparse(&[(7, 0.5), (31, 1.5)], &mut out);
+        ons.compute_sparse(&[(555, 1.0), (31, -1.0), (12, 2.0)], &mut out);
+        assert_eq!(ons.tracked(), 5);
+        assert_eq!(ons.memory_floats(), 25);
+        // every direction entry lands on a seen feature id
+        for (id, v) in &out {
+            assert!([7, 31, 12, 555, 900_001].contains(id), "{id}");
+            assert!(v.is_finite());
+        }
+    }
+
+    #[test]
+    fn cap_overflow_falls_back_to_diagonal() {
+        let eps = 2.0;
+        let mut ons = SparseOns::new(eps, 2);
+        let mut out = Vec::new();
+        ons.compute_sparse(&[(1, 1.0), (2, 1.0)], &mut out);
+        assert_eq!(ons.tracked(), 2);
+        // feature 3 arrives after the cap: diagonal-prior direction g/eps
+        ons.compute_sparse(&[(3, 4.0)], &mut out);
+        assert_eq!(ons.tracked(), 2, "cap must not grow");
+        assert_eq!(out, vec![(3, 4.0 / eps)]);
+    }
+
+    #[test]
+    fn sparse_save_load_resumes_bitwise_with_dynamic_shape() {
+        // the tracked set grows online, so a fresh direction must adopt
+        // the checkpoint's shape — then replay bitwise
+        let mut rng = crate::util::Rng::new(41);
+        let mut ons = SparseOns::new(1.0, 32);
+        let mut out = Vec::new();
+        let feats = |rng: &mut crate::util::Rng| -> Vec<(u32, f32)> {
+            let mut ids: Vec<u32> = (0..3).map(|_| rng.below(20) as u32).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            ids.iter().map(|&i| (i, rng.normal_f32())).collect()
+        };
+        for _ in 0..10 {
+            ons.compute_sparse(&feats(&mut rng), &mut out);
+        }
+        let mut blob = Vec::new();
+        ons.save_state(&mut blob).unwrap();
+        let mut fresh = SparseOns::new(1.0, 32);
+        fresh.load_state(&mut &blob[..]).unwrap();
+        assert_eq!(fresh.tracked(), ons.tracked());
+        let mut a = Vec::new();
+        let mut b = Vec::new();
+        for _ in 0..10 {
+            let g = feats(&mut rng);
+            ons.compute_sparse(&g, &mut a);
+            fresh.compute_sparse(&g, &mut b);
+            assert_eq!(a.len(), b.len());
+            for ((ia, va), (ib, vb)) in a.iter().zip(&b) {
+                assert_eq!(ia, ib);
+                assert_eq!(va.to_bits(), vb.to_bits(), "resumed direction diverged");
+            }
+        }
+        // a cap mismatch is a hard error, not a silent reshape
+        let mut wrong = SparseOns::new(1.0, 16);
+        assert!(wrong.load_state(&mut &blob[..]).is_err());
     }
 }

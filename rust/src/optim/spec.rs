@@ -171,6 +171,14 @@ static REGISTRY: &[OptEntry] = &[
         ctor: ctor_ons,
     },
     OptEntry {
+        name: "sparse-ons",
+        aliases: &["sparse_ons"],
+        keys: &["eps", "cap", "wd", "precision"],
+        summary: "sparse-feature ONS (Sherman–Morrison over seen features)",
+        example: "sparse-ons:eps=1.0,cap=4096",
+        ctor: ctor_sparse_ons,
+    },
+    OptEntry {
         name: "kfac",
         aliases: &["kfac-proxy"],
         keys: KRON_KEYS,
@@ -408,6 +416,7 @@ fn apply_key(hp: &mut HyperParams, sel: &mut GraftSel, k: &str, v: &str) -> Resu
         "band" => hp.band = u(v)?,
         "rank" => hp.rank = u(v)?,
         "interval" => hp.interval = u(v)?,
+        "cap" => hp.cap = u(v)?,
         "precision" => {
             hp.precision = Precision::parse(v)
                 .ok_or_else(|| anyhow!("key `precision`: `{v}` (accepted: f32, bf16)"))?
@@ -635,6 +644,19 @@ fn ctor_ons(cx: &BuildCtx) -> Opt {
         .with_precision(cx.hp.precision)
 }
 
+fn ctor_sparse_ons(cx: &BuildCtx) -> Opt {
+    // one whole-vector block: the tracked-feature set is global, and the
+    // serving hot path feeds sparse gradients whose support is tiny
+    // relative to the hashed dimension
+    Opt::single(
+        "sparse-ons",
+        Box::new(ons::SparseOns::new(cx.hp.eps, cx.hp.cap)),
+        cx.n,
+    )
+    .with_weight_decay(cx.hp.weight_decay)
+    .with_precision(cx.hp.precision)
+}
+
 fn ctor_kfac(cx: &BuildCtx) -> Opt {
     let dirs = cx
         .blocks
@@ -713,7 +735,7 @@ mod tests {
                     continue;
                 }
                 let v: String = match k {
-                    "band" | "rank" | "interval" => (1 + rng.below(16)).to_string(),
+                    "band" | "rank" | "interval" | "cap" => (1 + rng.below(16)).to_string(),
                     "precision" => {
                         (if rng.below(2) == 0 { "f32" } else { "bf16" }).to_string()
                     }

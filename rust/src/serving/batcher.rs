@@ -1,0 +1,127 @@
+//! Request batching: fan a request log out across the store's shards
+//! on the persistent executor, then merge outcomes back into global
+//! log order for progressive validation.
+//!
+//! Each shard gets one queue holding its models' requests *in log
+//! order* and one executor task that drains the queue sequentially, so
+//! per-model processing order — and therefore per-model state — is
+//! independent of the shard count and of `SONEW_THREADS` (the
+//! determinism contract `tests/serve.rs` asserts). The scope uses
+//! help-first scheduling: the calling thread drains shard queues too
+//! instead of idling.
+
+use anyhow::Result;
+
+use super::eval::{EvalPoint, EvalSummary, Progressive};
+use super::protocol::Outcome;
+use super::store::{shard_index, ModelStore};
+use crate::data::requests::Request;
+use crate::runtime::executor::{self, Task};
+
+/// Everything a replay produces: per-request outcomes (log order), the
+/// sampled progressive-validation curve and the final summary.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    pub outcomes: Vec<Outcome>,
+    pub curve: Vec<EvalPoint>,
+    pub summary: EvalSummary,
+}
+
+/// Run `log` through the store's shards in parallel, scoring every
+/// request before its update. Any per-request error (unknown feature
+/// range, checkpoint I/O) aborts the replay.
+pub fn replay(
+    store: &mut ModelStore,
+    log: &[Request],
+    eval_every: usize,
+) -> Result<ReplayReport> {
+    let n = store.shards.len();
+    let mut queues: Vec<Vec<(usize, &Request)>> = vec![Vec::new(); n];
+    for (idx, req) in log.iter().enumerate() {
+        queues[shard_index(&req.model, n)].push((idx, req));
+    }
+    let ModelStore { cfg, shards } = store;
+    let cfg: &crate::serving::store::StoreConfig = cfg;
+    let mut outs: Vec<Result<Vec<(usize, Outcome)>>> = Vec::new();
+    outs.resize_with(n, || Ok(Vec::new()));
+    {
+        let mut tasks: Vec<Task> = Vec::new();
+        for ((shard, queue), out) in
+            shards.iter_mut().zip(queues).zip(outs.iter_mut())
+        {
+            if queue.is_empty() {
+                continue;
+            }
+            tasks.push(Box::new(move || {
+                *out = (|| {
+                    let mut res = Vec::with_capacity(queue.len());
+                    for (idx, req) in queue {
+                        res.push((
+                            idx,
+                            shard.process(cfg, &req.model, &req.feats, req.label)?,
+                        ));
+                    }
+                    Ok(res)
+                })();
+            }));
+        }
+        executor::global().scope(tasks);
+    }
+    let mut merged: Vec<(usize, Outcome)> = Vec::with_capacity(log.len());
+    for out in outs {
+        merged.extend(out?);
+    }
+    // global log order: the progressive-validation accumulator must see
+    // outcomes in the same sequence for every shard count
+    merged.sort_by_key(|&(idx, _)| idx);
+    let mut pv = Progressive::new(eval_every);
+    let outcomes: Vec<Outcome> = merged.into_iter().map(|(_, o)| o).collect();
+    for o in &outcomes {
+        pv.observe(o);
+    }
+    Ok(ReplayReport { outcomes, curve: pv.curve().to_vec(), summary: pv.summary() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::requests::SynthRequests;
+    use crate::optim::{HyperParams, OptSpec};
+    use crate::serving::store::StoreConfig;
+
+    fn cfg() -> StoreConfig {
+        StoreConfig {
+            dir: None,
+            dim: 32,
+            lr: 1.0,
+            spec: OptSpec::parse("sparse-ons").unwrap(),
+            base: HyperParams { eps: 1.0, ..Default::default() },
+            checkpoint_every: 0,
+        }
+    }
+
+    #[test]
+    fn replay_matches_the_sequential_loop() {
+        let log = SynthRequests::new(21, 4, 32, 3).take(120);
+        let mut batched = ModelStore::open(cfg(), 3).unwrap();
+        let report = replay(&mut batched, &log, 10).unwrap();
+        assert_eq!(report.outcomes.len(), log.len());
+        assert_eq!(report.curve.len(), 12);
+
+        let mut serial = ModelStore::open(cfg(), 1).unwrap();
+        for (req, out) in log.iter().zip(&report.outcomes) {
+            let o = serial.process(&req.model, &req.feats, req.label).unwrap();
+            assert_eq!(o.pred.to_bits(), out.pred.to_bits(), "batched != sequential");
+            assert_eq!(o.loss.to_bits(), out.loss.to_bits());
+        }
+    }
+
+    #[test]
+    fn errors_in_any_shard_abort_the_replay() {
+        let mut log = SynthRequests::new(3, 2, 32, 3).take(10);
+        // feature index beyond the store dim: a hard error mid-queue
+        log[7].feats = vec![(999, 1.0)];
+        let mut store = ModelStore::open(cfg(), 2).unwrap();
+        assert!(replay(&mut store, &log, 5).is_err());
+    }
+}

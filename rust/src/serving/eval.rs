@@ -1,0 +1,115 @@
+//! Progressive validation: the online-learning analogue of a held-out
+//! set. Every example is scored *before* the model updates on it, so
+//! the cumulative loss/accuracy is an unbiased estimate of
+//! generalization on the stream — no split required, every example is
+//! both test and train (Blum et al., 1999).
+//!
+//! Accumulation runs in f64 over outcomes fed in global log order,
+//! which makes the curve part of the determinism contract: any shard
+//! count and thread count reproduces it bitwise.
+
+use super::protocol::Outcome;
+
+/// One point on the progressive-validation curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalPoint {
+    /// requests scored so far (the x axis)
+    pub seen: u64,
+    /// cumulative mean logloss over all `seen` requests
+    pub mean_loss: f64,
+    /// cumulative accuracy over all `seen` requests
+    pub accuracy: f64,
+}
+
+/// Final stream summary.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalSummary {
+    pub requests: u64,
+    pub mean_loss: f64,
+    pub accuracy: f64,
+}
+
+/// Streaming progressive-validation accumulator: feed pre-update
+/// [`Outcome`]s in log order, sample a curve point every `every`
+/// requests.
+#[derive(Debug, Clone)]
+pub struct Progressive {
+    every: u64,
+    seen: u64,
+    cum_loss: f64,
+    correct: u64,
+    curve: Vec<EvalPoint>,
+}
+
+impl Progressive {
+    pub fn new(every: usize) -> Self {
+        Self {
+            every: every.max(1) as u64,
+            seen: 0,
+            cum_loss: 0.0,
+            correct: 0,
+            curve: Vec::new(),
+        }
+    }
+
+    pub fn observe(&mut self, o: &Outcome) {
+        self.seen += 1;
+        self.cum_loss += o.loss as f64;
+        self.correct += u64::from(o.correct);
+        if self.seen % self.every == 0 {
+            self.curve.push(self.point());
+        }
+    }
+
+    fn point(&self) -> EvalPoint {
+        EvalPoint {
+            seen: self.seen,
+            mean_loss: self.cum_loss / self.seen as f64,
+            accuracy: self.correct as f64 / self.seen as f64,
+        }
+    }
+
+    /// Sampled curve (every `every`-th request).
+    pub fn curve(&self) -> &[EvalPoint] {
+        &self.curve
+    }
+
+    pub fn summary(&self) -> EvalSummary {
+        EvalSummary {
+            requests: self.seen,
+            mean_loss: if self.seen == 0 { 0.0 } else { self.cum_loss / self.seen as f64 },
+            accuracy: if self.seen == 0 { 0.0 } else { self.correct as f64 / self.seen as f64 },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn out(loss: f32, correct: bool) -> Outcome {
+        Outcome { pred: 0.5, loss, correct }
+    }
+
+    #[test]
+    fn curve_samples_cumulative_means() {
+        let mut pv = Progressive::new(2);
+        pv.observe(&out(1.0, true));
+        pv.observe(&out(3.0, false));
+        pv.observe(&out(2.0, true));
+        pv.observe(&out(2.0, true));
+        assert_eq!(pv.curve().len(), 2);
+        assert_eq!(pv.curve()[0], EvalPoint { seen: 2, mean_loss: 2.0, accuracy: 0.5 });
+        assert_eq!(pv.curve()[1], EvalPoint { seen: 4, mean_loss: 2.0, accuracy: 0.75 });
+        let s = pv.summary();
+        assert_eq!(s.requests, 4);
+        assert_eq!(s.accuracy, 0.75);
+    }
+
+    #[test]
+    fn empty_stream_has_an_empty_summary() {
+        let pv = Progressive::new(10);
+        assert!(pv.curve().is_empty());
+        assert_eq!(pv.summary(), EvalSummary { requests: 0, mean_loss: 0.0, accuracy: 0.0 });
+    }
+}

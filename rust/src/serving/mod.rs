@@ -1,0 +1,45 @@
+//! Online serving: the predict-then-update loop behind `sonew serve`.
+//!
+//! SONew is derived in the online convex optimization framework — the
+//! regret analysis is about a learner that *predicts first, then pays*.
+//! This subsystem turns the offline reproduction into that system:
+//!
+//! ```text
+//!                 request (model-id, features, label)
+//!                                │
+//!                 ┌──────────────▼──────────────┐
+//!                 │  batcher: route by model id │  shard = fnv1a(id) % N
+//!                 └──┬───────────┬───────────┬──┘
+//!              queue 0      queue 1  ...  queue N-1    (log order kept)
+//!                 │             │           │
+//!            Executor scope: one task per shard (help-first)
+//!                 │             │           │
+//!          ┌──────▼──────┐      │           │
+//!          │ shard store │  1. predict  p = σ(w·x)
+//!          │  (exclusive │  2. score    logloss(p, y)   ← progressive
+//!          │  ownership) │  3. update   one optimizer step (w ← w−lr·u)
+//!          └──────┬──────┘      │           │
+//!                 └──────┬──────┴───────────┘
+//!                        ▼
+//!        merge outcomes by global log index → progressive validation
+//! ```
+//!
+//! Determinism contract: each shard owns its models exclusively and a
+//! model's requests are processed in log order *within* its shard, so
+//! per-model state is a pure function of that model's request
+//! subsequence — independent of the shard count and of
+//! `SONEW_THREADS`. Outcomes are merged back in global log order before
+//! scoring, so the progressive-validation curve is bitwise identical
+//! for any `--shards N`. Durability reuses the `SONEWCK2` exact-resume
+//! checkpoint format (atomic temp-file writes, background writer,
+//! stale-tmp sweep + size-vs-header validation on store open).
+
+pub mod batcher;
+pub mod eval;
+pub mod protocol;
+pub mod store;
+
+pub use batcher::{replay, ReplayReport};
+pub use eval::{EvalPoint, EvalSummary, Progressive};
+pub use protocol::{OnlineModel, Outcome};
+pub use store::{ModelStore, StoreConfig};

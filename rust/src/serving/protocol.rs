@@ -1,0 +1,292 @@
+//! The per-request online protocol: predict with the current weights,
+//! score against the observed label, then apply one optimizer step —
+//! in that order, so every score is a pre-update (progressive
+//! validation) measurement.
+//!
+//! Models are binary logistic learners over a hashed sparse feature
+//! space: `p = σ(w·x)`, logloss, gradient `(p − y)·x`. Two learner
+//! backends sit behind one surface:
+//!
+//! - `sparse-ons` runs the Sherman–Morrison [`SparseOns`] direction
+//!   directly on the sparse gradient — `O(nnz + k²)` per request, never
+//!   touching the dense dimension (`k` = tracked features);
+//! - every other registry spec (`adam`, `tridiag-sonew`, ...) runs
+//!   through the standard dense [`Opt`] step via a scatter/clear
+//!   scratch buffer, so serving can A/B any optimizer in the registry.
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::checkpoint::{self, Checkpoint};
+use crate::optim::ons::SparseOns;
+use crate::optim::{state, Direction, HyperParams, Opt, OptSpec};
+
+/// Pre-update result of one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Outcome {
+    /// predicted probability, from the weights *before* the update
+    pub pred: f32,
+    /// logloss of `pred` against the observed label
+    pub loss: f32,
+    /// whether `pred` rounds to the label
+    pub correct: bool,
+}
+
+fn sigmoid(z: f32) -> f32 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+fn logloss(p: f32, y: f32) -> f32 {
+    let p = p.clamp(1e-7, 1.0 - 1e-7);
+    -(y * p.ln() + (1.0 - y) * (1.0 - p).ln())
+}
+
+const LEARNER_SPARSE: u8 = 0;
+const LEARNER_DENSE: u8 = 1;
+
+enum Learner {
+    Sparse(SparseOns),
+    Dense { opt: Opt, g: Vec<f32> },
+}
+
+/// One online model: weights + learner state + scratch, owned
+/// exclusively by its shard.
+pub struct OnlineModel {
+    w: Vec<f32>,
+    learner: Learner,
+    updates: u64,
+    /// sparse-path scratch (no per-request allocations)
+    gbuf: Vec<(u32, f32)>,
+    ubuf: Vec<(u32, f32)>,
+}
+
+impl OnlineModel {
+    pub fn new(spec: &OptSpec, dim: usize, base: &HyperParams) -> Result<Self> {
+        let learner = if spec.name() == "sparse-ons" {
+            let hp = spec.hyperparams(base)?;
+            Learner::Sparse(SparseOns::new(hp.eps, hp.cap))
+        } else {
+            Learner::Dense { opt: spec.build(dim, &[], &[], base)?, g: vec![0.0; dim] }
+        };
+        Ok(Self { w: vec![0.0; dim], learner, updates: 0, gbuf: Vec::new(), ubuf: Vec::new() })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.w.len()
+    }
+
+    pub fn updates(&self) -> u64 {
+        self.updates
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.w
+    }
+
+    /// Predict, score, update — one request.
+    pub fn process(&mut self, feats: &[(u32, f32)], label: f32, lr: f32) -> Result<Outcome> {
+        let dim = self.w.len();
+        let mut z = 0.0f32;
+        for &(i, v) in feats {
+            let i = i as usize;
+            if i >= dim {
+                bail!("feature index {i} out of range (model dim {dim})");
+            }
+            z += self.w[i] * v;
+        }
+        let p = sigmoid(z);
+        let loss = logloss(p, label);
+        let correct = (p >= 0.5) == (label >= 0.5);
+        let err = p - label;
+        match &mut self.learner {
+            Learner::Sparse(ons) => {
+                self.gbuf.clear();
+                self.gbuf.extend(feats.iter().map(|&(i, v)| (i, err * v)));
+                ons.compute_sparse(&self.gbuf, &mut self.ubuf);
+                for &(i, u) in self.ubuf.iter() {
+                    self.w[i as usize] -= lr * u;
+                }
+            }
+            Learner::Dense { opt, g } => {
+                for &(i, v) in feats {
+                    g[i as usize] = err * v;
+                }
+                opt.step(&mut self.w, g, lr);
+                for &(i, _) in feats {
+                    g[i as usize] = 0.0;
+                }
+            }
+        }
+        self.updates += 1;
+        Ok(Outcome { pred: p, loss, correct })
+    }
+
+    /// Serialize to `SONEWCK2` bytes: step = update count, spec string,
+    /// weights as params, the tagged learner state as the optimizer
+    /// blob. Exactly the trainer's checkpoint layout, so `load_any`'s
+    /// bounded size-vs-header validation applies to model files too.
+    pub fn encode(&self, spec: &OptSpec) -> Vec<u8> {
+        let mut blob = Vec::new();
+        match &self.learner {
+            Learner::Sparse(ons) => {
+                state::write_u8(&mut blob, LEARNER_SPARSE).expect("vec write cannot fail");
+                ons.save_state(&mut blob).expect("vec write cannot fail");
+            }
+            Learner::Dense { opt, .. } => {
+                state::write_u8(&mut blob, LEARNER_DENSE).expect("vec write cannot fail");
+                opt.save_state(&mut blob).expect("vec write cannot fail");
+            }
+        }
+        checkpoint::encode_v2(self.updates, &spec.canonical(), &self.w, &blob, &[])
+    }
+
+    /// Rebuild from a loaded checkpoint; the store's spec and dim must
+    /// match what the file was written with (`what` names the file in
+    /// errors).
+    pub fn from_checkpoint(
+        ck: Checkpoint,
+        spec: &OptSpec,
+        dim: usize,
+        base: &HyperParams,
+        what: &str,
+    ) -> Result<Self> {
+        if ck.spec != spec.canonical() {
+            bail!(
+                "{what}: model was written by `{}` but the store serves `{}`",
+                ck.spec,
+                spec.canonical()
+            );
+        }
+        if ck.params.len() != dim {
+            bail!("{what}: model dim {} != store dim {dim}", ck.params.len());
+        }
+        let mut m = Self::new(spec, dim, base)?;
+        m.w = ck.params;
+        m.updates = ck.step;
+        let mut r: &[u8] = &ck.opt_state;
+        let kind = state::read_u8(&mut r).with_context(|| format!("{what}: learner tag"))?;
+        match (&mut m.learner, kind) {
+            (Learner::Sparse(ons), LEARNER_SPARSE) => ons
+                .load_state(&mut r)
+                .with_context(|| format!("{what}: sparse-ons state"))?,
+            (Learner::Dense { opt, .. }, LEARNER_DENSE) => opt
+                .load_state(&mut r)
+                .with_context(|| format!("{what}: optimizer state"))?,
+            _ => bail!("{what}: learner kind {kind} does not match spec `{}`", spec.canonical()),
+        }
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hp() -> HyperParams {
+        HyperParams { eps: 1.0, ..Default::default() }
+    }
+
+    #[test]
+    fn sparse_model_learns_a_separable_feature() {
+        // one informative feature: label == 1 iff x_3 > 0
+        let spec = OptSpec::parse("sparse-ons").unwrap();
+        let mut m = OnlineModel::new(&spec, 8, &hp()).unwrap();
+        let mut rng = crate::util::Rng::new(5);
+        let mut late_correct = 0;
+        for t in 0..200 {
+            let v = rng.normal_f32();
+            let y = if v > 0.0 { 1.0 } else { 0.0 };
+            let o = m.process(&[(3, v)], y, 1.0).unwrap();
+            if t >= 100 {
+                late_correct += u32::from(o.correct);
+            }
+        }
+        assert!(late_correct > 80, "only {late_correct}/100 correct late in the stream");
+        assert_eq!(m.updates(), 200);
+    }
+
+    #[test]
+    fn dense_spec_runs_through_opt_step() {
+        let spec = OptSpec::parse("adam").unwrap();
+        let mut m = OnlineModel::new(&spec, 16, &hp()).unwrap();
+        let o = m.process(&[(0, 1.0), (5, -2.0)], 1.0, 0.1).unwrap();
+        assert!((o.pred - 0.5).abs() < 1e-6, "zero weights predict 0.5");
+        assert!(o.loss > 0.0);
+        // only a step happened; weights moved somewhere
+        assert!(m.params().iter().any(|&w| w != 0.0));
+    }
+
+    #[test]
+    fn out_of_range_feature_is_an_error() {
+        let spec = OptSpec::parse("sparse-ons").unwrap();
+        let mut m = OnlineModel::new(&spec, 8, &hp()).unwrap();
+        assert!(m.process(&[(8, 1.0)], 1.0, 0.1).is_err());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_resumes_bitwise() {
+        for spec_str in ["sparse-ons", "adam"] {
+            let spec = OptSpec::parse(spec_str).unwrap();
+            let mut rng = crate::util::Rng::new(11);
+            let mut m = OnlineModel::new(&spec, 12, &hp()).unwrap();
+            let reqs: Vec<(Vec<(u32, f32)>, f32)> = (0..20)
+                .map(|_| {
+                    let i = rng.below(12) as u32;
+                    let j = rng.below(12) as u32;
+                    let feats = if i == j {
+                        vec![(i, rng.normal_f32())]
+                    } else {
+                        let (a, b) = (i.min(j), i.max(j));
+                        vec![(a, rng.normal_f32()), (b, rng.normal_f32())]
+                    };
+                    (feats, rng.below(2) as f32)
+                })
+                .collect();
+            for (f, y) in &reqs[..10] {
+                m.process(f, *y, 0.5).unwrap();
+            }
+            let bytes = m.encode(&spec);
+            // through the real file path: load_any validates sizes
+            let dir = std::env::temp_dir()
+                .join(format!("sonew_serve_proto_{}_{spec_str}", std::process::id()));
+            std::fs::create_dir_all(&dir).unwrap();
+            let path = dir.join("m.ck");
+            std::fs::write(&path, &bytes).unwrap();
+            let ck = checkpoint::load_any(&path).unwrap();
+            std::fs::remove_dir_all(&dir).ok();
+            let mut back = OnlineModel::from_checkpoint(ck, &spec, 12, &hp(), "m.ck").unwrap();
+            assert_eq!(back.updates(), 10, "{spec_str}");
+            for (f, y) in &reqs[10..] {
+                let a = m.process(f, *y, 0.5).unwrap();
+                let b = back.process(f, *y, 0.5).unwrap();
+                assert_eq!(a.pred.to_bits(), b.pred.to_bits(), "{spec_str}: resume diverged");
+            }
+            let same = m
+                .params()
+                .iter()
+                .zip(back.params())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(same, "{spec_str}: resumed params diverged");
+        }
+    }
+
+    #[test]
+    fn mismatched_spec_dim_and_kind_are_hard_errors() {
+        let sparse = OptSpec::parse("sparse-ons").unwrap();
+        let adam = OptSpec::parse("adam").unwrap();
+        let m = OnlineModel::new(&sparse, 8, &hp()).unwrap();
+        let decode = |bytes: &[u8]| -> Checkpoint {
+            let dir = std::env::temp_dir()
+                .join(format!("sonew_serve_mismatch_{}", std::process::id()));
+            std::fs::create_dir_all(&dir).unwrap();
+            let path = dir.join("m.ck");
+            std::fs::write(&path, bytes).unwrap();
+            let ck = checkpoint::load_any(&path).unwrap();
+            std::fs::remove_dir_all(&dir).ok();
+            ck
+        };
+        let ck = decode(&m.encode(&sparse));
+        assert!(OnlineModel::from_checkpoint(ck, &adam, 8, &hp(), "x").is_err(), "spec");
+        let ck = decode(&m.encode(&sparse));
+        assert!(OnlineModel::from_checkpoint(ck, &sparse, 9, &hp(), "x").is_err(), "dim");
+    }
+}

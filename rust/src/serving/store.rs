@@ -1,0 +1,295 @@
+//! Sharded model store: `fnv1a(model-id) % N` routes every model to
+//! exactly one shard, which owns it exclusively — no locks on the hot
+//! path, and a model's request order is its shard queue order.
+//!
+//! Durability is the trainer's `SONEWCK2` machinery verbatim: one
+//! checkpoint file per model (`<id>.ck`), written atomically
+//! (pid-tagged temp file + fsync + rename) on a background executor
+//! job, at most one write in flight per shard. Opening a store first
+//! sweeps stale `*.tmp` leftovers from crashed writers and then loads
+//! every model through the bounded `load_any` reader, so a truncated
+//! file is a hard, named error — a crashed serve process can never
+//! silently resurrect a half-written model.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use super::protocol::{OnlineModel, Outcome};
+use crate::coordinator::checkpoint;
+use crate::data::requests::fnv1a64;
+use crate::optim::{HyperParams, OptSpec};
+use crate::runtime::executor::{self, JobHandle};
+
+/// Stable shard routing. `std`'s `DefaultHasher` is seeded per process;
+/// FNV-1a keeps the id → shard map identical across runs and hosts.
+pub(crate) fn shard_index(id: &str, nshards: usize) -> usize {
+    (fnv1a64(id.as_bytes()) % nshards as u64) as usize
+}
+
+/// Store-wide configuration shared by every shard.
+pub struct StoreConfig {
+    /// checkpoint directory; `None` serves purely in memory
+    pub dir: Option<PathBuf>,
+    /// hashed feature dimension of every model
+    pub dim: usize,
+    /// learning rate applied on each request
+    pub lr: f32,
+    /// optimizer spec each model is built from
+    pub spec: OptSpec,
+    /// base hyperparameters under the spec's overrides
+    pub base: HyperParams,
+    /// background-checkpoint a model every this many of *its* updates
+    /// (0 = only on [`ModelStore::flush`])
+    pub checkpoint_every: u64,
+}
+
+#[derive(Default)]
+pub(crate) struct Shard {
+    models: BTreeMap<String, OnlineModel>,
+    /// at most one background checkpoint write in flight
+    pending: Option<JobHandle<Result<()>>>,
+}
+
+impl Shard {
+    /// Serve one request against this shard (the model is created on
+    /// first sight). Callers must route: `shard_index(id) == self`.
+    pub(crate) fn process(
+        &mut self,
+        cfg: &StoreConfig,
+        id: &str,
+        feats: &[(u32, f32)],
+        label: f32,
+    ) -> Result<Outcome> {
+        if !self.models.contains_key(id) {
+            self.models
+                .insert(id.to_string(), OnlineModel::new(&cfg.spec, cfg.dim, &cfg.base)?);
+        }
+        let m = self.models.get_mut(id).expect("inserted above");
+        let out = m.process(feats, label, cfg.lr)?;
+        if cfg.checkpoint_every > 0 && m.updates() % cfg.checkpoint_every == 0 {
+            if let Some(dir) = &cfg.dir {
+                // serialize synchronously (state keeps mutating), ship
+                // the I/O to a background job — the PR 6 discipline
+                let bytes = m.encode(&cfg.spec);
+                let path = dir.join(format!("{id}.ck"));
+                if let Some(h) = self.pending.take() {
+                    h.join().context("background checkpoint write")?;
+                }
+                self.pending = Some(
+                    executor::global()
+                        .submit(move || checkpoint::write_atomic_bytes(&path, &bytes)),
+                );
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// The sharded model store behind `sonew serve`.
+pub struct ModelStore {
+    pub(crate) cfg: StoreConfig,
+    pub(crate) shards: Vec<Shard>,
+}
+
+impl ModelStore {
+    /// Open a store with `nshards` shards, sweeping crash leftovers and
+    /// loading every persisted model (validated against the store's
+    /// spec and dim; truncated or corrupt files are hard errors).
+    pub fn open(cfg: StoreConfig, nshards: usize) -> Result<Self> {
+        let nshards = nshards.max(1);
+        let mut shards: Vec<Shard> = (0..nshards).map(|_| Shard::default()).collect();
+        if let Some(dir) = &cfg.dir {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating store dir {}", dir.display()))?;
+            checkpoint::sweep_stale_tmps_in_dir(dir);
+            // sorted load order: deterministic error reporting
+            let mut found: Vec<(String, PathBuf)> = Vec::new();
+            for entry in std::fs::read_dir(dir)
+                .with_context(|| format!("reading store dir {}", dir.display()))?
+            {
+                let path = entry?.path();
+                if path.extension().and_then(|e| e.to_str()) != Some("ck") {
+                    continue;
+                }
+                let Some(id) = path.file_stem().and_then(|s| s.to_str()) else {
+                    continue;
+                };
+                found.push((id.to_string(), path.clone()));
+            }
+            found.sort();
+            for (id, path) in found {
+                let what = path.display().to_string();
+                let ck = checkpoint::load_any(&path)?;
+                let model = OnlineModel::from_checkpoint(ck, &cfg.spec, cfg.dim, &cfg.base, &what)?;
+                shards[shard_index(&id, nshards)].models.insert(id, model);
+            }
+        }
+        Ok(Self { cfg, shards })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn shard_of(&self, id: &str) -> usize {
+        shard_index(id, self.shards.len())
+    }
+
+    /// Serve one request on the calling thread (the batcher fans whole
+    /// queues out instead — see [`super::batcher::replay`]).
+    pub fn process(&mut self, id: &str, feats: &[(u32, f32)], label: f32) -> Result<Outcome> {
+        let s = self.shard_of(id);
+        let cfg = &self.cfg;
+        self.shards[s].process(cfg, id, feats, label)
+    }
+
+    pub fn model(&self, id: &str) -> Option<&OnlineModel> {
+        self.shards[self.shard_of(id)].models.get(id)
+    }
+
+    /// All model ids, sorted (stable across shard counts).
+    pub fn model_ids(&self) -> Vec<String> {
+        let mut ids: Vec<String> =
+            self.shards.iter().flat_map(|s| s.models.keys().cloned()).collect();
+        ids.sort();
+        ids
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.models.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Join in-flight background writes and persist every model
+    /// synchronously. A `dir: None` store just joins (no-op writes).
+    pub fn flush(&mut self) -> Result<()> {
+        let cfg = &self.cfg;
+        for shard in &mut self.shards {
+            if let Some(h) = shard.pending.take() {
+                h.join().context("background checkpoint write")?;
+            }
+            if let Some(dir) = &cfg.dir {
+                for (id, m) in &shard.models {
+                    checkpoint::write_atomic_bytes(
+                        dir.join(format!("{id}.ck")),
+                        &m.encode(&cfg.spec),
+                    )
+                    .with_context(|| format!("persisting model {id}"))?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(dir: Option<PathBuf>) -> StoreConfig {
+        StoreConfig {
+            dir,
+            dim: 8,
+            lr: 0.5,
+            spec: OptSpec::parse("sparse-ons").unwrap(),
+            base: HyperParams { eps: 1.0, ..Default::default() },
+            checkpoint_every: 0,
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("sonew_store_{tag}_{}", std::process::id()));
+        std::fs::remove_dir_all(&d).ok();
+        d
+    }
+
+    #[test]
+    fn routing_is_stable_and_models_are_created_on_first_sight() {
+        let mut store = ModelStore::open(cfg(None), 4).unwrap();
+        for id in ["alice", "bob", "carol"] {
+            store.process(id, &[(1, 1.0)], 1.0).unwrap();
+            assert_eq!(store.shard_of(id), shard_index(id, 4));
+        }
+        assert_eq!(store.len(), 3);
+        assert_eq!(store.model_ids(), vec!["alice", "bob", "carol"]);
+        assert_eq!(store.model("alice").unwrap().updates(), 1);
+        // FNV-1a is seedless: the same id always lands on the same shard
+        assert_eq!(shard_index("alice", 4), shard_index("alice", 4));
+    }
+
+    #[test]
+    fn flush_then_reopen_restores_every_model() {
+        let dir = tmpdir("reopen");
+        let mut store = ModelStore::open(cfg(Some(dir.clone())), 2).unwrap();
+        store.process("a", &[(0, 1.0)], 1.0).unwrap();
+        store.process("b", &[(3, -1.0)], 0.0).unwrap();
+        let wa: Vec<f32> = store.model("a").unwrap().params().to_vec();
+        store.flush().unwrap();
+        // a different shard count must still find and route every model
+        let back = ModelStore::open(cfg(Some(dir.clone())), 5).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.model("a").unwrap().updates(), 1);
+        let same = back
+            .model("a")
+            .unwrap()
+            .params()
+            .iter()
+            .zip(&wa)
+            .all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(same, "reloaded params differ");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn open_sweeps_stale_tmps_and_rejects_truncated_models() {
+        let dir = tmpdir("corrupt");
+        let mut store = ModelStore::open(cfg(Some(dir.clone())), 2).unwrap();
+        store.process("ok", &[(0, 1.0)], 1.0).unwrap();
+        store.flush().unwrap();
+        // crash leftover from a dead writer: swept on open
+        let stale = dir.join(format!("ok.ck.{}.tmp", u32::MAX));
+        std::fs::write(&stale, b"half a checkpoint").unwrap();
+        let back = ModelStore::open(cfg(Some(dir.clone())), 1).unwrap();
+        assert!(!stale.exists(), "open must sweep dead-pid tmps");
+        assert_eq!(back.len(), 1);
+        // a truncated model file is a hard error, not a silent skip
+        let good = std::fs::read(dir.join("ok.ck")).unwrap();
+        std::fs::write(dir.join("bad.ck"), &good[..good.len() / 2]).unwrap();
+        let err = format!("{:#}", ModelStore::open(cfg(Some(dir.clone())), 1).unwrap_err());
+        assert!(err.contains("truncated") || err.contains("corrupt"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn spec_mismatch_on_open_is_a_hard_error() {
+        let dir = tmpdir("specmismatch");
+        let mut store = ModelStore::open(cfg(Some(dir.clone())), 1).unwrap();
+        store.process("m", &[(0, 1.0)], 1.0).unwrap();
+        store.flush().unwrap();
+        let mut other = cfg(Some(dir.clone()));
+        other.spec = OptSpec::parse("adam").unwrap();
+        let err = format!("{:#}", ModelStore::open(other, 1).unwrap_err());
+        assert!(err.contains("sparse-ons"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn periodic_checkpoints_run_in_the_background() {
+        let dir = tmpdir("periodic");
+        let mut c = cfg(Some(dir.clone()));
+        c.checkpoint_every = 2;
+        let mut store = ModelStore::open(c, 1).unwrap();
+        for _ in 0..4 {
+            store.process("m", &[(1, 1.0)], 1.0).unwrap();
+        }
+        store.flush().unwrap();
+        let ck = checkpoint::load_any(dir.join("m.ck")).unwrap();
+        assert_eq!(ck.step, 4, "flush persists the final state");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

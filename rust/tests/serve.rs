@@ -1,0 +1,126 @@
+//! Online-serving determinism contract (ISSUE 8): a replayed request
+//! log reproduces model state bitwise for any shard count, the durable
+//! store resumes exactly, and progressive validation actually measures
+//! learning. CI runs this suite at `SONEW_THREADS=1` and `=4`, so the
+//! shard fan-out is exercised both self-drained and cross-thread.
+
+use sonew::data::requests::SynthRequests;
+use sonew::optim::{HyperParams, OptSpec};
+use sonew::serving::{replay, ModelStore, StoreConfig};
+
+fn cfg(spec: &str, dim: usize, dir: Option<std::path::PathBuf>) -> StoreConfig {
+    StoreConfig {
+        dir,
+        dim,
+        // ONS directions are already curvature-scaled; dense first/second
+        // order baselines want a small step
+        lr: if spec == "sparse-ons" { 1.0 } else { 0.05 },
+        spec: OptSpec::parse(spec).unwrap(),
+        base: HyperParams { eps: 1.0, ..Default::default() },
+        checkpoint_every: 0,
+    }
+}
+
+/// Sorted per-model (id, updates, exact param bits) — the state surface
+/// the determinism contract is about.
+fn fingerprints(store: &ModelStore) -> Vec<(String, u64, Vec<u32>)> {
+    store
+        .model_ids()
+        .iter()
+        .map(|id| {
+            let m = store.model(id).expect("listed id");
+            (id.clone(), m.updates(), m.params().iter().map(|w| w.to_bits()).collect())
+        })
+        .collect()
+}
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("sonew_serve_it_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+#[test]
+fn replay_is_shard_count_invariant() {
+    // same log, shard counts 1 / 2 / 5 (more shards than models is
+    // legal): final params, outcomes, curve and summary all bitwise
+    let log = SynthRequests::new(13, 5, 48, 4).take(240);
+    for spec in ["sparse-ons", "adam", "tridiag-sonew"] {
+        let mut reference = None;
+        for shards in [1usize, 2, 5] {
+            let mut store = ModelStore::open(cfg(spec, 48, None), shards).unwrap();
+            let report = replay(&mut store, &log, 50).unwrap();
+            assert_eq!(report.outcomes.len(), log.len());
+            let got = (fingerprints(&store), report.outcomes, report.curve, report.summary);
+            match &reference {
+                None => reference = Some(got),
+                Some(want) => {
+                    assert_eq!(got.0, want.0, "{spec} @ {shards} shards: params diverged");
+                    assert_eq!(got.1, want.1, "{spec} @ {shards} shards: outcomes diverged");
+                    assert_eq!(got.2, want.2, "{spec} @ {shards} shards: curve diverged");
+                    assert_eq!(got.3, want.3, "{spec} @ {shards} shards: summary diverged");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn store_resume_matches_the_uninterrupted_run() {
+    // half the log, flush, reopen under a different shard count, second
+    // half: final state must equal the one-shot replay bitwise
+    let dim = 32;
+    let log = SynthRequests::new(29, 3, dim, 3).take(160);
+    for spec in ["sparse-ons", "adam"] {
+        let mut oneshot = ModelStore::open(cfg(spec, dim, None), 2).unwrap();
+        replay(&mut oneshot, &log, 40).unwrap();
+        let want = fingerprints(&oneshot);
+
+        let dir = tmpdir(spec);
+        let mut first = ModelStore::open(cfg(spec, dim, Some(dir.clone())), 3).unwrap();
+        replay(&mut first, &log[..80], 40).unwrap();
+        first.flush().unwrap();
+        drop(first);
+        let mut second = ModelStore::open(cfg(spec, dim, Some(dir.clone())), 1).unwrap();
+        assert_eq!(second.len(), 3, "{spec}: reopened store lost models");
+        replay(&mut second, &log[80..], 40).unwrap();
+        assert_eq!(fingerprints(&second), want, "{spec}: resumed serve diverged");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn background_checkpoints_survive_an_unflushed_drop() {
+    // periodic background writes are durable on their own: drop the
+    // store without flush and the periodic snapshots are still loadable
+    let dim = 16;
+    let log = SynthRequests::new(3, 2, dim, 3).take(40);
+    let dir = tmpdir("bg");
+    let mut c = cfg("sparse-ons", dim, Some(dir.clone()));
+    c.checkpoint_every = 5;
+    let mut store = ModelStore::open(c, 2).unwrap();
+    replay(&mut store, &log, 10).unwrap();
+    drop(store); // JobHandle Drop is a completion barrier; no flush
+    let back = ModelStore::open(cfg("sparse-ons", dim, Some(dir.clone())), 1).unwrap();
+    assert_eq!(back.len(), 2);
+    for id in back.model_ids() {
+        let m = back.model(&id).unwrap();
+        assert!(m.updates() >= 15, "{id}: periodic snapshot too old ({})", m.updates());
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn progressive_validation_improves_on_a_separable_stream() {
+    let log = SynthRequests::new(7, 2, 64, 6).take(600);
+    let mut store = ModelStore::open(cfg("sparse-ons", 64, None), 4).unwrap();
+    let report = replay(&mut store, &log, 100).unwrap();
+    let s = report.summary;
+    assert_eq!(s.requests, 600);
+    // the stream is linearly separable per model — the online learner
+    // must clearly beat coin flipping and the p=0.5 logloss (ln 2)
+    assert!(s.accuracy > 0.55, "cumulative accuracy {}", s.accuracy);
+    assert!(s.mean_loss < 0.68, "cumulative logloss {}", s.mean_loss);
+    let last = report.curve.last().unwrap();
+    assert!(last.accuracy > 0.55, "late accuracy {}", last.accuracy);
+}
