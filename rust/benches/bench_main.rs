@@ -25,6 +25,10 @@
 //!   [serve] online predict-then-update: per-request update latency
 //!           (p50/p99) and sharded replay throughput, tridiag-SONew vs
 //!           sparse-ONS vs Adam on a synthetic request stream
+//!   [comm]  communicator primitives: the fixed-shape tree-fold merge
+//!           over gradient-sized contributions, and in-process
+//!           `all_reduce_sum` latency at world 4 (the per-step cost a
+//!           data-parallel session pays on top of the raw adds)
 //!
 //!     cargo bench                # all sections
 //!     cargo bench -- gemm        # one section
@@ -610,6 +614,7 @@ fn main() {
                 checkpoint_path: checkpoint.then(|| dir.join(format!("bench_{pipeline}.ck"))),
                 resume_from: None,
                 pipeline,
+                ..Default::default()
             };
             let mut s = sonew::coordinator::TrainSession::new(spec, opt, params, provider, cfg)
                 .unwrap();
@@ -680,6 +685,47 @@ fn main() {
             rec.derive(format!("serve_p99_us_{spec}"), p99);
             rec.derive(format!("serve_rps_{spec}"), rps);
         }
+    }
+
+    if run("comm") {
+        println!("== [comm] communicator primitives ==");
+        let n = if smoke { 1 << 16 } else { 1 << 20 };
+        let leaves = 8usize;
+        let (iters, kk) = if smoke { (4, 3) } else { (10, 5) };
+        let mut rng = Rng::new(11);
+        let contribs: Vec<Vec<f32>> = (0..leaves).map(|_| rng.normal_vec(n)).collect();
+        let r = bench(&format!("tree_fold {leaves} x n={n}"), iters, kk, |k| {
+            for _ in 0..k {
+                let v = sonew::comm::tree_fold(contribs.clone(), |mut a, b| {
+                    sonew::comm::add_assign(&mut a, &b);
+                    a
+                });
+                std::hint::black_box(v);
+            }
+        });
+        println!("{}", r.report());
+        rec.add("comm", &r);
+        // in-process all-reduce at world 4: rendezvous + rank-ordered
+        // fold. The post-reduce 1/world rescale mirrors the data-parallel
+        // step (and keeps the buffer values fixed across ops, since every
+        // rank contributes the same vector).
+        let world = 4usize;
+        let ops: u64 = if smoke { 20 } else { 100 };
+        let base = rng.normal_vec(n);
+        let us = sonew::comm::thread::run_world(world, |comm| {
+            let mut buf = base.clone();
+            let inv = 1.0 / world as f32;
+            let t = std::time::Instant::now();
+            for _ in 0..ops {
+                comm.all_reduce_sum(&mut buf).unwrap();
+                for v in &mut buf {
+                    *v *= inv;
+                }
+            }
+            t.elapsed().as_nanos() as f64 / 1000.0 / ops as f64
+        });
+        println!("    all_reduce_sum world={world} n={n}: {:.1} us/op (rank 0)", us[0]);
+        rec.derive(format!("comm_allreduce_us_world{world}_n{n}"), us[0]);
     }
 
     let out = std::env::var("SONEW_BENCH_OUT").unwrap_or_else(|_| "BENCH_latest.json".into());

@@ -75,6 +75,20 @@ impl Args {
     }
 }
 
+/// Parse a `rank/world` shard designator (e.g. `1/4`) as passed to
+/// worker subcommands. The rank must be in `0..world`.
+pub fn parse_shard(s: &str) -> anyhow::Result<(usize, usize)> {
+    let parse = || -> Option<(usize, usize)> {
+        let (r, w) = s.split_once('/')?;
+        let rank = r.trim().parse().ok()?;
+        let world = w.trim().parse().ok()?;
+        (rank < world).then_some((rank, world))
+    };
+    parse().ok_or_else(|| {
+        anyhow::anyhow!("invalid shard {s:?}: expected rank/world with rank < world, e.g. 1/4")
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,5 +113,16 @@ mod tests {
         let a = parse("--opts adam,sgd , --x 1");
         assert_eq!(a.list_or("opts", ""), vec!["adam", "sgd"]);
         assert_eq!(a.list_or("other", "a,b"), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn shard_designators() {
+        assert_eq!(parse_shard("0/1").unwrap(), (0, 1));
+        assert_eq!(parse_shard("1/4").unwrap(), (1, 4));
+        assert_eq!(parse_shard(" 2 / 3 ").unwrap(), (2, 3));
+        for bad in ["", "1", "4/4", "5/2", "-1/2", "a/b", "1/0", "1/2/3"] {
+            let err = parse_shard(bad).unwrap_err().to_string();
+            assert!(err.contains(bad), "{err}");
+        }
     }
 }

@@ -1,0 +1,61 @@
+//! World-size-1 communicator: the serial reference.
+//!
+//! Every collective is the identity — a sum over one rank is the
+//! buffer itself, a broadcast from rank 0 to rank 0 is a no-op — so a
+//! data-parallel run configured with `LocalComm` *is* the serial run,
+//! and distributed worlds are asserted bitwise-equal against it.
+
+use anyhow::{ensure, Result};
+
+use super::Communicator;
+
+/// The one-rank group. Zero state, zero cost.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct LocalComm;
+
+impl Communicator for LocalComm {
+    fn rank(&self) -> usize {
+        0
+    }
+
+    fn world_size(&self) -> usize {
+        1
+    }
+
+    fn all_reduce_sum(&self, _buf: &mut [f32]) -> Result<()> {
+        Ok(())
+    }
+
+    fn broadcast(&self, _buf: &mut [u8], root: usize) -> Result<()> {
+        ensure!(root == 0, "broadcast root must be rank 0, got {root}");
+        Ok(())
+    }
+
+    fn gather(&self, payload: &[u8]) -> Result<Option<Vec<Vec<u8>>>> {
+        Ok(Some(vec![payload.to_vec()]))
+    }
+
+    fn barrier(&self) -> Result<()> {
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_collectives_are_identities() {
+        let c = LocalComm;
+        assert_eq!((c.rank(), c.world_size()), (0, 1));
+        let mut buf = vec![1.5f32, -2.0];
+        c.all_reduce_sum(&mut buf).unwrap();
+        assert_eq!(buf, vec![1.5, -2.0]);
+        let mut bytes = vec![7u8, 8];
+        c.broadcast(&mut bytes, 0).unwrap();
+        assert_eq!(bytes, vec![7, 8]);
+        assert!(c.broadcast(&mut bytes, 1).is_err());
+        assert_eq!(c.gather(b"xy").unwrap(), Some(vec![b"xy".to_vec()]));
+        c.barrier().unwrap();
+    }
+}

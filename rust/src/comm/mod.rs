@@ -1,0 +1,215 @@
+//! Communicator layer: one abstraction behind every fan-out/merge path.
+//!
+//! Three subsystems used to hand-roll their own reduction discipline —
+//! `coordinator::parallel` (gradient tree-merge), `coordinator::sweep`
+//! (shard merging), `serving::batcher` (outcome merging). They are now
+//! thin clients of the primitives here, which is what makes a process
+//! boundary (TCP) a drop-in behind the same arithmetic.
+//!
+//! # Determinism contract: fixed-shape tree reduction
+//!
+//! Every reduction in this crate merges its contributions with the same
+//! stride-doubling pairwise order ([`tree_fold`]): pairs `(i, i+1)`
+//! first, then `(i, i+2)`, then `(i, i+4)`, … — the in-place binary
+//! tree `parallel::tree_reduce_mean` has always used. The tree's shape
+//! depends only on the *number of leaves*, never on which thread or
+//! process computed each leaf, so a reduction over V fixed leaf slots
+//! produces bitwise-identical floats at any `SONEW_THREADS` and any
+//! world size.
+//!
+//! For the distributed case the leaves are *virtual shards*: a
+//! data-parallel step is defined over V gradient shards (V a power of
+//! two), and a world of W ranks (W a power of two, W ≤ V) assigns rank
+//! r the contiguous block of V/W leaves starting at `r·V/W`. Because
+//! the block size is a power of two and the block is aligned, each
+//! rank's local [`tree_fold`] over its block is exactly the bottom
+//! subtree of the global V-leaf tree, and [`Communicator::all_reduce_sum`]
+//! completes the remaining upper levels by folding the W rank roots in
+//! rank order with the *same* stride-doubling shape. Net effect: the
+//! full V-leaf tree is evaluated identically whether W = 1 or W = V.
+//! (Non-power-of-two splits genuinely break this — with V=6, W=2 the
+//! global tree merges leaves 2 and 3 across the rank boundary — so the
+//! power-of-two requirement is enforced, not assumed.)
+//!
+//! Implementations:
+//! - [`LocalComm`] — world size 1, collectives are no-ops. The serial
+//!   reference every distributed run is measured against.
+//! - [`ThreadComm`] — in-process endpoints over a shared rendezvous,
+//!   hosted on dedicated [`Executor`](crate::runtime::Executor) scoped
+//!   jobs. Used by tests and in-process data-parallel worlds.
+//! - [`TcpComm`] — multi-process over length-prefixed, checksummed,
+//!   version-tagged frames (hub-and-spoke routing; the *arithmetic*
+//!   merge order is still the rank-ordered tree above).
+
+pub mod local;
+pub mod tcp;
+pub mod thread;
+
+pub use local::LocalComm;
+pub use tcp::{TcpComm, TcpConfig};
+pub use thread::ThreadComm;
+
+use anyhow::{ensure, Result};
+
+/// A group of ranks executing the same program (SPMD). All collectives
+/// must be entered by every rank of the group in the same order; the
+/// implementations detect and report sequencing violations rather than
+/// silently mixing operations.
+pub trait Communicator: Send + Sync {
+    /// This endpoint's rank in `0..world_size()`. Rank 0 is the root:
+    /// it is the only broadcast source and the only rank that receives
+    /// gather results (and, by crate convention, the only rank that
+    /// writes checkpoints or result files).
+    fn rank(&self) -> usize;
+
+    /// Number of ranks in the group.
+    fn world_size(&self) -> usize;
+
+    /// Elementwise sum of every rank's buffer, folded in rank order
+    /// with the fixed stride-doubling tree shape. All ranks receive the
+    /// same result bits; all buffers must have the same length.
+    fn all_reduce_sum(&self, buf: &mut [f32]) -> Result<()>;
+
+    /// Overwrite every rank's buffer with rank 0's bytes. All ranks
+    /// must pass same-length buffers; `root` must currently be 0.
+    fn broadcast(&self, buf: &mut [u8], root: usize) -> Result<()>;
+
+    /// Collect every rank's payload at rank 0, in rank order. Returns
+    /// `Some(payloads)` (index = rank) at rank 0, `None` elsewhere.
+    fn gather(&self, payload: &[u8]) -> Result<Option<Vec<Vec<u8>>>>;
+
+    /// Block until every rank has entered the barrier.
+    fn barrier(&self) -> Result<()>;
+}
+
+/// Fold `items` pairwise with the crate's fixed stride-doubling tree
+/// order: merge `(i, i+1)` for even i, then `(i, i+2)` for i ≡ 0 mod 4,
+/// then `(i, i+4)`, … always folding the right element *into* the left.
+/// `None` for an empty input.
+///
+/// This is the one reduction shape in the crate — gradient merging,
+/// sweep-shard merging, serve-outcome merging and the distributed
+/// all-reduce all call it — so "merged on one thread", "merged on N
+/// executor workers" and "merged across N processes" are the same
+/// arithmetic by construction.
+pub fn tree_fold<T>(items: Vec<T>, mut merge: impl FnMut(T, T) -> T) -> Option<T> {
+    let n = items.len();
+    let mut slots: Vec<Option<T>> = items.into_iter().map(Some).collect();
+    let mut stride = 1;
+    while stride < n {
+        let mut i = 0;
+        while i + stride < n {
+            let right = slots[i + stride].take().expect("tree_fold: right slot already consumed");
+            let left = slots[i].take().expect("tree_fold: left slot already consumed");
+            slots[i] = Some(merge(left, right));
+            i += 2 * stride;
+        }
+        stride *= 2;
+    }
+    slots.first_mut().and_then(Option::take)
+}
+
+/// Elementwise in-place sum used by every float reduction: adds `b`
+/// into `a` left-to-right. The panic-free zip means a length mismatch
+/// must be rejected *before* folding; [`sum_into_checked`] does both.
+pub fn add_assign(a: &mut [f32], b: &[f32]) {
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += *y;
+    }
+}
+
+/// Tree-fold float vectors by elementwise addition, rejecting length
+/// mismatches (a truncated shard must be a hard error, not a silent
+/// short sum). `None` for an empty input.
+pub fn sum_into_checked(contribs: Vec<Vec<f32>>) -> Result<Option<Vec<f32>>> {
+    let Some(first) = contribs.first() else {
+        return Ok(None);
+    };
+    let dim = first.len();
+    for (i, c) in contribs.iter().enumerate() {
+        ensure!(
+            c.len() == dim,
+            "sum_into_checked: contribution {i} has {} elements, contribution 0 has {dim}",
+            c.len()
+        );
+    }
+    Ok(tree_fold(contribs, |mut a, b| {
+        add_assign(&mut a, &b);
+        a
+    }))
+}
+
+/// `true` iff `n` is a power of two (and nonzero) — the shape
+/// requirement for world sizes and virtual-shard counts (see the
+/// module docs for why non-powers-of-two break the fixed tree).
+pub fn is_pow2(n: usize) -> bool {
+    n != 0 && n & (n - 1) == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pin the association shape: parenthesize the fold of n labelled
+    /// leaves and compare against the shape `tree_reduce_mean`'s loop
+    /// has always produced.
+    #[test]
+    fn tree_fold_shape_is_the_stride_doubling_tree() {
+        let shape = |n: usize| -> String {
+            let leaves: Vec<String> = (0..n).map(|i| i.to_string()).collect();
+            tree_fold(leaves, |a, b| format!("({a}+{b})")).unwrap_or_default()
+        };
+        assert_eq!(shape(1), "0");
+        assert_eq!(shape(2), "(0+1)");
+        assert_eq!(shape(3), "((0+1)+2)");
+        assert_eq!(shape(4), "((0+1)+(2+3))");
+        assert_eq!(shape(5), "(((0+1)+(2+3))+4)");
+        assert_eq!(shape(8), "(((0+1)+(2+3))+((4+5)+(6+7)))");
+    }
+
+    /// The block-decomposition identity behind the distributed
+    /// contract: folding V leaves directly equals folding each aligned
+    /// power-of-two block locally and then folding the W block roots —
+    /// for every power-of-two split.
+    #[test]
+    fn tree_fold_composes_over_aligned_pow2_blocks() {
+        for &v in &[1usize, 2, 4, 8, 16] {
+            let leaves: Vec<String> = (0..v).map(|i| i.to_string()).collect();
+            let whole = tree_fold(leaves.clone(), |a, b| format!("({a}+{b})")).unwrap();
+            let mut w = 1;
+            while w <= v {
+                let k = v / w;
+                let roots: Vec<String> = (0..w)
+                    .map(|r| {
+                        let block = leaves[r * k..(r + 1) * k].to_vec();
+                        tree_fold(block, |a, b| format!("({a}+{b})")).unwrap()
+                    })
+                    .collect();
+                let composed = tree_fold(roots, |a, b| format!("({a}+{b})")).unwrap();
+                assert_eq!(composed, whole, "v={v} w={w}");
+                w *= 2;
+            }
+        }
+    }
+
+    #[test]
+    fn tree_fold_handles_empty_and_single() {
+        assert_eq!(tree_fold(Vec::<i32>::new(), |a, b| a + b), None);
+        assert_eq!(tree_fold(vec![41], |a, b| a + b), Some(41));
+    }
+
+    #[test]
+    fn sum_checked_rejects_mismatched_lengths() {
+        let err = sum_into_checked(vec![vec![1.0, 2.0], vec![3.0]]).unwrap_err();
+        assert!(format!("{err:#}").contains("contribution 1 has 1 elements"), "{err:#}");
+        let s = sum_into_checked(vec![vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap().unwrap();
+        assert_eq!(s, vec![4.0, 6.0]);
+        assert_eq!(sum_into_checked(Vec::new()).unwrap(), None);
+    }
+
+    #[test]
+    fn pow2_predicate() {
+        assert!(is_pow2(1) && is_pow2(2) && is_pow2(64));
+        assert!(!is_pow2(0) && !is_pow2(3) && !is_pow2(6) && !is_pow2(12));
+    }
+}

@@ -1,0 +1,647 @@
+//! Multi-process communicator over TCP.
+//!
+//! Topology is hub-and-spoke: rank 0 owns the listener and a socket per
+//! worker; ranks 1..W each hold one socket to the hub. Routing is
+//! physical only — the *arithmetic* contract is unchanged, because the
+//! hub folds the rank-ordered contributions with the same fixed
+//! stride-doubling [`tree_fold`] every in-process path uses, then ships
+//! the identical result bits back to every rank.
+//!
+//! # Wire format
+//!
+//! Every message is one frame, all integers little-endian:
+//!
+//! ```text
+//! magic  b"SNCM"                 4 bytes
+//! tag    u8                      hello | welcome | allreduce | bcast | gather | barrier
+//! len    u64                     payload length
+//! payload                        len bytes
+//! check  u64                     FNV-1a 64 of the payload
+//! ```
+//!
+//! The handshake is version-tagged: a worker's `hello` payload is
+//! `proto_version u32 | rank u64 | world u64`; the hub validates all
+//! three (version mismatch, wrong world, duplicate or out-of-range rank
+//! are hard errors naming the peer) and answers with a `welcome` frame
+//! whose payload is opaque job configuration — seed, spec, and shard
+//! assignment ride the handshake, not the child's command line.
+//!
+//! # Failure modes
+//!
+//! Sockets carry a read timeout ([`TcpConfig::read_timeout`]) and the
+//! accept loop a connect deadline ([`TcpConfig::connect_timeout`]), so
+//! a worker that dies mid-collective surfaces as a clear error — peer
+//! label + "disconnected" (EOF) or "timed out" — within the timeout,
+//! never a hang. [`TcpConfig::peer`] sets the label noun: the sweep hub
+//! uses "sweep shard", so a killed worker reads as
+//! `sweep shard 1: disconnected …`.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use super::{tree_fold, add_assign, Communicator};
+use crate::data::requests::fnv1a64;
+
+/// Protocol version carried in every `hello`; bump on any frame-layout
+/// or collective-semantics change.
+pub const PROTO_VERSION: u32 = 1;
+
+const MAGIC: [u8; 4] = *b"SNCM";
+/// Sanity cap on frame payloads — a corrupt length header should fail
+/// fast, not attempt a multi-gigabyte allocation.
+const MAX_FRAME: u64 = 1 << 30;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+enum Tag {
+    Hello = 1,
+    Welcome = 2,
+    AllReduce = 3,
+    Bcast = 4,
+    Gather = 5,
+    Barrier = 6,
+}
+
+impl Tag {
+    fn from_u8(b: u8) -> Option<Tag> {
+        match b {
+            1 => Some(Tag::Hello),
+            2 => Some(Tag::Welcome),
+            3 => Some(Tag::AllReduce),
+            4 => Some(Tag::Bcast),
+            5 => Some(Tag::Gather),
+            6 => Some(Tag::Barrier),
+            _ => None,
+        }
+    }
+
+    fn name(self) -> &'static str {
+        match self {
+            Tag::Hello => "hello",
+            Tag::Welcome => "welcome",
+            Tag::AllReduce => "allreduce",
+            Tag::Bcast => "bcast",
+            Tag::Gather => "gather",
+            Tag::Barrier => "barrier",
+        }
+    }
+}
+
+/// Timeouts and error-labelling knobs for a TCP group.
+#[derive(Debug, Clone)]
+pub struct TcpConfig {
+    /// Hub: total window for all workers to connect and handshake.
+    /// Worker: window for reaching the hub (with retry on refusal).
+    pub connect_timeout: Duration,
+    /// Per-read socket timeout; the bound on how long a dead peer can
+    /// stall a collective before it surfaces as an error.
+    pub read_timeout: Duration,
+    /// Noun used for remote ranks in error messages ("rank" by
+    /// default; the sweep layer passes "sweep shard" so failures name
+    /// the shard).
+    pub peer: String,
+}
+
+impl Default for TcpConfig {
+    fn default() -> Self {
+        TcpConfig {
+            connect_timeout: Duration::from_secs(10),
+            read_timeout: Duration::from_secs(30),
+            peer: "rank".to_string(),
+        }
+    }
+}
+
+enum Role {
+    /// Rank 0: `conns[r - 1]` is the socket to rank r.
+    Hub { conns: Vec<Mutex<TcpStream>> },
+    Worker { conn: Mutex<TcpStream> },
+}
+
+/// One rank's endpoint of a multi-process group.
+pub struct TcpComm {
+    rank: usize,
+    world: usize,
+    cfg: TcpConfig,
+    role: Role,
+}
+
+impl std::fmt::Debug for TcpComm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TcpComm(rank {}/{})", self.rank, self.world)
+    }
+}
+
+impl TcpComm {
+    /// Bind the hub's listener on an ephemeral localhost port and
+    /// return it with the address workers should `--connect` to.
+    pub fn bind() -> Result<(TcpListener, SocketAddr)> {
+        let listener =
+            TcpListener::bind("127.0.0.1:0").context("binding comm hub listener")?;
+        let addr = listener.local_addr().context("reading hub listener address")?;
+        Ok((listener, addr))
+    }
+
+    /// Hub side (rank 0): accept `world - 1` workers, validate their
+    /// version-tagged hellos, and answer each with a `welcome` frame
+    /// carrying `job` (opaque config bytes). Errors if the full world
+    /// has not handshaken within `cfg.connect_timeout`.
+    pub fn host(listener: TcpListener, world: usize, job: &[u8], cfg: TcpConfig) -> Result<TcpComm> {
+        ensure!(world >= 1, "world size must be at least 1");
+        listener
+            .set_nonblocking(true)
+            .context("setting hub listener non-blocking")?;
+        let deadline = Instant::now() + cfg.connect_timeout;
+        let mut conns: Vec<Option<TcpStream>> = (1..world).map(|_| None).collect();
+        let mut connected = 0usize;
+        while connected < world - 1 {
+            let (mut stream, _) = match listener.accept() {
+                Ok(pair) => pair,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        bail!(
+                            "timed out after {:?} waiting for workers to connect \
+                             ({connected}/{} handshaken)",
+                            cfg.connect_timeout,
+                            world - 1
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                    continue;
+                }
+                Err(e) => return Err(anyhow!(e).context("accepting worker connection")),
+            };
+            stream.set_nonblocking(false).context("restoring blocking socket")?;
+            prepare_stream(&stream, &cfg)?;
+            let hello = read_frame(&mut stream, Tag::Hello, "connecting worker", &cfg)?;
+            let (proto, rank, their_world) = decode_hello(&hello)?;
+            ensure!(
+                proto == PROTO_VERSION,
+                "protocol version mismatch: hub speaks v{PROTO_VERSION}, peer sent v{proto}"
+            );
+            ensure!(
+                their_world == world,
+                "world size mismatch: hub hosts {world} ranks, peer joined as 1 of {their_world}"
+            );
+            ensure!(
+                (1..world).contains(&rank),
+                "peer announced rank {rank}, expected a worker rank in 1..{world}"
+            );
+            ensure!(
+                conns[rank - 1].is_none(),
+                "duplicate connection for {} {rank}",
+                cfg.peer
+            );
+            write_frame(&mut stream, Tag::Welcome, job)
+                .with_context(|| format!("welcoming {} {rank}", cfg.peer))?;
+            conns[rank - 1] = Some(stream);
+            connected += 1;
+        }
+        let conns = conns
+            .into_iter()
+            .map(|c| Mutex::new(c.expect("all worker slots filled")))
+            .collect();
+        Ok(TcpComm { rank: 0, world, cfg, role: Role::Hub { conns } })
+    }
+
+    /// Worker side: connect to the hub as rank `rank` of `world`, send
+    /// the version-tagged hello, and return the endpoint plus the job
+    /// bytes from the hub's welcome.
+    pub fn connect(
+        addr: &str,
+        rank: usize,
+        world: usize,
+        cfg: TcpConfig,
+    ) -> Result<(TcpComm, Vec<u8>)> {
+        ensure!(
+            (1..world).contains(&rank),
+            "worker rank must be in 1..{world}, got {rank}"
+        );
+        let sock_addr = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving hub address {addr}"))?
+            .next()
+            .ok_or_else(|| anyhow!("hub address {addr} resolved to nothing"))?;
+        let deadline = Instant::now() + cfg.connect_timeout;
+        let mut stream = loop {
+            match TcpStream::connect_timeout(&sock_addr, cfg.connect_timeout) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        bail!(
+                            "could not reach hub {addr} within {:?}: {e}",
+                            cfg.connect_timeout
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        };
+        prepare_stream(&stream, &cfg)?;
+        write_frame(&mut stream, Tag::Hello, &encode_hello(rank, world))
+            .context("sending hello to hub")?;
+        let job = read_frame(&mut stream, Tag::Welcome, "hub", &cfg)?;
+        Ok((TcpComm { rank, world, cfg, role: Role::Worker { conn: Mutex::new(stream) } }, job))
+    }
+
+    fn peer_label(&self, rank: usize) -> String {
+        format!("{} {rank}", self.cfg.peer)
+    }
+}
+
+fn prepare_stream(stream: &TcpStream, cfg: &TcpConfig) -> Result<()> {
+    stream.set_nodelay(true).context("setting TCP_NODELAY")?;
+    stream
+        .set_read_timeout(Some(cfg.read_timeout))
+        .context("setting socket read timeout")?;
+    Ok(())
+}
+
+fn encode_hello(rank: usize, world: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(20);
+    out.extend_from_slice(&PROTO_VERSION.to_le_bytes());
+    out.extend_from_slice(&(rank as u64).to_le_bytes());
+    out.extend_from_slice(&(world as u64).to_le_bytes());
+    out
+}
+
+fn decode_hello(payload: &[u8]) -> Result<(u32, usize, usize)> {
+    ensure!(payload.len() == 20, "malformed hello: {} bytes, expected 20", payload.len());
+    let proto = u32::from_le_bytes(payload[0..4].try_into().unwrap());
+    let rank = u64::from_le_bytes(payload[4..12].try_into().unwrap());
+    let world = u64::from_le_bytes(payload[12..20].try_into().unwrap());
+    Ok((proto, rank as usize, world as usize))
+}
+
+fn write_frame(w: &mut TcpStream, tag: Tag, payload: &[u8]) -> Result<()> {
+    let mut head = Vec::with_capacity(13);
+    head.extend_from_slice(&MAGIC);
+    head.push(tag as u8);
+    head.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    w.write_all(&head)?;
+    w.write_all(payload)?;
+    w.write_all(&fnv1a64(payload).to_le_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame, demanding `expect` — any other tag means the peer
+/// is out of step (SPMD sequencing violation) or speaks a different
+/// protocol. `peer` labels errors; timeout/EOF map to clear messages.
+fn read_frame(r: &mut TcpStream, expect: Tag, peer: &str, cfg: &TcpConfig) -> Result<Vec<u8>> {
+    let io_err = |e: std::io::Error, what: &str| -> anyhow::Error {
+        use std::io::ErrorKind;
+        match e.kind() {
+            ErrorKind::WouldBlock | ErrorKind::TimedOut => anyhow!(
+                "{peer}: timed out after {:?} waiting for a {} frame",
+                cfg.read_timeout,
+                expect.name()
+            ),
+            ErrorKind::UnexpectedEof | ErrorKind::ConnectionReset | ErrorKind::BrokenPipe => {
+                anyhow!(
+                    "{peer}: disconnected while a {} frame was expected ({what}) — \
+                     did the process die?",
+                    expect.name()
+                )
+            }
+            _ => anyhow!("{peer}: reading {what}: {e}"),
+        }
+    };
+    let mut head = [0u8; 13];
+    r.read_exact(&mut head).map_err(|e| io_err(e, "frame header"))?;
+    ensure!(
+        head[0..4] == MAGIC,
+        "{peer}: bad frame magic {:02x?} — not a sonew comm peer",
+        &head[0..4]
+    );
+    let tag = Tag::from_u8(head[4])
+        .ok_or_else(|| anyhow!("{peer}: unknown frame tag {}", head[4]))?;
+    ensure!(
+        tag == expect,
+        "{peer}: expected a {} frame, got {} — peers out of step",
+        expect.name(),
+        tag.name()
+    );
+    let len = u64::from_le_bytes(head[5..13].try_into().unwrap());
+    ensure!(len <= MAX_FRAME, "{peer}: frame length {len} exceeds the {MAX_FRAME}-byte cap");
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload).map_err(|e| io_err(e, "frame payload"))?;
+    let mut check = [0u8; 8];
+    r.read_exact(&mut check).map_err(|e| io_err(e, "frame checksum"))?;
+    let want = u64::from_le_bytes(check);
+    let got = fnv1a64(&payload);
+    ensure!(
+        got == want,
+        "{peer}: corrupt {} frame — checksum {got:#018x}, expected {want:#018x}",
+        tag.name()
+    );
+    Ok(payload)
+}
+
+fn f32s_to_le(buf: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(buf.len() * 4);
+    for v in buf {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+fn le_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
+    ensure!(bytes.len() % 4 == 0, "float payload of {} bytes is not 4-aligned", bytes.len());
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+impl Communicator for TcpComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world_size(&self) -> usize {
+        self.world
+    }
+
+    fn all_reduce_sum(&self, buf: &mut [f32]) -> Result<()> {
+        match &self.role {
+            Role::Worker { conn } => {
+                let mut s = conn.lock().unwrap();
+                write_frame(&mut s, Tag::AllReduce, &f32s_to_le(buf))
+                    .context("sending all_reduce contribution to hub")?;
+                let sum = le_to_f32s(&read_frame(&mut s, Tag::AllReduce, "hub", &self.cfg)?)?;
+                ensure!(
+                    sum.len() == buf.len(),
+                    "hub returned {} floats, this rank contributed {}",
+                    sum.len(),
+                    buf.len()
+                );
+                buf.copy_from_slice(&sum);
+            }
+            Role::Hub { conns } => {
+                // contributions in rank order: the hub's own first
+                let mut contribs: Vec<Vec<f32>> = Vec::with_capacity(self.world);
+                contribs.push(buf.to_vec());
+                for (i, conn) in conns.iter().enumerate() {
+                    let peer = self.peer_label(i + 1);
+                    let mut s = conn.lock().unwrap();
+                    let v =
+                        le_to_f32s(&read_frame(&mut s, Tag::AllReduce, &peer, &self.cfg)?)?;
+                    ensure!(
+                        v.len() == buf.len(),
+                        "{peer} contributed {} floats, rank 0 has {}",
+                        v.len(),
+                        buf.len()
+                    );
+                    contribs.push(v);
+                }
+                let sum = tree_fold(contribs, |mut a, b| {
+                    add_assign(&mut a, &b);
+                    a
+                })
+                .expect("world >= 1");
+                let bytes = f32s_to_le(&sum);
+                for (i, conn) in conns.iter().enumerate() {
+                    let mut s = conn.lock().unwrap();
+                    write_frame(&mut s, Tag::AllReduce, &bytes)
+                        .with_context(|| format!("returning sum to {}", self.peer_label(i + 1)))?;
+                }
+                buf.copy_from_slice(&sum);
+            }
+        }
+        Ok(())
+    }
+
+    fn broadcast(&self, buf: &mut [u8], root: usize) -> Result<()> {
+        ensure!(root == 0, "broadcast root must be rank 0, got {root}");
+        match &self.role {
+            Role::Hub { conns } => {
+                for (i, conn) in conns.iter().enumerate() {
+                    let mut s = conn.lock().unwrap();
+                    write_frame(&mut s, Tag::Bcast, buf)
+                        .with_context(|| format!("broadcasting to {}", self.peer_label(i + 1)))?;
+                }
+            }
+            Role::Worker { conn } => {
+                let mut s = conn.lock().unwrap();
+                let bytes = read_frame(&mut s, Tag::Bcast, "hub", &self.cfg)?;
+                ensure!(
+                    bytes.len() == buf.len(),
+                    "broadcast size mismatch: hub sent {} bytes, this rank expects {}",
+                    bytes.len(),
+                    buf.len()
+                );
+                buf.copy_from_slice(&bytes);
+            }
+        }
+        Ok(())
+    }
+
+    fn gather(&self, payload: &[u8]) -> Result<Option<Vec<Vec<u8>>>> {
+        match &self.role {
+            Role::Worker { conn } => {
+                let mut s = conn.lock().unwrap();
+                write_frame(&mut s, Tag::Gather, payload)
+                    .context("sending gather payload to hub")?;
+                Ok(None)
+            }
+            Role::Hub { conns } => {
+                let mut all: Vec<Vec<u8>> = Vec::with_capacity(self.world);
+                all.push(payload.to_vec());
+                for (i, conn) in conns.iter().enumerate() {
+                    let peer = self.peer_label(i + 1);
+                    let mut s = conn.lock().unwrap();
+                    all.push(read_frame(&mut s, Tag::Gather, &peer, &self.cfg)?);
+                }
+                Ok(Some(all))
+            }
+        }
+    }
+
+    fn barrier(&self) -> Result<()> {
+        match &self.role {
+            Role::Worker { conn } => {
+                let mut s = conn.lock().unwrap();
+                write_frame(&mut s, Tag::Barrier, &[]).context("entering barrier")?;
+                read_frame(&mut s, Tag::Barrier, "hub", &self.cfg)?;
+            }
+            Role::Hub { conns } => {
+                for (i, conn) in conns.iter().enumerate() {
+                    let peer = self.peer_label(i + 1);
+                    let mut s = conn.lock().unwrap();
+                    read_frame(&mut s, Tag::Barrier, &peer, &self.cfg)?;
+                }
+                for (i, conn) in conns.iter().enumerate() {
+                    let mut s = conn.lock().unwrap();
+                    write_frame(&mut s, Tag::Barrier, &[])
+                        .with_context(|| format!("releasing {}", self.peer_label(i + 1)))?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::sum_into_checked;
+
+    fn quick_cfg() -> TcpConfig {
+        TcpConfig {
+            connect_timeout: Duration::from_secs(5),
+            read_timeout: Duration::from_secs(5),
+            peer: "rank".to_string(),
+        }
+    }
+
+    /// Spin up a real localhost world on threads: hub in the closure
+    /// for rank 0, a connecting worker per other rank.
+    fn tcp_world<R: Send>(
+        world: usize,
+        f: impl Fn(&dyn Communicator, &[u8]) -> R + Sync,
+    ) -> Vec<R> {
+        let (listener, addr) = TcpComm::bind().unwrap();
+        let job = b"job-bytes".to_vec();
+        let mut out: Vec<Option<R>> = (0..world).map(|_| None).collect();
+        let f = &f;
+        let job_ref = &job;
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for rank in 1..world {
+                handles.push((rank, s.spawn(move || {
+                    let (comm, job) =
+                        TcpComm::connect(&addr.to_string(), rank, world, quick_cfg()).unwrap();
+                    (f(&comm, &job), job)
+                })));
+            }
+            let hub = TcpComm::host(listener, world, job_ref, quick_cfg()).unwrap();
+            out[0] = Some(f(&hub, job_ref));
+            for (rank, h) in handles {
+                let (r, seen_job) = h.join().unwrap();
+                assert_eq!(seen_job, job, "rank {rank} welcome payload");
+                out[rank] = Some(r);
+            }
+        });
+        out.into_iter().map(|r| r.unwrap()).collect()
+    }
+
+    #[test]
+    fn tcp_collectives_match_the_fixed_tree_bitwise() {
+        for world in [1usize, 2, 4] {
+            let contribs: Vec<Vec<f32>> =
+                (0..world).map(|r| vec![0.3 + 0.9 * r as f32, -2.0e-5 * r as f32]).collect();
+            let want = sum_into_checked(contribs.clone()).unwrap().unwrap();
+            let contribs = &contribs;
+            let got = tcp_world(world, |comm, _| {
+                let mut buf = contribs[comm.rank()].clone();
+                comm.all_reduce_sum(&mut buf).unwrap();
+                let mut bc = if comm.rank() == 0 { vec![5u8, 6] } else { vec![0u8; 2] };
+                comm.broadcast(&mut bc, 0).unwrap();
+                let gathered = comm.gather(&[comm.rank() as u8]).unwrap();
+                comm.barrier().unwrap();
+                (buf, bc, gathered)
+            });
+            for (r, (buf, bc, gathered)) in got.into_iter().enumerate() {
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&buf), bits(&want), "world={world} rank={r}");
+                assert_eq!(bc, vec![5u8, 6], "world={world} rank={r}");
+                if r == 0 {
+                    let want_g: Vec<Vec<u8>> = (0..world).map(|x| vec![x as u8]).collect();
+                    assert_eq!(gathered, Some(want_g), "world={world}");
+                } else {
+                    assert_eq!(gathered, None, "world={world} rank={r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn host_times_out_when_workers_never_connect() {
+        let (listener, _) = TcpComm::bind().unwrap();
+        let cfg = TcpConfig {
+            connect_timeout: Duration::from_millis(200),
+            ..quick_cfg()
+        };
+        let t = Instant::now();
+        let err = TcpComm::host(listener, 2, b"", cfg).unwrap_err().to_string();
+        assert!(err.contains("timed out"), "{err}");
+        assert!(err.contains("0/1 handshaken"), "{err}");
+        assert!(t.elapsed() < Duration::from_secs(5), "timeout did not bound the wait");
+    }
+
+    #[test]
+    fn host_rejects_a_version_mismatched_hello() {
+        let (listener, addr) = TcpComm::bind().unwrap();
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                let mut hello = encode_hello(1, 2);
+                hello[0..4].copy_from_slice(&999u32.to_le_bytes());
+                write_frame(&mut stream, Tag::Hello, &hello).unwrap();
+                // hub closes on error; ignore whatever comes back
+                let _ = read_frame(&mut stream, Tag::Welcome, "hub", &quick_cfg());
+            });
+            let err = TcpComm::host(listener, 2, b"", quick_cfg()).unwrap_err().to_string();
+            assert!(err.contains("protocol version mismatch"), "{err}");
+            assert!(err.contains("v999"), "{err}");
+        });
+    }
+
+    #[test]
+    fn a_dead_worker_surfaces_as_a_labelled_disconnect_not_a_hang() {
+        let (listener, addr) = TcpComm::bind().unwrap();
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                // handshake like a real worker, then die before the
+                // collective
+                let (comm, _) =
+                    TcpComm::connect(&addr.to_string(), 1, 2, quick_cfg()).unwrap();
+                drop(comm);
+            });
+            let cfg = TcpConfig { peer: "sweep shard".to_string(), ..quick_cfg() };
+            let hub = TcpComm::host(listener, 2, b"", cfg).unwrap();
+            let t = Instant::now();
+            let err = format!("{:#}", hub.gather(b"mine").unwrap_err());
+            assert!(err.contains("sweep shard 1"), "{err}");
+            assert!(
+                err.contains("disconnected") || err.contains("timed out"),
+                "{err}"
+            );
+            assert!(t.elapsed() < Duration::from_secs(30), "gather hung past the timeout");
+        });
+    }
+
+    #[test]
+    fn corrupt_checksum_is_rejected() {
+        let (listener, addr) = TcpComm::bind().unwrap();
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                let mut stream = TcpStream::connect(addr).unwrap();
+                write_frame(&mut stream, Tag::Hello, &encode_hello(1, 2)).unwrap();
+                let _ = read_frame(&mut stream, Tag::Welcome, "hub", &quick_cfg()).unwrap();
+                // a gather frame whose checksum lies about the payload
+                let payload = b"results";
+                let mut head = Vec::new();
+                head.extend_from_slice(&MAGIC);
+                head.push(Tag::Gather as u8);
+                head.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+                stream.write_all(&head).unwrap();
+                stream.write_all(payload).unwrap();
+                stream.write_all(&0xdead_beefu64.to_le_bytes()).unwrap();
+                stream.flush().unwrap();
+                // keep the socket open until the hub has read the frame
+                let mut byte = [0u8; 1];
+                let _ = stream.read(&mut byte);
+            });
+            let hub = TcpComm::host(listener, 2, b"", quick_cfg()).unwrap();
+            let err = format!("{:#}", hub.gather(b"mine").unwrap_err());
+            assert!(err.contains("checksum"), "{err}");
+            drop(hub);
+        });
+    }
+}

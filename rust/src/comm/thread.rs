@@ -1,0 +1,349 @@
+//! In-process communicator: W endpoints over one shared rendezvous.
+//!
+//! Each collective is a two-phase barrier on a `Mutex`+`Condvar`: every
+//! rank deposits its contribution in its own slot, the last arriver
+//! computes the deterministic outcome (rank-ordered [`tree_fold`] for
+//! reductions), every rank copies the outcome out, and the last leaver
+//! resets the rendezvous for the next collective. The computing rank is
+//! whichever thread happens to arrive last — irrelevant for the result
+//! bits, because the merge order is fixed by rank, not by arrival.
+//!
+//! Endpoints park mid-collective waiting for their peers, so they must
+//! *not* run as queue jobs on the help-first `Executor` pool (W parked
+//! jobs on fewer than W workers would deadlock); host them on dedicated
+//! scoped threads via [`Executor::scope_dedicated`], which is what
+//! [`run_world`] does.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::{add_assign, tree_fold, Communicator};
+
+/// What a rank brings to a collective.
+enum Deposit {
+    F32(Vec<f32>),
+    Bytes(Vec<u8>),
+    Empty,
+}
+
+/// What every rank takes away. `Arc` payloads keep the per-rank copy
+/// out of the critical section cheap.
+#[derive(Clone)]
+enum Outcome {
+    F32(Arc<Vec<f32>>),
+    Bytes(Arc<Vec<u8>>),
+    Gather(Arc<Vec<Vec<u8>>>),
+    Empty,
+}
+
+struct RendezvousState {
+    /// Tag of the collective currently in flight; a rank entering a
+    /// *different* collective is an SPMD sequencing bug and errors.
+    op: Option<&'static str>,
+    deposits: Vec<Option<Deposit>>,
+    outcome: Option<Result<Outcome, String>>,
+    arrived: usize,
+    left: usize,
+}
+
+struct Rendezvous {
+    state: Mutex<RendezvousState>,
+    cv: Condvar,
+}
+
+/// One rank's endpoint of an in-process group. Create the whole group
+/// with [`ThreadComm::create`] and hand one endpoint to each thread.
+pub struct ThreadComm {
+    rank: usize,
+    world: usize,
+    shared: Arc<Rendezvous>,
+}
+
+impl ThreadComm {
+    /// Build a `world`-rank group; element `r` of the returned vec is
+    /// rank r's endpoint.
+    pub fn create(world: usize) -> Vec<ThreadComm> {
+        let world = world.max(1);
+        let shared = Arc::new(Rendezvous {
+            state: Mutex::new(RendezvousState {
+                op: None,
+                deposits: (0..world).map(|_| None).collect(),
+                outcome: None,
+                arrived: 0,
+                left: 0,
+            }),
+            cv: Condvar::new(),
+        });
+        (0..world)
+            .map(|rank| ThreadComm { rank, world, shared: Arc::clone(&shared) })
+            .collect()
+    }
+
+    /// Run one collective: deposit, wait for the group, take the shared
+    /// outcome. The last arriver computes; the last leaver resets.
+    fn run(&self, op: &'static str, deposit: Deposit) -> Result<Outcome> {
+        let mut st = self.shared.state.lock().unwrap();
+        // the previous collective must fully drain before a fast rank
+        // may open the next one
+        while st.outcome.is_some() {
+            st = self.shared.cv.wait(st).unwrap();
+        }
+        match st.op {
+            None => st.op = Some(op),
+            Some(cur) => ensure!(
+                cur == op,
+                "comm sequencing violation: rank {} entered {op} while the group is in {cur}",
+                self.rank
+            ),
+        }
+        ensure!(
+            st.deposits[self.rank].is_none(),
+            "comm sequencing violation: rank {} re-entered {op} before the group finished",
+            self.rank
+        );
+        st.deposits[self.rank] = Some(deposit);
+        st.arrived += 1;
+        if st.arrived == self.world {
+            let deposits: Vec<Deposit> =
+                st.deposits.iter_mut().map(|d| d.take().expect("deposit present")).collect();
+            st.outcome = Some(compute(op, deposits));
+            st.arrived = 0;
+            st.left = 0;
+            self.shared.cv.notify_all();
+        } else {
+            while st.outcome.is_none() {
+                st = self.shared.cv.wait(st).unwrap();
+            }
+        }
+        let out = st.outcome.clone().expect("outcome present");
+        st.left += 1;
+        if st.left == self.world {
+            st.outcome = None;
+            st.op = None;
+            self.shared.cv.notify_all();
+        }
+        drop(st);
+        out.map_err(|e| anyhow!(e))
+    }
+}
+
+/// The deterministic part: rank-ordered deposits in, one outcome out.
+/// Errors are `String`s so every rank can receive a clone.
+fn compute(op: &'static str, deposits: Vec<Deposit>) -> Result<Outcome, String> {
+    match op {
+        "all_reduce_sum" => {
+            let mut vecs = Vec::with_capacity(deposits.len());
+            for (r, d) in deposits.into_iter().enumerate() {
+                match d {
+                    Deposit::F32(v) => vecs.push(v),
+                    _ => return Err(format!("rank {r} deposited a non-float buffer")),
+                }
+            }
+            let dim = vecs[0].len();
+            for (r, v) in vecs.iter().enumerate() {
+                if v.len() != dim {
+                    return Err(format!(
+                        "all_reduce_sum length mismatch: rank {r} has {} floats, rank 0 has {dim}",
+                        v.len()
+                    ));
+                }
+            }
+            let sum = tree_fold(vecs, |mut a, b| {
+                add_assign(&mut a, &b);
+                a
+            })
+            .expect("world >= 1");
+            Ok(Outcome::F32(Arc::new(sum)))
+        }
+        "broadcast" => {
+            let mut lens = Vec::with_capacity(deposits.len());
+            let mut root_bytes = None;
+            for (r, d) in deposits.into_iter().enumerate() {
+                match d {
+                    Deposit::Bytes(b) => {
+                        lens.push(b.len());
+                        if r == 0 {
+                            root_bytes = Some(b);
+                        }
+                    }
+                    _ => return Err(format!("rank {r} deposited a non-byte buffer")),
+                }
+            }
+            let root = root_bytes.expect("rank 0 deposit");
+            for (r, len) in lens.iter().enumerate() {
+                if *len != root.len() {
+                    return Err(format!(
+                        "broadcast size mismatch: rank {r} passed {len} bytes, root passed {}",
+                        root.len()
+                    ));
+                }
+            }
+            Ok(Outcome::Bytes(Arc::new(root)))
+        }
+        "gather" => {
+            let mut payloads = Vec::with_capacity(deposits.len());
+            for (r, d) in deposits.into_iter().enumerate() {
+                match d {
+                    Deposit::Bytes(b) => payloads.push(b),
+                    _ => return Err(format!("rank {r} deposited a non-byte payload")),
+                }
+            }
+            Ok(Outcome::Gather(Arc::new(payloads)))
+        }
+        "barrier" => Ok(Outcome::Empty),
+        other => Err(format!("unknown collective {other}")),
+    }
+}
+
+impl Communicator for ThreadComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world_size(&self) -> usize {
+        self.world
+    }
+
+    fn all_reduce_sum(&self, buf: &mut [f32]) -> Result<()> {
+        match self.run("all_reduce_sum", Deposit::F32(buf.to_vec()))? {
+            Outcome::F32(sum) => {
+                buf.copy_from_slice(&sum);
+                Ok(())
+            }
+            _ => unreachable!("all_reduce_sum outcome kind"),
+        }
+    }
+
+    fn broadcast(&self, buf: &mut [u8], root: usize) -> Result<()> {
+        ensure!(root == 0, "broadcast root must be rank 0, got {root}");
+        match self.run("broadcast", Deposit::Bytes(buf.to_vec()))? {
+            Outcome::Bytes(bytes) => {
+                buf.copy_from_slice(&bytes);
+                Ok(())
+            }
+            _ => unreachable!("broadcast outcome kind"),
+        }
+    }
+
+    fn gather(&self, payload: &[u8]) -> Result<Option<Vec<Vec<u8>>>> {
+        match self.run("gather", Deposit::Bytes(payload.to_vec()))? {
+            Outcome::Gather(all) => {
+                Ok((self.rank == 0).then(|| all.as_ref().clone()))
+            }
+            _ => unreachable!("gather outcome kind"),
+        }
+    }
+
+    fn barrier(&self) -> Result<()> {
+        self.run("barrier", Deposit::Empty).map(|_| ())
+    }
+}
+
+/// Spawn a `world`-rank in-process group and run `f(endpoint)` for each
+/// rank on a dedicated scoped thread (see the module docs for why the
+/// shared queue can't host parked collectives). Returns the per-rank
+/// results in rank order. Panics in `f` propagate.
+pub fn run_world<R, F>(world: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(ThreadComm) -> R + Sync,
+{
+    let world = world.max(1);
+    let slots: Vec<Mutex<Option<R>>> = (0..world).map(|_| Mutex::new(None)).collect();
+    {
+        let slots = &slots;
+        let f = &f;
+        let jobs: Vec<crate::runtime::executor::Task<'_>> = ThreadComm::create(world)
+            .into_iter()
+            .enumerate()
+            .map(|(r, comm)| -> crate::runtime::executor::Task<'_> {
+                Box::new(move || {
+                    *slots[r].lock().unwrap() = Some(f(comm));
+                })
+            })
+            .collect();
+        crate::runtime::executor::global().scope_dedicated(jobs);
+    }
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("rank produced a result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::sum_into_checked;
+
+    #[test]
+    fn all_reduce_matches_rank_ordered_tree_fold_bitwise() {
+        for world in [1usize, 2, 4, 8] {
+            let contribs: Vec<Vec<f32>> = (0..world)
+                .map(|r| vec![0.1 + r as f32 * 0.7, -1.5 * r as f32, 1e-7 * (r + 1) as f32])
+                .collect();
+            let want = sum_into_checked(contribs.clone()).unwrap().unwrap();
+            let got = run_world(world, |comm| {
+                let mut buf = contribs[comm.rank()].clone();
+                comm.all_reduce_sum(&mut buf).unwrap();
+                buf
+            });
+            for (r, g) in got.iter().enumerate() {
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(g), bits(&want), "world={world} rank={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_reduce_rejects_length_mismatch_on_every_rank() {
+        let errs = run_world(2, |comm| {
+            let mut buf = vec![0.0f32; 2 + comm.rank()];
+            comm.all_reduce_sum(&mut buf).unwrap_err().to_string()
+        });
+        for e in errs {
+            assert!(e.contains("length mismatch"), "{e}");
+        }
+    }
+
+    #[test]
+    fn broadcast_overwrites_with_rank0_bytes() {
+        let got = run_world(4, |comm| {
+            let mut buf = if comm.rank() == 0 { vec![9u8, 8, 7] } else { vec![0u8; 3] };
+            comm.broadcast(&mut buf, 0).unwrap();
+            buf
+        });
+        for (r, b) in got.iter().enumerate() {
+            assert_eq!(b, &vec![9u8, 8, 7], "rank {r}");
+        }
+    }
+
+    #[test]
+    fn gather_returns_rank_ordered_payloads_at_root_only() {
+        let got = run_world(4, |comm| {
+            comm.gather(format!("payload-{}", comm.rank()).as_bytes()).unwrap()
+        });
+        let at_root = got[0].as_ref().expect("rank 0 gets the gather");
+        let want: Vec<Vec<u8>> =
+            (0..4).map(|r| format!("payload-{r}").into_bytes()).collect();
+        assert_eq!(at_root, &want);
+        assert!(got[1..].iter().all(Option::is_none));
+    }
+
+    #[test]
+    fn back_to_back_collectives_reuse_the_rendezvous() {
+        let got = run_world(4, |comm| {
+            let mut acc = Vec::new();
+            for round in 0..5u32 {
+                let mut buf = vec![(comm.rank() as u32 * 10 + round) as f32];
+                comm.all_reduce_sum(&mut buf).unwrap();
+                comm.barrier().unwrap();
+                acc.push(buf[0]);
+            }
+            acc
+        });
+        for r in 1..4 {
+            assert_eq!(got[r], got[0], "rank {r} diverged");
+        }
+    }
+}

@@ -92,46 +92,6 @@ pub fn write_atomic_bytes(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
     Ok(())
 }
 
-/// Remove stale `<file>.<pid>.tmp` siblings of `path` left behind by
-/// runs that crashed mid-checkpoint (the atomic protocol cleans up
-/// after itself on every non-crash path, so anything matching the
-/// pattern with a dead owner is garbage). Temp files whose owning pid
-/// is still alive — a concurrent run checkpointing the same path — are
-/// left alone, as is this process's own. Returns the number removed;
-/// I/O errors are swallowed (sweeping is best-effort hygiene).
-pub fn sweep_stale_tmps(path: impl AsRef<Path>) -> usize {
-    let path = path.as_ref();
-    let (Some(file_name), Some(parent)) = (path.file_name(), path.parent()) else {
-        return 0;
-    };
-    let parent = if parent.as_os_str().is_empty() { Path::new(".") } else { parent };
-    let prefix = format!("{}.", file_name.to_string_lossy());
-    let Ok(entries) = std::fs::read_dir(parent) else {
-        return 0;
-    };
-    let mut removed = 0;
-    for entry in entries.flatten() {
-        let name = entry.file_name();
-        let name = name.to_string_lossy();
-        let Some(rest) = name.strip_prefix(&prefix) else {
-            continue;
-        };
-        let Some(pid_str) = rest.strip_suffix(".tmp") else {
-            continue;
-        };
-        let Ok(pid) = pid_str.parse::<u32>() else {
-            continue;
-        };
-        if !tmp_owner_is_dead(pid) {
-            continue;
-        }
-        if std::fs::remove_file(entry.path()).is_ok() {
-            removed += 1;
-        }
-    }
-    removed
-}
-
 /// Whether a `.{pid}.tmp` owner is provably gone. Our own pid (an
 /// in-flight write) and any live `/proc/{pid}` are not.
 fn tmp_owner_is_dead(pid: u32) -> bool {
@@ -146,11 +106,15 @@ fn tmp_owner_is_dead(pid: u32) -> bool {
     true
 }
 
-/// Directory-wide variant of [`sweep_stale_tmps`] for the serving model
-/// store, where the checkpoint set (`<model-id>.ck` per model) is not
-/// known up front: any `*.<pid>.tmp` entry with a dead owner is a crash
-/// leftover from the atomic protocol, whatever file it was shadowing.
-/// Same liveness rules, same best-effort error handling.
+/// Remove stale `*.<pid>.tmp` entries in `dir` left behind by runs that
+/// crashed mid-checkpoint. The atomic protocol cleans up after itself
+/// on every non-crash path, so anything matching the pattern with a
+/// dead owner is garbage — whatever file it was shadowing (training
+/// checkpoints and the serving store's `<model-id>.ck` set both route
+/// through here). Temp files whose owning pid is still alive — a
+/// concurrent run checkpointing into the same directory — are left
+/// alone, as is this process's own. Returns the number removed; I/O
+/// errors are swallowed (sweeping is best-effort hygiene).
 pub fn sweep_stale_tmps_in_dir(dir: impl AsRef<Path>) -> usize {
     let Ok(entries) = std::fs::read_dir(dir.as_ref()) else {
         return 0;
@@ -443,28 +407,27 @@ mod tests {
         // our own pid's tmp (an in-flight write) must survive
         let own = dir.join(format!("run.ck.{}.tmp", std::process::id()));
         std::fs::write(&own, b"in flight").unwrap();
-        // unrelated siblings must survive
+        // non-tmp siblings must survive
         let other = dir.join("other.ck");
         std::fs::write(&other, b"different checkpoint").unwrap();
         let odd = dir.join("run.ck.notapid.tmp");
         std::fs::write(&odd, b"not ours to judge").unwrap();
 
-        assert_eq!(sweep_stale_tmps(&path), 1);
+        assert_eq!(sweep_stale_tmps_in_dir(&dir), 1);
         assert!(!stale.exists(), "dead-pid tmp must be swept");
         assert!(own.exists());
         assert!(other.exists());
         assert!(odd.exists());
         assert!(path.exists(), "the checkpoint itself is untouched");
         // idempotent
-        assert_eq!(sweep_stale_tmps(&path), 0);
+        assert_eq!(sweep_stale_tmps_in_dir(&dir), 0);
         std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]
     fn sweep_of_a_missing_directory_is_a_no_op() {
-        let path = std::env::temp_dir().join("sonew_ckpt_no_such_dir").join("x.ck");
-        assert_eq!(sweep_stale_tmps(&path), 0);
-        assert_eq!(sweep_stale_tmps_in_dir(path.parent().unwrap()), 0);
+        let dir = std::env::temp_dir().join("sonew_ckpt_no_such_dir");
+        assert_eq!(sweep_stale_tmps_in_dir(&dir), 0);
     }
 
     #[test]

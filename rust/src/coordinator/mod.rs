@@ -15,7 +15,10 @@ use anyhow::Result;
 pub use metrics::Metrics;
 pub use parallel::{Batch, GradProvider, Prefetch, WorkerPool};
 pub use schedule::Schedule;
-pub use sweep::{random_search, SearchSpace, SweepResult, SweepScheduler, Trial, TrialRecord};
+pub use sweep::{
+    evaluate_shard_outcomes, random_search, result_from_outcomes, SearchSpace, SweepResult,
+    SweepScheduler, Trial, TrialOutcome, TrialRecord,
+};
 pub use trainer::{
     train, train_single, train_with, FnProvider, SessionConfig, StatefulProvider, TrainConfig,
     TrainSession,

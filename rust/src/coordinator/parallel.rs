@@ -39,6 +39,49 @@ pub enum Batch {
     Tensors(Vec<HostTensor>),
 }
 
+impl Batch {
+    /// Number of examples in the batch, where that is meaningful.
+    pub fn rows(&self) -> Option<usize> {
+        match self {
+            Batch::Dense { x, .. } => Some(x.rows),
+            Batch::Tensors(_) => None,
+        }
+    }
+
+    /// Split a dense batch into `parts` contiguous equal row slices —
+    /// the virtual gradient shards of a data-parallel step. The row
+    /// count must divide evenly (an uneven split would change each
+    /// shard's loss normalization and break the fixed-tree bitwise
+    /// contract), and backend tensor batches have no row interpretation
+    /// here, so both are hard errors.
+    pub fn split_rows(&self, parts: usize) -> Result<Vec<Batch>> {
+        let Batch::Dense { x, labels } = self else {
+            bail!("split_rows: only dense batches can be sliced into gradient shards");
+        };
+        if parts == 0 {
+            bail!("split_rows: parts must be at least 1");
+        }
+        if x.rows % parts != 0 {
+            bail!("split_rows: {} rows do not split evenly into {parts} shards", x.rows);
+        }
+        if !labels.is_empty() && labels.len() != x.rows {
+            bail!("split_rows: {} labels for {} rows", labels.len(), x.rows);
+        }
+        let per = x.rows / parts;
+        Ok((0..parts)
+            .map(|p| {
+                let data = x.data[p * per * x.cols..(p + 1) * per * x.cols].to_vec();
+                let lab = if labels.is_empty() {
+                    Vec::new()
+                } else {
+                    labels[p * per..(p + 1) * per].to_vec()
+                };
+                Batch::Dense { x: Mat::from_rows(per, x.cols, data), labels: lab }
+            })
+            .collect())
+    }
+}
+
 /// The thread-shareable data half of a pipelined provider. Implemented
 /// by the provider's *batch source* (its data stream behind a lock),
 /// not necessarily by the provider itself: the compute half — a PJRT
@@ -207,10 +250,14 @@ impl Drop for WorkerPool {
 
 /// Binary-tree pairwise reduction of (loss, grad) contributions followed
 /// by averaging — lg(W) reduction rounds, the collective shape a
-/// ring/tree all-reduce realizes on hardware. Contributions must agree
-/// on gradient length; a shard returning a mismatched vector (truncated
-/// file, wrong model) is a hard error, not a silent truncation.
-pub fn tree_reduce_mean(mut contribs: Vec<(f32, Vec<f32>)>) -> Result<(f32, Vec<f32>)> {
+/// ring/tree all-reduce realizes on hardware. A thin client of
+/// [`comm::tree_fold`](crate::comm::tree_fold), so the merge order here
+/// is *by construction* the same fixed stride-doubling tree the sweep
+/// scheduler, the serve batcher and the distributed all-reduce use.
+/// Contributions must agree on gradient length; a shard returning a
+/// mismatched vector (truncated file, wrong model) is a hard error, not
+/// a silent truncation.
+pub fn tree_reduce_mean(contribs: Vec<(f32, Vec<f32>)>) -> Result<(f32, Vec<f32>)> {
     let w = contribs.len();
     if w == 0 {
         anyhow::bail!("tree_reduce_mean: no contributions");
@@ -224,22 +271,12 @@ pub fn tree_reduce_mean(mut contribs: Vec<(f32, Vec<f32>)>) -> Result<(f32, Vec<
             );
         }
     }
-    let mut stride = 1;
-    while stride < w {
-        let mut i = 0;
-        while i + stride < w {
-            // reduce pair (i, i+stride) into i
-            let (right_loss, right_grad) = std::mem::take(&mut contribs[i + stride]);
-            contribs[i].0 += right_loss;
-            let left = &mut contribs[i].1;
-            for (a, b) in left.iter_mut().zip(&right_grad) {
-                *a += *b;
-            }
-            i += stride * 2;
-        }
-        stride *= 2;
-    }
-    let (mut loss, mut grad) = std::mem::take(&mut contribs[0]);
+    let (mut loss, mut grad) = crate::comm::tree_fold(contribs, |mut a, b| {
+        a.0 += b.0;
+        crate::comm::add_assign(&mut a.1, &b.1);
+        a
+    })
+    .expect("w >= 1");
     let inv = 1.0 / w as f32;
     loss *= inv;
     for g in &mut grad {
@@ -275,6 +312,26 @@ mod tests {
             assert!((grad[0] - want).abs() < 1e-5, "w={w}");
             assert!((grad[1] - 2.0 * want).abs() < 1e-5, "w={w}");
         }
+    }
+
+    #[test]
+    fn split_rows_yields_contiguous_equal_shards() {
+        let x = Mat::from_rows(4, 2, (0..8).map(|v| v as f32).collect());
+        let batch = Batch::Dense { x, labels: vec![10, 11, 12, 13] };
+        let shards = batch.split_rows(2).unwrap();
+        assert_eq!(shards.len(), 2);
+        let Batch::Dense { x, labels } = &shards[1] else { panic!("dense") };
+        assert_eq!((x.rows, x.cols), (2, 2));
+        assert_eq!(x.data, vec![4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(labels, &vec![12, 13]);
+        // uneven splits and tensor batches are hard errors
+        assert!(batch.split_rows(3).is_err());
+        assert!(Batch::Tensors(Vec::new()).split_rows(1).is_err());
+        // empty-label reconstruction batches keep labels empty
+        let ae = Batch::Dense { x: Mat::from_rows(2, 1, vec![1.0, 2.0]), labels: vec![] };
+        let parts = ae.split_rows(2).unwrap();
+        let Batch::Dense { labels, .. } = &parts[0] else { panic!("dense") };
+        assert!(labels.is_empty());
     }
 
     #[test]

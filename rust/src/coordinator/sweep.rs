@@ -115,12 +115,16 @@ impl SweepResult {
     /// CSV export of the full sweep — one row per trial, auditable
     /// against the winner (`sonew sweep` writes it next to the summary
     /// table). The spec field is quoted: canonical multi-key specs
-    /// (`"tridiag-sonew:gamma=1e-4,graft=adam"`) contain commas.
+    /// (`"tridiag-sonew:gamma=1e-4,graft=adam"`) contain commas. Float
+    /// cells use `{:?}` — Rust's shortest-roundtrip (ryu-style)
+    /// formatting — so a cell parses back to the exact same bits and
+    /// shard CSVs produced on different hosts merge and diff
+    /// byte-identically.
     pub fn to_csv(&self) -> String {
         let mut out = String::from("index,spec,lr,beta1,beta2,eps,objective,diverged\n");
         for t in &self.trials {
             out.push_str(&format!(
-                "{},\"{}\",{:e},{},{},{:e},{},{}\n",
+                "{},\"{}\",{:?},{:?},{:?},{:?},{:?},{}\n",
                 t.index, t.spec, t.lr, t.beta1, t.beta2, t.eps, t.objective, t.diverged
             ));
         }
@@ -148,6 +152,134 @@ fn better(obj: f32, idx: usize, best: Option<&(Trial, f32, usize)>) -> bool {
     }
 }
 
+/// What one trial evaluation actually *measures*: its index, objective
+/// and divergence flag. Everything else in a [`TrialRecord`] — the
+/// sampled point, the spec string — is a pure function of
+/// `(seed, index)`, so this is all a remote shard ever ships over the
+/// wire; the hub re-derives the rest with [`SearchSpace::sample_at`]
+/// and formats the merged CSV itself, byte-identical to a serial run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrialOutcome {
+    pub index: usize,
+    pub objective: f32,
+    pub diverged: bool,
+}
+
+impl TrialOutcome {
+    /// Wire encoding: count `u64` then per outcome
+    /// `index u64 | objective-bits u32 | diverged u8`, all LE. Float
+    /// bits go through `to_bits`, so NaN payloads survive the trip.
+    pub fn encode_all(outcomes: &[TrialOutcome]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(8 + outcomes.len() * 13);
+        out.extend_from_slice(&(outcomes.len() as u64).to_le_bytes());
+        for o in outcomes {
+            out.extend_from_slice(&(o.index as u64).to_le_bytes());
+            out.extend_from_slice(&o.objective.to_bits().to_le_bytes());
+            out.push(o.diverged as u8);
+        }
+        out
+    }
+
+    pub fn decode_all(bytes: &[u8]) -> anyhow::Result<Vec<TrialOutcome>> {
+        anyhow::ensure!(bytes.len() >= 8, "truncated outcome list: {} bytes", bytes.len());
+        let count = u64::from_le_bytes(bytes[0..8].try_into().unwrap()) as usize;
+        anyhow::ensure!(
+            bytes.len() == 8 + count * 13,
+            "outcome list claims {count} entries but carries {} bytes",
+            bytes.len()
+        );
+        Ok((0..count)
+            .map(|k| {
+                let at = 8 + k * 13;
+                TrialOutcome {
+                    index: u64::from_le_bytes(bytes[at..at + 8].try_into().unwrap()) as usize,
+                    objective: f32::from_bits(u32::from_le_bytes(
+                        bytes[at + 8..at + 12].try_into().unwrap(),
+                    )),
+                    diverged: bytes[at + 12] != 0,
+                }
+            })
+            .collect())
+    }
+}
+
+/// Evaluate one shard's slice of the sweep — trial `i` belongs to shard
+/// `i % world` — returning raw outcomes. This is the whole job of a
+/// `sonew sweep-worker` process; the hub turns outcomes back into
+/// records via [`result_from_outcomes`].
+#[allow(clippy::too_many_arguments)] // the full shard assignment is the signature
+pub fn evaluate_shard_outcomes(
+    spec: &OptSpec,
+    space: &SearchSpace,
+    base: &HyperParams,
+    trials: usize,
+    shard: usize,
+    world: usize,
+    seed: u64,
+    objective: &mut dyn FnMut(&Trial) -> f32,
+) -> Vec<TrialOutcome> {
+    (shard..trials)
+        .step_by(world.max(1))
+        .map(|i| {
+            let trial = space.sample_at(seed, i, spec, base);
+            let obj = objective(&trial);
+            TrialOutcome { index: i, objective: obj, diverged: !obj.is_finite() }
+        })
+        .collect()
+}
+
+/// Replay a shard's outcomes into full bookkeeping: re-sample each
+/// trial's point from `(seed, index)`, rebuild its audit record, track
+/// the `(objective, index)` best. The one bookkeeping path under the
+/// serial sweep, the threaded scheduler and the multi-process hub.
+fn shard_from_outcomes(
+    spec: &OptSpec,
+    space: &SearchSpace,
+    base: &HyperParams,
+    seed: u64,
+    outcomes: &[TrialOutcome],
+) -> Shard {
+    let mut shard = Shard { records: Vec::new(), best: None, evaluated: 0, discarded: 0 };
+    for o in outcomes {
+        let trial = space.sample_at(seed, o.index, spec, base);
+        shard.records.push(TrialRecord {
+            index: o.index,
+            spec: trial.spec.canonical(),
+            lr: trial.lr,
+            beta1: trial.hp.beta1,
+            beta2: trial.hp.beta2,
+            eps: trial.hp.eps,
+            objective: o.objective,
+            diverged: o.diverged,
+        });
+        if o.diverged {
+            shard.discarded += 1;
+            continue;
+        }
+        shard.evaluated += 1;
+        if better(o.objective, o.index, shard.best.as_ref()) {
+            shard.best = Some((trial, o.objective, o.index));
+        }
+    }
+    shard
+}
+
+/// Merge per-shard outcome lists (index = shard, the rank order of a
+/// gather) into the sweep result, tree-folding shards under the
+/// `(objective, index)` total order — the multi-process counterpart of
+/// [`SweepScheduler::run`]'s in-process merge, and bit-identical to it.
+pub fn result_from_outcomes(
+    spec: &OptSpec,
+    space: &SearchSpace,
+    base: &HyperParams,
+    seed: u64,
+    per_shard: &[Vec<TrialOutcome>],
+) -> Option<SweepResult> {
+    let shards: Vec<Shard> =
+        per_shard.iter().map(|o| shard_from_outcomes(spec, space, base, seed, o)).collect();
+    crate::comm::tree_fold(shards, merge).and_then(into_result)
+}
+
 /// Evaluate the given trial indices in order — the one engine under
 /// both the serial sweep and every scheduler worker.
 fn evaluate_indices(
@@ -158,31 +290,14 @@ fn evaluate_indices(
     seed: u64,
     objective: &mut dyn FnMut(&Trial) -> f32,
 ) -> Shard {
-    let mut shard = Shard { records: Vec::new(), best: None, evaluated: 0, discarded: 0 };
-    for i in indices {
-        let trial = space.sample_at(seed, i, spec, base);
-        let obj = objective(&trial);
-        let finite = obj.is_finite();
-        shard.records.push(TrialRecord {
-            index: i,
-            spec: trial.spec.canonical(),
-            lr: trial.lr,
-            beta1: trial.hp.beta1,
-            beta2: trial.hp.beta2,
-            eps: trial.hp.eps,
-            objective: obj,
-            diverged: !finite,
-        });
-        if !finite {
-            shard.discarded += 1;
-            continue;
-        }
-        shard.evaluated += 1;
-        if better(obj, i, shard.best.as_ref()) {
-            shard.best = Some((trial, obj, i));
-        }
-    }
-    shard
+    let outcomes: Vec<TrialOutcome> = indices
+        .map(|i| {
+            let trial = space.sample_at(seed, i, spec, base);
+            let obj = objective(&trial);
+            TrialOutcome { index: i, objective: obj, diverged: !obj.is_finite() }
+        })
+        .collect();
+    shard_from_outcomes(spec, space, base, seed, &outcomes)
 }
 
 fn merge(mut a: Shard, b: Shard) -> Shard {
@@ -195,25 +310,6 @@ fn merge(mut a: Shard, b: Shard) -> Shard {
         }
     }
     a
-}
-
-/// Pairwise tree reduction of shard results — the same collective shape
-/// as `parallel::tree_reduce_mean`. `better`'s total order makes the
-/// merge associative and commutative, so the tree agrees with a serial
-/// fold exactly.
-fn tree_collect(mut shards: Vec<Shard>) -> Shard {
-    while shards.len() > 1 {
-        let mut next = Vec::with_capacity(shards.len().div_ceil(2));
-        let mut it = shards.into_iter();
-        while let Some(a) = it.next() {
-            match it.next() {
-                Some(b) => next.push(merge(a, b)),
-                None => next.push(a),
-            }
-        }
-        shards = next;
-    }
-    shards.pop().expect("tree_collect: at least one shard")
 }
 
 fn into_result(shard: Shard) -> Option<SweepResult> {
@@ -309,7 +405,10 @@ impl SweepScheduler {
                 .map(|h| h.join().unwrap_or_else(|p| std::panic::resume_unwind(p)))
                 .collect()
         });
-        into_result(tree_collect(shards))
+        // shard merging is a thin client of the crate-wide fixed tree
+        // fold — the same shape `parallel::tree_reduce_mean` and the
+        // TCP hub use
+        crate::comm::tree_fold(shards, merge).and_then(into_result)
     }
 }
 
@@ -456,6 +555,89 @@ mod tests {
         assert_eq!(csv.lines().count(), 8, "{csv}");
         for (i, line) in csv.lines().skip(1).enumerate() {
             assert!(line.starts_with(&format!("{i},\"adam\",")), "{line}");
+        }
+    }
+
+    /// Satellite for distributed sweeps: every float cell must parse
+    /// back to the exact bits it was formatted from, or shard CSVs
+    /// produced on different hosts could disagree with the serial run.
+    #[test]
+    fn csv_float_cells_roundtrip_bitwise() {
+        let space = SearchSpace::default();
+        let base = HyperParams::default();
+        let r = random_search(&spec(), &space, &base, 20, 9, |t| t.lr * 1e-3 + t.hp.eps)
+            .unwrap();
+        for (line, rec) in r.to_csv().lines().skip(1).zip(&r.trials) {
+            // cells: index,"spec",lr,beta1,beta2,eps,objective,diverged
+            let after_spec = line.split('"').nth(2).unwrap();
+            let cells: Vec<&str> = after_spec.trim_start_matches(',').split(',').collect();
+            let parse = |s: &str| s.parse::<f32>().unwrap().to_bits();
+            assert_eq!(parse(cells[0]), rec.lr.to_bits(), "{line}");
+            assert_eq!(parse(cells[1]), rec.beta1.to_bits(), "{line}");
+            assert_eq!(parse(cells[2]), rec.beta2.to_bits(), "{line}");
+            assert_eq!(parse(cells[3]), rec.eps.to_bits(), "{line}");
+            assert_eq!(parse(cells[4]), rec.objective.to_bits(), "{line}");
+        }
+    }
+
+    #[test]
+    fn outcome_wire_roundtrip_preserves_bits() {
+        let outcomes = vec![
+            TrialOutcome { index: 0, objective: 0.123456789, diverged: false },
+            TrialOutcome { index: 7, objective: f32::from_bits(0x7fc0_1234), diverged: true },
+            TrialOutcome { index: 42, objective: -1e-20, diverged: false },
+        ];
+        let bytes = TrialOutcome::encode_all(&outcomes);
+        let back = TrialOutcome::decode_all(&bytes).unwrap();
+        assert_eq!(back.len(), outcomes.len());
+        for (a, b) in back.iter().zip(&outcomes) {
+            assert_eq!(a.index, b.index);
+            assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+            assert_eq!(a.diverged, b.diverged);
+        }
+        // truncation is a hard error, not a short list
+        assert!(TrialOutcome::decode_all(&bytes[..bytes.len() - 1]).is_err());
+        assert!(TrialOutcome::decode_all(&[1, 2]).is_err());
+    }
+
+    /// The multi-process merge path (ship outcomes, re-sample points,
+    /// tree-fold shards) must reproduce the serial sweep exactly.
+    #[test]
+    fn outcome_merge_reproduces_serial_bitwise() {
+        let space = SearchSpace::default();
+        let base = HyperParams::default();
+        let s = spec();
+        let objective = |t: &Trial| {
+            if t.hp.beta1 > 0.9 {
+                f32::NAN
+            } else {
+                (t.lr.ln() - (2e-4f32).ln()).abs()
+            }
+        };
+        let serial = random_search(&s, &space, &base, 30, 17, objective).unwrap();
+        for world in [1usize, 2, 3, 5] {
+            let per_shard: Vec<Vec<TrialOutcome>> = (0..world)
+                .map(|shard| {
+                    let mut obj = &objective;
+                    let outs = evaluate_shard_outcomes(
+                        &s, &space, &base, 30, shard, world, 17, &mut obj,
+                    );
+                    // round-trip through the wire encoding like a real
+                    // worker process would
+                    TrialOutcome::decode_all(&TrialOutcome::encode_all(&outs)).unwrap()
+                })
+                .collect();
+            let merged = result_from_outcomes(&s, &space, &base, 17, &per_shard).unwrap();
+            assert_eq!(merged.best_index, serial.best_index, "world={world}");
+            assert_eq!(
+                merged.best_objective.to_bits(),
+                serial.best_objective.to_bits(),
+                "world={world}"
+            );
+            assert_eq!(merged.best.lr.to_bits(), serial.best.lr.to_bits(), "world={world}");
+            assert_eq!(merged.evaluated, serial.evaluated, "world={world}");
+            assert_eq!(merged.discarded, serial.discarded, "world={world}");
+            assert_eq!(merged.to_csv(), serial.to_csv(), "world={world} CSV drift");
         }
     }
 

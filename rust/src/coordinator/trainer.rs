@@ -32,6 +32,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::comm::Communicator;
 use crate::linalg::norm2;
 use crate::optim::{Opt, OptSpec, Optimizer};
 use crate::runtime::executor::{self, JobHandle};
@@ -233,7 +234,7 @@ pub trait StatefulProvider: GradProvider {
 }
 
 /// Session configuration on top of the plain [`TrainConfig`].
-#[derive(Debug, Clone)]
+#[derive(Clone)]
 pub struct SessionConfig {
     pub train: TrainConfig,
     /// write a v2 checkpoint every k completed steps (0 = only on
@@ -249,6 +250,36 @@ pub struct SessionConfig {
     /// Results are bitwise-identical either way — this knob trades
     /// wall-clock for debuggability, never correctness.
     pub pipeline: bool,
+    /// Data-parallel mode: this rank's endpoint of a communicator
+    /// group. When set, every step splits its batch into
+    /// [`grad_shards`](Self::grad_shards) virtual leaf shards, this
+    /// rank computes its contiguous block, and the group completes the
+    /// fixed-shape tree sum via `all_reduce_sum` — so the loss
+    /// trajectory, params and checkpoint bytes are bitwise-identical
+    /// at any world size (see `comm` module docs). Every rank must run
+    /// an *identical* session (same seeds, same provider construction);
+    /// rank 0 alone writes checkpoints, with a barrier so no rank races
+    /// ahead of the write. `None` (default) is the plain local loop.
+    pub comm: Option<Arc<dyn Communicator>>,
+    /// Number of virtual gradient shards (leaves of the fixed reduction
+    /// tree) per step in data-parallel mode. Must be a power of two,
+    /// ≥ the world size, and divide the batch row count. Irrelevant
+    /// when `comm` is `None`.
+    pub grad_shards: usize,
+}
+
+impl std::fmt::Debug for SessionConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SessionConfig")
+            .field("train", &self.train)
+            .field("checkpoint_every", &self.checkpoint_every)
+            .field("checkpoint_path", &self.checkpoint_path)
+            .field("resume_from", &self.resume_from)
+            .field("pipeline", &self.pipeline)
+            .field("comm", &self.comm.as_ref().map(|c| (c.rank(), c.world_size())))
+            .field("grad_shards", &self.grad_shards)
+            .finish()
+    }
 }
 
 impl Default for SessionConfig {
@@ -259,6 +290,8 @@ impl Default for SessionConfig {
             checkpoint_path: None,
             resume_from: None,
             pipeline: true,
+            comm: None,
+            grad_shards: 4,
         }
     }
 }
@@ -311,14 +344,38 @@ impl<P: StatefulProvider, O: Optimizer> TrainSession<P, O> {
                 path.display()
             );
         }
+        if let Some(comm) = &cfg.comm {
+            let (world, shards) = (comm.world_size(), cfg.grad_shards);
+            anyhow::ensure!(
+                crate::comm::is_pow2(shards),
+                "SessionConfig: grad_shards must be a power of two (the fixed reduction \
+                 tree only decomposes over aligned power-of-two blocks), got {shards}"
+            );
+            anyhow::ensure!(
+                crate::comm::is_pow2(world) && world <= shards,
+                "SessionConfig: world size must be a power of two no larger than \
+                 grad_shards ({shards}), got {world}"
+            );
+        }
         // a run that crashed mid-write may have left `<name>.<pid>.tmp`
-        // siblings next to our checkpoint target; sweep them before the
+        // files in our checkpoint directory; sweep them before the
         // first write of this run so the directory only ever holds live
-        // temp files
+        // temp files (same entry point the serving store uses). In a
+        // data-parallel world only rank 0 touches the directory.
+        let rank0 = cfg.comm.as_ref().map_or(true, |c| c.rank() == 0);
         if let Some(path) = &cfg.checkpoint_path {
-            let swept = checkpoint::sweep_stale_tmps(path);
-            if swept > 0 && cfg.train.verbose {
-                println!("  swept {swept} stale checkpoint temp file(s) near {}", path.display());
+            if rank0 {
+                let dir = match path.parent() {
+                    Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+                    _ => PathBuf::from("."),
+                };
+                let swept = checkpoint::sweep_stale_tmps_in_dir(&dir);
+                if swept > 0 && cfg.train.verbose {
+                    println!(
+                        "  swept {swept} stale checkpoint temp file(s) in {}",
+                        dir.display()
+                    );
+                }
             }
         }
         let mut s = Self { spec: Some(spec), opt, params, provider, step: 0, cfg };
@@ -421,6 +478,15 @@ impl<P: StatefulProvider, O: Optimizer> TrainSession<P, O> {
     /// no write is in flight and the file on disk is complete (the
     /// `flush()` barrier of the async-checkpoint stage).
     pub fn checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        if let Some(comm) = &self.cfg.comm {
+            // every rank holds bitwise-identical state, so one write
+            // suffices; the barrier keeps any rank from returning
+            // before the file exists
+            if comm.rank() == 0 {
+                checkpoint::write_atomic_bytes(path, &self.encode_checkpoint(None)?)?;
+            }
+            return comm.barrier();
+        }
         checkpoint::write_atomic_bytes(path, &self.encode_checkpoint(None)?)
     }
 
@@ -463,8 +529,33 @@ impl<P: StatefulProvider, O: Optimizer> TrainSession<P, O> {
                 reaped.join().context("background checkpoint write failed")?;
             }
 
-            let split = self.provider.as_prefetch().is_some();
-            if split {
+            let split = self.cfg.comm.is_none() && self.provider.as_prefetch().is_some();
+            if let Some(comm) = self.cfg.comm.clone() {
+                // data-parallel path: every rank draws the identical
+                // batch, computes its contiguous block of virtual leaf
+                // shards, and the group completes the fixed V-leaf tree
+                // sum — bitwise-equal at any world size. Runs the
+                // synchronous loop (prefetch would let ranks' stream
+                // positions drift across checkpoint boundaries).
+                let t = Instant::now();
+                let (loss, grads) = dp_loss_and_grad(
+                    &self.provider,
+                    &self.params,
+                    comm.as_ref(),
+                    self.cfg.grad_shards,
+                )?;
+                metrics.grad_time += t.elapsed();
+                apply_step(
+                    &mut self.params,
+                    &mut self.opt,
+                    &self.cfg.train,
+                    step,
+                    loss,
+                    grads,
+                    &mut metrics,
+                )?;
+                stream_state = None;
+            } else if split {
                 // staged path: prepare -> (prefetch k+1 || consume k + step)
                 let batch = match prefetched.take() {
                     Some(b) => b,
@@ -545,6 +636,20 @@ impl<P: StatefulProvider, O: Optimizer> TrainSession<P, O> {
             if self.cfg.checkpoint_every > 0 && self.step % self.cfg.checkpoint_every == 0 {
                 if let Some(path) = self.cfg.checkpoint_path.clone() {
                     let t = Instant::now();
+                    if let Some(comm) = self.cfg.comm.clone() {
+                        // data-parallel: rank 0 writes synchronously
+                        // (all ranks hold identical bytes); the barrier
+                        // keeps every rank at the boundary until the
+                        // file is durable, so no rank can train ahead
+                        // of a checkpoint another process may restore
+                        if comm.rank() == 0 {
+                            let bytes = self.encode_checkpoint(stream_state.as_deref())?;
+                            checkpoint::write_atomic_bytes(&path, &bytes)?;
+                        }
+                        comm.barrier()?;
+                        metrics.ckpt_time += t.elapsed();
+                        continue;
+                    }
                     // the previous write is this write's barrier: at
                     // most one in flight, completion in submission order
                     if let Some(j) = ck_job.take() {
@@ -587,6 +692,53 @@ impl<P: StatefulProvider, O: Optimizer> TrainSession<P, O> {
         let m = self.run()?;
         Ok((self.params, m))
     }
+}
+
+/// One data-parallel gradient step over the fixed `shards`-leaf tree.
+///
+/// Every rank draws the *identical* batch (identical provider seeds are
+/// part of the SPMD contract), splits it into `shards` contiguous row
+/// slices — the virtual leaves — and computes loss/grads for its own
+/// aligned block of `shards / world` leaves. The local fold over that
+/// block is exactly the bottom subtree of the global tree (power-of-two
+/// blocks, see `comm` module docs), and `all_reduce_sum` completes the
+/// upper levels in rank order with the same stride-doubling shape. Loss
+/// and gradients ride one buffer through the collective, then both are
+/// scaled by `1 / shards` — a mean of per-leaf means over equal slices,
+/// computed from bits that are identical on every rank at every world
+/// size.
+fn dp_loss_and_grad<P: GradProvider>(
+    provider: &P,
+    params: &[f32],
+    comm: &dyn Communicator,
+    shards: usize,
+) -> Result<(f32, Vec<f32>)> {
+    let world = comm.world_size();
+    let rank = comm.rank();
+    let per = shards / world;
+    let batch = provider.prepare().context("data-parallel step: drawing the shared batch")?;
+    let mine = batch.split_rows(shards)?.into_iter().skip(rank * per).take(per);
+    let mut contribs: Vec<(f32, Vec<f32>)> = Vec::with_capacity(per);
+    for leaf in mine {
+        contribs.push(provider.consume(leaf, params)?);
+    }
+    let (loss, grads) = crate::comm::tree_fold(contribs, |mut a, b| {
+        a.0 += b.0;
+        crate::comm::add_assign(&mut a.1, &b.1);
+        a
+    })
+    .expect("at least one leaf per rank");
+    let mut buf = Vec::with_capacity(1 + grads.len());
+    buf.push(loss);
+    buf.extend_from_slice(&grads);
+    comm.all_reduce_sum(&mut buf)?;
+    let inv = 1.0 / shards as f32;
+    let loss = buf[0] * inv;
+    let mut grads = buf.split_off(1);
+    for g in &mut grads {
+        *g *= inv;
+    }
+    Ok((loss, grads))
 }
 
 // ---------------------------------------------------------------------------

@@ -110,20 +110,30 @@ pub fn parse_line(line: &str, dim: usize) -> Result<Request> {
     Ok(Request { model: model.to_string(), label, feats })
 }
 
-/// Read a whole request log into memory, in line order.
+/// Hard cap on a single log line. A request names one model and a
+/// bounded feature list; a "line" of megabytes means a corrupt log (or
+/// one with mangled newlines), better rejected by name than fed to the
+/// parser token by token.
+pub const MAX_LINE_BYTES: usize = 64 * 1024;
+
+/// Read a whole request log into memory, in line order. Every error —
+/// I/O, invalid UTF-8, overlong lines, parse failures — is reported as
+/// `<path>:<line>` so a bad record in a million-line log is findable.
 pub fn read_log(path: &Path, dim: usize) -> Result<Vec<Request>> {
     let file =
         File::open(path).with_context(|| format!("open request log {}", path.display()))?;
     let mut out = Vec::new();
     for (ln, line) in BufReader::new(file).lines().enumerate() {
-        let line = line?;
+        let at = || format!("{}:{}", path.display(), ln + 1);
+        let line = line.with_context(&at)?;
+        if line.len() > MAX_LINE_BYTES {
+            bail!("{}: line is {} bytes (max {MAX_LINE_BYTES})", at(), line.len());
+        }
         let s = line.trim();
         if s.is_empty() || s.starts_with('#') {
             continue;
         }
-        out.push(
-            parse_line(s, dim).with_context(|| format!("{}:{}", path.display(), ln + 1))?,
-        );
+        out.push(parse_line(s, dim).with_context(&at)?);
     }
     Ok(out)
 }
@@ -237,6 +247,69 @@ mod tests {
         assert!(ones > 5 && ones < 45, "{ones}");
         let mut c = SynthRequests::new(8, 3, 32, 4);
         assert_ne!(la, c.take(50), "different seed must differ");
+    }
+
+    /// FNV-1a 64-bit golden values (spec offset basis / prime). These
+    /// bits are load-bearing: hashed text features, serve's shard
+    /// routing (`fnv1a64(id) % shards`) and the `[pv]`/`[dp]` checksum
+    /// lines all assume this exact function, so a silent change would
+    /// re-route every model and break replay compatibility.
+    #[test]
+    fn fnv1a64_matches_reference_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+        assert_eq!(fnv1a64(b"sonew"), 0x2d11_8b61_08e2_1277);
+        assert_eq!(fnv1a64(b"model-0"), 0x6cb8_19cd_cd42_73df);
+        assert_eq!(fnv1a64(b"user_42"), 0x8140_55a4_578a_2bd1);
+        // the hashing-trick path: `country=se` lands at a stable index
+        assert_eq!(fnv1a64(b"country=se"), 0x3b69_24d0_7c44_c210);
+        let r = parse_line("m 1 country=se:2.0", 64).unwrap();
+        assert_eq!(r.feats, vec![((0x3b69_24d0_7c44_c210_u64 % 64) as u32, 2.0)]);
+    }
+
+    fn write_log(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("sonew-reqerr-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        std::fs::write(&path, bytes).unwrap();
+        path
+    }
+
+    #[test]
+    fn read_log_errors_name_the_file_and_line() {
+        // line 3 carries the bad record (line 1 comment, line 2 valid)
+        let path = write_log("badline.txt", b"# ok\nm 1 3:1.0\nm 2 3:1.0\n");
+        let err = format!("{:#}", read_log(&path, 16).unwrap_err());
+        assert!(err.contains("badline.txt:3"), "{err}");
+        assert!(err.contains("label must be 0 or 1"), "{err}");
+    }
+
+    #[test]
+    fn read_log_reports_invalid_utf8_with_line_number() {
+        let path = write_log("utf8.txt", b"m 1 3:1.0\nm 0 \xff\xfe 3:1.0\n");
+        let err = format!("{:#}", read_log(&path, 16).unwrap_err());
+        assert!(err.contains("utf8.txt:2"), "{err}");
+    }
+
+    #[test]
+    fn read_log_rejects_overlong_lines_with_line_number() {
+        let mut bytes = b"m 1 3:1.0\nm 0".to_vec();
+        while bytes.len() <= MAX_LINE_BYTES + 16 {
+            bytes.extend_from_slice(b" 3:1.0");
+        }
+        bytes.push(b'\n');
+        let path = write_log("long.txt", &bytes);
+        let err = format!("{:#}", read_log(&path, 16).unwrap_err());
+        assert!(err.contains("long.txt:2"), "{err}");
+        assert!(err.contains("max 65536"), "{err}");
+    }
+
+    #[test]
+    fn read_log_names_a_missing_file() {
+        let path = std::env::temp_dir().join("sonew-no-such-log.txt");
+        let err = format!("{:#}", read_log(&path, 16).unwrap_err());
+        assert!(err.contains("sonew-no-such-log.txt"), "{err}");
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! `rust/README.md`.
 
 pub mod cli;
+pub mod comm;
 pub mod coordinator;
 pub mod data;
 pub mod linalg;

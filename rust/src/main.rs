@@ -9,6 +9,8 @@
 //! sonew train --opt tds --resume run.ck      # exact (bitwise) resume
 //! sonew sweep --opt adam --trials 20         # Table 12 protocol (serial)
 //! sonew sweep --opt adam --trials 200 --workers 8   # sharded, bit-identical
+//! sonew sweep --opt adam --trials 200 --hosts 4     # multi-process, bit-identical
+//! sonew train --opt tds --hosts 2            # data-parallel, bit-identical
 //! sonew serve --synth 3000 --shards 4        # online predict-then-update
 //! sonew serve --replay req.log --store ckpts # replay a request log, durable
 //! sonew opts                                 # optimizer spec registry
@@ -17,11 +19,23 @@
 //!
 //! Optimizers are selected everywhere by spec string — see
 //! `sonew train --help` or `sonew opts` for the registry.
+//!
+//! `--hosts N` runs spawn `sonew sweep-worker` / `sonew train-worker`
+//! child processes (internal subcommands) that connect back to this
+//! process over localhost TCP — see the `sonew::comm` module docs for
+//! the wire protocol and the determinism contract.
 
-use anyhow::Result;
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
 use sonew::cli::Args;
+use sonew::comm::{Communicator, LocalComm, TcpComm, TcpConfig};
 use sonew::coordinator::sweep::SearchSpace;
-use sonew::coordinator::{Schedule, SessionConfig, TrainConfig, TrainSession};
+use sonew::coordinator::{
+    evaluate_shard_outcomes, result_from_outcomes, Schedule, SessionConfig, SweepResult,
+    TrainConfig, TrainSession, Trial, TrialOutcome,
+};
 use sonew::optim::{spec::registry_help, HyperParams, OptSpec};
 use sonew::tables;
 use sonew::util::Precision;
@@ -39,7 +53,9 @@ fn run() -> Result<()> {
         Some("table") => table(&args),
         Some("lm") => lm(&args),
         Some("train") => train(&args),
+        Some("train-worker") => train_worker(&args),
         Some("sweep") => sweep(&args),
+        Some("sweep-worker") => sweep_worker(&args),
         Some("serve") => serve(&args),
         Some("opts") => {
             print!("{}", registry_help());
@@ -55,8 +71,10 @@ fn run() -> Result<()> {
                  \x20                 (t1 t6 t9 ae ae-band ae-batch ae-bf16 f1-vit f1-gnn f3)\n\
                  \x20 lm              Figure-3 LM run, native transformer (--steps N)\n\
                  \x20 train           train one optimizer; --checkpoint/--resume run a\n\
-                 \x20                 checkpointable session (`sonew train --help`)\n\
-                 \x20 sweep           Table-12 random search; --workers N shards trials\n\
+                 \x20                 checkpointable session, --hosts W trains data-\n\
+                 \x20                 parallel across processes (`sonew train --help`)\n\
+                 \x20 sweep           Table-12 random search; --workers N (threads) or\n\
+                 \x20                 --hosts N (processes) shard trials\n\
                  \x20                 deterministically (`sonew sweep --help`)\n\
                  \x20 serve           online serving: sharded model store, per-request\n\
                  \x20                 predict-then-update (`sonew serve --help`)\n\
@@ -187,18 +205,33 @@ fn train(args: &Args) -> Result<()> {
         println!(
             "usage: sonew train --opt <spec> [--steps N] [--batch B] [--small] [--native]\n\
              \x20                 [--checkpoint PATH [--checkpoint-every K]] [--resume PATH]\n\
-             \x20                 [--no-pipeline]\n\
+             \x20                 [--no-pipeline] [--hosts W [--grad-shards V]]\n\
              \n\
              --checkpoint/--resume run a TrainSession with v2 checkpoints\n\
              (SONEWCK2: params + optimizer state + data RNG); a resumed run\n\
              reproduces the uninterrupted trajectory bitwise.\n\
              --no-pipeline disables batch prefetch + background checkpoint\n\
-             writes (bitwise-identical results either way).\n\n{}",
+             writes (bitwise-identical results either way).\n\
+             --hosts W    data-parallel session across W processes (this one\n\
+             \x20           plus W-1 spawned `train-worker`s over localhost TCP).\n\
+             \x20           Each step splits its batch into --grad-shards V\n\
+             \x20           virtual leaves (default 4) summed over a fixed\n\
+             \x20           V-leaf tree, so the loss trajectory, params and\n\
+             \x20           checkpoint bytes are bitwise-identical at any W\n\
+             \x20           (W, V powers of two, W <= V, V dividing --batch).\n\n{}",
             registry_help()
         );
         return Ok(());
     }
     let spec = OptSpec::parse(args.get_or("opt", "tridiag-sonew"))?;
+    if args.has("hosts") {
+        anyhow::ensure!(
+            !args.has("resume"),
+            "--resume is not supported with --hosts; restart the data-parallel run \
+             from its seed (it is bitwise-reproducible) or resume serially"
+        );
+        return train_dp(args, &spec);
+    }
     if args.has("checkpoint") || args.has("resume") {
         return train_session(args, &spec);
     }
@@ -268,6 +301,7 @@ fn train_session(args: &Args, spec: &OptSpec) -> Result<()> {
         // --no-pipeline forces the strictly synchronous loop (results
         // are bitwise-identical; this is a debugging/measurement knob)
         pipeline: !args.has("no-pipeline"),
+        ..Default::default()
     };
     let mut session = TrainSession::new(spec.clone(), opt, params, provider, cfg)?;
     if session.step > 0 {
@@ -296,15 +330,257 @@ fn train_session(args: &Args, spec: &OptSpec) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------------
+// Multi-process execution (`--hosts`): job payloads + worker subcommands
+// ---------------------------------------------------------------------------
+//
+// The hub (rank 0, the process the user launched) binds a localhost
+// listener, spawns `sonew <train|sweep>-worker --shard r/W --connect
+// addr` children, and ships each one its full job description in the
+// handshake's welcome frame — workers never read flags out of band, so
+// a group can only ever run one consistent configuration.
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u64(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn take_u64(b: &mut &[u8]) -> Result<u64> {
+    anyhow::ensure!(b.len() >= 8, "truncated job payload");
+    let (head, rest) = b.split_at(8);
+    *b = rest;
+    Ok(u64::from_le_bytes(head.try_into().unwrap()))
+}
+
+fn take_u8(b: &mut &[u8]) -> Result<u8> {
+    anyhow::ensure!(!b.is_empty(), "truncated job payload");
+    let v = b[0];
+    *b = &b[1..];
+    Ok(v)
+}
+
+fn take_str(b: &mut &[u8]) -> Result<String> {
+    let n = take_u64(b)? as usize;
+    anyhow::ensure!(b.len() >= n, "truncated job payload string");
+    let (head, rest) = b.split_at(n);
+    *b = rest;
+    String::from_utf8(head.to_vec()).map_err(|_| anyhow::anyhow!("job payload string is not UTF-8"))
+}
+
+/// Spawn one worker child connecting back to the hub. Workers inherit
+/// stderr (their errors should reach the user) but drop stdout: rank 0
+/// owns the deterministic output surface CI diffs across world sizes.
+fn spawn_worker(
+    exe: &std::path::Path,
+    cmd: &str,
+    rank: usize,
+    world: usize,
+    addr: &str,
+) -> Result<Child> {
+    Command::new(exe)
+        .arg(cmd)
+        .arg("--shard")
+        .arg(format!("{rank}/{world}"))
+        .arg("--connect")
+        .arg(addr)
+        .stdout(Stdio::null())
+        .spawn()
+        .with_context(|| format!("spawning {cmd} {rank}/{world}"))
+}
+
+/// Wait for worker children. When the hub itself already failed, kill
+/// them first — a half-dead group would otherwise sit in a collective
+/// until its read timeout. On a clean hub run a non-zero worker exit is
+/// an error (it means a rank diverged from the SPMD contract).
+fn reap(children: Vec<Child>, kill: bool) -> Result<()> {
+    let mut bad = Vec::new();
+    for (i, mut c) in children.into_iter().enumerate() {
+        if kill {
+            let _ = c.kill();
+        }
+        match c.wait() {
+            Ok(status) if status.success() || kill => {}
+            Ok(status) => bad.push(format!("worker {} exited with {status}", i + 1)),
+            Err(e) => bad.push(format!("worker {}: {e}", i + 1)),
+        }
+    }
+    anyhow::ensure!(bad.is_empty(), "{}", bad.join("; "));
+    Ok(())
+}
+
+/// Everything one rank of a data-parallel training group needs to build
+/// its (identical) session.
+struct TrainJob {
+    spec: String,
+    seed: u64,
+    steps: u64,
+    batch: usize,
+    shards: usize,
+    every: u64,
+    small: bool,
+    checkpoint: Option<String>,
+}
+
+impl TrainJob {
+    fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        put_str(&mut buf, &self.spec);
+        put_u64(&mut buf, self.seed);
+        put_u64(&mut buf, self.steps);
+        put_u64(&mut buf, self.batch as u64);
+        put_u64(&mut buf, self.shards as u64);
+        put_u64(&mut buf, self.every);
+        buf.push(self.small as u8);
+        put_str(&mut buf, self.checkpoint.as_deref().unwrap_or(""));
+        buf
+    }
+
+    fn decode(bytes: &[u8]) -> Result<TrainJob> {
+        let b = &mut &bytes[..];
+        let job = TrainJob {
+            spec: take_str(b)?,
+            seed: take_u64(b)?,
+            steps: take_u64(b)?,
+            batch: take_u64(b)? as usize,
+            shards: take_u64(b)? as usize,
+            every: take_u64(b)?,
+            small: take_u8(b)? != 0,
+            checkpoint: Some(take_str(b)?).filter(|s| !s.is_empty()),
+        };
+        anyhow::ensure!(b.is_empty(), "{} trailing bytes after train job", b.len());
+        Ok(job)
+    }
+}
+
+/// `sonew train --hosts W`: rank 0 (this process) hosts the group and
+/// spawns `train-worker` children for ranks 1..W; every rank then runs
+/// the identical session through [`dp_session`]. `--hosts 1` is the
+/// serial reference the multi-host runs reproduce bitwise.
+fn train_dp(args: &Args, spec: &OptSpec) -> Result<()> {
+    let world = args.usize_or("hosts", 1).max(1);
+    let job = TrainJob {
+        spec: spec.canonical(),
+        seed: args.u64_or("seed", 0),
+        steps: args.u64_or("steps", 100),
+        batch: args.usize_or("batch", 64),
+        shards: args.usize_or("grad-shards", 4),
+        every: args.u64_or("checkpoint-every", 20),
+        small: args.has("small"),
+        checkpoint: args.get("checkpoint").map(Into::into),
+    };
+    if world == 1 {
+        return dp_session(&job, Arc::new(LocalComm));
+    }
+    let (listener, addr) = TcpComm::bind()?;
+    let exe = std::env::current_exe().context("locating the sonew binary for workers")?;
+    let mut children = Vec::new();
+    let result = (|| -> Result<()> {
+        for rank in 1..world {
+            children.push(spawn_worker(&exe, "train-worker", rank, world, &addr.to_string())?);
+        }
+        let cfg = TcpConfig { peer: "train rank".into(), ..Default::default() };
+        let comm = TcpComm::host(listener, world, &job.encode(), cfg)?;
+        dp_session(&job, Arc::new(comm))
+    })();
+    let reaped = reap(children, result.is_err());
+    result.and(reaped)
+}
+
+/// Internal subcommand: one worker rank of `sonew train --hosts W`.
+fn train_worker(args: &Args) -> Result<()> {
+    let (rank, world) =
+        sonew::cli::parse_shard(args.get("shard").context("train-worker needs --shard r/W")?)?;
+    let addr = args.get("connect").context("train-worker needs --connect host:port")?;
+    let cfg = TcpConfig { peer: "train rank".into(), ..Default::default() };
+    let (comm, job) = TcpComm::connect(addr, rank, world, cfg)?;
+    dp_session(&TrainJob::decode(&job)?, Arc::new(comm))
+}
+
+/// One rank of a data-parallel AE training session. Every rank builds
+/// the *identical* session from the job — same init seed, same data
+/// stream, same schedule; only the communicator differs — so params,
+/// loss trajectory and checkpoint bytes are bitwise-identical at any
+/// world size. Rank 0 alone prints, and its `[dp]` fingerprint lines
+/// deliberately omit the world size: they are the byte-identical
+/// surface `tests/distributed.rs` and CI diff across `--hosts` values.
+fn dp_session(job: &TrainJob, comm: Arc<dyn Communicator>) -> Result<()> {
+    let spec = OptSpec::parse(&job.spec)?;
+    let mlp = if job.small {
+        sonew::models::Mlp::autoencoder_small()
+    } else {
+        sonew::models::Mlp::autoencoder()
+    };
+    let (lr, hp) = tables::autoencoder::tuned_hp(spec.name(), Precision::F32, 0.0);
+    let mut rng = sonew::util::Rng::new(job.seed);
+    let params = mlp.init(&mut rng);
+    let mats = tables::autoencoder::cap_mat_blocks(&mlp.mat_blocks(), 128);
+    let opt = spec.build(mlp.total, &mlp.blocks(), &mats, &hp)?;
+    let provider = sonew::coordinator::trainer::NativeAeProvider::new(
+        mlp.clone(),
+        sonew::data::SynthImages::new(job.seed + 1),
+        job.batch,
+    );
+    let rank0 = comm.rank() == 0;
+    let cfg = SessionConfig {
+        train: TrainConfig {
+            steps: job.steps,
+            schedule: Schedule::Constant { lr },
+            ..Default::default()
+        },
+        checkpoint_every: if job.checkpoint.is_some() { job.every } else { 0 },
+        checkpoint_path: job.checkpoint.as_ref().map(Into::into),
+        resume_from: None,
+        pipeline: false,
+        comm: Some(comm),
+        grad_shards: job.shards,
+    };
+    let mut session = TrainSession::new(spec.clone(), opt, params, provider, cfg)?;
+    let m = session.run()?;
+    if let Some(path) = &job.checkpoint {
+        session.checkpoint(path)?;
+    }
+    if rank0 {
+        let mut loss_bits = Vec::with_capacity(4 * m.points.len());
+        for p in &m.points {
+            loss_bits.extend_from_slice(&p.loss.to_bits().to_le_bytes());
+        }
+        let mut param_bytes = Vec::with_capacity(4 * session.params.len());
+        for w in &session.params {
+            param_bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        println!("[dp] spec={spec} shards={} steps={}", job.shards, session.step);
+        println!(
+            "[dp] loss_trace=0x{:016x} params=0x{:016x} final_loss={:?}",
+            sonew::data::requests::fnv1a64(&loss_bits),
+            sonew::data::requests::fnv1a64(&param_bytes),
+            m.tail_mean_loss(3).unwrap_or(f32::NAN),
+        );
+    }
+    Ok(())
+}
+
 fn sweep(args: &Args) -> Result<()> {
     if args.has("help") {
         println!(
-            "usage: sonew sweep --opt <spec> [--trials N] [--steps K] [--seed S] [--workers W]\n\
+            "usage: sonew sweep --opt <spec> [--trials N] [--steps K] [--seed S]\n\
+             \x20                 [--workers W | --hosts H] [--csv PATH]\n\
              \n\
-             --workers W  shard trials across W sweep workers (trial i -> worker\n\
-             \x20            i mod W, per-trial RNG streams); any W reproduces the\n\
-             \x20            serial sweep bit-for-bit, including the chosen best\n\
-             \x20            trial and the evaluated/discarded counts.\n\
+             --workers W  shard trials across W sweep worker threads (trial i ->\n\
+             \x20            worker i mod W, per-trial RNG streams); any W\n\
+             \x20            reproduces the serial sweep bit-for-bit, including\n\
+             \x20            the chosen best trial and the evaluated/discarded\n\
+             \x20            counts.\n\
+             --hosts H    same sharding across H processes: this one plus H-1\n\
+             \x20            spawned `sweep-worker`s over localhost TCP. Workers\n\
+             \x20            ship raw (index, objective) outcomes back; the hub\n\
+             \x20            re-derives every record from (seed, index), so the\n\
+             \x20            summary and CSV stay byte-identical to a serial run.\n\
+             --csv PATH   also write the per-trial CSV to PATH verbatim (the\n\
+             \x20            surface CI byte-diffs across sharding modes).\n\
              writes results/t12_sweep_<name>.md (summary) and .csv (every trial).\n\n{}",
             registry_help()
         );
@@ -313,78 +589,219 @@ fn sweep(args: &Args) -> Result<()> {
     let spec = OptSpec::parse(args.get_or("opt", "tridiag-sonew"))?;
     let trials = args.usize_or("trials", 20);
     let steps = args.u64_or("steps", 20);
-    let workers = args.usize_or("workers", 1);
+    let seed = args.u64_or("seed", 0);
+    let result = if args.has("hosts") {
+        sweep_hosts(args, &spec, trials, steps, seed)?
+    } else {
+        let workers = args.usize_or("workers", 1);
+        let driver = sonew::coordinator::Driver::new().with_sweep_workers(workers);
+        println!(
+            "[sweep] {spec}: {trials} trials x {steps} steps across {} worker(s) \
+             (small AE, native)",
+            driver.sweep_workers
+        );
+        driver.sweep(&spec, &SearchSpace::default(), &HyperParams::default(), trials, seed, |t| {
+            sweep_objective(steps, t)
+        })
+    };
+    report_sweep(args, &spec, result)
+}
+
+/// The Table-12 sweep objective: train the small AE for `steps` with
+/// the trial's hyperparameters and score the tail-mean loss. Fixed
+/// construction seeds make it a pure function of the trial — which is
+/// what lets threads and processes shard trials freely.
+fn sweep_objective(steps: u64, trial: &Trial) -> f32 {
+    let mlp = sonew::models::Mlp::autoencoder_small();
+    let mut rng = sonew::util::Rng::new(0);
+    let params = mlp.init(&mut rng);
+    let mats = tables::autoencoder::cap_mat_blocks(&mlp.mat_blocks(), 128);
+    let mut opt = match trial.build(mlp.total, &mlp.blocks(), &mats) {
+        Ok(o) => o,
+        Err(_) => return f32::NAN,
+    };
+    let tc = TrainConfig {
+        steps,
+        schedule: Schedule::Constant { lr: trial.lr },
+        ..Default::default()
+    };
+    let provider = sonew::coordinator::trainer::NativeAeProvider::new(
+        mlp.clone(),
+        sonew::data::SynthImages::new(1),
+        64,
+    );
+    match TrainSession::ephemeral(&mut opt, params, provider, tc).finish() {
+        Ok((_, m)) => m.tail_mean_loss(3).unwrap_or(f32::NAN),
+        Err(_) => f32::NAN,
+    }
+}
+
+/// A sweep worker's job: the shard assignment is carried separately in
+/// the handshake (`--shard r/H` + hello), this is everything else.
+struct SweepJob {
+    spec: String,
+    trials: usize,
+    steps: u64,
+    seed: u64,
+    world: usize,
+}
+
+impl SweepJob {
+    fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        put_str(&mut buf, &self.spec);
+        put_u64(&mut buf, self.trials as u64);
+        put_u64(&mut buf, self.steps);
+        put_u64(&mut buf, self.seed);
+        put_u64(&mut buf, self.world as u64);
+        buf
+    }
+
+    fn decode(bytes: &[u8]) -> Result<SweepJob> {
+        let b = &mut &bytes[..];
+        let job = SweepJob {
+            spec: take_str(b)?,
+            trials: take_u64(b)? as usize,
+            steps: take_u64(b)?,
+            seed: take_u64(b)?,
+            world: take_u64(b)? as usize,
+        };
+        anyhow::ensure!(b.is_empty(), "{} trailing bytes after sweep job", b.len());
+        Ok(job)
+    }
+}
+
+/// `sonew sweep --hosts H`: shard trials across H processes (trial i ->
+/// shard i mod H). Workers ship raw [`TrialOutcome`]s back over the
+/// gather; the hub re-derives every record from `(seed, index)` and
+/// merges shards under the same fixed tree as the threaded scheduler —
+/// so the best trial, the counts and the CSV bytes are identical to any
+/// serial or threaded run.
+fn sweep_hosts(
+    args: &Args,
+    spec: &OptSpec,
+    trials: usize,
+    steps: u64,
+    seed: u64,
+) -> Result<Option<SweepResult>> {
+    let world = args.usize_or("hosts", 1).max(1);
+    println!(
+        "[sweep] {spec}: {trials} trials x {steps} steps across {world} host(s) \
+         (small AE, native)"
+    );
     let space = SearchSpace::default();
     let base = HyperParams::default();
-    let driver = sonew::coordinator::Driver::new().with_sweep_workers(workers);
-    println!(
-        "[sweep] {spec}: {trials} trials x {steps} steps across {} worker(s) (small AE, native)",
-        driver.sweep_workers
-    );
-    let result = driver.sweep(&spec, &space, &base, trials, args.u64_or("seed", 0), |trial| {
-        let mlp = sonew::models::Mlp::autoencoder_small();
-        let mut rng = sonew::util::Rng::new(0);
-        let params = mlp.init(&mut rng);
-        let mats = tables::autoencoder::cap_mat_blocks(&mlp.mat_blocks(), 128);
-        let mut opt = match trial.build(mlp.total, &mlp.blocks(), &mats) {
-            Ok(o) => o,
-            Err(_) => return f32::NAN,
-        };
-        let tc = TrainConfig {
-            steps,
-            schedule: Schedule::Constant { lr: trial.lr },
-            ..Default::default()
-        };
-        let provider = sonew::coordinator::trainer::NativeAeProvider::new(
-            mlp.clone(),
-            sonew::data::SynthImages::new(1),
-            64,
-        );
-        match TrainSession::ephemeral(&mut opt, params, provider, tc).finish() {
-            Ok((_, m)) => m.tail_mean_loss(3).unwrap_or(f32::NAN),
-            Err(_) => f32::NAN,
-        }
-    });
-    match result {
-        Some(r) => {
-            // report the *effective* hyperparameters (spec keys override
-            // the sampled point, exactly as Trial::build runs them) —
-            // never a sampled value that a pinned key shadowed
-            let eff = r.best.spec.hyperparams(&r.best.hp)?;
-            println!(
-                "[sweep] best {spec}: trial #{} loss {:.4} @ lr={:.3e} beta1={:.3} beta2={:.3} \
-                 eps={:.2e} ({} finite, {} discarded)",
-                r.best_index,
-                r.best_objective,
-                r.best.lr,
-                eff.beta1,
-                eff.beta2,
-                eff.eps,
-                r.evaluated,
-                r.discarded,
-            );
-            let mut t = sonew::util::io::MdTable::new(&[
-                "spec", "lr", "beta1", "beta2", "eps", "loss", "evaluated", "discarded",
-            ]);
-            t.row([
-                r.best.spec.canonical(),
-                format!("{:.3e}", r.best.lr),
-                format!("{:.3}", eff.beta1),
-                format!("{:.3}", eff.beta2),
-                format!("{:.2e}", eff.eps),
-                format!("{:.4}", r.best_objective),
-                r.evaluated.to_string(),
-                r.discarded.to_string(),
-            ]);
-            t.write(format!("t12_sweep_{}.md", spec.name()))?;
-            // full audit trail: every trial's sampled point + objective
-            sonew::util::io::write_result_file(
-                format!("t12_sweep_{}.csv", spec.name()),
-                &r.to_csv(),
-            )?;
-        }
-        None => println!("[sweep] all trials diverged"),
+    let mut objective = |t: &Trial| sweep_objective(steps, t);
+    if world == 1 {
+        let own = evaluate_shard_outcomes(spec, &space, &base, trials, 0, 1, seed, &mut objective);
+        return Ok(result_from_outcomes(spec, &space, &base, seed, &[own]));
     }
+    let (listener, addr) = TcpComm::bind()?;
+    let exe = std::env::current_exe().context("locating the sonew binary for workers")?;
+    let mut children = Vec::new();
+    let result = (|| -> Result<Option<SweepResult>> {
+        for rank in 1..world {
+            children.push(spawn_worker(&exe, "sweep-worker", rank, world, &addr.to_string())?);
+        }
+        let cfg = TcpConfig { peer: "sweep shard".into(), ..Default::default() };
+        let job = SweepJob { spec: spec.canonical(), trials, steps, seed, world };
+        let comm = TcpComm::host(listener, world, &job.encode(), cfg)?;
+        let own =
+            evaluate_shard_outcomes(spec, &space, &base, trials, 0, world, seed, &mut objective);
+        let payloads = comm
+            .gather(&TrialOutcome::encode_all(&own))?
+            .expect("rank 0 receives the gather");
+        let per_shard = payloads
+            .iter()
+            .enumerate()
+            .map(|(r, p)| {
+                TrialOutcome::decode_all(p)
+                    .with_context(|| format!("decoding outcomes from sweep shard {r}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(result_from_outcomes(spec, &space, &base, seed, &per_shard))
+    })();
+    let reaped = reap(children, result.is_err());
+    match result {
+        Ok(r) => reaped.map(|()| r),
+        Err(e) => Err(e),
+    }
+}
+
+/// Internal subcommand: one worker process of `sonew sweep --hosts H`.
+/// Evaluates shard `r` of the job (trial i with i mod H == r) and ships
+/// the raw outcomes back in the gather — nothing else crosses the wire.
+fn sweep_worker(args: &Args) -> Result<()> {
+    let (rank, world) =
+        sonew::cli::parse_shard(args.get("shard").context("sweep-worker needs --shard r/H")?)?;
+    let addr = args.get("connect").context("sweep-worker needs --connect host:port")?;
+    let cfg = TcpConfig { peer: "sweep shard".into(), ..Default::default() };
+    let (comm, job) = TcpComm::connect(addr, rank, world, cfg)?;
+    let job = SweepJob::decode(&job)?;
+    anyhow::ensure!(
+        job.world == world,
+        "hub job names {} shard(s) but this worker joined a world of {world}",
+        job.world
+    );
+    let spec = OptSpec::parse(&job.spec)?;
+    let mut objective = |t: &Trial| sweep_objective(job.steps, t);
+    let outcomes = evaluate_shard_outcomes(
+        &spec,
+        &SearchSpace::default(),
+        &HyperParams::default(),
+        job.trials,
+        rank,
+        world,
+        job.seed,
+        &mut objective,
+    );
+    comm.gather(&TrialOutcome::encode_all(&outcomes))?;
+    Ok(())
+}
+
+/// Print the sweep summary and write the result files — shared by every
+/// sharding mode, so the report can't drift between them.
+fn report_sweep(args: &Args, spec: &OptSpec, result: Option<SweepResult>) -> Result<()> {
+    let Some(r) = result else {
+        println!("[sweep] all trials diverged");
+        return Ok(());
+    };
+    // report the *effective* hyperparameters (spec keys override the
+    // sampled point, exactly as Trial::build runs them) — never a
+    // sampled value that a pinned key shadowed
+    let eff = r.best.spec.hyperparams(&r.best.hp)?;
+    println!(
+        "[sweep] best {spec}: trial #{} loss {:.4} @ lr={:.3e} beta1={:.3} beta2={:.3} \
+         eps={:.2e} ({} finite, {} discarded)",
+        r.best_index,
+        r.best_objective,
+        r.best.lr,
+        eff.beta1,
+        eff.beta2,
+        eff.eps,
+        r.evaluated,
+        r.discarded,
+    );
+    let mut t = sonew::util::io::MdTable::new(&[
+        "spec", "lr", "beta1", "beta2", "eps", "loss", "evaluated", "discarded",
+    ]);
+    t.row([
+        r.best.spec.canonical(),
+        format!("{:.3e}", r.best.lr),
+        format!("{:.3}", eff.beta1),
+        format!("{:.3}", eff.beta2),
+        format!("{:.2e}", eff.eps),
+        format!("{:.4}", r.best_objective),
+        r.evaluated.to_string(),
+        r.discarded.to_string(),
+    ]);
+    t.write(format!("t12_sweep_{}.md", spec.name()))?;
+    // full audit trail: every trial's sampled point + objective
+    let csv = r.to_csv();
+    if let Some(path) = args.get("csv") {
+        std::fs::write(path, &csv).with_context(|| format!("writing sweep CSV to {path}"))?;
+    }
+    sonew::util::io::write_result_file(format!("t12_sweep_{}.csv", spec.name()), &csv)?;
     Ok(())
 }
 

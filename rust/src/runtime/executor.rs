@@ -174,6 +174,29 @@ impl Executor {
         }
     }
 
+    /// Run a batch of jobs to completion on *dedicated* scoped threads,
+    /// bypassing the shared queue. This is the hosting surface for
+    /// communicator endpoints (`comm::ThreadComm`): a collective parks
+    /// its thread until every rank arrives, and a parked job cannot
+    /// help-first — so W rendezvous jobs on a pool with fewer than W
+    /// workers would deadlock on the shared queue. Dedicated threads
+    /// keep every endpoint runnable regardless of `SONEW_THREADS`, and
+    /// since comm jobs are per-world setup (not per-step hot path), the
+    /// spawn cost is irrelevant. Panics propagate at scope exit.
+    pub fn scope_dedicated<'s>(&self, jobs: Vec<Task<'s>>) {
+        if jobs.is_empty() {
+            return;
+        }
+        std::thread::scope(|s| {
+            for (i, f) in jobs.into_iter().enumerate() {
+                std::thread::Builder::new()
+                    .name(format!("sonew-comm-{i}"))
+                    .spawn_scoped(s, f)
+                    .expect("spawn dedicated comm job");
+            }
+        });
+    }
+
     /// Run `bg` on a pool worker while `fg` runs on the calling thread;
     /// return both results once both lanes have finished. This is the
     /// two-lane pipeline primitive behind `TrainSession`'s batch
@@ -526,6 +549,34 @@ mod tests {
             std::thread::yield_now();
         }
         assert_eq!(h2.join(), 6);
+    }
+
+    /// The property comm endpoints rely on: jobs that all park until
+    /// the full batch has arrived still complete, even when the batch
+    /// is wider than the pool (impossible on the shared queue, where a
+    /// parked job pins its worker and the rest never run).
+    #[test]
+    fn scope_dedicated_runs_interdependent_jobs_wider_than_the_pool() {
+        use std::sync::{Condvar, Mutex};
+        let ex = Executor::new(1);
+        let world = 4usize;
+        let arrived = Mutex::new(0usize);
+        let cv = Condvar::new();
+        let jobs: Vec<Task<'_>> = (0..world)
+            .map(|_| {
+                let (arrived, cv) = (&arrived, &cv);
+                Box::new(move || {
+                    let mut n = arrived.lock().unwrap();
+                    *n += 1;
+                    cv.notify_all();
+                    while *n < world {
+                        n = cv.wait(n).unwrap();
+                    }
+                }) as Task<'_>
+            })
+            .collect();
+        ex.scope_dedicated(jobs);
+        assert_eq!(*arrived.lock().unwrap(), world);
     }
 
     #[test]

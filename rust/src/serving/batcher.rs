@@ -67,19 +67,42 @@ pub fn replay(
         }
         executor::global().scope(tasks);
     }
-    let mut merged: Vec<(usize, Outcome)> = Vec::with_capacity(log.len());
-    for out in outs {
-        merged.extend(out?);
-    }
     // global log order: the progressive-validation accumulator must see
-    // outcomes in the same sequence for every shard count
-    merged.sort_by_key(|&(idx, _)| idx);
+    // outcomes in the same sequence for every shard count. Each shard's
+    // list is already index-ascending (queues are filled in log order),
+    // so restoring the global order is a sorted merge — tree-folded
+    // with the same fixed reduction shape every other fan-out path in
+    // the crate uses (`comm::tree_fold`); log indices are unique, so
+    // the fold order can't change the result.
+    let lists: Vec<Vec<(usize, Outcome)>> = outs.into_iter().collect::<Result<Vec<_>>>()?;
+    let merged = crate::comm::tree_fold(lists, merge_by_index).unwrap_or_default();
     let mut pv = Progressive::new(eval_every);
     let outcomes: Vec<Outcome> = merged.into_iter().map(|(_, o)| o).collect();
     for o in &outcomes {
         pv.observe(o);
     }
     Ok(ReplayReport { outcomes, curve: pv.curve().to_vec(), summary: pv.summary() })
+}
+
+/// Merge two index-ascending outcome lists, preserving ascending order.
+fn merge_by_index<T>(a: Vec<(usize, T)>, b: Vec<(usize, T)>) -> Vec<(usize, T)> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut ia, mut ib) = (a.into_iter().peekable(), b.into_iter().peekable());
+    loop {
+        match (ia.peek(), ib.peek()) {
+            (Some(&(x, _)), Some(&(y, _))) => {
+                if x <= y {
+                    out.push(ia.next().unwrap());
+                } else {
+                    out.push(ib.next().unwrap());
+                }
+            }
+            (Some(_), None) => out.push(ia.next().unwrap()),
+            (None, Some(_)) => out.push(ib.next().unwrap()),
+            (None, None) => break,
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -114,6 +137,20 @@ mod tests {
             assert_eq!(o.pred.to_bits(), out.pred.to_bits(), "batched != sequential");
             assert_eq!(o.loss.to_bits(), out.loss.to_bits());
         }
+    }
+
+    #[test]
+    fn sorted_merge_restores_global_log_order() {
+        let lists: Vec<Vec<(usize, char)>> = vec![
+            vec![(0, 'a'), (3, 'd'), (6, 'g')],
+            vec![(1, 'b'), (4, 'e')],
+            Vec::new(),
+            vec![(2, 'c'), (5, 'f')],
+        ];
+        let merged = crate::comm::tree_fold(lists, merge_by_index).unwrap();
+        let want: Vec<(usize, char)> =
+            "abcdefg".chars().enumerate().collect();
+        assert_eq!(merged, want);
     }
 
     #[test]

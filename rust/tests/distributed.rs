@@ -1,0 +1,240 @@
+//! Distributed acceptance tests: the multi-process determinism contract.
+//!
+//! (a) A data-parallel `TrainSession` over a real communicator — thread
+//!     endpoints or localhost TCP — at world sizes 1/2/4 produces a loss
+//!     trajectory, final params and checkpoint bytes **bitwise identical**
+//!     to the serial reference (the same session at world 1), at any
+//!     `SONEW_THREADS`.
+//! (b) `sonew sweep --hosts 2` reproduces the serial sweep's best trial,
+//!     objective and per-trial CSV byte-for-byte; `sonew train --hosts 2`
+//!     reproduces the `--hosts 1` `[dp]` fingerprint and checkpoint.
+//! (c) A killed worker surfaces as a shard-naming error within the read
+//!     timeout — never a hang.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sonew::comm::{thread, Communicator, LocalComm, TcpComm, TcpConfig};
+use sonew::coordinator::trainer::NativeAeProvider;
+use sonew::coordinator::{Schedule, SessionConfig, TrainConfig, TrainSession};
+use sonew::data::SynthImages;
+use sonew::models::Mlp;
+use sonew::optim::{HyperParams, OptSpec};
+use sonew::util::Rng;
+
+const STEPS: u64 = 8;
+const SHARDS: usize = 4;
+const BATCH: usize = 16;
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sonew-dist-{}-{name}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Run one rank of the shared data-parallel session: every caller builds
+/// the *identical* session (same seeds, same provider) and only the
+/// communicator endpoint differs. Returns (loss-trace bits, param bits).
+fn dp_run(comm: Arc<dyn Communicator>, ck: Option<PathBuf>) -> (Vec<u32>, Vec<u32>) {
+    let spec = OptSpec::parse("tridiag-sonew").unwrap();
+    let mlp = Mlp::new(&[49, 24, 12, 24, 49]);
+    let mut rng = Rng::new(7);
+    let params = mlp.init(&mut rng);
+    let hp = HyperParams { gamma: 1e-8, ..Default::default() };
+    let opt = spec
+        .build(mlp.total, &mlp.blocks(), &mlp.mat_blocks(), &hp)
+        .unwrap();
+    let provider = NativeAeProvider::new(mlp.clone(), SynthImages::new(5), BATCH);
+    let mut session = TrainSession::new(
+        spec,
+        opt,
+        params,
+        provider,
+        SessionConfig {
+            train: TrainConfig {
+                steps: STEPS,
+                schedule: Schedule::Constant { lr: 2e-3 },
+                ..Default::default()
+            },
+            checkpoint_every: if ck.is_some() { 4 } else { 0 },
+            checkpoint_path: ck.clone(),
+            pipeline: false,
+            comm: Some(comm),
+            grad_shards: SHARDS,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let m = session.run().unwrap();
+    if let Some(path) = &ck {
+        // collective: rank 0 writes, everyone holds at the barrier
+        session.checkpoint(path).unwrap();
+    }
+    let losses: Vec<u32> = m.points.iter().map(|p| p.loss.to_bits()).collect();
+    (losses, bits(&session.params))
+}
+
+/// Run `f` on every rank of a real localhost-TCP world (hub = rank 0 on
+/// this thread, workers on scoped threads), returning rank-ordered results.
+fn tcp_world<R: Send>(world: usize, f: impl Fn(Arc<dyn Communicator>) -> R + Sync) -> Vec<R> {
+    let (listener, addr) = TcpComm::bind().unwrap();
+    std::thread::scope(|s| {
+        let addr = addr.to_string();
+        let mut handles = Vec::new();
+        for rank in 1..world {
+            let addr = addr.clone();
+            let f = &f;
+            handles.push(s.spawn(move || {
+                let (comm, job) =
+                    TcpComm::connect(&addr, rank, world, TcpConfig::default()).unwrap();
+                assert!(job.is_empty(), "this world ships no job payload");
+                f(Arc::new(comm))
+            }));
+        }
+        let hub = TcpComm::host(listener, world, &[], TcpConfig::default()).unwrap();
+        let mut out = vec![f(Arc::new(hub))];
+        for h in handles {
+            out.push(h.join().unwrap());
+        }
+        out
+    })
+}
+
+#[test]
+fn dp_training_is_bitwise_identical_across_world_sizes() {
+    let dir = tmp_dir("worlds");
+    let ck1 = dir.join("w1.ck");
+    let reference = dp_run(Arc::new(LocalComm), Some(ck1.clone()));
+    let ck_ref = std::fs::read(&ck1).unwrap();
+    for world in [2usize, 4] {
+        let ck = dir.join(format!("thread-w{world}.ck"));
+        let got = thread::run_world(world, |comm| dp_run(Arc::new(comm), Some(ck.clone())));
+        for (rank, g) in got.iter().enumerate() {
+            assert_eq!(g, &reference, "thread world={world} rank={rank}");
+        }
+        assert_eq!(std::fs::read(&ck).unwrap(), ck_ref, "thread world={world} checkpoint");
+    }
+    for world in [2usize, 4] {
+        let ck = dir.join(format!("tcp-w{world}.ck"));
+        let got = tcp_world(world, |comm| dp_run(comm, Some(ck.clone())));
+        for (rank, g) in got.iter().enumerate() {
+            assert_eq!(g, &reference, "tcp world={world} rank={rank}");
+        }
+        assert_eq!(std::fs::read(&ck).unwrap(), ck_ref, "tcp world={world} checkpoint");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn run_sonew(dir: &Path, args: &[&str]) -> String {
+    let out = Command::new(env!("CARGO_BIN_EXE_sonew"))
+        .args(args)
+        .env("SONEW_RESULTS", dir.join("results"))
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "sonew {args:?} failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8(out.stdout).unwrap()
+}
+
+#[test]
+fn sweep_hosts_reproduces_the_serial_sweep_byte_for_byte() {
+    let dir = tmp_dir("sweep");
+    let serial_csv = dir.join("serial.csv");
+    let hosts_csv = dir.join("hosts.csv");
+    let common = ["sweep", "--opt", "adam", "--trials", "6", "--steps", "3", "--seed", "9"];
+    let mut serial: Vec<&str> = common.to_vec();
+    serial.extend(["--workers", "1", "--csv", serial_csv.to_str().unwrap()]);
+    let mut hosts: Vec<&str> = common.to_vec();
+    hosts.extend(["--hosts", "2", "--csv", hosts_csv.to_str().unwrap()]);
+    let serial_out = run_sonew(&dir, &serial);
+    let hosts_out = run_sonew(&dir, &hosts);
+    let best = |s: &str| s.lines().find(|l| l.starts_with("[sweep] best")).map(str::to_string);
+    assert!(best(&serial_out).is_some(), "no best line in: {serial_out}");
+    assert_eq!(best(&serial_out), best(&hosts_out), "best-trial summary must match");
+    assert_eq!(
+        std::fs::read(&serial_csv).unwrap(),
+        std::fs::read(&hosts_csv).unwrap(),
+        "per-trial CSV must be byte-identical across sharding modes"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn train_hosts_reproduces_the_serial_dp_fingerprint_and_checkpoint() {
+    let dir = tmp_dir("train");
+    let ck1 = dir.join("h1.ck");
+    let ck2 = dir.join("h2.ck");
+    let run = |hosts: &str, ck: &Path| {
+        run_sonew(
+            &dir,
+            &[
+                "train", "--opt", "tridiag-sonew", "--small", "--steps", "6", "--batch", "16",
+                "--grad-shards", "4", "--seed", "3", "--hosts", hosts, "--checkpoint",
+                ck.to_str().unwrap(),
+            ],
+        )
+    };
+    let serial_out = run("1", &ck1);
+    let hosts_out = run("2", &ck2);
+    let dp = |s: &str| -> Vec<String> {
+        s.lines().filter(|l| l.starts_with("[dp]")).map(str::to_string).collect()
+    };
+    assert!(!dp(&serial_out).is_empty(), "no [dp] fingerprint in: {serial_out}");
+    assert_eq!(dp(&serial_out), dp(&hosts_out), "[dp] fingerprints must match");
+    assert_eq!(
+        std::fs::read(&ck1).unwrap(),
+        std::fs::read(&ck2).unwrap(),
+        "checkpoint bytes must be identical across --hosts values"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn a_killed_worker_surfaces_a_named_error_within_the_timeout() {
+    // Hand-assemble the sweep job payload (spec, trials, steps, seed,
+    // world — little-endian, strings length-prefixed) with a workload
+    // long enough that the worker cannot finish before it is killed.
+    let put_u64 = |buf: &mut Vec<u8>, v: u64| buf.extend_from_slice(&v.to_le_bytes());
+    let mut job = Vec::new();
+    put_u64(&mut job, 4);
+    job.extend_from_slice(b"adam");
+    put_u64(&mut job, 400); // trials
+    put_u64(&mut job, 200); // steps
+    put_u64(&mut job, 0); // seed
+    put_u64(&mut job, 2); // world
+    let (listener, addr) = TcpComm::bind().unwrap();
+    let mut child = Command::new(env!("CARGO_BIN_EXE_sonew"))
+        .args(["sweep-worker", "--shard", "1/2", "--connect", &addr.to_string()])
+        .stdout(Stdio::null())
+        .spawn()
+        .unwrap();
+    let cfg = TcpConfig {
+        read_timeout: Duration::from_secs(5),
+        peer: "sweep shard".into(),
+        ..Default::default()
+    };
+    let comm = TcpComm::host(listener, 2, &job, cfg).unwrap();
+    child.kill().unwrap();
+    child.wait().unwrap();
+    let t0 = Instant::now();
+    let err = comm.gather(&[]).unwrap_err();
+    let text = format!("{err:#}");
+    assert!(text.contains("sweep shard 1"), "error must name the dead shard: {text}");
+    assert!(
+        text.contains("disconnected") || text.contains("timed out"),
+        "error must say what happened on the wire: {text}"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(20),
+        "a dead worker must fail the collective fast, not hang"
+    );
+}

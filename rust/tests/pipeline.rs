@@ -64,6 +64,7 @@ fn fresh_ae_session(
             checkpoint_path,
             resume_from,
             pipeline,
+            ..Default::default()
         },
     )
     .unwrap()
