@@ -1,5 +1,5 @@
 //! Benchmark harness (criterion is unavailable offline — custom
-//! median-of-k timing via util::timer::bench).
+//! median-of-k timing via telemetry::timing::bench).
 //!
 //! Sections map to the paper's evaluation:
 //!   [exec]  persistent-executor fan-out dispatch vs a per-call
@@ -29,6 +29,10 @@
 //!           over gradient-sized contributions, and in-process
 //!           `all_reduce_sum` latency at world 4 (the per-step cost a
 //!           data-parallel session pays on top of the raw adds)
+//!   [telemetry] observability overhead: span-record cost with tracing
+//!           enabled vs disabled, and LM training step time with
+//!           tracing on vs off (the "< 5% enabled, ~0 disabled"
+//!           contract from the telemetry module docs)
 //!
 //!     cargo bench                # all sections
 //!     cargo bench -- gemm        # one section
@@ -36,94 +40,19 @@
 //!
 //! Every run writes its numbers to a `BENCH_*.json` trajectory document
 //! (`SONEW_BENCH_OUT` overrides the `BENCH_latest.json` default) so CI
-//! can smoke-run the harness and archive per-commit perf history.
+//! can smoke-run the harness and archive per-commit perf history. The
+//! document is built by `telemetry::sink::BenchRecorder` and emitted
+//! through the `TelemetrySink` trait, so it also carries a snapshot of
+//! the process metrics registry (`"telemetry"` section).
 
 use sonew::linalg::{matmul_into, matmul_nt, matmul_tn, Mat};
 use sonew::models::{LmConfig, Transformer};
 use sonew::optim::{HyperParams, OptSpec};
 use sonew::runtime::{Backend, HostTensor, NativeBackend};
 use sonew::sonew::{BandedState, LambdaMode, TridiagState};
-use sonew::util::timer::{bench, BenchResult};
+use sonew::telemetry::sink::{BenchRecorder, JsonFileSink, TelemetrySink};
+use sonew::telemetry::timing::bench;
 use sonew::util::{Precision, Rng};
-
-/// One recorded measurement, flattened for the JSON trajectory.
-struct Rec {
-    section: String,
-    name: String,
-    us_per_iter: f64,
-    min_us: f64,
-    max_us: f64,
-    iters: u64,
-}
-
-/// Collects section results + derived scalars (speedups) and renders the
-/// `BENCH_*.json` trajectory document.
-#[derive(Default)]
-struct Recorder {
-    records: Vec<Rec>,
-    derived: Vec<(String, f64)>,
-    /// environment strings for the `"gemm"` object (dispatched kernel,
-    /// CPU features) so a trajectory point is attributable to the code
-    /// path that produced it
-    notes: Vec<(String, String)>,
-}
-
-impl Recorder {
-    fn add(&mut self, section: &str, r: &BenchResult) {
-        self.records.push(Rec {
-            section: section.to_string(),
-            name: r.name.clone(),
-            us_per_iter: r.per_iter_ns() / 1000.0,
-            min_us: r.min.as_nanos() as f64 / r.iters_per_run as f64 / 1000.0,
-            max_us: r.max.as_nanos() as f64 / r.iters_per_run as f64 / 1000.0,
-            iters: r.iters_per_run,
-        });
-    }
-
-    fn derive(&mut self, name: String, value: f64) {
-        self.derived.push((name, value));
-    }
-
-    fn note(&mut self, name: &str, value: String) {
-        self.notes.push((name.to_string(), value));
-    }
-
-    fn to_json(&self, smoke: bool) -> String {
-        let now = std::time::SystemTime::now()
-            .duration_since(std::time::UNIX_EPOCH)
-            .map(|d| d.as_secs())
-            .unwrap_or(0);
-        let mut s = String::new();
-        s.push_str("{\n");
-        s.push_str("  \"schema\": \"sonew-bench-v1\",\n");
-        s.push_str(&format!("  \"unix_time_s\": {now},\n"));
-        s.push_str(&format!("  \"threads\": {},\n", sonew::linalg::hw_threads()));
-        s.push_str(&format!("  \"smoke\": {smoke},\n"));
-        s.push_str("  \"gemm\": {\n");
-        for (i, (name, v)) in self.notes.iter().enumerate() {
-            let comma = if i + 1 < self.notes.len() { "," } else { "" };
-            s.push_str(&format!("    \"{name}\": \"{v}\"{comma}\n"));
-        }
-        s.push_str("  },\n");
-        s.push_str("  \"results\": [\n");
-        for (i, r) in self.records.iter().enumerate() {
-            let comma = if i + 1 < self.records.len() { "," } else { "" };
-            s.push_str(&format!(
-                "    {{\"section\": \"{}\", \"name\": \"{}\", \"us_per_iter\": {:.3}, \
-                 \"min_us\": {:.3}, \"max_us\": {:.3}, \"iters\": {}}}{comma}\n",
-                r.section, r.name, r.us_per_iter, r.min_us, r.max_us, r.iters
-            ));
-        }
-        s.push_str("  ],\n");
-        s.push_str("  \"derived\": [\n");
-        for (i, (name, v)) in self.derived.iter().enumerate() {
-            let comma = if i + 1 < self.derived.len() { "," } else { "" };
-            s.push_str(&format!("    {{\"name\": \"{name}\", \"value\": {v:.3}}}{comma}\n"));
-        }
-        s.push_str("  ]\n}\n");
-        s
-    }
-}
 
 /// The pre-engine kernel (PR 2-era `matmul_into`): i-k-j streaming
 /// triple loop with the same row-chunk threading — the baseline the
@@ -175,7 +104,7 @@ fn main() {
         }
     }
     let run = |name: &str| filter.is_empty() || name.contains(&filter);
-    let mut rec = Recorder::default();
+    let mut rec = BenchRecorder::new();
     if smoke {
         println!("(smoke mode: reduced sizes and iteration counts)");
     }
@@ -227,8 +156,14 @@ fn main() {
         let feats = sonew::linalg::kernels::cpu_features();
         let avail: Vec<&str> =
             sonew::linalg::kernels::available().iter().map(|kk| kk.name).collect();
-        println!("    micro-kernel: {} (cpu: {feats}; available: {})", active.name,
-            avail.join(","));
+        sonew::telemetry::emit_fingerprint(
+            "gemm",
+            format_args!(
+                "micro-kernel: {} (cpu: {feats}; available: {})",
+                active.name,
+                avail.join(",")
+            ),
+        );
         rec.note("kernel", active.name.to_string());
         rec.note("cpu_features", feats);
         rec.note("kernels_available", avail.join(","));
@@ -728,10 +663,86 @@ fn main() {
         rec.derive(format!("comm_allreduce_us_world{world}_n{n}"), us[0]);
     }
 
-    let out = std::env::var("SONEW_BENCH_OUT").unwrap_or_else(|_| "BENCH_latest.json".into());
-    match std::fs::write(&out, rec.to_json(smoke)) {
-        Ok(()) => println!("bench trajectory written to {out}"),
-        Err(e) => eprintln!("failed to write {out}: {e}"),
+    if run("telemetry") {
+        println!("== [telemetry] observability overhead ==");
+        use sonew::telemetry;
+        // raw span cost on a hot path: disabled is one relaxed atomic
+        // load; enabled pays two clock reads plus a ring push
+        let (iters, kk): (u64, usize) = if smoke { (10_000, 3) } else { (100_000, 5) };
+        telemetry::set_enabled(false);
+        let r_off = bench("span record (tracing disabled)", iters, kk, |k| {
+            for _ in 0..k {
+                let _s = sonew::span!("bench.telemetry.probe");
+            }
+        });
+        println!("{}", r_off.report());
+        rec.add("telemetry", &r_off);
+        telemetry::set_enabled(true);
+        let r_on = bench("span record (tracing enabled)", iters, kk, |k| {
+            for _ in 0..k {
+                let _s = sonew::span!("bench.telemetry.probe");
+            }
+        });
+        telemetry::set_enabled(false);
+        let _ = telemetry::trace::drain(); // discard the probe spans
+        println!("{}", r_on.report());
+        rec.add("telemetry", &r_on);
+        rec.derive("telemetry_span_ns_disabled".to_string(), r_off.per_iter_ns());
+        rec.derive("telemetry_span_ns_enabled".to_string(), r_on.per_iter_ns());
+
+        // end-to-end contract: an instrumented LM training step must be
+        // < 5% slower with tracing enabled and unaffected when disabled
+        let steps: u64 = if smoke { 6 } else { 20 };
+        let time_lm = |steps: u64| -> f64 {
+            let model = Transformer::new(LmConfig::small());
+            let params = model.init(5);
+            let blocks = sonew::optim::blocks_of(&model.layout);
+            let mats = sonew::optim::mat_blocks_of(&model.layout);
+            let spec = OptSpec::parse("adam").unwrap();
+            let opt = spec
+                .build(model.total, &blocks, &mats, &HyperParams::default())
+                .unwrap();
+            let provider = sonew::coordinator::trainer::BackendLmProvider::new(
+                Box::new(NativeBackend::new()),
+                "lm_small_grads",
+                sonew::data::LmCorpus::new(model.cfg.vocab, 6),
+                4,
+                model.cfg.seq,
+            );
+            let cfg = sonew::coordinator::SessionConfig {
+                train: sonew::coordinator::TrainConfig {
+                    steps,
+                    schedule: sonew::coordinator::Schedule::Constant { lr: 1e-3 },
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let mut s =
+                sonew::coordinator::TrainSession::new(spec, opt, params, provider, cfg)
+                    .unwrap();
+            let t = std::time::Instant::now();
+            s.run().unwrap();
+            t.elapsed().as_nanos() as f64 / 1000.0 / steps as f64
+        };
+        let _ = time_lm(steps); // warm the executor + backend caches
+        let off_us = time_lm(steps);
+        telemetry::set_enabled(true);
+        let on_us = time_lm(steps);
+        telemetry::set_enabled(false);
+        let _ = telemetry::trace::drain();
+        let pct = (on_us - off_us) / off_us * 100.0;
+        println!("    lm step tracing off: {off_us:.1} us/step");
+        println!("    lm step tracing on : {on_us:.1} us/step ({pct:+.1}%)");
+        rec.derive("telemetry_lm_step_us_off".to_string(), off_us);
+        rec.derive("telemetry_lm_step_us_on".to_string(), on_us);
+        rec.derive("telemetry_lm_step_overhead_pct".to_string(), pct);
+    }
+
+    let report = rec.finish(smoke, sonew::linalg::hw_threads());
+    let mut sink = JsonFileSink::from_env();
+    match sink.emit(&report) {
+        Ok(()) => println!("bench trajectory written to {}", sink.path.display()),
+        Err(e) => eprintln!("{e:#}"),
     }
     println!("bench done");
 }

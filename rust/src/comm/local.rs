@@ -22,20 +22,24 @@ impl Communicator for LocalComm {
         1
     }
 
-    fn all_reduce_sum(&self, _buf: &mut [f32]) -> Result<()> {
+    fn all_reduce_sum(&self, buf: &mut [f32]) -> Result<()> {
+        let _span = crate::span!("comm.all_reduce").arg("bytes", (buf.len() * 4) as u64);
         Ok(())
     }
 
-    fn broadcast(&self, _buf: &mut [u8], root: usize) -> Result<()> {
+    fn broadcast(&self, buf: &mut [u8], root: usize) -> Result<()> {
+        let _span = crate::span!("comm.broadcast").arg("bytes", buf.len() as u64);
         ensure!(root == 0, "broadcast root must be rank 0, got {root}");
         Ok(())
     }
 
     fn gather(&self, payload: &[u8]) -> Result<Option<Vec<Vec<u8>>>> {
+        let _span = crate::span!("comm.gather").arg("bytes", payload.len() as u64);
         Ok(Some(vec![payload.to_vec()]))
     }
 
     fn barrier(&self) -> Result<()> {
+        let _span = crate::span!("comm.barrier");
         Ok(())
     }
 }

@@ -55,6 +55,34 @@ const MAGIC: [u8; 4] = *b"SNCM";
 /// fast, not attempt a multi-gigabyte allocation.
 const MAX_FRAME: u64 = 1 << 30;
 
+/// Wire bytes around every payload: 13-byte header (magic + tag + len)
+/// plus the 8-byte trailing checksum.
+const FRAME_OVERHEAD: u64 = 21;
+
+fn bytes_sent_counter() -> &'static crate::telemetry::Counter {
+    static C: std::sync::OnceLock<std::sync::Arc<crate::telemetry::Counter>> =
+        std::sync::OnceLock::new();
+    C.get_or_init(|| crate::telemetry::counter("comm.tcp.bytes_sent"))
+}
+
+fn bytes_recv_counter() -> &'static crate::telemetry::Counter {
+    static C: std::sync::OnceLock<std::sync::Arc<crate::telemetry::Counter>> =
+        std::sync::OnceLock::new();
+    C.get_or_init(|| crate::telemetry::counter("comm.tcp.bytes_recv"))
+}
+
+fn frames_sent_counter() -> &'static crate::telemetry::Counter {
+    static C: std::sync::OnceLock<std::sync::Arc<crate::telemetry::Counter>> =
+        std::sync::OnceLock::new();
+    C.get_or_init(|| crate::telemetry::counter("comm.tcp.frames_sent"))
+}
+
+fn frames_recv_counter() -> &'static crate::telemetry::Counter {
+    static C: std::sync::OnceLock<std::sync::Arc<crate::telemetry::Counter>> =
+        std::sync::OnceLock::new();
+    C.get_or_init(|| crate::telemetry::counter("comm.tcp.frames_recv"))
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 #[repr(u8)]
 enum Tag {
@@ -251,6 +279,19 @@ impl TcpComm {
     fn peer_label(&self, rank: usize) -> String {
         format!("{} {rank}", self.cfg.peer)
     }
+
+    /// Attribute one frame's wire bytes (payload + [`FRAME_OVERHEAD`])
+    /// to the remote `rank`. Registry lookups go by name, so the
+    /// per-peer counter set materializes lazily as peers are talked to.
+    fn count_tx(&self, rank: usize, payload: usize) {
+        crate::telemetry::counter(&format!("comm.tcp.peer{rank}.bytes_sent"))
+            .add(FRAME_OVERHEAD + payload as u64);
+    }
+
+    fn count_rx(&self, rank: usize, payload: usize) {
+        crate::telemetry::counter(&format!("comm.tcp.peer{rank}.bytes_recv"))
+            .add(FRAME_OVERHEAD + payload as u64);
+    }
 }
 
 fn prepare_stream(stream: &TcpStream, cfg: &TcpConfig) -> Result<()> {
@@ -286,6 +327,8 @@ fn write_frame(w: &mut TcpStream, tag: Tag, payload: &[u8]) -> Result<()> {
     w.write_all(payload)?;
     w.write_all(&fnv1a64(payload).to_le_bytes())?;
     w.flush()?;
+    frames_sent_counter().inc();
+    bytes_sent_counter().add(FRAME_OVERHEAD + payload.len() as u64);
     Ok(())
 }
 
@@ -339,6 +382,8 @@ fn read_frame(r: &mut TcpStream, expect: Tag, peer: &str, cfg: &TcpConfig) -> Re
         "{peer}: corrupt {} frame — checksum {got:#018x}, expected {want:#018x}",
         tag.name()
     );
+    frames_recv_counter().inc();
+    bytes_recv_counter().add(FRAME_OVERHEAD + len);
     Ok(payload)
 }
 
@@ -368,12 +413,15 @@ impl Communicator for TcpComm {
     }
 
     fn all_reduce_sum(&self, buf: &mut [f32]) -> Result<()> {
+        let _span = crate::span!("comm.all_reduce").arg("bytes", (buf.len() * 4) as u64);
         match &self.role {
             Role::Worker { conn } => {
                 let mut s = conn.lock().unwrap();
                 write_frame(&mut s, Tag::AllReduce, &f32s_to_le(buf))
                     .context("sending all_reduce contribution to hub")?;
+                self.count_tx(0, buf.len() * 4);
                 let sum = le_to_f32s(&read_frame(&mut s, Tag::AllReduce, "hub", &self.cfg)?)?;
+                self.count_rx(0, sum.len() * 4);
                 ensure!(
                     sum.len() == buf.len(),
                     "hub returned {} floats, this rank contributed {}",
@@ -391,6 +439,7 @@ impl Communicator for TcpComm {
                     let mut s = conn.lock().unwrap();
                     let v =
                         le_to_f32s(&read_frame(&mut s, Tag::AllReduce, &peer, &self.cfg)?)?;
+                    self.count_rx(i + 1, v.len() * 4);
                     ensure!(
                         v.len() == buf.len(),
                         "{peer} contributed {} floats, rank 0 has {}",
@@ -409,6 +458,7 @@ impl Communicator for TcpComm {
                     let mut s = conn.lock().unwrap();
                     write_frame(&mut s, Tag::AllReduce, &bytes)
                         .with_context(|| format!("returning sum to {}", self.peer_label(i + 1)))?;
+                    self.count_tx(i + 1, bytes.len());
                 }
                 buf.copy_from_slice(&sum);
             }
@@ -417,6 +467,7 @@ impl Communicator for TcpComm {
     }
 
     fn broadcast(&self, buf: &mut [u8], root: usize) -> Result<()> {
+        let _span = crate::span!("comm.broadcast").arg("bytes", buf.len() as u64);
         ensure!(root == 0, "broadcast root must be rank 0, got {root}");
         match &self.role {
             Role::Hub { conns } => {
@@ -424,11 +475,13 @@ impl Communicator for TcpComm {
                     let mut s = conn.lock().unwrap();
                     write_frame(&mut s, Tag::Bcast, buf)
                         .with_context(|| format!("broadcasting to {}", self.peer_label(i + 1)))?;
+                    self.count_tx(i + 1, buf.len());
                 }
             }
             Role::Worker { conn } => {
                 let mut s = conn.lock().unwrap();
                 let bytes = read_frame(&mut s, Tag::Bcast, "hub", &self.cfg)?;
+                self.count_rx(0, bytes.len());
                 ensure!(
                     bytes.len() == buf.len(),
                     "broadcast size mismatch: hub sent {} bytes, this rank expects {}",
@@ -442,11 +495,13 @@ impl Communicator for TcpComm {
     }
 
     fn gather(&self, payload: &[u8]) -> Result<Option<Vec<Vec<u8>>>> {
+        let _span = crate::span!("comm.gather").arg("bytes", payload.len() as u64);
         match &self.role {
             Role::Worker { conn } => {
                 let mut s = conn.lock().unwrap();
                 write_frame(&mut s, Tag::Gather, payload)
                     .context("sending gather payload to hub")?;
+                self.count_tx(0, payload.len());
                 Ok(None)
             }
             Role::Hub { conns } => {
@@ -455,7 +510,9 @@ impl Communicator for TcpComm {
                 for (i, conn) in conns.iter().enumerate() {
                     let peer = self.peer_label(i + 1);
                     let mut s = conn.lock().unwrap();
-                    all.push(read_frame(&mut s, Tag::Gather, &peer, &self.cfg)?);
+                    let part = read_frame(&mut s, Tag::Gather, &peer, &self.cfg)?;
+                    self.count_rx(i + 1, part.len());
+                    all.push(part);
                 }
                 Ok(Some(all))
             }
@@ -463,22 +520,27 @@ impl Communicator for TcpComm {
     }
 
     fn barrier(&self) -> Result<()> {
+        let _span = crate::span!("comm.barrier");
         match &self.role {
             Role::Worker { conn } => {
                 let mut s = conn.lock().unwrap();
                 write_frame(&mut s, Tag::Barrier, &[]).context("entering barrier")?;
+                self.count_tx(0, 0);
                 read_frame(&mut s, Tag::Barrier, "hub", &self.cfg)?;
+                self.count_rx(0, 0);
             }
             Role::Hub { conns } => {
                 for (i, conn) in conns.iter().enumerate() {
                     let peer = self.peer_label(i + 1);
                     let mut s = conn.lock().unwrap();
                     read_frame(&mut s, Tag::Barrier, &peer, &self.cfg)?;
+                    self.count_rx(i + 1, 0);
                 }
                 for (i, conn) in conns.iter().enumerate() {
                     let mut s = conn.lock().unwrap();
                     write_frame(&mut s, Tag::Barrier, &[])
                         .with_context(|| format!("releasing {}", self.peer_label(i + 1)))?;
+                    self.count_tx(i + 1, 0);
                 }
             }
         }

@@ -206,6 +206,7 @@ impl Communicator for ThreadComm {
     }
 
     fn all_reduce_sum(&self, buf: &mut [f32]) -> Result<()> {
+        let _span = crate::span!("comm.all_reduce").arg("bytes", (buf.len() * 4) as u64);
         match self.run("all_reduce_sum", Deposit::F32(buf.to_vec()))? {
             Outcome::F32(sum) => {
                 buf.copy_from_slice(&sum);
@@ -216,6 +217,7 @@ impl Communicator for ThreadComm {
     }
 
     fn broadcast(&self, buf: &mut [u8], root: usize) -> Result<()> {
+        let _span = crate::span!("comm.broadcast").arg("bytes", buf.len() as u64);
         ensure!(root == 0, "broadcast root must be rank 0, got {root}");
         match self.run("broadcast", Deposit::Bytes(buf.to_vec()))? {
             Outcome::Bytes(bytes) => {
@@ -227,6 +229,7 @@ impl Communicator for ThreadComm {
     }
 
     fn gather(&self, payload: &[u8]) -> Result<Option<Vec<Vec<u8>>>> {
+        let _span = crate::span!("comm.gather").arg("bytes", payload.len() as u64);
         match self.run("gather", Deposit::Bytes(payload.to_vec()))? {
             Outcome::Gather(all) => {
                 Ok((self.rank == 0).then(|| all.as_ref().clone()))
@@ -236,6 +239,7 @@ impl Communicator for ThreadComm {
     }
 
     fn barrier(&self) -> Result<()> {
+        let _span = crate::span!("comm.barrier");
         self.run("barrier", Deposit::Empty).map(|_| ())
     }
 }

@@ -48,6 +48,7 @@ pub struct Checkpoint {
 /// (the exact-resume snapshot) and ship the I/O to a background worker.
 pub fn write_atomic_bytes(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
     let path = path.as_ref();
+    let _span = crate::span!("ckpt.write").arg("bytes", bytes.len() as u64);
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent).ok();
     }
@@ -66,6 +67,7 @@ pub fn write_atomic_bytes(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
         // force the data to disk (not just the page cache) before the
         // rename makes the new file visible, so a crash never replaces
         // a good checkpoint with a hollow one
+        let _fsync = crate::span!("ckpt.fsync");
         f.sync_all()
             .with_context(|| format!("fsync {}", tmp.display()))?;
         Ok(())
@@ -85,11 +87,20 @@ pub fn write_atomic_bytes(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
             Some(p) if !p.as_os_str().is_empty() => p,
             _ => Path::new("."),
         };
+        let _fsync = crate::span!("ckpt.fsync");
         std::fs::File::open(dir)
             .and_then(|d| d.sync_all())
             .with_context(|| format!("fsync directory {}", dir.display()))?;
     }
+    ckpt_bytes_counter().add(bytes.len() as u64);
     Ok(())
+}
+
+/// Total checkpoint bytes durably written by this process.
+fn ckpt_bytes_counter() -> &'static crate::telemetry::Counter {
+    static C: std::sync::OnceLock<std::sync::Arc<crate::telemetry::Counter>> =
+        std::sync::OnceLock::new();
+    C.get_or_init(|| crate::telemetry::counter("ckpt.bytes_written"))
 }
 
 /// Whether a `.{pid}.tmp` owner is provably gone. Our own pid (an

@@ -1,5 +1,16 @@
-//! Training metrics: loss curves, phase timers, CSV emission — the data
-//! behind every figure the harnesses regenerate.
+//! Training metrics: loss curves, phase attribution, CSV emission — the
+//! data behind every figure the harnesses regenerate.
+//!
+//! The per-stage `Duration` fields are no longer hand-timed here: every
+//! sample arrives from `telemetry::timed`, which stamps the same clock
+//! pair into the process-wide stage histograms (`train.data_prep`,
+//! `train.fwd_bwd`, `train.opt_step`, `train.ckpt`) and — when `--trace`
+//! is active — into the span ring buffers. `Metrics` is the thin
+//! per-session view of those measurements (a sweep runs many sessions
+//! concurrently, so the process-global registry can't replace it);
+//! `stage_summary()` keeps its historical one-line format.
+//! `rust/tests/telemetry.rs` asserts the equivalence: the stage sums
+//! here equal the span durations the trace recorded, to the nanosecond.
 
 use std::time::{Duration, Instant};
 

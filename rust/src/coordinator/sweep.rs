@@ -221,6 +221,7 @@ pub fn evaluate_shard_outcomes(
     (shard..trials)
         .step_by(world.max(1))
         .map(|i| {
+            let _span = crate::span!("sweep.trial").arg("index", i as u64);
             let trial = space.sample_at(seed, i, spec, base);
             let obj = objective(&trial);
             TrialOutcome { index: i, objective: obj, diverged: !obj.is_finite() }
@@ -292,6 +293,7 @@ fn evaluate_indices(
 ) -> Shard {
     let outcomes: Vec<TrialOutcome> = indices
         .map(|i| {
+            let _span = crate::span!("sweep.trial").arg("index", i as u64);
             let trial = space.sample_at(seed, i, spec, base);
             let obj = objective(&trial);
             TrialOutcome { index: i, objective: obj, diverged: !obj.is_finite() }

@@ -28,7 +28,6 @@
 
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
 
 use anyhow::{Context, Result};
 
@@ -95,9 +94,9 @@ fn apply_step(
     cfg.precision.quantize_slice(&mut grads);
 
     let lr = cfg.schedule.at(step);
-    let t_opt = std::time::Instant::now();
-    opt.step(params, &grads, lr);
-    metrics.opt_time += t_opt.elapsed();
+    let ((), opt_spent) =
+        crate::telemetry::timed("train.opt_step", || opt.step(params, &grads, lr));
+    metrics.opt_time += opt_spent;
 
     if step % cfg.log_every == 0 || step + 1 == cfg.steps {
         metrics.record(step, loss, lr);
@@ -537,14 +536,16 @@ impl<P: StatefulProvider, O: Optimizer> TrainSession<P, O> {
                 // sum — bitwise-equal at any world size. Runs the
                 // synchronous loop (prefetch would let ranks' stream
                 // positions drift across checkpoint boundaries).
-                let t = Instant::now();
-                let (loss, grads) = dp_loss_and_grad(
-                    &self.provider,
-                    &self.params,
-                    comm.as_ref(),
-                    self.cfg.grad_shards,
-                )?;
-                metrics.grad_time += t.elapsed();
+                let (dp, spent) = crate::telemetry::timed("train.fwd_bwd", || {
+                    dp_loss_and_grad(
+                        &self.provider,
+                        &self.params,
+                        comm.as_ref(),
+                        self.cfg.grad_shards,
+                    )
+                });
+                metrics.grad_time += spent;
+                let (loss, grads) = dp?;
                 apply_step(
                     &mut self.params,
                     &mut self.opt,
@@ -560,10 +561,10 @@ impl<P: StatefulProvider, O: Optimizer> TrainSession<P, O> {
                 let batch = match prefetched.take() {
                     Some(b) => b,
                     None => {
-                        let t = Instant::now();
-                        let b = self.provider.prepare()?;
-                        metrics.data_time += t.elapsed();
-                        b
+                        let (b, spent) =
+                            crate::telemetry::timed("train.data_prep", || self.provider.prepare());
+                        metrics.data_time += spent;
+                        b?
                     }
                 };
                 // checkpointable sessions snapshot the stream position
@@ -584,18 +585,18 @@ impl<P: StatefulProvider, O: Optimizer> TrainSession<P, O> {
                     None
                 };
                 let step_fg = || -> Result<()> {
-                    let t = Instant::now();
-                    let (loss, grads) = provider.consume(batch, params)?;
-                    metrics.grad_time += t.elapsed();
+                    let (fb, spent) = crate::telemetry::timed("train.fwd_bwd", || {
+                        provider.consume(batch, params)
+                    });
+                    metrics.grad_time += spent;
+                    let (loss, grads) = fb?;
                     apply_step(params, opt, &cfg.train, step, loss, grads, &mut metrics)
                 };
                 let (next, res) = match pf {
                     Some(src) => {
                         let (bg, fg) = executor::global().overlap(
                             move || {
-                                let t = Instant::now();
-                                let b = src.prepare_batch();
-                                (b, t.elapsed())
+                                crate::telemetry::timed("train.data_prep", || src.prepare_batch())
                             },
                             step_fg,
                         );
@@ -617,9 +618,11 @@ impl<P: StatefulProvider, O: Optimizer> TrainSession<P, O> {
             } else {
                 // one-shot path (closures, custom providers): no split,
                 // no prefetch — identical to the historical loop
-                let t = Instant::now();
-                let (loss, grads) = self.provider.next_loss_and_grad(&self.params)?;
-                metrics.grad_time += t.elapsed();
+                let (fb, spent) = crate::telemetry::timed("train.fwd_bwd", || {
+                    self.provider.next_loss_and_grad(&self.params)
+                });
+                metrics.grad_time += spent;
+                let (loss, grads) = fb?;
                 apply_step(
                     &mut self.params,
                     &mut self.opt,
@@ -635,48 +638,60 @@ impl<P: StatefulProvider, O: Optimizer> TrainSession<P, O> {
             self.step += 1;
             if self.cfg.checkpoint_every > 0 && self.step % self.cfg.checkpoint_every == 0 {
                 if let Some(path) = self.cfg.checkpoint_path.clone() {
-                    let t = Instant::now();
                     if let Some(comm) = self.cfg.comm.clone() {
                         // data-parallel: rank 0 writes synchronously
                         // (all ranks hold identical bytes); the barrier
                         // keeps every rank at the boundary until the
                         // file is durable, so no rank can train ahead
                         // of a checkpoint another process may restore
-                        if comm.rank() == 0 {
-                            let bytes = self.encode_checkpoint(stream_state.as_deref())?;
-                            checkpoint::write_atomic_bytes(&path, &bytes)?;
-                        }
-                        comm.barrier()?;
-                        metrics.ckpt_time += t.elapsed();
+                        let (ck, spent) =
+                            crate::telemetry::timed("train.ckpt", || -> Result<()> {
+                                if comm.rank() == 0 {
+                                    let bytes =
+                                        self.encode_checkpoint(stream_state.as_deref())?;
+                                    checkpoint::write_atomic_bytes(&path, &bytes)?;
+                                }
+                                comm.barrier()
+                            });
+                        metrics.ckpt_time += spent;
+                        ck?;
                         continue;
                     }
-                    // the previous write is this write's barrier: at
-                    // most one in flight, completion in submission order
-                    if let Some(j) = ck_job.take() {
-                        j.join().context("background checkpoint write failed")?;
-                    }
-                    // serialize synchronously — the bytes are the
-                    // exact-resume snapshot at this boundary, immune to
-                    // whatever the next steps mutate
-                    let bytes = self.encode_checkpoint(stream_state.as_deref())?;
-                    if self.cfg.pipeline {
-                        ck_job = Some(
-                            executor::global()
-                                .submit(move || checkpoint::write_atomic_bytes(&path, &bytes)),
-                        );
-                    } else {
-                        checkpoint::write_atomic_bytes(&path, &bytes)?;
-                    }
-                    metrics.ckpt_time += t.elapsed();
+                    let prev = ck_job.take();
+                    let (ck, spent) = crate::telemetry::timed(
+                        "train.ckpt",
+                        || -> Result<Option<JobHandle<Result<()>>>> {
+                            // the previous write is this write's barrier:
+                            // at most one in flight, completion in
+                            // submission order
+                            if let Some(j) = prev {
+                                j.join().context("background checkpoint write failed")?;
+                            }
+                            // serialize synchronously — the bytes are the
+                            // exact-resume snapshot at this boundary,
+                            // immune to whatever the next steps mutate
+                            let bytes = self.encode_checkpoint(stream_state.as_deref())?;
+                            if self.cfg.pipeline {
+                                Ok(Some(executor::global().submit(move || {
+                                    checkpoint::write_atomic_bytes(&path, &bytes)
+                                })))
+                            } else {
+                                checkpoint::write_atomic_bytes(&path, &bytes)?;
+                                Ok(None)
+                            }
+                        },
+                    );
+                    metrics.ckpt_time += spent;
+                    ck_job = ck?;
                 }
             }
         }
         // flush barrier: never return with a write in flight, so the
         // checkpoint on disk is complete once run_steps/finish returns
         if let Some(j) = ck_job.take() {
-            let t = Instant::now();
-            j.join().context("background checkpoint write failed")?;
-            metrics.ckpt_time += t.elapsed();
+            let (ck, spent) = crate::telemetry::timed("train.ckpt", || j.join());
+            metrics.ckpt_time += spent;
+            ck.context("background checkpoint write failed")?;
         }
         Ok(metrics)
     }

@@ -23,4 +23,5 @@ pub mod serving;
 pub mod sonew;
 pub mod runtime;
 pub mod tables;
+pub mod telemetry;
 pub mod util;

@@ -13,6 +13,8 @@
 //! sonew train --opt tds --hosts 2            # data-parallel, bit-identical
 //! sonew serve --synth 3000 --shards 4        # online predict-then-update
 //! sonew serve --replay req.log --store ckpts # replay a request log, durable
+//! sonew train --opt tds --trace t.jsonl      # any command: export a span trace
+//! sonew report t.jsonl                       # per-phase latency tables from a trace
 //! sonew opts                                 # optimizer spec registry
 //! sonew list                                 # artifact inventory
 //! ```
@@ -49,7 +51,16 @@ fn main() {
 
 fn run() -> Result<()> {
     let args = Args::parse();
-    match args.positional.first().map(|s| s.as_str()) {
+    // --trace <path>: record span tracing for the whole command and
+    // export Chrome trace-event JSONL on success. Tracing observes
+    // only — every deterministic output (checkpoints, CSVs, [dp]/[pv]
+    // fingerprints) is bit-identical with or without it, which
+    // tests/telemetry.rs asserts.
+    let trace_out = args.get("trace").map(std::path::PathBuf::from);
+    if trace_out.is_some() {
+        sonew::telemetry::set_enabled(true);
+    }
+    let result = match args.positional.first().map(|s| s.as_str()) {
         Some("table") => table(&args),
         Some("lm") => lm(&args),
         Some("train") => train(&args),
@@ -57,6 +68,7 @@ fn run() -> Result<()> {
         Some("sweep") => sweep(&args),
         Some("sweep-worker") => sweep_worker(&args),
         Some("serve") => serve(&args),
+        Some("report") => report(&args),
         Some("opts") => {
             print!("{}", registry_help());
             Ok(())
@@ -78,16 +90,39 @@ fn run() -> Result<()> {
                  \x20                 deterministically (`sonew sweep --help`)\n\
                  \x20 serve           online serving: sharded model store, per-request\n\
                  \x20                 predict-then-update (`sonew serve --help`)\n\
+                 \x20 report <trace>  aggregate a --trace JSONL into per-phase tables\n\
+                 \x20                 (--check validates the schema only)\n\
                  \x20 opts            optimizer spec registry\n\
                  \x20 list            artifact inventory + active backend\n\
                  \n\
+                 every command takes --trace <path> to export a Chrome\n\
+                 trace-event JSONL of the run (observability only — output\n\
+                 bytes are identical with or without it).\n\
                  `--opt` takes an optimizer spec (name[:key=value,...]);\n\
                  run `sonew opts` or `sonew train --help` for the registry.\n\
                  see README.md for the full flag reference"
             );
             Ok(())
         }
+    };
+    if result.is_ok() {
+        if let Some(path) = &trace_out {
+            sonew::telemetry::write_trace(path)
+                .with_context(|| format!("writing trace {}", path.display()))?;
+            eprintln!("trace: wrote {}", path.display());
+        }
     }
+    result
+}
+
+/// `sonew report <trace.jsonl> [--check]` — validate a trace produced
+/// by `--trace` and print per-phase latency tables.
+fn report(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .context("usage: sonew report <trace.jsonl> [--check]")?;
+    sonew::telemetry::report::run(std::path::Path::new(path.as_str()), args.has("check"))
 }
 
 /// Figure-3 LM pretraining (AdaFactor vs tridiag-SONew) — hermetic via
@@ -552,12 +587,18 @@ fn dp_session(job: &TrainJob, comm: Arc<dyn Communicator>) -> Result<()> {
         for w in &session.params {
             param_bytes.extend_from_slice(&w.to_le_bytes());
         }
-        println!("[dp] spec={spec} shards={} steps={}", job.shards, session.step);
-        println!(
-            "[dp] loss_trace=0x{:016x} params=0x{:016x} final_loss={:?}",
-            sonew::data::requests::fnv1a64(&loss_bits),
-            sonew::data::requests::fnv1a64(&param_bytes),
-            m.tail_mean_loss(3).unwrap_or(f32::NAN),
+        sonew::telemetry::emit_fingerprint(
+            "dp",
+            format_args!("spec={spec} shards={} steps={}", job.shards, session.step),
+        );
+        sonew::telemetry::emit_fingerprint(
+            "dp",
+            format_args!(
+                "loss_trace=0x{:016x} params=0x{:016x} final_loss={:?}",
+                sonew::data::requests::fnv1a64(&loss_bits),
+                sonew::data::requests::fnv1a64(&param_bytes),
+                m.tail_mean_loss(3).unwrap_or(f32::NAN),
+            ),
         );
     }
     Ok(())
@@ -868,15 +909,21 @@ fn serve(args: &Args) -> Result<()> {
     let wall = t0.elapsed();
     store.flush()?;
     for p in &report.curve {
-        println!("[pv] seen={} loss={:.6} acc={:.6}", p.seen, p.mean_loss, p.accuracy);
+        sonew::telemetry::emit_fingerprint(
+            "pv",
+            format_args!("seen={} loss={:.6} acc={:.6}", p.seen, p.mean_loss, p.accuracy),
+        );
     }
     let s = report.summary;
-    println!(
-        "[pv] final requests={} models={} loss={:.6} acc={:.6}",
-        s.requests,
-        store.len(),
-        s.mean_loss,
-        s.accuracy
+    sonew::telemetry::emit_fingerprint(
+        "pv",
+        format_args!(
+            "final requests={} models={} loss={:.6} acc={:.6}",
+            s.requests,
+            store.len(),
+            s.mean_loss,
+            s.accuracy
+        ),
     );
     // per-model fingerprints: updates + FNV over the exact param bits —
     // the cross-shard-count determinism surface CI diffs
@@ -886,10 +933,13 @@ fn serve(args: &Args) -> Result<()> {
         for w in m.params() {
             bytes.extend_from_slice(&w.to_le_bytes());
         }
-        println!(
-            "[pv] model {id} updates={} params=0x{:016x}",
-            m.updates(),
-            sonew::data::requests::fnv1a64(&bytes)
+        sonew::telemetry::emit_fingerprint(
+            "pv",
+            format_args!(
+                "model {id} updates={} params=0x{:016x}",
+                m.updates(),
+                sonew::data::requests::fnv1a64(&bytes)
+            ),
         );
     }
     println!(

@@ -26,6 +26,22 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
+use crate::telemetry::Counter;
+
+/// Pool telemetry, registered once and hit with one relaxed atomic add
+/// per event (the registry map is never touched on the job path).
+fn jobs_counter() -> &'static Counter {
+    static C: OnceLock<Arc<Counter>> = OnceLock::new();
+    C.get_or_init(|| crate::telemetry::counter("exec.jobs"))
+}
+
+/// Help-first steals: jobs a thread executed while *waiting* on its own
+/// batch (on a zero-worker pool this counts the submitter self-drain).
+fn steals_counter() -> &'static Counter {
+    static C: OnceLock<Arc<Counter>> = OnceLock::new();
+    C.get_or_init(|| crate::telemetry::counter("exec.steals"))
+}
+
 /// A boxed unit of work submitted to the pool.
 pub type Task<'s> = Box<dyn FnOnce() + Send + 's>;
 
@@ -77,6 +93,7 @@ pub struct Executor {
 /// re-raised by the waiting `scope` call, not on the worker.
 fn execute(job: Job) {
     let Job { run, batch } = job;
+    jobs_counter().inc();
     let result = catch_unwind(AssertUnwindSafe(run));
     let mut st = batch.state.lock().unwrap();
     if let Err(payload) = result {
@@ -149,6 +166,7 @@ impl Executor {
             return;
         }
         let n_jobs = jobs.len();
+        let _span = crate::span!("exec.scope").arg("jobs", n_jobs as u64);
         let batch = Arc::new(Batch::new(n_jobs));
         {
             let mut q = self.shared.queue.lock().unwrap();
@@ -282,7 +300,10 @@ fn wait_for(shared: &Shared, batch: &Batch) {
         }
         let job = shared.queue.lock().unwrap().pop_front();
         match job {
-            Some(j) => execute(j),
+            Some(j) => {
+                steals_counter().inc();
+                execute(j);
+            }
             None => break,
         }
     }

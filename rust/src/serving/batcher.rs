@@ -46,13 +46,19 @@ pub fn replay(
     outs.resize_with(n, || Ok(Vec::new()));
     {
         let mut tasks: Vec<Task> = Vec::new();
-        for ((shard, queue), out) in
-            shards.iter_mut().zip(queues).zip(outs.iter_mut())
+        for (si, ((shard, queue), out)) in
+            shards.iter_mut().zip(queues).zip(outs.iter_mut()).enumerate()
         {
+            let depth = queue.len();
+            crate::telemetry::gauge(&format!("serve.shard{si}.queue_depth"))
+                .set(depth as i64);
             if queue.is_empty() {
                 continue;
             }
             tasks.push(Box::new(move || {
+                let _span = crate::span!("serve.shard")
+                    .arg("shard", si as u64)
+                    .arg("queue", depth as u64);
                 *out = (|| {
                     let mut res = Vec::with_capacity(queue.len());
                     for (idx, req) in queue {

@@ -52,9 +52,17 @@ pub(crate) struct Shard {
     pending: Option<JobHandle<Result<()>>>,
 }
 
+fn requests_counter() -> &'static crate::telemetry::Counter {
+    static C: std::sync::OnceLock<std::sync::Arc<crate::telemetry::Counter>> =
+        std::sync::OnceLock::new();
+    C.get_or_init(|| crate::telemetry::counter("serve.requests"))
+}
+
 impl Shard {
     /// Serve one request against this shard (the model is created on
     /// first sight). Callers must route: `shard_index(id) == self`.
+    /// Per-request update latency is recorded only while tracing is
+    /// enabled — the hot path takes no clock reads otherwise.
     pub(crate) fn process(
         &mut self,
         cfg: &StoreConfig,
@@ -62,6 +70,8 @@ impl Shard {
         feats: &[(u32, f32)],
         label: f32,
     ) -> Result<Outcome> {
+        requests_counter().inc();
+        let start = crate::telemetry::trace::enabled().then(std::time::Instant::now);
         if !self.models.contains_key(id) {
             self.models
                 .insert(id.to_string(), OnlineModel::new(&cfg.spec, cfg.dim, &cfg.base)?);
@@ -82,6 +92,11 @@ impl Shard {
                         .submit(move || checkpoint::write_atomic_bytes(&path, &bytes)),
                 );
             }
+        }
+        if let Some(t0) = start {
+            let dur = t0.elapsed();
+            crate::telemetry::trace::record_span("serve.update", t0, dur);
+            crate::telemetry::histogram("serve.update").observe(dur.as_nanos() as u64);
         }
         Ok(out)
     }

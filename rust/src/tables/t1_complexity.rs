@@ -7,7 +7,7 @@
 
 use crate::optim::{HyperParams, OptSpec};
 use crate::util::io::{fmt_f, Csv, MdTable};
-use crate::util::timer::bench;
+use crate::telemetry::timing::bench;
 use crate::util::Rng;
 
 pub struct T1Row {

@@ -1,0 +1,245 @@
+//! Process-wide telemetry: metrics registry, span tracing, trace
+//! reporting and bench sinks.
+//!
+//! The subsystem is strictly an *observer*. Everything it measures
+//! (clocks, byte counts, queue depths) flows only outward — into
+//! `--trace` JSONL files, `sonew report` tables and `BENCH_*.json`
+//! sinks — and never back into training bytes, `[dp]`/`[pv]`
+//! fingerprints or sweep CSVs. `rust/tests/telemetry.rs` asserts the
+//! deterministic surfaces are bitwise identical with tracing on and
+//! off; keep it that way when adding instrumentation.
+//!
+//! Quick taxonomy (full table in README "Observability"):
+//!   spans      `exec.scope`, `train.data_prep`, `train.fwd_bwd`,
+//!              `train.opt_step`, `train.ckpt`, `ckpt.write`,
+//!              `ckpt.fsync`, `comm.all_reduce`, `comm.broadcast`,
+//!              `comm.gather`, `comm.barrier`, `sweep.trial`,
+//!              `serve.shard`, `serve.update`
+//!   counters   `exec.jobs`, `exec.steals`, `comm.tcp.bytes_sent`,
+//!              `comm.tcp.bytes_recv`, `comm.tcp.frames_sent`,
+//!              `comm.tcp.frames_recv`, `comm.tcp.peer{i}.bytes_sent`,
+//!              `comm.tcp.peer{i}.bytes_recv`, `ckpt.bytes_written`
+//!   gauges     `serve.shard{i}.queue_depth`
+//!   histograms one per `timed(..)` name plus `serve.update`
+
+pub mod json;
+pub mod registry;
+pub mod report;
+pub mod sink;
+pub mod timing;
+pub mod trace;
+
+pub use registry::{Counter, Gauge, Histogram, Registry, Snapshot};
+pub use trace::{enabled, set_enabled, Event, Span};
+
+use std::fmt;
+use std::io::Write as _;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Open a scoped RAII span: `let _s = span!("opt.step");`. Records on
+/// drop when tracing is enabled; a single relaxed load otherwise.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::telemetry::trace::span($name)
+    };
+}
+
+/// Get-or-register a counter in the global registry. Hot paths should
+/// cache the handle in a `OnceLock<Arc<Counter>>` at the call site.
+pub fn counter(name: &str) -> Arc<Counter> {
+    registry::global().counter(name)
+}
+
+/// Get-or-register a gauge in the global registry.
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    registry::global().gauge(name)
+}
+
+/// Get-or-register a nanosecond timing histogram in the global registry.
+pub fn histogram(name: &str) -> Arc<Histogram> {
+    registry::global().histogram(name)
+}
+
+/// Time a closure: always returns the wall duration (callers feed it
+/// into per-session `Metrics`), always lands the sample in the `name`
+/// histogram, and records a span when tracing is enabled. The span's
+/// duration and the returned `Duration` come from the same clock pair,
+/// so stage summaries and traces agree to the nanosecond.
+pub fn timed<R>(name: &'static str, f: impl FnOnce() -> R) -> (R, Duration) {
+    let start = Instant::now();
+    let r = f();
+    let dur = start.elapsed();
+    trace::record_span(name, start, dur);
+    histogram(name).observe(dur.as_nanos() as u64);
+    (r, dur)
+}
+
+/// Render one machine-readable fingerprint line: `[{tag}] {body}`.
+///
+/// This is the single documented format behind every deterministic
+/// grep surface (`^\[dp\]`, `^\[pv\]`, `[gemm]` kernel tags): one line,
+/// tag in square brackets, one space, then a body whose fields are
+/// `key=value` pairs separated by single spaces. Timing values must
+/// never appear in a fingerprint body — fingerprints are byte-diffed
+/// across runs, thread counts and world sizes.
+pub fn fingerprint_line(tag: &str, body: fmt::Arguments<'_>) -> String {
+    format!("[{tag}] {body}")
+}
+
+/// Print a fingerprint line to stdout (the surface CI byte-diffs).
+pub fn emit_fingerprint(tag: &str, body: fmt::Arguments<'_>) {
+    println!("{}", fingerprint_line(tag, body));
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn us(ns: u64) -> f64 {
+    ns as f64 / 1000.0
+}
+
+/// Drain all spans and snapshot the registry into a Chrome trace-event
+/// JSONL file: one metadata line (`ph:"M"`), one complete-event line
+/// (`ph:"X"`, ts/dur in microseconds) per span in `(tid, seq)` order,
+/// then one counter line (`ph:"C"`) per registry metric. Loadable in
+/// `chrome://tracing` / Perfetto after wrapping the lines in a JSON
+/// array; `sonew report` consumes the JSONL directly.
+pub fn write_trace(path: &Path) -> std::io::Result<()> {
+    let (events, dropped) = trace::drain();
+    let snap = registry::global().snapshot();
+    let pid = std::process::id();
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(
+        f,
+        "{{\"name\":\"sonew-trace\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\"ts\":0,\
+         \"args\":{{\"schema\":\"sonew-trace-v1\",\"spans\":{},\"dropped\":{dropped}}}}}",
+        events.len()
+    )?;
+    let mut end_ns = 0u64;
+    for e in &events {
+        end_ns = end_ns.max(e.start_ns + e.dur_ns);
+        let mut args = format!("\"seq\":{}", e.seq);
+        for (k, v) in &e.args {
+            args.push_str(&format!(",\"{}\":{v}", json_escape(k)));
+        }
+        writeln!(
+            f,
+            "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"pid\":{pid},\"tid\":{},\
+             \"ts\":{:.3},\"dur\":{:.3},\"args\":{{{args}}}}}",
+            json_escape(e.name),
+            report::phase_of(e.name),
+            e.tid,
+            us(e.start_ns),
+            us(e.dur_ns),
+        )?;
+    }
+    let end_us = us(end_ns);
+    for (name, v) in &snap.counters {
+        writeln!(
+            f,
+            "{{\"name\":\"{}\",\"ph\":\"C\",\"pid\":{pid},\"tid\":0,\"ts\":{end_us:.3},\
+             \"args\":{{\"value\":{v}}}}}",
+            json_escape(name)
+        )?;
+    }
+    for (name, v) in &snap.gauges {
+        writeln!(
+            f,
+            "{{\"name\":\"{}\",\"ph\":\"C\",\"pid\":{pid},\"tid\":0,\"ts\":{end_us:.3},\
+             \"args\":{{\"value\":{v}}}}}",
+            json_escape(name)
+        )?;
+    }
+    for (name, h) in &snap.histograms {
+        writeln!(
+            f,
+            "{{\"name\":\"{}\",\"ph\":\"C\",\"pid\":{pid},\"tid\":0,\"ts\":{end_us:.3},\
+             \"args\":{{\"count\":{},\"p50_us\":{:.3},\"p90_us\":{:.3},\"p99_us\":{:.3}}}}}",
+            json_escape(name),
+            h.count,
+            us(h.p50),
+            us(h.p90),
+            us(h.p99),
+        )?;
+    }
+    f.flush()
+}
+
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    // Tracing state is process-global; lib unit tests that toggle it
+    // serialize here so parallel test threads never observe another
+    // test's enable/drain window.
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_format_is_stable() {
+        // [tag] space-separated key=value pairs — the documented grep
+        // surface; changing this breaks CI byte-diff legs
+        let line = fingerprint_line("dp", format_args!("spec={} shards={}", "adam", 4));
+        assert_eq!(line, "[dp] spec=adam shards=4");
+        assert!(line.starts_with("[dp] "));
+    }
+
+    #[test]
+    fn timed_duration_matches_histogram_sample() {
+        let _guard = test_lock();
+        set_enabled(false);
+        let h = histogram("test.timed");
+        let before_sum = h.sum();
+        let before_count = h.count();
+        let ((), d) = timed("test.timed", || std::thread::sleep(Duration::from_millis(2)));
+        assert!(d >= Duration::from_millis(2));
+        assert_eq!(h.count(), before_count + 1);
+        assert_eq!(h.sum() - before_sum, d.as_nanos() as u64, "same clock pair");
+    }
+
+    #[test]
+    fn write_trace_emits_schema_valid_jsonl() {
+        let _guard = test_lock();
+        set_enabled(false);
+        trace::drain();
+        set_enabled(true);
+        {
+            let _s = span!("test.export").arg("k", 7);
+        }
+        counter("test.export.events").inc();
+        set_enabled(false);
+        let dir = std::env::temp_dir().join(format!("sonew-trace-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        write_trace(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().count() >= 3, "meta + span + counter lines");
+        // every line must pass the same validation `sonew report --check`
+        // applies
+        for (i, line) in text.lines().enumerate() {
+            report::validate_line(line).unwrap_or_else(|e| panic!("line {}: {e}", i + 1));
+        }
+        assert!(text.contains("\"name\":\"test.export\""));
+        assert!(text.contains("\"schema\":\"sonew-trace-v1\""));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,309 @@
+//! Process-wide metrics registry: named counters, gauges and
+//! fixed-bound histograms, registered once and cheap to hit from hot
+//! paths (one relaxed atomic op per event).
+//!
+//! Determinism contract: metrics only *observe* — nothing read from the
+//! registry ever flows into training bytes, fingerprint lines, sweep
+//! CSVs or any other deterministic output surface. Quantiles are
+//! computed from deterministic bucket counts (never sampled): a
+//! histogram's p50/p90/p99 is the upper edge of the bucket where the
+//! cumulative count crosses the rank, so two runs that land the same
+//! counts in the same buckets report the same quantiles.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Monotone event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins signed level (queue depths, pool sizes).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bound histogram: `edges[i]` is the inclusive upper bound of
+/// bucket `i`; one extra overflow bucket holds everything above the top
+/// edge. Buckets are atomic counts, so concurrent observers never lose
+/// an event and a snapshot is always a consistent set of counts.
+#[derive(Debug)]
+pub struct Histogram {
+    edges: Vec<u64>,
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+/// Default timing edges in nanoseconds: 1µs to ~18min, geometric with a
+/// half-step (2^e and 1.5·2^e) for ~1.33x resolution. Fixed at build
+/// time so bucket assignment — and therefore every reported quantile —
+/// is a pure function of the observed values.
+pub fn default_time_edges_ns() -> Vec<u64> {
+    let mut edges = Vec::with_capacity(62);
+    for e in 10u32..=40 {
+        edges.push(1u64 << e);
+        edges.push(3u64 << (e - 1)); // 1.5 * 2^e
+    }
+    edges.sort_unstable();
+    edges.dedup();
+    edges
+}
+
+impl Histogram {
+    /// `edges` must be strictly ascending and non-empty.
+    pub fn new(edges: Vec<u64>) -> Self {
+        assert!(!edges.is_empty(), "histogram needs at least one bucket edge");
+        assert!(edges.windows(2).all(|w| w[0] < w[1]), "histogram edges must ascend");
+        let buckets = (0..=edges.len()).map(|_| AtomicU64::new(0)).collect();
+        Self { edges, buckets, count: AtomicU64::new(0), sum: AtomicU64::new(0) }
+    }
+
+    pub fn with_time_edges() -> Self {
+        Self::new(default_time_edges_ns())
+    }
+
+    /// Index of the bucket covering `v`: first edge with `v <= edge`,
+    /// overflow bucket otherwise.
+    fn bucket_of(&self, v: u64) -> usize {
+        self.edges.partition_point(|&e| e < v)
+    }
+
+    pub fn observe(&self, v: u64) {
+        self.buckets[self.bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Deterministic quantile from bucket counts: the upper edge of the
+    /// bucket where the cumulative count reaches `ceil(q * count)`.
+    /// Values in the overflow bucket report the top edge (a floor — the
+    /// histogram's range is fixed by construction). `None` when empty.
+    pub fn quantile(&self, q: f64) -> Option<u64> {
+        let counts: Vec<u64> = self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return None;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Some(*self.edges.get(i).unwrap_or_else(|| self.edges.last().unwrap()));
+            }
+        }
+        Some(*self.edges.last().unwrap())
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: self.count(),
+            sum: self.sum(),
+            p50: self.quantile(0.50).unwrap_or(0),
+            p90: self.quantile(0.90).unwrap_or(0),
+            p99: self.quantile(0.99).unwrap_or(0),
+        }
+    }
+}
+
+/// A point-in-time view of one histogram (values in the histogram's
+/// native unit — nanoseconds for every timing histogram in the crate).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub p50: u64,
+    pub p90: u64,
+    pub p99: u64,
+}
+
+/// A point-in-time view of the whole registry, sorted by name (the
+/// BTreeMap order), so exports are stable given identical counts.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, i64)>,
+    pub histograms: Vec<(String, HistogramSnapshot)>,
+}
+
+/// Name → metric maps behind short uncontended locks. Hot paths
+/// register once (a `OnceLock<Arc<..>>` at the call site) and then hit
+/// the atomic directly; the maps are only locked on registration and
+/// snapshot.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get-or-register the named counter.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut map = self.counters.lock().unwrap();
+        Arc::clone(map.entry(name.to_string()).or_default())
+    }
+
+    /// Get-or-register the named gauge.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut map = self.gauges.lock().unwrap();
+        Arc::clone(map.entry(name.to_string()).or_default())
+    }
+
+    /// Get-or-register the named timing histogram (nanosecond edges).
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut map = self.histograms.lock().unwrap();
+        Arc::clone(
+            map.entry(name.to_string()).or_insert_with(|| Arc::new(Histogram::with_time_edges())),
+        )
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        Snapshot {
+            counters: self
+                .counters
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            gauges: self
+                .gauges
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.get()))
+                .collect(),
+            histograms: self
+                .histograms
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.clone(), v.snapshot()))
+                .collect(),
+        }
+    }
+}
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+/// The process-wide registry every instrumented subsystem reports into.
+pub fn global() -> &'static Registry {
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let r = Registry::new();
+        let c = r.counter("x.events");
+        c.inc();
+        c.add(4);
+        assert_eq!(r.counter("x.events").get(), 5, "same name, same metric");
+        let g = r.gauge("x.depth");
+        g.set(-3);
+        assert_eq!(r.gauge("x.depth").get(), -3);
+    }
+
+    #[test]
+    fn histogram_bucket_edges_are_inclusive_upper_bounds() {
+        let h = Histogram::new(vec![10, 100, 1000]);
+        // exactly on an edge lands in that edge's bucket, one past it in
+        // the next — the boundary rule every quantile depends on
+        for v in [1, 10] {
+            assert_eq!(h.bucket_of(v), 0, "v={v}");
+        }
+        for v in [11, 100] {
+            assert_eq!(h.bucket_of(v), 1, "v={v}");
+        }
+        assert_eq!(h.bucket_of(1000), 2);
+        assert_eq!(h.bucket_of(1001), 3, "overflow bucket");
+        assert_eq!(h.bucket_of(u64::MAX), 3);
+    }
+
+    #[test]
+    fn quantiles_come_from_bucket_counts_deterministically() {
+        let h = Histogram::new(vec![10, 100, 1000]);
+        assert_eq!(h.quantile(0.5), None, "empty histogram has no quantiles");
+        // 8 observations <= 10, 1 in (10,100], 1 in (100,1000]
+        for _ in 0..8 {
+            h.observe(5);
+        }
+        h.observe(50);
+        h.observe(500);
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.sum(), 8 * 5 + 50 + 500);
+        assert_eq!(h.quantile(0.5), Some(10), "rank 5 of 10 is in the first bucket");
+        assert_eq!(h.quantile(0.9), Some(100), "rank 9 lands in the second bucket");
+        assert_eq!(h.quantile(0.99), Some(1000));
+        assert_eq!(h.quantile(1.0), Some(1000));
+        // overflow values floor at the top edge rather than inventing a
+        // number beyond the histogram's range
+        let h = Histogram::new(vec![10]);
+        h.observe(1 << 40);
+        assert_eq!(h.quantile(0.5), Some(10));
+    }
+
+    #[test]
+    fn default_time_edges_ascend_and_span_us_to_minutes() {
+        let e = default_time_edges_ns();
+        assert!(e.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(e[0], 1 << 10);
+        assert!(*e.last().unwrap() >= 1 << 40);
+        // construction must accept them (panics on malformed edges)
+        let _ = Histogram::with_time_edges();
+    }
+
+    #[test]
+    fn snapshot_is_name_sorted() {
+        let r = Registry::new();
+        r.counter("z.last").inc();
+        r.counter("a.first").add(2);
+        r.histogram("m.mid").observe(2048);
+        let s = r.snapshot();
+        let names: Vec<&str> = s.counters.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["a.first", "z.last"]);
+        assert_eq!(s.histograms[0].0, "m.mid");
+        assert_eq!(s.histograms[0].1.count, 1);
+        assert_eq!(s.histograms[0].1.p50, 2048);
+    }
+}

@@ -1,0 +1,278 @@
+//! `sonew report <trace.jsonl>` — aggregate a trace file into
+//! per-phase tables, and `--check` — validate every line against the
+//! trace-event schema (the CI trace-smoke leg's gate).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::json::{self, Json};
+use super::registry::Histogram;
+
+/// Map a span name onto its reporting phase. The taxonomy is the
+/// documented contract between instrumentation sites and the report
+/// tables — add new prefixes here (and to the README table) rather
+/// than inventing per-site phases.
+pub fn phase_of(name: &str) -> &'static str {
+    if name.starts_with("train.data_prep") {
+        "data-prep"
+    } else if name.starts_with("train.fwd_bwd") {
+        "fwd-bwd"
+    } else if name.starts_with("train.opt_step") || name.starts_with("opt.") {
+        "opt-step"
+    } else if name.starts_with("train.ckpt") || name.starts_with("ckpt.") {
+        "checkpoint"
+    } else if name.starts_with("comm.") {
+        "comm"
+    } else if name.starts_with("serve.") {
+        "serve-shard"
+    } else if name.starts_with("sweep.") {
+        "sweep"
+    } else if name.starts_with("exec.") {
+        "exec"
+    } else {
+        "other"
+    }
+}
+
+/// Fixed row order for the per-phase table.
+const PHASE_ORDER: [&str; 9] = [
+    "data-prep",
+    "fwd-bwd",
+    "opt-step",
+    "comm",
+    "checkpoint",
+    "serve-shard",
+    "sweep",
+    "exec",
+    "other",
+];
+
+/// One schema-validated trace line.
+pub enum Line {
+    /// `ph:"M"` metadata.
+    Meta,
+    /// `ph:"X"` complete event: name + duration in microseconds.
+    Span { name: String, dur_us: f64 },
+    /// `ph:"C"` counter: name + numeric args.
+    Counter { name: String, args: Vec<(String, f64)> },
+}
+
+/// Validate one JSONL line against the trace-event schema: a JSON
+/// object with string `name`, `ph` in {M, X, C}, numeric `ts`, `pid`,
+/// `tid`; `X` additionally requires numeric `dur`, `C` an `args`
+/// object. Unknown keys are allowed (foreign producers add them).
+pub fn validate_line(line: &str) -> Result<Line, String> {
+    let v = json::parse(line)?;
+    if v.as_obj().is_none() {
+        return Err("line is not a JSON object".into());
+    }
+    let name = v
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or("missing string field \"name\"")?
+        .to_string();
+    let ph = v.get("ph").and_then(Json::as_str).ok_or("missing string field \"ph\"")?;
+    for key in ["ts", "pid", "tid"] {
+        v.get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("missing numeric field \"{key}\""))?;
+    }
+    match ph {
+        "M" => Ok(Line::Meta),
+        "X" => {
+            let dur_us = v
+                .get("dur")
+                .and_then(Json::as_f64)
+                .ok_or("\"X\" event missing numeric \"dur\"")?;
+            if dur_us < 0.0 {
+                return Err("negative \"dur\"".into());
+            }
+            Ok(Line::Span { name, dur_us })
+        }
+        "C" => {
+            let args = v
+                .get("args")
+                .and_then(Json::as_obj)
+                .ok_or("\"C\" event missing \"args\" object")?;
+            let args = args
+                .iter()
+                .map(|(k, val)| {
+                    val.as_f64()
+                        .map(|n| (k.clone(), n))
+                        .ok_or_else(|| format!("counter arg \"{k}\" is not numeric"))
+                })
+                .collect::<Result<Vec<_>, String>>()?;
+            Ok(Line::Counter { name, args })
+        }
+        other => Err(format!("unknown ph {other:?} (expected M, X or C)")),
+    }
+}
+
+struct PhaseAgg {
+    count: u64,
+    total_ns: u64,
+    hist: Histogram,
+}
+
+impl PhaseAgg {
+    fn new() -> Self {
+        Self { count: 0, total_ns: 0, hist: Histogram::with_time_edges() }
+    }
+
+    fn observe(&mut self, dur_us: f64) {
+        let ns = (dur_us * 1000.0).round().max(0.0) as u64;
+        self.count += 1;
+        self.total_ns += ns;
+        self.hist.observe(ns);
+    }
+}
+
+/// Read, validate and aggregate a trace file; print the per-phase
+/// table and counter lines. With `check`, any schema violation fails
+/// with its line number; otherwise the summary is printed after a full
+/// validation pass either way (a report over an invalid file would be
+/// misleading).
+pub fn run(path: &Path, check: bool) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace file {}", path.display()))?;
+    let mut phases: BTreeMap<&'static str, PhaseAgg> = BTreeMap::new();
+    let mut counters: Vec<(String, Vec<(String, f64)>)> = Vec::new();
+    let mut spans = 0u64;
+    let mut lines = 0u64;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        lines += 1;
+        let parsed = validate_line(line)
+            .map_err(|e| anyhow!("{}:{}: {e}", path.display(), i + 1))?;
+        match parsed {
+            Line::Meta => {}
+            Line::Span { name, dur_us } => {
+                spans += 1;
+                phases.entry(phase_of(&name)).or_insert_with(PhaseAgg::new).observe(dur_us);
+            }
+            Line::Counter { name, args } => counters.push((name, args)),
+        }
+    }
+    if lines == 0 {
+        bail!("{}: empty trace file", path.display());
+    }
+    if check {
+        println!("ok: {lines} lines ({spans} spans, {} counters)", counters.len());
+        return Ok(());
+    }
+    println!("trace {} — {spans} spans, {} counters", path.display(), counters.len());
+    println!();
+    println!(
+        "{:<12} {:>8} {:>12} {:>10} {:>10} {:>10} {:>10}",
+        "phase", "spans", "total_ms", "mean_us", "p50_us", "p90_us", "p99_us"
+    );
+    for phase in PHASE_ORDER {
+        let Some(agg) = phases.get(phase) else { continue };
+        let mean_us = agg.total_ns as f64 / agg.count as f64 / 1000.0;
+        let q = |p: f64| agg.hist.quantile(p).unwrap_or(0) as f64 / 1000.0;
+        println!(
+            "{:<12} {:>8} {:>12.3} {:>10.1} {:>10.1} {:>10.1} {:>10.1}",
+            phase,
+            agg.count,
+            agg.total_ns as f64 / 1e6,
+            mean_us,
+            q(0.50),
+            q(0.90),
+            q(0.99),
+        );
+    }
+    if !counters.is_empty() {
+        println!();
+        println!("counters:");
+        for (name, args) in &counters {
+            let body: Vec<String> = args
+                .iter()
+                .map(|(k, v)| {
+                    if v.fract() == 0.0 && v.abs() < 9e15 {
+                        format!("{k}={}", *v as i64)
+                    } else {
+                        format!("{k}={v:.3}")
+                    }
+                })
+                .collect();
+            println!("  {name} {}", body.join(" "));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_taxonomy_covers_every_instrumented_prefix() {
+        assert_eq!(phase_of("train.data_prep"), "data-prep");
+        assert_eq!(phase_of("train.fwd_bwd"), "fwd-bwd");
+        assert_eq!(phase_of("train.opt_step"), "opt-step");
+        assert_eq!(phase_of("opt.step"), "opt-step");
+        assert_eq!(phase_of("train.ckpt"), "checkpoint");
+        assert_eq!(phase_of("ckpt.fsync"), "checkpoint");
+        assert_eq!(phase_of("comm.all_reduce"), "comm");
+        assert_eq!(phase_of("serve.shard"), "serve-shard");
+        assert_eq!(phase_of("serve.update"), "serve-shard");
+        assert_eq!(phase_of("sweep.trial"), "sweep");
+        assert_eq!(phase_of("exec.scope"), "exec");
+        assert_eq!(phase_of("mystery"), "other");
+    }
+
+    #[test]
+    fn validate_accepts_well_formed_lines() {
+        let ok = [
+            r#"{"name":"m","ph":"M","pid":1,"tid":0,"ts":0,"args":{}}"#,
+            r#"{"name":"s","ph":"X","pid":1,"tid":2,"ts":1.5,"dur":0.25,"args":{"seq":0}}"#,
+            r#"{"name":"c","ph":"C","pid":1,"tid":0,"ts":9,"args":{"value":3}}"#,
+        ];
+        for line in ok {
+            validate_line(line).unwrap_or_else(|e| panic!("{line}: {e}"));
+        }
+    }
+
+    #[test]
+    fn validate_rejects_schema_violations() {
+        let bad = [
+            "not json",
+            "[1,2,3]",
+            r#"{"ph":"X","pid":1,"tid":0,"ts":0,"dur":1}"#,          // no name
+            r#"{"name":"s","ph":"X","pid":1,"tid":0,"ts":0}"#,       // X without dur
+            r#"{"name":"s","ph":"X","pid":1,"tid":0,"ts":0,"dur":-1}"#, // negative dur
+            r#"{"name":"s","ph":"Q","pid":1,"tid":0,"ts":0}"#,       // unknown ph
+            r#"{"name":"c","ph":"C","pid":1,"tid":0,"ts":0}"#,       // C without args
+            r#"{"name":"s","ph":"X","pid":1,"tid":0,"dur":1}"#,      // missing ts
+        ];
+        for line in bad {
+            assert!(validate_line(line).is_err(), "should reject: {line}");
+        }
+    }
+
+    #[test]
+    fn run_aggregates_and_checks_a_round_trip_file() {
+        let dir = std::env::temp_dir().join(format!("sonew-report-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        std::fs::write(
+            &path,
+            concat!(
+                "{\"name\":\"sonew-trace\",\"ph\":\"M\",\"pid\":1,\"tid\":0,\"ts\":0,\"args\":{\"schema\":\"sonew-trace-v1\"}}\n",
+                "{\"name\":\"train.opt_step\",\"ph\":\"X\",\"pid\":1,\"tid\":1,\"ts\":0,\"dur\":120.5,\"args\":{\"seq\":0}}\n",
+                "{\"name\":\"exec.scope\",\"ph\":\"X\",\"pid\":1,\"tid\":2,\"ts\":5,\"dur\":2.5,\"args\":{\"seq\":0}}\n",
+                "{\"name\":\"exec.jobs\",\"ph\":\"C\",\"pid\":1,\"tid\":0,\"ts\":130,\"args\":{\"value\":8}}\n",
+            ),
+        )
+        .unwrap();
+        run(&path, true).unwrap();
+        run(&path, false).unwrap();
+        std::fs::write(&path, "{\"broken\n").unwrap();
+        assert!(run(&path, true).is_err());
+        assert!(run(&path, false).is_err(), "report refuses invalid files even without --check");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

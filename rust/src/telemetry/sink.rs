@@ -1,0 +1,254 @@
+//! Bench/telemetry sinks: the `BENCH_*.json` trajectory document is
+//! built from the same registry the rest of the process reports into,
+//! behind a `TelemetrySink` trait so harnesses don't hand-roll their
+//! own emitters.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+use super::registry::{self, Snapshot};
+use super::timing::BenchResult;
+
+/// One recorded measurement, flattened for the JSON trajectory.
+pub struct BenchRecord {
+    pub section: String,
+    pub name: String,
+    pub us_per_iter: f64,
+    pub min_us: f64,
+    pub max_us: f64,
+    pub iters: u64,
+}
+
+/// A complete bench emission: measured records, derived scalars,
+/// environment notes, and a snapshot of the process telemetry registry
+/// taken at build time.
+pub struct BenchReport {
+    pub smoke: bool,
+    pub threads: usize,
+    pub records: Vec<BenchRecord>,
+    pub derived: Vec<(String, f64)>,
+    pub notes: Vec<(String, String)>,
+    pub telemetry: Snapshot,
+}
+
+/// Where a finished [`BenchReport`] goes. The harness builds exactly
+/// one report per run and hands it to whichever sink the environment
+/// selects; tests plug in capture sinks.
+pub trait TelemetrySink {
+    fn emit(&mut self, report: &BenchReport) -> Result<()>;
+}
+
+/// Collects section results + derived scalars during a bench run and
+/// finalizes into a [`BenchReport`] (registry snapshot included).
+#[derive(Default)]
+pub struct BenchRecorder {
+    records: Vec<BenchRecord>,
+    derived: Vec<(String, f64)>,
+    notes: Vec<(String, String)>,
+}
+
+impl BenchRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, section: &str, r: &BenchResult) {
+        self.records.push(BenchRecord {
+            section: section.to_string(),
+            name: r.name.clone(),
+            us_per_iter: r.per_iter_ns() / 1000.0,
+            min_us: r.min.as_nanos() as f64 / r.iters_per_run as f64 / 1000.0,
+            max_us: r.max.as_nanos() as f64 / r.iters_per_run as f64 / 1000.0,
+            iters: r.iters_per_run,
+        });
+    }
+
+    pub fn derive(&mut self, name: String, value: f64) {
+        self.derived.push((name, value));
+    }
+
+    pub fn note(&mut self, name: &str, value: String) {
+        self.notes.push((name.to_string(), value));
+    }
+
+    pub fn finish(self, smoke: bool, threads: usize) -> BenchReport {
+        BenchReport {
+            smoke,
+            threads,
+            records: self.records,
+            derived: self.derived,
+            notes: self.notes,
+            telemetry: registry::global().snapshot(),
+        }
+    }
+}
+
+fn us(ns: u64) -> f64 {
+    ns as f64 / 1000.0
+}
+
+/// Render the trajectory JSON. Schema v2 = v1 (results / derived /
+/// gemm-notes) plus the `"telemetry"` registry snapshot.
+pub fn render_json(report: &BenchReport) -> String {
+    let now = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"schema\": \"sonew-bench-v2\",\n");
+    s.push_str(&format!("  \"unix_time_s\": {now},\n"));
+    s.push_str(&format!("  \"threads\": {},\n", report.threads));
+    s.push_str(&format!("  \"smoke\": {},\n", report.smoke));
+    s.push_str("  \"gemm\": {\n");
+    for (i, (name, v)) in report.notes.iter().enumerate() {
+        let comma = if i + 1 < report.notes.len() { "," } else { "" };
+        s.push_str(&format!("    \"{name}\": \"{v}\"{comma}\n"));
+    }
+    s.push_str("  },\n");
+    s.push_str("  \"results\": [\n");
+    for (i, r) in report.records.iter().enumerate() {
+        let comma = if i + 1 < report.records.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"section\": \"{}\", \"name\": \"{}\", \"us_per_iter\": {:.3}, \
+             \"min_us\": {:.3}, \"max_us\": {:.3}, \"iters\": {}}}{comma}\n",
+            r.section, r.name, r.us_per_iter, r.min_us, r.max_us, r.iters
+        ));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"derived\": [\n");
+    for (i, (name, v)) in report.derived.iter().enumerate() {
+        let comma = if i + 1 < report.derived.len() { "," } else { "" };
+        s.push_str(&format!("    {{\"name\": \"{name}\", \"value\": {v:.3}}}{comma}\n"));
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"telemetry\": {\n");
+    s.push_str("    \"counters\": [\n");
+    for (i, (name, v)) in report.telemetry.counters.iter().enumerate() {
+        let comma = if i + 1 < report.telemetry.counters.len() { "," } else { "" };
+        s.push_str(&format!("      {{\"name\": \"{name}\", \"value\": {v}}}{comma}\n"));
+    }
+    s.push_str("    ],\n");
+    s.push_str("    \"gauges\": [\n");
+    for (i, (name, v)) in report.telemetry.gauges.iter().enumerate() {
+        let comma = if i + 1 < report.telemetry.gauges.len() { "," } else { "" };
+        s.push_str(&format!("      {{\"name\": \"{name}\", \"value\": {v}}}{comma}\n"));
+    }
+    s.push_str("    ],\n");
+    s.push_str("    \"histograms\": [\n");
+    for (i, (name, h)) in report.telemetry.histograms.iter().enumerate() {
+        let comma = if i + 1 < report.telemetry.histograms.len() { "," } else { "" };
+        s.push_str(&format!(
+            "      {{\"name\": \"{name}\", \"count\": {}, \"p50_us\": {:.3}, \
+             \"p90_us\": {:.3}, \"p99_us\": {:.3}}}{comma}\n",
+            h.count,
+            us(h.p50),
+            us(h.p90),
+            us(h.p99)
+        ));
+    }
+    s.push_str("    ]\n  }\n}\n");
+    s
+}
+
+/// Writes the trajectory document to a file. `from_env` resolves the
+/// path from `SONEW_BENCH_OUT` (default `BENCH_latest.json` in the
+/// working directory — the package root under `cargo bench`).
+pub struct JsonFileSink {
+    pub path: PathBuf,
+}
+
+impl JsonFileSink {
+    pub fn new(path: impl Into<PathBuf>) -> Self {
+        Self { path: path.into() }
+    }
+
+    pub fn from_env() -> Self {
+        Self::new(std::env::var("SONEW_BENCH_OUT").unwrap_or_else(|_| "BENCH_latest.json".into()))
+    }
+}
+
+impl TelemetrySink for JsonFileSink {
+    fn emit(&mut self, report: &BenchReport) -> Result<()> {
+        std::fs::write(&self.path, render_json(report))
+            .with_context(|| format!("writing bench trajectory {}", self.path.display()))?;
+        Ok(())
+    }
+}
+
+/// Validate a rendered trajectory document (used by tests and the
+/// committed-baseline check): parses as JSON and carries the v2 keys.
+pub fn validate_json(text: &str) -> Result<(), String> {
+    let v = super::json::parse(text)?;
+    let keys =
+        ["schema", "unix_time_s", "threads", "smoke", "gemm", "results", "derived", "telemetry"];
+    for key in keys {
+        if v.get(key).is_none() {
+            return Err(format!("missing top-level key \"{key}\""));
+        }
+    }
+    match v.get("schema").and_then(super::json::Json::as_str) {
+        Some(s) if s.starts_with("sonew-bench-") => Ok(()),
+        other => Err(format!("unexpected schema {other:?}")),
+    }
+}
+
+/// Check a baseline file on disk (committed trajectory points must stay
+/// schema-valid).
+pub fn validate_file(path: &Path) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading bench file {}", path.display()))?;
+    validate_json(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn sample_report() -> BenchReport {
+        let mut rec = BenchRecorder::new();
+        rec.add(
+            "gemm",
+            &BenchResult {
+                name: "gemm 64x64x64".into(),
+                median: Duration::from_micros(120),
+                min: Duration::from_micros(100),
+                max: Duration::from_micros(150),
+                iters_per_run: 10,
+            },
+        );
+        rec.derive("gemm_speedup".into(), 2.5);
+        rec.note("kernel", "portable".into());
+        rec.finish(true, 2)
+    }
+
+    #[test]
+    fn rendered_report_is_schema_valid() {
+        let text = render_json(&sample_report());
+        validate_json(&text).unwrap();
+        assert!(text.contains("\"schema\": \"sonew-bench-v2\""));
+        assert!(text.contains("\"section\": \"gemm\""));
+        assert!(text.contains("\"telemetry\""));
+    }
+
+    #[test]
+    fn file_sink_writes_and_validates() {
+        let dir = std::env::temp_dir().join(format!("sonew-sink-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let mut sink = JsonFileSink::new(&path);
+        sink.emit(&sample_report()).unwrap();
+        validate_file(&path).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn validate_rejects_non_bench_documents() {
+        assert!(validate_json("{}").is_err());
+        assert!(validate_json("not json").is_err());
+        let wrong = r#"{"schema":"other","unix_time_s":0,"threads":1,"smoke":true,
+            "gemm":{},"results":[],"derived":[],"telemetry":{}}"#;
+        assert!(validate_json(wrong).is_err());
+    }
+}

@@ -1,10 +1,13 @@
-//! Timing helpers for the custom benchmark harness (criterion is not in
-//! the offline dependency closure; see DESIGN.md §5).
+//! Bench timing helpers (median-of-k measurement, accumulating
+//! stopwatch). Formerly `util::timer`; they live with the rest of the
+//! observability code so the bench harness, tables and telemetry sinks
+//! share one timing vocabulary. Criterion is not in the offline
+//! dependency closure (see DESIGN.md §5).
 
 use std::time::{Duration, Instant};
 
-/// Accumulating stopwatch for phase attribution inside the trainer
-/// (grad time vs optimizer time vs all-reduce time).
+/// Accumulating stopwatch for coarse phase attribution where a
+/// registry histogram would be overkill (per-table cells, examples).
 #[derive(Debug, Default, Clone)]
 pub struct Stopwatch {
     total: Duration,
@@ -108,8 +111,8 @@ mod tests {
             }
             std::hint::black_box(acc);
         };
-        let r1 = bench("w1", 8, 3, |n| work(n));
-        let r2 = bench("w2", 64, 3, |n| work(n));
+        let r1 = bench("w1", 8, 3, work);
+        let r2 = bench("w2", 64, 3, work);
         // per-iter cost should be in the same decade (extremely loose:
         // this runs under arbitrary CI/background load)
         let ratio = r1.per_iter_ns() / r2.per_iter_ns();

@@ -1,0 +1,265 @@
+//! Scoped span tracing into per-thread ring buffers.
+//!
+//! Recording is gated on a single process-wide `AtomicBool`: when
+//! tracing is off, `span()` is one relaxed load and returns an inert
+//! guard (no clock read, no allocation) — the zero-cost-when-disabled
+//! contract. When on, each thread appends fixed-size events to its own
+//! ring buffer (no cross-thread contention on the hot path beyond an
+//! uncontended per-thread mutex), and `drain()` merges all rings in the
+//! deterministic total order `(tid, seq)` — thread ids are assigned in
+//! first-use order and `seq` is the per-thread append counter, so the
+//! merged order never depends on wall-clock interleaving.
+//!
+//! Determinism contract: spans observe; they never feed back. Event
+//! timestamps are relative to a process-local epoch and only ever leave
+//! the process through `--trace` files and bench sinks, never through
+//! training bytes, fingerprint lines or sweep CSVs.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+/// Per-thread ring capacity. A full ring drops its *oldest* events and
+/// counts them, so a long traced run keeps the tail of the story.
+const RING_CAP: usize = 1 << 16;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU32 = AtomicU32::new(1); // 0 is reserved for metadata lines
+
+/// One completed span. `start_ns` is nanoseconds since the process
+/// trace epoch; `args` carries small structured labels (shard index,
+/// job counts) — never timing-derived values.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Event {
+    pub name: &'static str,
+    pub tid: u32,
+    pub seq: u64,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+    pub args: Vec<(&'static str, u64)>,
+}
+
+struct Ring {
+    tid: u32,
+    next_seq: u64,
+    events: VecDeque<Event>,
+    dropped: u64,
+}
+
+impl Ring {
+    fn push(&mut self, mut ev: Event) {
+        ev.tid = self.tid;
+        ev.seq = self.next_seq;
+        self.next_seq += 1;
+        if self.events.len() == RING_CAP {
+            self.events.pop_front();
+            self.dropped += 1;
+        }
+        self.events.push_back(ev);
+    }
+}
+
+fn rings() -> &'static Mutex<Vec<Arc<Mutex<Ring>>>> {
+    static RINGS: OnceLock<Mutex<Vec<Arc<Mutex<Ring>>>>> = OnceLock::new();
+    RINGS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LOCAL_RING: RefCell<Option<Arc<Mutex<Ring>>>> = const { RefCell::new(None) };
+}
+
+/// The process trace epoch: all span timestamps are relative to the
+/// first clock read after tracing support is first touched.
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Turn tracing on or off process-wide. Two-way so tests can assert
+/// deterministic surfaces are identical under both states.
+pub fn set_enabled(on: bool) {
+    if on {
+        epoch(); // pin the epoch before any span can read it
+    }
+    ENABLED.store(on, Ordering::Release);
+}
+
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+fn record(name: &'static str, start: Instant, dur: Duration, args: &[(&'static str, u64)]) {
+    let start_ns = start.duration_since(epoch()).as_nanos() as u64;
+    let ev = Event {
+        name,
+        tid: 0,
+        seq: 0,
+        start_ns,
+        dur_ns: dur.as_nanos() as u64,
+        args: args.to_vec(),
+    };
+    LOCAL_RING.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let ring = slot.get_or_insert_with(|| {
+            let ring = Arc::new(Mutex::new(Ring {
+                tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+                next_seq: 0,
+                events: VecDeque::new(),
+                dropped: 0,
+            }));
+            rings().lock().unwrap().push(Arc::clone(&ring));
+            ring
+        });
+        ring.lock().unwrap().push(ev);
+    });
+}
+
+/// RAII span guard: records `name` with the elapsed time on drop.
+/// Inert (no clock read) when tracing is disabled at construction.
+pub struct Span {
+    name: &'static str,
+    start: Option<Instant>,
+    args: Vec<(&'static str, u64)>,
+}
+
+impl Span {
+    /// Attach a structured label. No-op on an inert span.
+    pub fn arg(mut self, key: &'static str, value: u64) -> Self {
+        if self.start.is_some() {
+            self.args.push((key, value));
+        }
+        self
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            record(self.name, start, start.elapsed(), &self.args);
+        }
+    }
+}
+
+/// Open a scoped span: `let _s = trace::span("opt.step");`.
+#[inline]
+pub fn span(name: &'static str) -> Span {
+    let start = if enabled() { Some(Instant::now()) } else { None };
+    Span { name, start, args: Vec::new() }
+}
+
+/// Record an already-measured span (used by `telemetry::timed`, which
+/// owns the clock reads so its callers get the exact same duration the
+/// trace shows). No-op when tracing is disabled.
+#[inline]
+pub fn record_span(name: &'static str, start: Instant, dur: Duration) {
+    if enabled() {
+        record(name, start, dur, &[]);
+    }
+}
+
+/// Drain every thread's ring into one list ordered by `(tid, seq)` —
+/// the deterministic total order — and return it with the number of
+/// events dropped to ring overflow. Draining resets the rings (but not
+/// the per-thread seq counters, so later drains continue the order).
+pub fn drain() -> (Vec<Event>, u64) {
+    let mut out = Vec::new();
+    let mut dropped = 0u64;
+    for ring in rings().lock().unwrap().iter() {
+        let mut ring = ring.lock().unwrap();
+        dropped += ring.dropped;
+        ring.dropped = 0;
+        out.extend(ring.events.drain(..));
+    }
+    out.sort_by_key(|e| (e.tid, e.seq));
+    (out, dropped)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::test_lock;
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _guard = test_lock();
+        set_enabled(false);
+        drain();
+        {
+            let _s = span("test.off");
+        }
+        let (events, _) = drain();
+        assert!(events.iter().all(|e| e.name != "test.off"));
+    }
+
+    #[test]
+    fn merge_order_is_tid_then_seq() {
+        let _guard = test_lock();
+        set_enabled(false);
+        drain();
+        set_enabled(true);
+        // record from this thread and two spawned threads; each thread's
+        // events must stay in append order, threads ordered by tid
+        {
+            let _s = span("test.order").arg("k", 0);
+        }
+        {
+            let _s = span("test.order").arg("k", 1);
+        }
+        std::thread::scope(|s| {
+            for t in 0..2u64 {
+                s.spawn(move || {
+                    for k in 0..3u64 {
+                        let _s = span("test.order").arg("k", 10 * (t + 1) + k);
+                    }
+                });
+            }
+        });
+        set_enabled(false);
+        let (events, dropped) = drain();
+        assert_eq!(dropped, 0);
+        let ours: Vec<&Event> = events.iter().filter(|e| e.name == "test.order").collect();
+        assert_eq!(ours.len(), 8);
+        // global order is non-decreasing in (tid, seq) with strictly
+        // increasing seq within a tid
+        for w in ours.windows(2) {
+            assert!(
+                (w[0].tid, w[0].seq) < (w[1].tid, w[1].seq),
+                "merge order violated: {:?} then {:?}",
+                (w[0].tid, w[0].seq),
+                (w[1].tid, w[1].seq)
+            );
+        }
+        // per-thread labels appear in append order
+        for tid in ours.iter().map(|e| e.tid).collect::<std::collections::BTreeSet<_>>() {
+            let ks: Vec<u64> = ours
+                .iter()
+                .filter(|e| e.tid == tid)
+                .map(|e| e.args.iter().find(|(k, _)| *k == "k").unwrap().1)
+                .collect();
+            assert!(ks.windows(2).all(|w| w[0] < w[1]), "tid {tid}: {ks:?}");
+        }
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let _guard = test_lock();
+        set_enabled(false);
+        drain();
+        set_enabled(true);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for _ in 0..(RING_CAP + 10) {
+                    let _s = span("test.overflow");
+                }
+            });
+        });
+        set_enabled(false);
+        let (events, dropped) = drain();
+        let ours = events.iter().filter(|e| e.name == "test.overflow").count();
+        assert_eq!(ours, RING_CAP);
+        assert_eq!(dropped, 10);
+    }
+}

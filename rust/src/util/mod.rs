@@ -1,12 +1,12 @@
-//! Shared utilities: deterministic RNG, bf16 simulation, timing, result
-//! emitters, and a small property-test harness.
+//! Shared utilities: deterministic RNG, bf16 simulation, result
+//! emitters, and a small property-test harness. Timing helpers moved
+//! to `telemetry::timing`.
 
 pub mod bf16;
 pub mod io;
 pub mod par;
 pub mod prop;
 pub mod rng;
-pub mod timer;
 
 pub use bf16::{
     bf16_decode, bf16_encode, bf16_round, bf16_store, Bf16Vec, Precision, StateElem, StateVec,

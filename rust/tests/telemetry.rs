@@ -1,0 +1,317 @@
+//! Telemetry determinism contract (ISSUE 10): tracing and the metrics
+//! registry observe the process — they never alter it. Every
+//! deterministic surface (training checkpoints, loss trajectories,
+//! sweep CSVs, serve fingerprints) must be bitwise identical with
+//! tracing enabled and disabled, at any `SONEW_THREADS` (CI runs this
+//! suite at 1 and 4). Also covered: the exported trace is schema-valid
+//! JSONL carrying spans from every instrumented subsystem, and the
+//! `Metrics` stage fields equal the recorded span durations to the
+//! nanosecond (both sides of `telemetry::timed` share one clock pair).
+//!
+//! Tracing state is process-global, so every test here serializes on
+//! one mutex and leaves tracing disabled with the rings drained.
+
+use std::sync::{Mutex, MutexGuard};
+
+use sonew::comm::{Communicator, LocalComm};
+use sonew::coordinator::sweep::SearchSpace;
+use sonew::coordinator::trainer::NativeAeProvider;
+use sonew::coordinator::{
+    evaluate_shard_outcomes, result_from_outcomes, Schedule, SessionConfig, SweepScheduler,
+    TrainConfig, TrainSession, Trial,
+};
+use sonew::data::requests::SynthRequests;
+use sonew::data::SynthImages;
+use sonew::models::Mlp;
+use sonew::optim::{HyperParams, OptSpec};
+use sonew::serving::{replay, ModelStore, StoreConfig};
+use sonew::telemetry;
+use sonew::util::Rng;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize tests (global tracing state) and guarantee a clean slate:
+/// tracing off, rings empty.
+fn exclusive() -> MutexGuard<'static, ()> {
+    let g = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    telemetry::set_enabled(false);
+    let _ = telemetry::trace::drain();
+    g
+}
+
+fn bits(xs: &[f32]) -> Vec<u32> {
+    xs.iter().map(|x| x.to_bits()).collect()
+}
+
+/// One checkpointed AE training run; returns every deterministic byte
+/// it produces: loss trajectory bits, final param bits, checkpoint
+/// file bytes, and the stage summary line.
+fn run_ae(tag: &str) -> (Vec<u32>, Vec<u32>, Vec<u8>, String) {
+    let spec = OptSpec::parse("tridiag-sonew").unwrap();
+    let dir = std::env::temp_dir().join(format!("sonew_telemetry_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    let path = dir.join("run.ck");
+    let mlp = Mlp::new(&[49, 24, 12, 24, 49]);
+    let mut rng = Rng::new(7);
+    let params = mlp.init(&mut rng);
+    let opt = spec
+        .build(mlp.total, &mlp.blocks(), &mlp.mat_blocks(), &HyperParams::default())
+        .unwrap();
+    let provider = NativeAeProvider::new(mlp.clone(), SynthImages::new(5), 8);
+    let mut s = TrainSession::new(
+        spec.clone(),
+        opt,
+        params,
+        provider,
+        SessionConfig {
+            train: TrainConfig {
+                steps: 8,
+                schedule: Schedule::Constant { lr: 2e-3 },
+                log_every: 1,
+                ..Default::default()
+            },
+            checkpoint_every: 4,
+            checkpoint_path: Some(path.clone()),
+            resume_from: None,
+            pipeline: false,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let m = s.run().unwrap();
+    let ck = std::fs::read(&path).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    (
+        m.points.iter().map(|p| p.loss.to_bits()).collect(),
+        bits(&s.params),
+        ck,
+        // the summary *format* must not change with tracing; its timing
+        // values are wall-clock and are not compared across runs
+        m.stage_summary(),
+    )
+}
+
+#[test]
+fn training_bytes_are_identical_with_tracing_on_and_off() {
+    let _g = exclusive();
+    let off = run_ae("off");
+    telemetry::set_enabled(true);
+    let on = run_ae("on");
+    telemetry::set_enabled(false);
+    let _ = telemetry::trace::drain();
+    assert_eq!(off.0, on.0, "loss trajectory changed under --trace");
+    assert_eq!(off.1, on.1, "final params changed under --trace");
+    assert_eq!(off.2, on.2, "checkpoint bytes changed under --trace");
+    for s in [&off.3, &on.3] {
+        assert!(s.starts_with("stages: data-prep "), "{s}");
+    }
+}
+
+#[test]
+fn sweep_csv_is_identical_with_tracing_on_and_off() {
+    let _g = exclusive();
+    let space = SearchSpace::default();
+    let base = HyperParams::default();
+    let spec = OptSpec::parse("adam").unwrap();
+    // pure-function objective: the CSV is a deterministic function of
+    // (seed, trials), so any tracing influence would show immediately
+    let objective = |t: &Trial| (t.lr.ln() - (3e-4f32).ln()).abs();
+    let run = || {
+        let threaded = SweepScheduler::new(3)
+            .run(&spec, &space, &base, 24, 11, objective)
+            .unwrap()
+            .to_csv();
+        // the multi-process hub path: shard outcomes merged rank-ordered
+        let shards: Vec<_> = (0..2)
+            .map(|r| {
+                evaluate_shard_outcomes(&spec, &space, &base, 24, r, 2, 11, &mut { objective })
+            })
+            .collect();
+        let hub = result_from_outcomes(&spec, &space, &base, 11, &shards).unwrap().to_csv();
+        (threaded, hub)
+    };
+    let off = run();
+    telemetry::set_enabled(true);
+    let on = run();
+    telemetry::set_enabled(false);
+    let _ = telemetry::trace::drain();
+    assert_eq!(off, on, "sweep CSV changed under --trace");
+    assert_eq!(off.0, off.1, "threaded and hub sweeps disagree");
+}
+
+#[test]
+fn serve_fingerprints_are_identical_with_tracing_on_and_off() {
+    let _g = exclusive();
+    let log = SynthRequests::new(13, 5, 32, 4).take(160);
+    let run = || -> Vec<String> {
+        let cfg = StoreConfig {
+            dir: None,
+            dim: 32,
+            lr: 0.05,
+            spec: OptSpec::parse("tridiag-sonew").unwrap(),
+            base: HyperParams { eps: 1.0, ..Default::default() },
+            checkpoint_every: 0,
+        };
+        let mut store = ModelStore::open(cfg, 3).unwrap();
+        let report = replay(&mut store, &log, 40).unwrap();
+        // the exact `[pv]` lines `sonew serve` emits, built through the
+        // same fingerprint helper
+        let mut lines: Vec<String> = report
+            .curve
+            .iter()
+            .map(|p| {
+                telemetry::fingerprint_line(
+                    "pv",
+                    format_args!(
+                        "seen={} loss={:.6} acc={:.6}",
+                        p.seen, p.mean_loss, p.accuracy
+                    ),
+                )
+            })
+            .collect();
+        for id in store.model_ids() {
+            let m = store.model(&id).unwrap();
+            let mut bytes = Vec::with_capacity(4 * m.params().len());
+            for w in m.params() {
+                bytes.extend_from_slice(&w.to_le_bytes());
+            }
+            lines.push(telemetry::fingerprint_line(
+                "pv",
+                format_args!(
+                    "model {id} updates={} params=0x{:016x}",
+                    m.updates(),
+                    sonew::data::requests::fnv1a64(&bytes)
+                ),
+            ));
+        }
+        lines
+    };
+    let off = run();
+    telemetry::set_enabled(true);
+    let on = run();
+    telemetry::set_enabled(false);
+    let _ = telemetry::trace::drain();
+    assert_eq!(off, on, "[pv] fingerprint lines changed under --trace");
+    assert!(off.iter().all(|l| l.starts_with("[pv] ")), "{off:?}");
+}
+
+#[test]
+fn exported_trace_is_schema_valid_and_covers_every_subsystem() {
+    let _g = exclusive();
+    telemetry::set_enabled(true);
+    // trainer + executor + checkpoint spans
+    let _ = run_ae("trace");
+    // comm spans (LocalComm instruments the same span names the
+    // TCP/thread communicators do)
+    let comm = LocalComm;
+    let mut buf = vec![1.0f32, 2.0];
+    comm.all_reduce_sum(&mut buf).unwrap();
+    comm.barrier().unwrap();
+    // serving spans
+    let cfg = StoreConfig {
+        dir: None,
+        dim: 16,
+        lr: 0.05,
+        spec: OptSpec::parse("adam").unwrap(),
+        base: HyperParams { eps: 1.0, ..Default::default() },
+        checkpoint_every: 0,
+    };
+    let mut store = ModelStore::open(cfg, 2).unwrap();
+    let log = SynthRequests::new(3, 3, 16, 4).take(40);
+    replay(&mut store, &log, 20).unwrap();
+    telemetry::set_enabled(false);
+
+    let dir = std::env::temp_dir().join(format!("sonew_telemetry_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("t.jsonl");
+    telemetry::write_trace(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    // the aggregator consumes the same file; a missing path is an error
+    telemetry::report::run(&path, true).unwrap();
+    telemetry::report::run(&path.with_file_name("gone"), true).unwrap_err();
+    std::fs::remove_dir_all(&dir).ok();
+
+    let mut span_names = std::collections::BTreeSet::new();
+    for line in text.lines() {
+        if let telemetry::report::Line::Span { name, .. } =
+            telemetry::report::validate_line(line).unwrap()
+        {
+            span_names.insert(name);
+        }
+    }
+    for want in [
+        "train.data_prep",
+        "train.fwd_bwd",
+        "train.opt_step",
+        "train.ckpt",
+        "ckpt.write",
+        "exec.scope",
+        "comm.all_reduce",
+        "comm.barrier",
+        "serve.shard",
+        "serve.update",
+    ] {
+        assert!(span_names.contains(want), "trace is missing {want} spans: {span_names:?}");
+    }
+}
+
+#[test]
+fn report_aggregates_a_written_trace() {
+    let _g = exclusive();
+    telemetry::set_enabled(true);
+    {
+        let _s = sonew::span!("train.opt_step");
+    }
+    {
+        let _s = sonew::span!("serve.shard");
+    }
+    telemetry::set_enabled(false);
+    let dir = std::env::temp_dir().join(format!("sonew_telemetry_report_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("r.jsonl");
+    telemetry::write_trace(&path).unwrap();
+    telemetry::report::run(&path, true).unwrap();
+    telemetry::report::run(&path, false).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn metrics_stage_fields_equal_span_durations_to_the_nanosecond() {
+    let _g = exclusive();
+    telemetry::set_enabled(true);
+    // ephemeral, no checkpoint: the sync path times prepare/consume/step
+    // on the training thread via telemetry::timed, which feeds the same
+    // Duration into the Metrics field and the span ring
+    let mlp = Mlp::new(&[49, 16, 49]);
+    let mut rng = Rng::new(3);
+    let params = mlp.init(&mut rng);
+    let opt = OptSpec::parse("adam")
+        .unwrap()
+        .build(mlp.total, &mlp.blocks(), &mlp.mat_blocks(), &HyperParams::default())
+        .unwrap();
+    let provider = NativeAeProvider::new(mlp.clone(), SynthImages::new(2), 8);
+    let mut s = TrainSession::ephemeral(
+        opt,
+        params,
+        provider,
+        TrainConfig { steps: 5, schedule: Schedule::Constant { lr: 1e-3 }, ..Default::default() },
+    );
+    let m = s.run().unwrap();
+    let (events, dropped) = telemetry::trace::drain();
+    telemetry::set_enabled(false);
+    assert_eq!(dropped, 0, "ring overflow in a 5-step run");
+    let sum = |name: &str| -> u128 {
+        events.iter().filter(|e| e.name == name).map(|e| e.dur_ns as u128).sum()
+    };
+    assert_eq!(sum("train.data_prep"), m.data_time.as_nanos());
+    assert_eq!(sum("train.fwd_bwd"), m.grad_time.as_nanos());
+    assert_eq!(sum("train.opt_step"), m.opt_time.as_nanos());
+}
+
+#[test]
+fn committed_bench_baseline_is_schema_valid() {
+    // the baseline trajectory point checked into the repo must always
+    // parse under the same validator CI applies to fresh bench output
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_baseline.json");
+    telemetry::sink::validate_file(&path).unwrap();
+}
